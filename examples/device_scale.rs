@@ -1,0 +1,49 @@
+//! Device-scale stress example (the Fig. 10 scenario as a library example).
+//!
+//! Scales the simulated Jetson fleet to 100 / 200 / 400 devices and runs
+//! one Caesar round-trip at each scale, reporting orchestration overhead:
+//! per-round planning + codec + aggregation cost as measured on the host,
+//! next to the simulated round time. Demonstrates the coordinator is not
+//! the bottleneck as the fleet grows.
+//!
+//! Run with:  cargo run --release --example device_scale
+
+use caesar_fl::config::ExperimentConfig;
+use caesar_fl::coordinator::Server;
+use caesar_fl::fleet::FleetKind;
+use caesar_fl::schemes;
+use caesar_fl::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let rounds = args.get_usize("rounds").unwrap_or(10);
+
+    println!(
+        "{:>8}  {:>14}  {:>12}  {:>12}  {:>10}",
+        "devices", "host ms/round", "sim s/round", "traffic GB", "final acc"
+    );
+    for &n in &[100usize, 200, 400] {
+        let mut cfg = ExperimentConfig::preset("cifar");
+        cfg.fleet = FleetKind::JetsonScaled(n);
+        cfg.rounds = rounds;
+        cfg.n_train = 8000;
+        cfg.n_test = 1000;
+        cfg.eval_every = rounds; // eval once at the end
+        let cfg = cfg.apply_overrides(&args);
+        let mut srv = Server::new(cfg, schemes::by_name("caesar").unwrap())?;
+        let t0 = std::time::Instant::now();
+        let r = srv.run()?;
+        let host_ms = t0.elapsed().as_secs_f64() * 1000.0 / rounds as f64;
+        let sim_s = r.total_time_s() / rounds as f64;
+        println!(
+            "{:>8}  {:>14.1}  {:>12.1}  {:>12.3}  {:>10.4}",
+            n,
+            host_ms,
+            sim_s,
+            r.total_traffic_gb(),
+            r.final_metric(false)
+        );
+    }
+    println!("\n(host = real orchestration cost on this machine; sim = Eq. 7 testbed clock)");
+    Ok(())
+}

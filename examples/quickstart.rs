@@ -1,0 +1,49 @@
+//! Quickstart: the smallest end-to-end Caesar run.
+//!
+//! Builds an 80-device simulated fleet, trains the HAR stand-in task for
+//! 25 communication rounds with Caesar's low-deviation compression, and
+//! prints accuracy / traffic / simulated time as it goes.
+//!
+//! Run with:  cargo run --release --example quickstart
+//! (requires `make artifacts` first; pass `trainer=native` to skip)
+
+use caesar_fl::config::ExperimentConfig;
+use caesar_fl::coordinator::Server;
+use caesar_fl::schemes;
+use caesar_fl::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+
+    // 1. Start from the paper's §6.1 preset for HAR and shrink it so the
+    //    example finishes in seconds. Any `key=value` CLI arg overrides.
+    let mut cfg = ExperimentConfig::preset("har");
+    cfg.rounds = 25;
+    cfg.n_train = 4000;
+    cfg.n_test = 1000;
+    let cfg = cfg.apply_overrides(&args);
+
+    // 2. Pick the scheme. `schemes::by_name` knows Caesar, the four
+    //    baselines, the two ablations and the Fig. 1 preliminary schemes.
+    let scheme = schemes::by_name("caesar").unwrap();
+
+    // 3. The Server owns the fleet, the non-IID partition, the PJRT
+    //    runtime (artifacts/*.hlo.txt) and the round loop.
+    let mut server = Server::new(cfg, scheme)?;
+    let result = server.run_cb(|r| {
+        if !r.accuracy.is_nan() && r.t % 5 == 0 {
+            println!(
+                "round {:>3}  acc={:.3}  loss={:.3}  traffic={:.3} GB  sim-time={:.0} s  wait={:.1} s",
+                r.t, r.accuracy, r.mean_loss, r.traffic_gb, r.sim_time_s, r.avg_wait_s
+            );
+        }
+    })?;
+
+    println!(
+        "\ndone: final acc={:.4}, total traffic={:.3} GB, simulated wall-clock={:.0} s",
+        result.final_metric(false),
+        result.total_traffic_gb(),
+        result.total_time_s()
+    );
+    Ok(())
+}

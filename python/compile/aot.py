@@ -1,0 +1,165 @@
+"""AOT lowering: JAX/Pallas entrypoints -> HLO text artifacts + manifest.
+
+Run once at build time (``make artifacts``); rust loads the HLO text via
+``HloModuleProto::from_text_file`` and executes on the PJRT CPU client.
+
+HLO *text* — NOT ``lowered.compile().serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per model spec (cifar/har/speech/oppo):
+  train_{spec}_b{B}.hlo.txt   (flat, xs[C,B,d], ys[C,B] i32, lr) -> (flat', loss)
+  eval_{spec}.hlo.txt         (flat, xs[E,d]) -> logits[E,H]
+  gradnorm_{spec}.hlo.txt     (flat, xs[B,d], ys[B]) -> ||g||
+  compress_{spec}.hlo.txt     (w, ratio) -> (kept, mask, sign, avg, max)
+  recover_{spec}.hlo.txt      (kept, mask, sign, avg, max, local) -> w_hat
+  topk_{spec}.hlo.txt         (g, ratio) -> g_sparse
+  quantize_{spec}.hlo.txt     (x, levels, noise) -> x_quant
+plus artifacts/manifest.json describing every input/output tensor.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import caesar_compress, caesar_recover, topk, quantize
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _spec_entry(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def lower_all(out_dir, specs=None, buckets=None, quiet=False):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"chunk": model.CHUNK, "eval_chunk": model.EVAL_CHUNK, "modules": {}}
+    specs = specs or list(model.SPECS)
+    buckets = buckets or model.BATCH_BUCKETS
+
+    def emit(name, fn, arg_specs, outputs):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["modules"][name] = {
+            "file": fname,
+            "inputs": [
+                _spec_entry(s.shape, "i32" if s.dtype == jnp.int32 else "f32")
+                for s in arg_specs
+            ],
+            "outputs": outputs,
+        }
+        if not quiet:
+            print(f"  {fname:36s} {len(text)//1024:6d} KiB")
+
+    for sname in specs:
+        spec = model.SPECS[sname]
+        P, d, H = spec.n_params, spec.d_in, spec.n_classes
+        C, E = model.CHUNK, model.EVAL_CHUNK
+        if not quiet:
+            print(f"[{sname}] dims={spec.dims} P={P}")
+
+        train = model.make_train_chunk(spec)
+        for b in buckets:
+            emit(
+                f"train_{sname}_b{b}",
+                train,
+                (
+                    _sds((P,)),
+                    _sds((C, b, d)),
+                    _sds((C, b), jnp.int32),
+                    _sds(()),
+                ),
+                [_spec_entry((P,)), _spec_entry(())],
+            )
+
+        emit(
+            f"eval_{sname}",
+            model.make_eval_chunk(spec),
+            (_sds((P,)), _sds((E, d))),
+            [_spec_entry((E, H))],
+        )
+
+        emit(
+            f"gradnorm_{sname}",
+            model.make_grad_norm(spec),
+            (_sds((P,)), _sds((32, d)), _sds((32,), jnp.int32)),
+            [_spec_entry(())],
+        )
+
+        emit(
+            f"compress_{sname}",
+            lambda w, r: caesar_compress.caesar_compress(w, r, interpret=True),
+            (_sds((P,)), _sds(())),
+            [
+                _spec_entry((P,)),
+                _spec_entry((P,)),
+                _spec_entry((P,)),
+                _spec_entry(()),
+                _spec_entry(()),
+            ],
+        )
+        emit(
+            f"recover_{sname}",
+            lambda k, m, s, a, x, l: caesar_recover.caesar_recover(
+                k, m, s, a, x, l, interpret=True
+            ),
+            (_sds((P,)), _sds((P,)), _sds((P,)), _sds(()), _sds(()), _sds((P,))),
+            [_spec_entry((P,))],
+        )
+        emit(
+            f"topk_{sname}",
+            lambda g, r: topk.topk_sparsify(g, r, interpret=True),
+            (_sds((P,)), _sds(())),
+            [_spec_entry((P,))],
+        )
+        emit(
+            f"quantize_{sname}",
+            lambda x, lv, u: quantize.quantize_stochastic(x, lv, u, interpret=True),
+            (_sds((P,)), _sds(()), _sds((P,))),
+            [_spec_entry((P,))],
+        )
+        manifest["modules"][f"_spec_{sname}"] = {
+            "dims": spec.dims,
+            "n_params": P,
+            "d_in": d,
+            "n_classes": H,
+        }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if not quiet:
+        print(f"wrote manifest with {len(manifest['modules'])} entries")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--specs", default=None, help="comma-separated subset")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    specs = args.specs.split(",") if args.specs else None
+    lower_all(args.out, specs=specs, quiet=args.quiet)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Layer-1 Pallas kernel: Caesar threshold-split model compression.
+
+The hot loop of the paper's §4.1 codec: given the parameter vector and the
+quantization threshold (computed once per call from the target ratio via an
+XLA sort in the Layer-2 wrapper), stream the vector and produce
+
+  kept  — fp32 payload (0 at quantized positions)
+  mask  — 1.0 at quantized positions (the 1-bit plane on the wire)
+  sign  — transmitted sign (+1/-1) at quantized positions, else 0
+
+The avg-abs / max-abs scalars of the quantized set are reduced by XLA on the
+kernel's mask output (two fused reductions over one already-resident array).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the vector is tiled into
+VMEM-sized 1-D blocks; the body is pure VPU select/sign work, one HBM read
+and three writes per element — memory-bound optimal.  On CPU we run under
+``interpret=True`` (Mosaic custom-calls cannot execute on the CPU plugin).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# 1-D block: 8 * 1024 f32 = 32 KiB per input block in VMEM; with 4 resident
+# arrays (in + 3 outs) and double-buffering this stays far below the 16 MiB
+# VMEM budget while keeping the grid short.
+BLOCK = 8 * 1024
+
+
+def _compress_kernel(w_ref, thr_ref, kept_ref, mask_ref, sign_ref):
+    w = w_ref[...]
+    thr = thr_ref[0]
+    absw = jnp.abs(w)
+    quant = absw <= thr
+    maskf = quant.astype(jnp.float32)
+    kept_ref[...] = jnp.where(quant, 0.0, w)
+    mask_ref[...] = maskf
+    sign_ref[...] = jnp.where(w >= 0.0, 1.0, -1.0) * maskf
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def compress_split(w, thr, interpret=True):
+    """Apply the threshold split to ``w`` (1-D f32) with scalar ``thr``."""
+    n = w.shape[0]
+    block = min(BLOCK, n) if n > 0 else 1
+    pad = (-n) % block
+    wp = jnp.pad(w, (0, pad))
+    grid = (wp.shape[0] // block,)
+    thr_arr = jnp.reshape(thr, (1,)).astype(jnp.float32)
+    out_shape = [jax.ShapeDtypeStruct(wp.shape, jnp.float32)] * 3
+    kept, mask, sign = pl.pallas_call(
+        _compress_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,))] * 3,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(wp, thr_arr)
+    # Padding is zero; zero <= thr would mark pads quantized — slice them off
+    # before any reduction sees them.
+    return kept[:n], mask[:n], sign[:n]
+
+
+def caesar_compress(w, ratio, interpret=True):
+    """Full Caesar model compression: threshold + Pallas split + stats.
+
+    Mirrors :func:`ref.caesar_compress`; the threshold and the two scalar
+    reductions run in plain XLA (sort + fused reduce), the per-element split
+    runs in the Pallas kernel.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    thr = ref.quant_threshold(w, ratio)
+    kept, mask, sign = compress_split(w, thr, interpret=interpret)
+    absw = jnp.abs(w)
+    cnt = jnp.sum(mask)
+    avg_abs = jnp.where(cnt > 0, jnp.sum(absw * mask) / jnp.maximum(cnt, 1.0), 0.0)
+    max_abs = jnp.max(absw * mask)
+    return kept, mask, sign, avg_abs, max_abs

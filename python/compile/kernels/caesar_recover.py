@@ -1,0 +1,61 @@
+"""Layer-1 Pallas kernel: Caesar device-side model recovery.
+
+Implements the paper's Figure-3 recovery: quantized (1-bit) positions are
+approximated by the stale local model; positions whose local value has the
+wrong sign or an out-of-range magnitude fall back to ``sign * avg_abs``.
+
+Pure element-wise select work — one streaming pass, VPU-only on TPU,
+``interpret=True`` on CPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8 * 1024
+
+
+def _recover_kernel(kept_ref, mask_ref, sign_ref, stats_ref, local_ref, out_ref):
+    kept = kept_ref[...]
+    mask = mask_ref[...]
+    sign = sign_ref[...]
+    local = local_ref[...]
+    avg_abs = stats_ref[0]
+    max_abs = stats_ref[1]
+    local_sign = jnp.where(local >= 0.0, 1.0, -1.0)
+    bad = (local_sign != sign) | (jnp.abs(local) > max_abs)
+    approx = jnp.where(bad, sign * avg_abs, local)
+    out_ref[...] = kept * (1.0 - mask) + approx * mask
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def caesar_recover(kept, mask, sign, avg_abs, max_abs, local, interpret=True):
+    """Recover the full-precision model (mirrors ``ref.caesar_recover``)."""
+    kept = jnp.asarray(kept, jnp.float32)
+    local = jnp.asarray(local, jnp.float32)
+    n = kept.shape[0]
+    block = min(BLOCK, n) if n > 0 else 1
+    pad = (-n) % block
+    args = [jnp.pad(jnp.asarray(a, jnp.float32), (0, pad)) for a in (kept, mask, sign)]
+    stats = jnp.stack(
+        [jnp.asarray(avg_abs, jnp.float32), jnp.asarray(max_abs, jnp.float32)]
+    )
+    localp = jnp.pad(local, (0, pad))
+    grid = (args[0].shape[0] // block,)
+    out = pl.pallas_call(
+        _recover_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(args[0].shape, jnp.float32),
+        interpret=interpret,
+    )(args[0], args[1], args[2], stats, localp)
+    return out[:n]

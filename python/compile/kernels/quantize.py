@@ -1,0 +1,55 @@
+"""Layer-1 Pallas kernel: QSGD-style stochastic uniform quantization.
+
+The codec of the ProWD baseline (bandwidth-chosen bit-width).  ``noise`` is
+a uniform[0,1) vector supplied by the caller (the rust coordinator's
+deterministic PRNG) so the kernel itself is a pure function.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8 * 1024
+
+
+def _quant_kernel(x_ref, noise_ref, params_ref, out_ref):
+    x = x_ref[...]
+    u = noise_ref[...]
+    norm = params_ref[0]
+    levels = params_ref[1]
+    safe = jnp.maximum(norm, 1e-30)
+    scaled = jnp.abs(x) / safe * levels
+    q = jnp.minimum(jnp.floor(scaled + u), levels)
+    sign = jnp.where(x >= 0.0, 1.0, -1.0)
+    out = sign * q / levels * safe
+    out_ref[...] = jnp.where(norm > 0.0, out, jnp.zeros_like(x))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_stochastic(x, levels, noise, interpret=True):
+    """Mirror of ``ref.quantize_stochastic`` (norm reduce in XLA)."""
+    x = jnp.asarray(x, jnp.float32)
+    noise = jnp.asarray(noise, jnp.float32)
+    n = x.shape[0]
+    block = min(BLOCK, n) if n > 0 else 1
+    pad = (-n) % block
+    xp = jnp.pad(x, (0, pad))
+    up = jnp.pad(noise, (0, pad))
+    norm = jnp.max(jnp.abs(x))
+    params = jnp.stack([norm, jnp.asarray(levels, jnp.float32)])
+    grid = (xp.shape[0] // block,)
+    out = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        interpret=interpret,
+    )(xp, up, params)
+    return out[:n]

@@ -1,0 +1,52 @@
+"""Layer-1 Pallas kernel: Top-K gradient sparsification (paper §4.2).
+
+Drops the ``ratio`` fraction of smallest-|g| elements.  The keep-threshold
+comes from one XLA sort in the wrapper; the masking pass is the Pallas
+kernel (streaming select, memory-bound optimal).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = 8 * 1024
+
+
+def _mask_kernel(g_ref, thr_ref, out_ref):
+    g = g_ref[...]
+    thr = thr_ref[0]
+    keep = jnp.abs(g) >= thr
+    out_ref[...] = jnp.where(keep, g, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _apply_threshold(g, thr, interpret=True):
+    n = g.shape[0]
+    block = min(BLOCK, n) if n > 0 else 1
+    pad = (-n) % block
+    gp = jnp.pad(g, (0, pad))
+    grid = (gp.shape[0] // block,)
+    out = pl.pallas_call(
+        _mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(gp.shape, jnp.float32),
+        interpret=interpret,
+    )(gp, jnp.reshape(thr, (1,)).astype(jnp.float32))
+    return out[:n]
+
+
+def topk_sparsify(g, ratio, interpret=True):
+    """Mirror of ``ref.topk_sparsify`` with the mask pass in Pallas."""
+    g = jnp.asarray(g, jnp.float32)
+    thr, drop = ref.keep_threshold(g, ratio)
+    out = _apply_threshold(g, thr, interpret=interpret)
+    return jnp.where(drop >= g.shape[0], jnp.zeros_like(out), out)

@@ -1,0 +1,139 @@
+"""Layer-2 JAX model: the FL local-training compute graph.
+
+Defines a generic flat-parameter MLP softmax classifier (covers all four of
+the paper's workload stand-ins — see DESIGN.md §Substitutions: MLP-C/H/S and
+the LR-O logistic model, which is the zero-hidden-layer case), its loss and
+SGD update, and the jitted entrypoints that are AOT-lowered by ``aot.py``
+into the HLO artifacts the rust runtime executes:
+
+* ``train_chunk`` — CHUNK mini-batch SGD iterations via ``lax.scan`` (the
+  rust coordinator calls it ceil(tau/CHUNK) times per device round; shape
+  bucketing over batch size handles the paper's Eq. 9 adaptive batches)
+* ``eval_chunk``  — logits for a test chunk (accuracy/AUC reduced in rust)
+* the Layer-1 kernel entrypoints (compress/recover/topk/quantize) so the
+  Pallas kernels lower into standalone HLO modules for the rust-side
+  ``--compression-backend xla`` path and the parity tests.
+
+Parameters live in ONE flat f32 vector — the natural layout for the paper's
+vector-level compression codecs and for single-buffer interchange with rust.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Number of SGD iterations fused into one artifact call (see DESIGN.md:
+# tau is 10 or 30 in the paper; PyramidFL varies tau per device, so the
+# artifact granularity is a divisor of both).
+CHUNK = 5
+
+
+class MlpSpec:
+    """Static description of one model configuration."""
+
+    def __init__(self, name, dims):
+        # dims = [d_in, hidden..., n_classes]
+        self.name = name
+        self.dims = list(dims)
+
+    @property
+    def d_in(self):
+        return self.dims[0]
+
+    @property
+    def n_classes(self):
+        return self.dims[-1]
+
+    @property
+    def n_params(self):
+        p = 0
+        for a, b in zip(self.dims[:-1], self.dims[1:]):
+            p += a * b + b
+        return p
+
+    def slices(self):
+        """(offset_w, offset_b, shape) triples for each layer."""
+        out, off = [], 0
+        for a, b in zip(self.dims[:-1], self.dims[1:]):
+            out.append((off, off + a * b, (a, b)))
+            off += a * b + b
+        return out
+
+
+def apply(spec, flat, x):
+    """Forward pass: x f32[B, d_in] -> logits f32[B, n_classes]."""
+    h = x
+    layers = spec.slices()
+    for li, (ow, ob, shape) in enumerate(layers):
+        w = flat[ow:ob].reshape(shape)
+        b = flat[ob : ob + shape[1]]
+        h = h @ w + b
+        if li + 1 < len(layers):
+            h = jax.nn.relu(h)
+    return h
+
+
+def loss_fn(spec, flat, x, y):
+    """Mean softmax cross-entropy over the batch (y int32 labels)."""
+    logits = apply(spec, flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+def make_train_chunk(spec):
+    """CHUNK SGD steps: (flat, xs[C,B,d], ys[C,B], lr) -> (flat', mean_loss)."""
+
+    grad_fn = jax.value_and_grad(lambda f, x, y: loss_fn(spec, f, x, y))
+
+    def train_chunk(flat, xs, ys, lr):
+        def step(carry, batch):
+            f = carry
+            x, y = batch
+            l, g = grad_fn(f, x, y)
+            return f - lr * g, l
+
+        flat2, losses = jax.lax.scan(step, flat, (xs, ys))
+        return flat2, jnp.mean(losses)
+
+    return train_chunk
+
+
+def make_eval_chunk(spec):
+    """Logits for a fixed-size test chunk: (flat, xs[B,d]) -> logits[B,H]."""
+
+    def eval_chunk(flat, xs):
+        return apply(spec, flat, xs)
+
+    return eval_chunk
+
+
+def make_grad_norm(spec):
+    """Per-round gradient-norm probe (used by the PyramidFL baseline)."""
+
+    grad_fn = jax.grad(lambda f, x, y: loss_fn(spec, f, x, y))
+
+    def grad_norm(flat, x, y):
+        g = grad_fn(flat, x, y)
+        return jnp.sqrt(jnp.sum(g * g))
+
+    return grad_norm
+
+
+# ---------------------------------------------------------------------------
+# The four workload stand-ins (class counts match the paper's datasets;
+# sizes are CPU-tractable — see DESIGN.md §Substitutions).
+# ---------------------------------------------------------------------------
+
+SPECS = {
+    "cifar": MlpSpec("cifar", [64, 128, 10]),    # CIFAR-10 / ResNet-18 stand-in
+    "har": MlpSpec("har", [36, 64, 6]),          # HAR / CNN-H stand-in
+    "speech": MlpSpec("speech", [40, 96, 35]),   # Google-Speech / CNN-S stand-in
+    "oppo": MlpSpec("oppo", [128, 2]),           # OPPO-TS / LR stand-in (no hidden)
+}
+
+# Batch-size buckets AOT-compiled per spec (Eq. 9 batches round down into
+# these; the simulated-time model uses the exact b_i).
+BATCH_BUCKETS = [4, 8, 16, 32]
+
+# Test-set evaluation chunk size.
+EVAL_CHUNK = 256

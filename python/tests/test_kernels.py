@@ -1,0 +1,246 @@
+"""Pallas kernels vs the pure-jnp oracle (the core L1 correctness signal).
+
+Hypothesis sweeps shapes, ratios and value distributions; fixed cases pin
+the edge semantics (ratio 0/1, zeros, ties, single element).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import caesar_compress as cc
+from compile.kernels import caesar_recover as cr
+from compile.kernels import topk as tk
+from compile.kernels import quantize as qz
+
+
+def _vec(rng, n, scale=1.0):
+    return (rng.standard_normal(n) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# caesar_compress
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    ratio=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_compress_matches_ref(n, ratio, seed, scale):
+    rng = np.random.default_rng(seed)
+    w = _vec(rng, n, scale)
+    outs_k = cc.caesar_compress(w, ratio)
+    outs_r = ref.caesar_compress(w, ratio)
+    for a, b in zip(outs_k, outs_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=0)
+
+
+def test_compress_ratio_zero_keeps_everything():
+    rng = np.random.default_rng(0)
+    w = _vec(rng, 777)
+    kept, mask, sign, avg, mx = cc.caesar_compress(w, 0.0)
+    np.testing.assert_array_equal(np.asarray(kept), w)
+    assert float(np.sum(np.asarray(mask))) == 0.0
+    assert float(avg) == 0.0 and float(mx) == 0.0
+
+
+def test_compress_ratio_one_quantizes_everything():
+    rng = np.random.default_rng(1)
+    w = _vec(rng, 512)
+    kept, mask, sign, avg, mx = cc.caesar_compress(w, 1.0)
+    assert float(np.sum(np.asarray(mask))) == 512.0
+    np.testing.assert_array_equal(np.asarray(kept), np.zeros_like(w))
+    np.testing.assert_allclose(float(avg), np.mean(np.abs(w)), rtol=1e-5)
+    np.testing.assert_allclose(float(mx), np.max(np.abs(w)), rtol=1e-6)
+
+
+def test_compress_quantized_fraction_matches_ratio():
+    rng = np.random.default_rng(2)
+    w = _vec(rng, 10000)
+    for ratio in (0.1, 0.35, 0.6, 0.9):
+        _, mask, _, _, _ = cc.caesar_compress(w, ratio)
+        frac = float(np.sum(np.asarray(mask))) / w.size
+        assert abs(frac - ratio) < 2e-3, (ratio, frac)
+
+
+def test_compress_quantizes_smallest_magnitudes():
+    rng = np.random.default_rng(3)
+    w = _vec(rng, 4096)
+    _, mask, _, _, _ = cc.caesar_compress(w, 0.5)
+    mask = np.asarray(mask).astype(bool)
+    assert np.max(np.abs(w[mask])) <= np.min(np.abs(w[~mask])) + 1e-12
+
+
+def test_compress_all_zero_vector():
+    w = np.zeros(100, dtype=np.float32)
+    kept, mask, sign, avg, mx = cc.caesar_compress(w, 0.5)
+    # every |w| equals the threshold (0) -> all quantized by the inclusive rule
+    assert float(np.sum(np.asarray(mask))) == 100.0
+    assert float(avg) == 0.0 and float(mx) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# caesar_recover
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    ratio=st.floats(min_value=0.0, max_value=1.0),
+    drift=st.sampled_from([0.0, 0.1, 1.0, 10.0]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_recover_matches_ref(n, ratio, drift, seed):
+    rng = np.random.default_rng(seed)
+    w = _vec(rng, n)
+    local = (w + drift * rng.standard_normal(n)).astype(np.float32)
+    k, m, s, a, mx = ref.caesar_compress(w, ratio)
+    out_k = cr.caesar_recover(k, m, s, a, mx, local)
+    out_r = ref.caesar_recover(k, m, s, a, mx, local)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-6)
+
+
+def test_recover_identical_local_is_near_lossless():
+    """If the local model equals the global model, recovery is exact except
+    sign-flips cannot occur and magnitudes are within max_abs: zero error."""
+    rng = np.random.default_rng(4)
+    w = _vec(rng, 2048)
+    k, m, s, a, mx = ref.caesar_compress(w, 0.5)
+    out = np.asarray(cr.caesar_recover(k, m, s, a, mx, w))
+    np.testing.assert_allclose(out, w, rtol=1e-6)
+
+
+def test_recover_sign_flip_falls_back_to_avg():
+    w = np.array([0.5, -0.5, 2.0], dtype=np.float32)
+    k, m, s, a, mx = ref.caesar_compress(w, 2.0 / 3.0)
+    # local has wrong signs at the two quantized slots
+    local = np.array([-0.4, 0.4, 2.0], dtype=np.float32)
+    out = np.asarray(cr.caesar_recover(k, m, s, a, mx, local))
+    assert out[0] == pytest.approx(float(a))   # +avg
+    assert out[1] == pytest.approx(-float(a))  # -avg
+    assert out[2] == pytest.approx(2.0)
+
+
+def test_recover_magnitude_overflow_falls_back_to_avg():
+    w = np.array([0.5, -0.5, 2.0], dtype=np.float32)
+    k, m, s, a, mx = ref.caesar_compress(w, 2.0 / 3.0)
+    local = np.array([0.9, -0.5, 2.0], dtype=np.float32)  # 0.9 > max_abs=0.5
+    out = np.asarray(cr.caesar_recover(k, m, s, a, mx, local))
+    assert out[0] == pytest.approx(float(a))
+    assert out[1] == pytest.approx(-0.5)
+
+
+def test_recover_reduces_error_vs_naive_signs():
+    """The paper's claim in miniature: recovery via the stale local model
+    beats reconstructing quantized slots as sign*avg alone when the local
+    model is reasonably fresh."""
+    rng = np.random.default_rng(5)
+    w = _vec(rng, 8192)
+    local = (w + 0.05 * rng.standard_normal(8192)).astype(np.float32)
+    k, m, s, a, mx = ref.caesar_compress(w, 0.5)
+    rec = np.asarray(cr.caesar_recover(k, m, s, a, mx, local))
+    naive = np.asarray(k) + np.asarray(s) * float(a) * np.asarray(m)
+    err_rec = np.mean((rec - w) ** 2)
+    err_naive = np.mean((naive - w) ** 2)
+    assert err_rec < err_naive
+
+
+# ---------------------------------------------------------------------------
+# topk_sparsify
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    ratio=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_topk_matches_ref(n, ratio, seed):
+    rng = np.random.default_rng(seed)
+    g = _vec(rng, n)
+    np.testing.assert_allclose(
+        np.asarray(tk.topk_sparsify(g, ratio)),
+        np.asarray(ref.topk_sparsify(g, ratio)),
+        rtol=1e-6,
+    )
+
+
+def test_topk_keeps_largest():
+    rng = np.random.default_rng(6)
+    g = _vec(rng, 4096)
+    out = np.asarray(tk.topk_sparsify(g, 0.75))
+    kept = out != 0
+    n_kept = int(kept.sum())
+    assert abs(n_kept - 1024) <= 2
+    assert np.min(np.abs(g[kept])) >= np.max(np.abs(g[~kept]))
+    np.testing.assert_array_equal(out[kept], g[kept])
+
+
+def test_topk_ratio_edges():
+    rng = np.random.default_rng(7)
+    g = _vec(rng, 100)
+    np.testing.assert_array_equal(np.asarray(tk.topk_sparsify(g, 0.0)), g)
+    out = np.asarray(tk.topk_sparsify(g, 1.0))
+    np.testing.assert_array_equal(out, np.zeros_like(g))
+
+
+# ---------------------------------------------------------------------------
+# quantize_stochastic
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    levels=st.sampled_from([1.0, 3.0, 15.0, 255.0]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_quantize_matches_ref(n, levels, seed):
+    rng = np.random.default_rng(seed)
+    x = _vec(rng, n)
+    u = rng.random(n).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(qz.quantize_stochastic(x, levels, u)),
+        np.asarray(ref.quantize_stochastic(x, levels, u)),
+        rtol=1e-5,
+        atol=1e-7,
+    )
+
+
+def test_quantize_is_unbiased_in_expectation():
+    rng = np.random.default_rng(8)
+    x = _vec(rng, 256)
+    acc = np.zeros_like(x, dtype=np.float64)
+    trials = 400
+    for _ in range(trials):
+        u = rng.random(256).astype(np.float32)
+        acc += np.asarray(qz.quantize_stochastic(x, 4.0, u))
+    mean = (acc / trials).astype(np.float32)
+    # per-element stderr ~ bucket/2/sqrt(trials) ~ 0.02; 5-sigma bound over
+    # 256 elements, plus a mean-bias check an order tighter.
+    np.testing.assert_allclose(mean, x, atol=0.12)
+    assert abs(float(np.mean(mean - x))) < 0.01
+
+
+def test_quantize_error_bounded_by_bucket():
+    rng = np.random.default_rng(9)
+    x = _vec(rng, 1024)
+    u = rng.random(1024).astype(np.float32)
+    levels = 15.0
+    q = np.asarray(qz.quantize_stochastic(x, levels, u))
+    bucket = np.max(np.abs(x)) / levels
+    assert np.max(np.abs(q - x)) <= bucket + 1e-6
+
+
+def test_quantize_zero_vector():
+    x = np.zeros(64, dtype=np.float32)
+    u = np.full(64, 0.999, dtype=np.float32)
+    q = np.asarray(qz.quantize_stochastic(x, 7.0, u))
+    np.testing.assert_array_equal(q, x)

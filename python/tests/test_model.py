@@ -1,0 +1,136 @@
+"""Layer-2 model tests: shapes, gradients, SGD semantics, convergence."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(params=list(model.SPECS))
+def spec(request):
+    return model.SPECS[request.param]
+
+
+def _init(spec, rng):
+    # He-style init, matching rust/src/nn init (same scheme, different seed ok)
+    flat = np.zeros(spec.n_params, dtype=np.float32)
+    for ow, ob, (a, b) in spec.slices():
+        flat[ow:ob] = rng.standard_normal(a * b).astype(np.float32) * np.sqrt(2.0 / a)
+    return jnp.asarray(flat)
+
+
+def test_n_params_matches_slices(spec):
+    last = spec.slices()[-1]
+    assert last[1] + last[2][1] == spec.n_params
+
+
+def test_apply_shapes(spec):
+    rng = np.random.default_rng(0)
+    flat = _init(spec, rng)
+    x = jnp.asarray(rng.standard_normal((7, spec.d_in)).astype(np.float32))
+    logits = model.apply(spec, flat, x)
+    assert logits.shape == (7, spec.n_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_loss_matches_manual_softmax(spec):
+    rng = np.random.default_rng(1)
+    flat = _init(spec, rng)
+    x = jnp.asarray(rng.standard_normal((5, spec.d_in)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, spec.n_classes, 5).astype(np.int32))
+    logits = np.asarray(model.apply(spec, flat, x), dtype=np.float64)
+    z = logits - logits.max(axis=1, keepdims=True)
+    p = np.exp(z) / np.exp(z).sum(axis=1, keepdims=True)
+    manual = -np.mean(np.log(p[np.arange(5), np.asarray(y)]))
+    got = float(model.loss_fn(spec, flat, x, y))
+    assert got == pytest.approx(manual, rel=1e-4)
+
+
+def test_grad_matches_finite_difference():
+    spec = model.SPECS["har"]
+    rng = np.random.default_rng(2)
+    flat = _init(spec, rng)
+    x = jnp.asarray(rng.standard_normal((4, spec.d_in)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, spec.n_classes, 4).astype(np.int32))
+    g = np.asarray(jax.grad(lambda f: model.loss_fn(spec, f, x, y))(flat))
+    eps = 1e-3
+    idx = rng.integers(0, spec.n_params, 10)
+    for i in idx:
+        fp = np.asarray(flat).copy()
+        fm = fp.copy()
+        fp[i] += eps
+        fm[i] -= eps
+        fd = (
+            float(model.loss_fn(spec, jnp.asarray(fp), x, y))
+            - float(model.loss_fn(spec, jnp.asarray(fm), x, y))
+        ) / (2 * eps)
+        assert g[i] == pytest.approx(fd, rel=0.05, abs=1e-4)
+
+
+def test_train_chunk_equals_manual_loop(spec):
+    rng = np.random.default_rng(3)
+    flat = _init(spec, rng)
+    C, B = model.CHUNK, 8
+    xs = jnp.asarray(rng.standard_normal((C, B, spec.d_in)).astype(np.float32))
+    ys = jnp.asarray(rng.integers(0, spec.n_classes, (C, B)).astype(np.int32))
+    lr = jnp.float32(0.05)
+    train = model.make_train_chunk(spec)
+    out, _loss = train(flat, xs, ys, lr)
+
+    f = flat
+    grad_fn = jax.grad(lambda fl, x, y: model.loss_fn(spec, fl, x, y))
+    for j in range(C):
+        f = f - lr * grad_fn(f, xs[j], ys[j])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(f), rtol=2e-4, atol=1e-6)
+
+
+def test_train_chunk_decreases_loss_on_repeated_batch():
+    spec = model.SPECS["cifar"]
+    rng = np.random.default_rng(4)
+    flat = _init(spec, rng)
+    B = 32
+    x = rng.standard_normal((B, spec.d_in)).astype(np.float32)
+    y = rng.integers(0, spec.n_classes, B).astype(np.int32)
+    xs = jnp.asarray(np.broadcast_to(x, (model.CHUNK, B, spec.d_in)).copy())
+    ys = jnp.asarray(np.broadcast_to(y, (model.CHUNK, B)).copy())
+    train = jax.jit(model.make_train_chunk(spec))
+    l0 = float(model.loss_fn(spec, flat, jnp.asarray(x), jnp.asarray(y)))
+    f = flat
+    for _ in range(8):
+        f, _ = train(f, xs, ys, jnp.float32(0.1))
+    l1 = float(model.loss_fn(spec, f, jnp.asarray(x), jnp.asarray(y)))
+    assert l1 < l0 * 0.5
+
+
+def test_eval_chunk_shape(spec):
+    rng = np.random.default_rng(5)
+    flat = _init(spec, rng)
+    xs = jnp.asarray(
+        rng.standard_normal((model.EVAL_CHUNK, spec.d_in)).astype(np.float32)
+    )
+    logits = model.make_eval_chunk(spec)(flat, xs)
+    assert logits.shape == (model.EVAL_CHUNK, spec.n_classes)
+
+
+def test_gradnorm_positive():
+    spec = model.SPECS["speech"]
+    rng = np.random.default_rng(6)
+    flat = _init(spec, rng)
+    x = jnp.asarray(rng.standard_normal((32, spec.d_in)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, spec.n_classes, 32).astype(np.int32))
+    gn = float(model.make_grad_norm(spec)(flat, x, y))
+    assert gn > 0.0 and np.isfinite(gn)
+
+
+def test_oppo_spec_is_pure_logistic_regression():
+    spec = model.SPECS["oppo"]
+    assert len(spec.slices()) == 1  # no hidden layer
+    rng = np.random.default_rng(7)
+    flat = _init(spec, rng)
+    x = jnp.asarray(rng.standard_normal((3, spec.d_in)).astype(np.float32))
+    logits = np.asarray(model.apply(spec, flat, x))
+    w = np.asarray(flat[: spec.d_in * 2]).reshape(spec.d_in, 2)
+    b = np.asarray(flat[spec.d_in * 2 :])
+    np.testing.assert_allclose(logits, np.asarray(x) @ w + b, rtol=1e-5)

@@ -1,0 +1,62 @@
+//! Aggregation hot-loop benchmark: summing K compressed gradients into
+//! the global update at paper-scale parameter counts. The PS does this
+//! once per round over every participant; it must stay far below the
+//! simulated round time.
+
+use caesar_fl::bench::Bench;
+use caesar_fl::compress::topk_sparsify;
+use caesar_fl::util::rng::Rng;
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn main() {
+    for &n in &[100_000usize, 1_000_000] {
+        let b = Bench::new(&format!("aggregate K dense gradients (P={n})")).quick();
+        for k in [8usize, 30] {
+            let grads: Vec<Vec<f32>> = (0..k).map(|i| randn(n, i as u64)).collect();
+            let mut agg = vec![0.0f64; n];
+            b.case(&format!("K={k}"), n * k, || {
+                agg.iter_mut().for_each(|a| *a = 0.0);
+                for g in &grads {
+                    for (a, &x) in agg.iter_mut().zip(g) {
+                        *a += x as f64;
+                    }
+                }
+                std::hint::black_box(&agg);
+            });
+        }
+
+        let b = Bench::new(&format!("aggregate K top-k-sparse gradients (P={n})")).quick();
+        for k in [8usize, 30] {
+            let grads: Vec<Vec<f32>> = (0..k)
+                .map(|i| topk_sparsify(&randn(n, 100 + i as u64), 0.6).dense)
+                .collect();
+            let mut agg = vec![0.0f64; n];
+            b.case(&format!("K={k} θ=0.6"), n * k, || {
+                agg.iter_mut().for_each(|a| *a = 0.0);
+                for g in &grads {
+                    for (a, &x) in agg.iter_mut().zip(g) {
+                        *a += x as f64;
+                    }
+                }
+                std::hint::black_box(&agg);
+            });
+        }
+    }
+
+    // the global model update that follows aggregation
+    let b = Bench::new("global model update w -= mean(agg)").quick();
+    for &n in &[100_000usize, 1_000_000] {
+        let mut w = randn(n, 7);
+        let agg: Vec<f64> = randn(n, 8).iter().map(|&x| x as f64).collect();
+        b.case(&format!("P={n}"), n, || {
+            for (wi, &a) in w.iter_mut().zip(&agg) {
+                *wi -= (a / 8.0) as f32;
+            }
+            std::hint::black_box(&w);
+        });
+    }
+}

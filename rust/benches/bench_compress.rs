@@ -1,0 +1,64 @@
+//! Codec hot-path benchmark: Caesar model compress/recover, Top-K
+//! sparsification and stochastic quantization across payload sizes —
+//! the L3 per-participant work on every round's critical path.
+
+use caesar_fl::bench::Bench;
+use caesar_fl::compress::{caesar_compress, caesar_recover, quantize_stochastic, topk_sparsify};
+use caesar_fl::util::rng::Rng;
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn main() {
+    let sizes = [10_000usize, 100_000, 1_000_000];
+
+    let b = Bench::new("caesar_compress (θ=0.35)").quick();
+    for &n in &sizes {
+        let w = randn(n, 1);
+        b.case(&format!("n={n}"), n, || {
+            std::hint::black_box(caesar_compress(std::hint::black_box(&w), 0.35));
+        });
+    }
+
+    let b = Bench::new("caesar_recover (θ=0.35)").quick();
+    for &n in &sizes {
+        let w = randn(n, 2);
+        let local = randn(n, 3);
+        let cm = caesar_compress(&w, 0.35);
+        b.case(&format!("n={n}"), n, || {
+            std::hint::black_box(caesar_recover(std::hint::black_box(&cm), &local));
+        });
+    }
+
+    let b = Bench::new("topk_sparsify").quick();
+    for &n in &sizes {
+        let g = randn(n, 4);
+        for ratio in [0.1, 0.6] {
+            b.case(&format!("n={n} θ={ratio}"), n, || {
+                std::hint::black_box(topk_sparsify(std::hint::black_box(&g), ratio));
+            });
+        }
+    }
+
+    let b = Bench::new("quantize_stochastic (4 bits)").quick();
+    for &n in &sizes {
+        let x = randn(n, 5);
+        let noise: Vec<f32> = randn(n, 6).iter().map(|v| v.abs().fract()).collect();
+        b.case(&format!("n={n}"), n, || {
+            std::hint::black_box(quantize_stochastic(std::hint::black_box(&x), 15, &noise));
+        });
+    }
+
+    let b = Bench::new("wire encode/decode (n=100k, θ=0.35)").quick();
+    let w = randn(100_000, 7);
+    let cm = caesar_compress(&w, 0.35);
+    let bytes = cm.encode();
+    b.case("encode", 100_000, || {
+        std::hint::black_box(cm.encode());
+    });
+    b.case("decode", 100_000, || {
+        std::hint::black_box(caesar_fl::compress::CompressedModel::decode(&bytes, 100_000));
+    });
+}

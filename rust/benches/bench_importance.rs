@@ -1,0 +1,45 @@
+//! Planning-path benchmark: the per-round server-side decisions — Eq. 3
+//! staleness ratios with K-means clustering, Eq. 4–6 importance ranking,
+//! and Eq. 7–9 batch regulation — at fleet sizes up to 10k devices.
+
+use caesar_fl::bench::Bench;
+use caesar_fl::caesar::{cluster_download_ratios, optimize_batches, BatchPlanInput, ImportanceTable};
+use caesar_fl::util::rng::Rng;
+
+fn main() {
+    let b = Bench::new("ImportanceTable::build (Eq. 4-6)").quick();
+    for &n in &[100usize, 1_000, 10_000] {
+        let mut rng = Rng::new(1);
+        let volumes: Vec<usize> = (0..n).map(|_| rng.range_usize(10, 2000)).collect();
+        let kls: Vec<f64> = (0..n).map(|_| rng.f64() * 2.0).collect();
+        b.case(&format!("n={n}"), n, || {
+            std::hint::black_box(ImportanceTable::build(&volumes, &kls, 0.5));
+        });
+    }
+
+    let b = Bench::new("cluster_download_ratios (Eq. 3 + K-means)").quick();
+    for &n in &[8usize, 100, 1_000] {
+        let mut rng = Rng::new(2);
+        let st: Vec<usize> = (0..n).map(|_| rng.below(200)).collect();
+        for k in [4usize, 16] {
+            b.case(&format!("n={n} K={k}"), n, || {
+                std::hint::black_box(cluster_download_ratios(&st, 500, 0.6, k));
+            });
+        }
+    }
+
+    let b = Bench::new("optimize_batches (Eq. 7-9)").quick();
+    for &n in &[8usize, 100, 1_000] {
+        let mut rng = Rng::new(3);
+        let inputs: Vec<BatchPlanInput> = (0..n)
+            .map(|_| BatchPlanInput {
+                download_s: rng.f64() * 20.0,
+                upload_s: rng.f64() * 20.0,
+                mu: 1e-4 + rng.f64() * 1e-2,
+            })
+            .collect();
+        b.case(&format!("n={n}"), n, || {
+            std::hint::black_box(optimize_batches(&inputs, 30, 32));
+        });
+    }
+}

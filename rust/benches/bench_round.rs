@@ -1,0 +1,53 @@
+//! End-to-end round benchmark — one full communication round (plan →
+//! download codec → local SGD → upload codec → aggregate) per scheme.
+//! This is the cost row behind Table 3 / Fig 5: everything the
+//! coordinator executes per round, on both trainer backends.
+
+use caesar_fl::bench::Bench;
+use caesar_fl::config::{ExperimentConfig, TrainerBackend};
+use caesar_fl::coordinator::Server;
+use caesar_fl::runtime::Runtime;
+use caesar_fl::schemes;
+
+fn cfg(task: &str, backend: TrainerBackend) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(task);
+    cfg.trainer = backend;
+    cfg.n_train = 4000;
+    cfg.n_test = 800;
+    cfg.eval_every = usize::MAX; // benchmarked separately
+    cfg
+}
+
+fn bench_backend(label: &str, backend: TrainerBackend) {
+    let b = Bench::new(&format!("full round, har ({label} trainer)")).quick();
+    for scheme in ["fedavg", "flexcom", "prowd", "pyramidfl", "caesar"] {
+        let mut srv =
+            Server::new(cfg("har", backend), schemes::by_name(scheme).unwrap()).unwrap();
+        let mut t = 0usize;
+        b.case(scheme, 0, || {
+            t += 1;
+            srv.step(t).unwrap();
+        });
+    }
+}
+
+fn main() {
+    bench_backend("native", TrainerBackend::Native);
+    if Runtime::open(&Runtime::default_dir()).is_ok() {
+        bench_backend("xla", TrainerBackend::Xla);
+    } else {
+        eprintln!("skipping XLA rounds: artifacts missing (run `make artifacts`)");
+    }
+
+    // evaluation cost (amortized every eval_every rounds)
+    let b = Bench::new("global eval").quick();
+    for (label, backend) in [("native", TrainerBackend::Native), ("xla", TrainerBackend::Xla)] {
+        if backend == TrainerBackend::Xla && Runtime::open(&Runtime::default_dir()).is_err() {
+            continue;
+        }
+        let srv = Server::new(cfg("har", backend), schemes::by_name("caesar").unwrap()).unwrap();
+        b.case(&format!("{label} n_test=800"), 800, || {
+            srv.evaluate().unwrap();
+        });
+    }
+}

@@ -1,0 +1,80 @@
+//! PJRT runtime benchmark: latency of the AOT HLO executables the
+//! coordinator drives on the hot path — train-step chunks per batch
+//! bucket, eval chunks, and the L1 compression kernels.
+//!
+//! Requires `make artifacts`. Skips (exit 0) when artifacts are missing.
+
+use caesar_fl::bench::Bench;
+use caesar_fl::runtime::{lit_f32, lit_i32, lit_scalar, Runtime};
+use caesar_fl::util::rng::Rng;
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = Runtime::default_dir();
+    let rt = match Runtime::open(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping bench_runtime: {e} (run `make artifacts`)");
+            return Ok(());
+        }
+    };
+    let m = rt.manifest();
+    let task = "cifar";
+    let spec = m.task(task).unwrap().clone();
+    let (p, d, chunk) = (spec.n_params, spec.d_in, m.chunk);
+    let w = randn(p, 1);
+
+    let b = Bench::new("train chunk (cifar, τ-chunk per call)").quick();
+    for bucket in m.train_buckets(task) {
+        let xs = randn(chunk * bucket * d, 2);
+        let ys: Vec<i32> = {
+            let mut rng = Rng::new(3);
+            (0..chunk * bucket).map(|_| rng.below(10) as i32).collect()
+        };
+        let module = format!("train_{task}_b{bucket}");
+        b.case(&format!("b={bucket}"), chunk * bucket, || {
+            rt.exec(
+                &module,
+                &[
+                    lit_f32(&w, &[p as i64]).unwrap(),
+                    lit_f32(&xs, &[chunk as i64, bucket as i64, d as i64]).unwrap(),
+                    lit_i32(&ys, &[chunk as i64, bucket as i64]).unwrap(),
+                    lit_scalar(0.1),
+                ],
+            )
+            .unwrap();
+        });
+    }
+
+    let b = Bench::new("eval chunk (cifar)").quick();
+    let e = m.eval_chunk;
+    let xs = randn(e * d, 4);
+    b.case(&format!("batch={e}"), e, || {
+        rt.exec(
+            &format!("eval_{task}"),
+            &[lit_f32(&w, &[p as i64]).unwrap(), lit_f32(&xs, &[e as i64, d as i64]).unwrap()],
+        )
+        .unwrap();
+    });
+
+    let b = Bench::new("L1 kernels via PJRT (cifar)").quick();
+    b.case("compress θ=0.35", p, || {
+        rt.exec(
+            &format!("compress_{task}"),
+            &[lit_f32(&w, &[p as i64]).unwrap(), lit_scalar(0.35)],
+        )
+        .unwrap();
+    });
+    b.case("topk θ=0.6", p, || {
+        rt.exec(
+            &format!("topk_{task}"),
+            &[lit_f32(&w, &[p as i64]).unwrap(), lit_scalar(0.6)],
+        )
+        .unwrap();
+    });
+    Ok(())
+}

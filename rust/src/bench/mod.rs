@@ -1,0 +1,132 @@
+//! Micro-benchmark harness (offline build: no criterion).
+//!
+//! `cargo bench` targets are plain binaries (`harness = false`) that call
+//! [`Bench::run`]: warm-up, timed iterations with adaptive count, and a
+//! report line with mean / p50 / p99 and optional per-element throughput.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// One benchmark group printer.
+pub struct Bench {
+    name: String,
+    min_iters: usize,
+    max_iters: usize,
+    target: Duration,
+    warmup: Duration,
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        println!("\n== bench: {name} ==");
+        Bench {
+            name: name.to_string(),
+            min_iters: 10,
+            max_iters: 100_000,
+            target: Duration::from_millis(700),
+            warmup: Duration::from_millis(150),
+        }
+    }
+
+    /// Quick mode for CI-ish runs (CAESAR_BENCH_QUICK=1).
+    pub fn quick(mut self) -> Bench {
+        if std::env::var("CAESAR_BENCH_QUICK").is_ok() {
+            self.target = Duration::from_millis(120);
+            self.warmup = Duration::from_millis(30);
+            self.max_iters = 2_000;
+        }
+        self
+    }
+
+    /// Run one case; `elems` (if > 0) adds ns/elem + throughput columns.
+    pub fn case<F: FnMut()>(&self, case_name: &str, elems: usize, mut f: F) -> BenchResult {
+        // warm-up
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // calibrate: single run
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let iters = ((self.target.as_nanos() / once.as_nanos()).max(1) as usize)
+            .clamp(self.min_iters, self.max_iters);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let mean = stats::mean(&samples);
+        let p50 = stats::percentile(&samples, 50.0);
+        let p99 = stats::percentile(&samples, 99.0);
+        let mut line = format!(
+            "  {case_name:40} {iters:>7} it  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            fmt_ns(mean),
+            fmt_ns(p50),
+            fmt_ns(p99)
+        );
+        if elems > 0 {
+            let ns_per = mean / elems as f64;
+            let melems = elems as f64 / mean * 1e3; // elems/ns → Melem/s
+            line.push_str(&format!("  {ns_per:>8.2} ns/elem  {melems:>9.1} Melem/s"));
+        }
+        println!("{line}");
+        BenchResult {
+            name: format!("{}/{case_name}", self.name),
+            iters,
+            mean_ns: mean,
+            p50_ns: p50,
+            p99_ns: p99,
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("CAESAR_BENCH_QUICK", "1");
+        let b = Bench::new("selftest").quick();
+        let mut acc = 0u64;
+        let r = b.case("noop-ish", 100, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters >= 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

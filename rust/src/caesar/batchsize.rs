@@ -1,0 +1,132 @@
+//! Greedy batch-size regulation (paper §4.3, Eq. 7–9).
+//!
+//! The PS estimates each participant's round cost M_i (Eq. 7) from its
+//! nominal compression ratios, bandwidths and per-sample latency μ_i,
+//! picks the device that would finish fastest *at b_max* (Eq. 8), gives it
+//! b_max, and sizes every other device's batch so its round time matches
+//! (Eq. 9, floored, clamped to [1, b_max]).
+
+/// Per-participant inputs to the batch planner.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPlanInput {
+    /// Estimated download time θ_d·Q/β_d (seconds).
+    pub download_s: f64,
+    /// Estimated upload time θ_u·Q/β_u (seconds).
+    pub upload_s: f64,
+    /// Per-sample compute latency μ_i (seconds).
+    pub mu: f64,
+}
+
+/// Eq. 8 + Eq. 9. Returns (batch sizes, index of the pace-setting device).
+pub fn optimize_batches(
+    inputs: &[BatchPlanInput],
+    tau: usize,
+    b_max: usize,
+) -> (Vec<usize>, usize) {
+    assert!(!inputs.is_empty() && tau > 0 && b_max >= 1);
+    // Eq. 8: fastest device at full batch
+    let cost_at_bmax =
+        |inp: &BatchPlanInput| inp.download_s + inp.upload_s + tau as f64 * b_max as f64 * inp.mu;
+    let leader = inputs
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| cost_at_bmax(a).partial_cmp(&cost_at_bmax(b)).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    let m_l = cost_at_bmax(&inputs[leader]);
+    // Eq. 9 for everyone else
+    let batches = inputs
+        .iter()
+        .enumerate()
+        .map(|(i, inp)| {
+            if i == leader {
+                return b_max;
+            }
+            let budget = m_l - inp.download_s - inp.upload_s;
+            // small epsilon guards float noise at exact-integer budgets
+            let b = (budget / (tau as f64 * inp.mu) + 1e-9).floor();
+            (b as i64).clamp(1, b_max as i64) as usize
+        })
+        .collect();
+    (batches, leader)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inp(dl: f64, ul: f64, mu: f64) -> BatchPlanInput {
+        BatchPlanInput { download_s: dl, upload_s: ul, mu }
+    }
+
+    #[test]
+    fn leader_gets_bmax() {
+        let inputs = vec![inp(1.0, 1.0, 0.001), inp(5.0, 5.0, 0.01)];
+        let (batches, leader) = optimize_batches(&inputs, 30, 32);
+        assert_eq!(leader, 0);
+        assert_eq!(batches[0], 32);
+        assert!(batches[1] < 32);
+    }
+
+    #[test]
+    fn eq9_hand_computed() {
+        // leader: dl+ul=2, mu=0.001, tau=10, bmax=32 → M_l = 2 + 0.32 = 2.32
+        // other: dl+ul=1.32, mu=0.01 → b = floor((2.32-1.32)/(10*0.01)) = 10
+        let inputs = vec![inp(1.0, 1.0, 0.001), inp(0.66, 0.66, 0.01)];
+        let (batches, leader) = optimize_batches(&inputs, 10, 32);
+        assert_eq!(leader, 0);
+        assert_eq!(batches[1], 10);
+    }
+
+    #[test]
+    fn slow_device_floors_at_one() {
+        let inputs = vec![inp(0.1, 0.1, 0.0001), inp(100.0, 100.0, 10.0)];
+        let (batches, _) = optimize_batches(&inputs, 30, 32);
+        assert_eq!(batches[1], 1);
+    }
+
+    #[test]
+    fn round_times_equalized_within_one_sample() {
+        let inputs = vec![
+            inp(1.0, 0.5, 0.002),
+            inp(2.0, 1.0, 0.004),
+            inp(0.5, 0.2, 0.001),
+            inp(3.0, 2.0, 0.0005),
+        ];
+        let tau = 20;
+        let (batches, leader) = optimize_batches(&inputs, tau, 32);
+        let m_l = inputs[leader].download_s
+            + inputs[leader].upload_s
+            + tau as f64 * batches[leader] as f64 * inputs[leader].mu;
+        for (i, b) in batches.iter().enumerate() {
+            let m = inputs[i].download_s
+                + inputs[i].upload_s
+                + tau as f64 * *b as f64 * inputs[i].mu;
+            // no device exceeds the leader unless clamped at b=1
+            if *b > 1 {
+                assert!(
+                    m <= m_l + 1e-9,
+                    "device {i}: m={m} > leader {m_l}"
+                );
+                // and within one sample's compute of the leader if not at cap
+                if *b < 32 {
+                    assert!(m + tau as f64 * inputs[i].mu > m_l - 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn identical_devices_all_get_bmax() {
+        let inputs = vec![inp(1.0, 1.0, 0.001); 5];
+        let (batches, _) = optimize_batches(&inputs, 30, 16);
+        assert!(batches.iter().all(|&b| b == 16));
+    }
+
+    #[test]
+    fn single_device() {
+        let (batches, leader) = optimize_batches(&[inp(1.0, 1.0, 0.01)], 10, 8);
+        assert_eq!(batches, vec![8]);
+        assert_eq!(leader, 0);
+    }
+}

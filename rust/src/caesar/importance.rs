@@ -1,0 +1,163 @@
+//! Gradient importance from local data properties and the rank-based
+//! upload compression ratio (paper §4.2, Eq. 4–6).
+//!
+//! C_i = λ·A_i/A_max + (1−λ)·e^{−D_i}   (Eq. 5)
+//! D_i = KL(Φ_i ‖ uniform)              (Eq. 4)
+//! θ_u,i = θ_min + (θ_max−θ_min)/|N| · Rank(C_i)   (Eq. 6)
+//!
+//! Rank 0 = most important device → θ_min (least compression). The table
+//! is computed once before training (importance is a static data property)
+//! — exactly the paper's workflow.
+
+/// Eq. 5 with the paper's default λ = 0.5.
+pub const DEFAULT_LAMBDA: f64 = 0.5;
+
+/// Importance of one device from its sample volume and KL gap.
+pub fn importance(volume: usize, a_max: usize, kl_gap: f64, lambda: f64) -> f64 {
+    let vol_term = volume as f64 / a_max.max(1) as f64;
+    lambda * vol_term + (1.0 - lambda) * (-kl_gap).exp()
+}
+
+/// Eq. 6: upload ratio from a device's importance rank (0-based,
+/// descending importance) among `n` devices.
+pub fn upload_ratio(rank: usize, n: usize, theta_min: f64, theta_max: f64) -> f64 {
+    debug_assert!(rank < n.max(1));
+    theta_min + (theta_max - theta_min) / n.max(1) as f64 * rank as f64
+}
+
+/// Precomputed per-device importance and ranks.
+#[derive(Clone, Debug)]
+pub struct ImportanceTable {
+    /// C_i per device.
+    pub scores: Vec<f64>,
+    /// rank[i] = 0-based position of device i in descending-score order.
+    pub ranks: Vec<usize>,
+}
+
+impl ImportanceTable {
+    /// Build from per-device (volume, KL-gap) pairs.
+    pub fn build(volumes: &[usize], kl_gaps: &[f64], lambda: f64) -> ImportanceTable {
+        assert_eq!(volumes.len(), kl_gaps.len());
+        let a_max = volumes.iter().copied().max().unwrap_or(1);
+        let scores: Vec<f64> = volumes
+            .iter()
+            .zip(kl_gaps)
+            .map(|(&v, &d)| importance(v, a_max, d, lambda))
+            .collect();
+        let mut order: Vec<usize> = (0..scores.len()).collect();
+        order.sort_by(|&a, &b| {
+            scores[b]
+                .partial_cmp(&scores[a])
+                .unwrap()
+                .then(a.cmp(&b)) // deterministic tie-break by id
+        });
+        let mut ranks = vec![0usize; scores.len()];
+        for (pos, &dev) in order.iter().enumerate() {
+            ranks[dev] = pos;
+        }
+        ImportanceTable { scores, ranks }
+    }
+
+    /// Eq. 6 for device `i`.
+    pub fn upload_ratio(&self, i: usize, theta_min: f64, theta_max: f64) -> f64 {
+        upload_ratio(self.ranks[i], self.ranks.len(), theta_min, theta_max)
+    }
+
+    pub fn len(&self) -> usize {
+        self.scores.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scores.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn importance_increases_with_volume() {
+        let a = importance(100, 1000, 0.5, 0.5);
+        let b = importance(900, 1000, 0.5, 0.5);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn importance_decreases_with_kl_gap() {
+        let a = importance(500, 1000, 0.0, 0.5);
+        let b = importance(500, 1000, 2.0, 0.5);
+        assert!(a > b);
+    }
+
+    #[test]
+    fn lambda_extremes_isolate_terms() {
+        // λ=1: only volume matters
+        assert_eq!(
+            importance(300, 1000, 9.9, 1.0),
+            importance(300, 1000, 0.0, 1.0)
+        );
+        // λ=0: only distribution matters
+        assert_eq!(
+            importance(1, 1000, 0.7, 0.0),
+            importance(999, 1000, 0.7, 0.0)
+        );
+    }
+
+    #[test]
+    fn eq5_hand_computed() {
+        // C = 0.5 * 200/400 + 0.5 * e^{-ln 2} = 0.25 + 0.25 = 0.5
+        let c = importance(200, 400, (2.0f64).ln(), 0.5);
+        assert!((c - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_zero_gets_theta_min() {
+        assert_eq!(upload_ratio(0, 10, 0.1, 0.6), 0.1);
+        let last = upload_ratio(9, 10, 0.1, 0.6);
+        assert!(last < 0.6 && last > 0.5); // θ_min + 9/10·span
+    }
+
+    #[test]
+    fn table_ranks_descending_importance() {
+        // device 1 has the best data (big volume, uniform) → rank 0
+        let volumes = [100, 1000, 400];
+        let kls = [2.0, 0.0, 0.5];
+        let t = ImportanceTable::build(&volumes, &kls, 0.5);
+        assert_eq!(t.ranks[1], 0);
+        assert!(t.scores[1] > t.scores[2] && t.scores[2] > t.scores[0]);
+        assert_eq!(t.ranks[0], 2);
+        // most important device gets the smallest upload ratio
+        let r1 = t.upload_ratio(1, 0.1, 0.6);
+        let r0 = t.upload_ratio(0, 0.1, 0.6);
+        assert!(r1 < r0);
+        assert_eq!(r1, 0.1);
+    }
+
+    #[test]
+    fn ranks_are_a_permutation() {
+        let volumes: Vec<usize> = (0..50).map(|i| (i * 37) % 500 + 1).collect();
+        let kls: Vec<f64> = (0..50).map(|i| (i as f64 * 0.13) % 2.0).collect();
+        let t = ImportanceTable::build(&volumes, &kls, 0.5);
+        let mut sorted = t.ranks.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tie_break_is_deterministic() {
+        let t = ImportanceTable::build(&[100, 100], &[0.5, 0.5], 0.5);
+        assert_eq!(t.ranks, vec![0, 1]);
+    }
+
+    #[test]
+    fn ratios_stay_in_bounds() {
+        let volumes: Vec<usize> = (1..=30).collect();
+        let kls = vec![0.3; 30];
+        let t = ImportanceTable::build(&volumes, &kls, 0.5);
+        for i in 0..30 {
+            let r = t.upload_ratio(i, 0.1, 0.6);
+            assert!((0.1..=0.6).contains(&r));
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Caesar's three decision components (paper §4): staleness-aware download
+//! ratios (Eq. 3 + the K-cluster optimization), data-importance-driven
+//! upload ratios (Eq. 4–6), and the greedy batch-size regulation (Eq. 7–9).
+
+pub mod batchsize;
+pub mod importance;
+pub mod staleness;
+
+pub use batchsize::{optimize_batches, BatchPlanInput};
+pub use importance::{importance, upload_ratio, ImportanceTable};
+pub use staleness::{cluster_download_ratios, download_ratio, ParticipationTracker};

@@ -1,0 +1,211 @@
+//! Local-model staleness tracking and the staleness-aware download
+//! compression ratio (paper §4.1).
+//!
+//! Eq. 3: θ_d,i^t = (1 − δ_i^t / t) · θ_d^max, where δ_i^t = t − r_i is the
+//! number of rounds since device i's last participation (δ = t, i.e. θ = 0
+//! full precision, for devices that never participated).
+//!
+//! The K-cluster optimization groups participants by staleness (1-D
+//! k-means) and compresses once per cluster at the cluster's mean
+//! staleness, trading PS compute for ratio precision.
+
+/// Tracks each device's last participation round.
+#[derive(Clone, Debug)]
+pub struct ParticipationTracker {
+    /// last_round[i] = Some(r) if device i last participated in round r
+    /// (with r counted from 1 as in the paper: r_i = 0 means "never").
+    last_round: Vec<usize>,
+}
+
+impl ParticipationTracker {
+    pub fn new(n_devices: usize) -> Self {
+        ParticipationTracker { last_round: vec![0; n_devices] }
+    }
+
+    /// Staleness δ_i^t at round t (1-based rounds; t >= 1).
+    pub fn staleness(&self, device: usize, t: usize) -> usize {
+        debug_assert!(t >= 1);
+        t - self.last_round[device]
+    }
+
+    /// True if the device has never participated (no local model exists).
+    pub fn never_participated(&self, device: usize) -> bool {
+        self.last_round[device] == 0
+    }
+
+    /// Record participation in round t.
+    pub fn record(&mut self, device: usize, t: usize) {
+        self.last_round[device] = t;
+    }
+
+    pub fn len(&self) -> usize {
+        self.last_round.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.last_round.is_empty()
+    }
+}
+
+/// Eq. 3: download compression ratio from staleness.
+pub fn download_ratio(staleness: usize, t: usize, theta_d_max: f64) -> f64 {
+    debug_assert!(t >= 1 && staleness <= t);
+    (1.0 - staleness as f64 / t as f64) * theta_d_max
+}
+
+/// 1-D k-means over staleness values; returns per-participant download
+/// ratios computed at their cluster's mean staleness (paper §4.1's
+/// cluster-based solution). `k` is clamped to the number of participants.
+pub fn cluster_download_ratios(
+    stalenesses: &[usize],
+    t: usize,
+    theta_d_max: f64,
+    k: usize,
+) -> (Vec<f64>, usize) {
+    let n = stalenesses.len();
+    if n == 0 {
+        return (vec![], 0);
+    }
+    let k = k.clamp(1, n);
+    // init centers at quantiles of the sorted values
+    let mut sorted: Vec<f64> = stalenesses.iter().map(|&s| s as f64).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut centers: Vec<f64> = if k == 1 {
+        vec![sorted.iter().sum::<f64>() / n as f64]
+    } else {
+        // spread the initial centers over the full sorted range so K = n
+        // recovers the exact per-device ratios (Eq. 3)
+        (0..k).map(|j| sorted[(j * (n - 1)) / (k - 1)]).collect()
+    };
+    centers.dedup();
+    let k = centers.len();
+
+    let mut assign = vec![0usize; n];
+    for _ in 0..32 {
+        // assign
+        let mut changed = false;
+        for (i, &s) in stalenesses.iter().enumerate() {
+            let mut best = (f64::MAX, 0usize);
+            for (j, &c) in centers.iter().enumerate() {
+                let d = (s as f64 - c).abs();
+                if d < best.0 {
+                    best = (d, j);
+                }
+            }
+            if assign[i] != best.1 {
+                assign[i] = best.1;
+                changed = true;
+            }
+        }
+        // update
+        for (j, c) in centers.iter_mut().enumerate() {
+            let members: Vec<f64> = stalenesses
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| assign[*i] == j)
+                .map(|(_, &s)| s as f64)
+                .collect();
+            if !members.is_empty() {
+                *c = members.iter().sum::<f64>() / members.len() as f64;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let ratios = assign
+        .iter()
+        .map(|&j| {
+            let mean_staleness = centers[j].min(t as f64);
+            (1.0 - mean_staleness / t as f64) * theta_d_max
+        })
+        .collect();
+    (ratios, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staleness_counts_missed_rounds() {
+        let mut tr = ParticipationTracker::new(3);
+        assert!(tr.never_participated(0));
+        assert_eq!(tr.staleness(0, 5), 5); // never participated → δ = t
+        tr.record(0, 3);
+        assert_eq!(tr.staleness(0, 5), 2);
+        assert!(!tr.never_participated(0));
+        tr.record(0, 5);
+        assert_eq!(tr.staleness(0, 5), 0);
+    }
+
+    #[test]
+    fn eq3_fresh_gets_max_ratio() {
+        // δ=0 → full θ_max; δ=t (never) → 0 (full precision download)
+        assert_eq!(download_ratio(0, 10, 0.6), 0.6);
+        assert_eq!(download_ratio(10, 10, 0.6), 0.0);
+        let mid = download_ratio(5, 10, 0.6);
+        assert!((mid - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq3_monotone_in_staleness() {
+        let mut prev = f64::MAX;
+        for s in 0..=20 {
+            let r = download_ratio(s, 20, 0.6);
+            assert!(r <= prev);
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn cluster_ratios_group_similar_staleness() {
+        let st = vec![1, 1, 2, 2, 50, 50, 51, 49];
+        let (ratios, k) = cluster_download_ratios(&st, 100, 0.6, 2);
+        assert_eq!(k, 2);
+        // devices 0-3 share a ratio; devices 4-7 share a (smaller) ratio
+        assert_eq!(ratios[0], ratios[1]);
+        assert_eq!(ratios[4], ratios[5]);
+        assert!(ratios[0] > ratios[4]);
+    }
+
+    #[test]
+    fn cluster_k1_uses_global_mean() {
+        let st = vec![0, 10, 20];
+        let (ratios, k) = cluster_download_ratios(&st, 20, 0.6, 1);
+        assert_eq!(k, 1);
+        let want = (1.0 - 10.0 / 20.0) * 0.6;
+        for r in ratios {
+            assert!((r - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn cluster_k_equal_n_recovers_exact_eq3() {
+        let st = vec![0, 5, 10, 15, 20];
+        let (ratios, _) = cluster_download_ratios(&st, 20, 0.6, 5);
+        for (i, &s) in st.iter().enumerate() {
+            let want = download_ratio(s, 20, 0.6);
+            assert!((ratios[i] - want).abs() < 1e-9, "{i}");
+        }
+    }
+
+    #[test]
+    fn cluster_handles_empty_and_single() {
+        let (r, k) = cluster_download_ratios(&[], 10, 0.6, 3);
+        assert!(r.is_empty());
+        assert_eq!(k, 0);
+        let (r, k) = cluster_download_ratios(&[4], 10, 0.6, 3);
+        assert_eq!(r.len(), 1);
+        assert_eq!(k, 1);
+    }
+
+    #[test]
+    fn ratios_within_bounds() {
+        let st: Vec<usize> = (0..50).map(|i| i % 25).collect();
+        let (ratios, _) = cluster_download_ratios(&st, 25, 0.6, 4);
+        for r in ratios {
+            assert!((0.0..=0.6).contains(&r));
+        }
+    }
+}

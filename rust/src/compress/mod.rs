@@ -1,0 +1,23 @@
+//! Compression codecs (rust-native implementations).
+//!
+//! These mirror the Layer-1 Pallas kernels bit-for-bit in semantics (the
+//! integration test `tests/compress_parity.rs` pins them against the AOT
+//! HLO artifacts): the simulator needs them at arbitrary shape and scale,
+//! and the traffic accounting needs the realized masks.
+//!
+//! * [`caesar_model`] — the paper's §4.1 download codec: threshold-split
+//!   Top-K + 1-bit sign quantization with avg/max side info, and the
+//!   local-model-assisted recovery with the two error corrections.
+//! * [`topk`] — Top-K gradient sparsification (§4.2 upload codec, also the
+//!   FIC/CAC/FlexCom baselines' codec).
+//! * [`quant`] — QSGD-style stochastic uniform quantization (ProWD).
+//! * [`traffic`] — exact wire-format bit accounting for all of the above.
+
+pub mod caesar_model;
+pub mod quant;
+pub mod topk;
+pub mod traffic;
+
+pub use caesar_model::{caesar_compress, caesar_recover, CompressedModel};
+pub use quant::quantize_stochastic;
+pub use topk::topk_sparsify;

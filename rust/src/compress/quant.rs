@@ -1,0 +1,133 @@
+//! QSGD-style stochastic uniform quantization — the codec behind the ProWD
+//! baseline (bandwidth-chosen bit-width). Mirrors the L1 `quantize` kernel:
+//! q(x) = sign(x) · ⌊|x|/norm·s + u⌋/s · norm with norm = max|x|.
+
+/// Quantize `x` to `levels` buckets using the caller-supplied uniform[0,1)
+/// `noise` (same-length). Deterministic given its inputs.
+pub fn quantize_stochastic(x: &[f32], levels: u32, noise: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), noise.len());
+    assert!(levels >= 1);
+    let norm = x.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+    if norm == 0.0 {
+        return vec![0.0; x.len()];
+    }
+    let s = levels as f32;
+    x.iter()
+        .zip(noise)
+        .map(|(&xi, &u)| {
+            let scaled = xi.abs() / norm * s;
+            let q = (scaled + u).floor().min(s);
+            let sign = if xi >= 0.0 { 1.0 } else { -1.0 };
+            sign * q / s * norm
+        })
+        .collect()
+}
+
+/// Map a bandwidth fraction (0 = worst, 1 = best observed) to a
+/// quantization bit-width in [min_bits, max_bits] (ProWD's policy shape:
+/// weaker links use fewer bits).
+pub fn bits_for_bandwidth(frac: f64, min_bits: u32, max_bits: u32) -> u32 {
+    let f = frac.clamp(0.0, 1.0);
+    min_bits + ((max_bits - min_bits) as f64 * f).round() as u32
+}
+
+/// Levels for a given bit-width: with 1 sign bit + b value bits,
+/// s = 2^b − 1 buckets.
+pub fn levels_for_bits(bits: u32) -> u32 {
+    (1u32 << bits.clamp(1, 16)) - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn unif(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.f32()).collect()
+    }
+
+    #[test]
+    fn error_bounded_by_bucket() {
+        let x = randn(2048, 0);
+        let u = unif(2048, 1);
+        let levels = 15;
+        let q = quantize_stochastic(&x, levels, &u);
+        let norm = x.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        let bucket = norm / levels as f32;
+        for (a, b) in x.iter().zip(&q) {
+            assert!((a - b).abs() <= bucket + 1e-6);
+        }
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let x = randn(128, 2);
+        let mut rng = Rng::new(3);
+        let trials = 2000;
+        let mut acc = vec![0.0f64; 128];
+        for _ in 0..trials {
+            let u: Vec<f32> = (0..128).map(|_| rng.f32()).collect();
+            for (a, q) in acc.iter_mut().zip(quantize_stochastic(&x, 4, &u)) {
+                *a += q as f64;
+            }
+        }
+        let bias: f64 = acc
+            .iter()
+            .zip(&x)
+            .map(|(a, &xi)| (a / trials as f64 - xi as f64).abs())
+            .sum::<f64>()
+            / 128.0;
+        assert!(bias < 0.02, "bias={bias}");
+    }
+
+    #[test]
+    fn more_levels_less_error() {
+        let x = randn(4096, 4);
+        let u = unif(4096, 5);
+        let err = |levels: u32| -> f64 {
+            quantize_stochastic(&x, levels, &u)
+                .iter()
+                .zip(&x)
+                .map(|(q, &xi)| ((q - xi) as f64).powi(2))
+                .sum()
+        };
+        assert!(err(255) < err(15));
+        assert!(err(15) < err(3));
+    }
+
+    #[test]
+    fn zero_vector() {
+        let x = vec![0.0f32; 10];
+        let u = unif(10, 6);
+        assert_eq!(quantize_stochastic(&x, 7, &u), x);
+    }
+
+    #[test]
+    fn preserves_signs() {
+        let x = randn(1024, 7);
+        let u = unif(1024, 8);
+        for (q, &xi) in quantize_stochastic(&x, 15, &u).iter().zip(&x) {
+            if *q != 0.0 {
+                assert_eq!(q.signum(), xi.signum());
+            }
+        }
+    }
+
+    #[test]
+    fn bandwidth_policy_monotone() {
+        let lo = bits_for_bandwidth(0.0, 2, 8);
+        let mid = bits_for_bandwidth(0.5, 2, 8);
+        let hi = bits_for_bandwidth(1.0, 2, 8);
+        assert_eq!(lo, 2);
+        assert_eq!(hi, 8);
+        assert!(lo <= mid && mid <= hi);
+        assert_eq!(levels_for_bits(4), 15);
+        assert_eq!(levels_for_bits(1), 1);
+    }
+}

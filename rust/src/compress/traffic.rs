@@ -1,0 +1,144 @@
+//! Exact wire-format bit accounting.
+//!
+//! The paper reports traffic as θ·Q (ignoring position metadata). We
+//! account the *real* wire formats — position bitmaps / index lists, side
+//! scalars — so traffic numbers are honest; DESIGN.md notes where this
+//! differs from the paper's idealized accounting (it is a few percent).
+//!
+//! The simulated payload is scaled to the paper's model sizes (`q_scale`):
+//! compression decisions are measured on the real (small) stand-in model
+//! and the resulting bits-per-parameter is applied to the paper-scale
+//! parameter count, reproducing the paper's GB-scale traffic and its
+//! comm/comp balance. See DESIGN.md §Substitutions.
+
+/// Uncompressed model/gradient size in bits for `n` fp32 parameters.
+pub fn full_model_bits(n: usize) -> usize {
+    n * 32
+}
+
+/// Caesar download codec: P-bit position bitmap + 1 bit per quantized
+/// element + 32 bits per kept element + avg/max scalars.
+pub fn caesar_model_bits(n: usize, n_quantized: usize) -> usize {
+    assert!(n_quantized <= n);
+    n + n_quantized + (n - n_quantized) * 32 + 64
+}
+
+/// Top-K upload codec: 32 bits per kept value + positions. Positions cost
+/// min(P-bit bitmap, k·ceil(log2 P)) — the encoder picks the cheaper.
+pub fn topk_grad_bits(n: usize, kept: usize) -> usize {
+    let idx_bits = crate::util::bitio::bits_for(n) as usize;
+    kept * 32 + (kept * idx_bits).min(n)
+}
+
+/// QSGD codec: 1 sign bit + `bits` bucket bits per element + fp32 norm.
+pub fn quantized_bits(n: usize, bits: u32) -> usize {
+    n * (1 + bits as usize) + 32
+}
+
+/// Paper-scale payload model: bits-per-parameter measured on the stand-in
+/// model, applied to the paper's parameter count.
+#[derive(Clone, Copy, Debug)]
+pub struct PayloadScale {
+    /// Parameter count of the stand-in (our real trained model).
+    pub n_real: usize,
+    /// Parameter count whose traffic we simulate (paper's model).
+    pub n_paper: usize,
+}
+
+impl PayloadScale {
+    pub fn identity(n: usize) -> PayloadScale {
+        PayloadScale { n_real: n, n_paper: n }
+    }
+
+    /// Scale measured wire bits on the stand-in up to paper scale.
+    pub fn scale_bits(&self, measured_bits: usize) -> f64 {
+        measured_bits as f64 * self.n_paper as f64 / self.n_real as f64
+    }
+
+    /// Paper-scale uncompressed payload (Eq. 7's Q) in bits.
+    pub fn q_bits(&self) -> f64 {
+        (self.n_paper * 32) as f64
+    }
+}
+
+/// Running totals for one experiment.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrafficMeter {
+    pub down_bits: f64,
+    pub up_bits: f64,
+}
+
+impl TrafficMeter {
+    pub fn add_down(&mut self, bits: f64) {
+        self.down_bits += bits;
+    }
+
+    pub fn add_up(&mut self, bits: f64) {
+        self.up_bits += bits;
+    }
+
+    pub fn total_bits(&self) -> f64 {
+        self.down_bits + self.up_bits
+    }
+
+    pub fn total_gb(&self) -> f64 {
+        self.total_bits() / 8.0 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caesar_bits_edges() {
+        // nothing quantized: bitmap + full payload + scalars
+        assert_eq!(caesar_model_bits(100, 0), 100 + 3200 + 64);
+        // all quantized: bitmap + sign bits + scalars
+        assert_eq!(caesar_model_bits(100, 100), 100 + 100 + 64);
+        // caesar at ratio>0 always beats full precision + bitmap overhead
+        assert!(caesar_model_bits(1000, 350) < full_model_bits(1000));
+    }
+
+    #[test]
+    fn caesar_saving_matches_ratio_roughly() {
+        let n = 10_000;
+        let bits = caesar_model_bits(n, 3500);
+        let ideal = 0.65 * 32.0 * n as f64 + 0.35 * n as f64;
+        let overhead = bits as f64 - ideal;
+        assert!(overhead <= (n + 64) as f64); // bitmap + scalars only
+    }
+
+    #[test]
+    fn topk_picks_cheaper_position_encoding() {
+        let n = 10_000; // idx bits = 14
+        // tiny k → index list cheaper than bitmap
+        assert_eq!(topk_grad_bits(n, 10), 10 * 32 + 10 * 14);
+        // huge k → bitmap cheaper
+        assert_eq!(topk_grad_bits(n, 5000), 5000 * 32 + n);
+    }
+
+    #[test]
+    fn quantized_bits_formula() {
+        assert_eq!(quantized_bits(1000, 4), 5000 + 32);
+    }
+
+    #[test]
+    fn payload_scaling() {
+        let s = PayloadScale { n_real: 9_610, n_paper: 11_690_000 };
+        let measured = full_model_bits(9_610);
+        let scaled = s.scale_bits(measured);
+        assert!((scaled - 11_690_000.0 * 32.0).abs() < 1.0);
+        assert_eq!(s.q_bits(), 11_690_000.0 * 32.0);
+        let id = PayloadScale::identity(100);
+        assert_eq!(id.scale_bits(50.0 as usize as usize * 1), 50.0);
+    }
+
+    #[test]
+    fn meter_accumulates() {
+        let mut m = TrafficMeter::default();
+        m.add_down(8e9);
+        m.add_up(8e9);
+        assert_eq!(m.total_gb(), 2.0);
+    }
+}

@@ -1,0 +1,278 @@
+//! Experiment configuration: per-dataset presets from the paper's §6.1
+//! plus `key=value` CLI overrides.
+
+use crate::fleet::FleetKind;
+use crate::util::cli::Args;
+
+/// Which trainer executes the local SGD iterations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainerBackend {
+    /// The AOT HLO artifacts via PJRT (the real three-layer path).
+    Xla,
+    /// The native rust oracle in `nn/` (artifact-free fallback; used by
+    /// unit tests and available via `--trainer native`).
+    Native,
+}
+
+/// Which implementation performs model/gradient compression.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompressionBackend {
+    /// rust-native codecs (default: any shape, any scale).
+    Native,
+    /// The AOT-lowered L1 Pallas kernels via PJRT (parity-pinned).
+    Xla,
+}
+
+/// Full configuration of one FL experiment run.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Task/dataset name: cifar | har | speech | oppo.
+    pub task: String,
+    pub fleet: FleetKind,
+    /// Total training samples across the fleet (test set is extra).
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Communication rounds (paper §6.1 defaults).
+    pub rounds: usize,
+    /// Participation fraction α.
+    pub alpha: f64,
+    /// Local iterations τ.
+    pub tau: usize,
+    /// Default/maximum batch size.
+    pub batch: usize,
+    /// Initial learning rate and per-round decay.
+    pub lr: f64,
+    pub lr_decay: f64,
+    /// Data heterogeneity level p = 1/δ (0 = IID).
+    pub het_p: f64,
+    /// Compression ratio bounds [θ_min, θ_max] (paper: [0.1, 0.6]).
+    pub theta_min: f64,
+    pub theta_max: f64,
+    /// Importance mix λ (Eq. 5).
+    pub lambda: f64,
+    /// Staleness clusters K (0 = exact per-device ratios).
+    pub clusters: usize,
+    /// Paper-scale parameter count for traffic/time simulation
+    /// (compress/traffic.rs::PayloadScale).
+    pub n_params_paper: usize,
+    /// Relative per-sample compute cost vs the cifar stand-in.
+    pub model_cost: f64,
+    /// Evaluate every this many rounds.
+    pub eval_every: usize,
+    /// Target accuracy (or AUC for oppo) for *-to-accuracy metrics.
+    pub target_acc: f64,
+    pub seed: u64,
+    pub trainer: TrainerBackend,
+    pub compression: CompressionBackend,
+}
+
+impl ExperimentConfig {
+    /// Paper §6.1 defaults for each dataset.
+    pub fn preset(task: &str) -> ExperimentConfig {
+        let base = ExperimentConfig {
+            task: task.to_string(),
+            fleet: FleetKind::Jetson80,
+            n_train: 20_000,
+            n_test: 4_000,
+            rounds: 250,
+            alpha: 0.1,
+            tau: 30,
+            batch: 32,
+            lr: 0.1,
+            lr_decay: 0.993,
+            het_p: 5.0,
+            theta_min: 0.1,
+            theta_max: 0.6,
+            lambda: 0.5,
+            clusters: 4,
+            n_params_paper: 11_689_512, // ResNet-18
+            model_cost: 1.0,
+            eval_every: 1,
+            target_acc: 0.80,
+            seed: 42,
+            trainer: TrainerBackend::Xla,
+            compression: CompressionBackend::Native,
+        };
+        match task {
+            "cifar" => base,
+            "har" => ExperimentConfig {
+                n_train: 7_352,
+                n_test: 2_000,
+                rounds: 150,
+                tau: 10,
+                batch: 16,
+                // paper's HAR lr is 0.01 on CNN-H; the MLP stand-in needs a
+                // proportionally larger step (substitution, DESIGN.md §3)
+                lr: 0.06,
+                lr_decay: 0.99,
+                n_params_paper: 4_600_000, // CNN-H scale
+                model_cost: 0.4,
+                target_acc: 0.86,
+                ..base
+            },
+            "speech" => ExperimentConfig {
+                n_train: 20_000,
+                n_test: 4_000,
+                n_params_paper: 35_000, // CNN-S (paper traffic is MB-scale)
+                model_cost: 0.8,
+                target_acc: 0.87,
+                ..base
+            },
+            "oppo" => ExperimentConfig {
+                fleet: FleetKind::Phone40,
+                n_train: 9_000,
+                n_test: 1_000,
+                rounds: 50,
+                n_params_paper: 129_314, // 129,314-feature LR
+                model_cost: 0.15,
+                target_acc: 0.65, // AUC target
+                ..base
+            },
+            other => panic!("unknown task preset {other}"),
+        }
+    }
+
+    /// Apply `key=value` overrides from the CLI.
+    pub fn apply_overrides(mut self, args: &Args) -> ExperimentConfig {
+        if let Some(v) = args.get_usize("rounds") {
+            self.rounds = v;
+        }
+        if let Some(v) = args.get_f64("alpha") {
+            self.alpha = v;
+        }
+        if let Some(v) = args.get_usize("tau") {
+            self.tau = v;
+        }
+        if let Some(v) = args.get_usize("batch") {
+            self.batch = v;
+        }
+        if let Some(v) = args.get_f64("lr") {
+            self.lr = v;
+        }
+        if let Some(v) = args.get_f64("lr-decay") {
+            self.lr_decay = v;
+        }
+        if let Some(v) = args.get_f64("p") {
+            self.het_p = v;
+        }
+        if let Some(v) = args.get_f64("theta-min") {
+            self.theta_min = v;
+        }
+        if let Some(v) = args.get_f64("theta-max") {
+            self.theta_max = v;
+        }
+        if let Some(v) = args.get_f64("lambda") {
+            self.lambda = v;
+        }
+        if let Some(v) = args.get_usize("clusters") {
+            self.clusters = v;
+        }
+        if let Some(v) = args.get_usize("devices") {
+            self.fleet = FleetKind::JetsonScaled(v);
+        }
+        if let Some(v) = args.get_u64("seed") {
+            self.seed = v;
+        }
+        if let Some(v) = args.get_f64("target") {
+            self.target_acc = v;
+        }
+        if let Some(v) = args.get_usize("eval-every") {
+            self.eval_every = v.max(1);
+        }
+        if let Some(v) = args.get_usize("n-train") {
+            self.n_train = v;
+        }
+        if let Some(v) = args.get("trainer") {
+            self.trainer = match v {
+                "native" => TrainerBackend::Native,
+                "xla" => TrainerBackend::Xla,
+                other => panic!("unknown trainer {other}"),
+            };
+        }
+        if let Some(v) = args.get("compression-backend") {
+            self.compression = match v {
+                "native" => CompressionBackend::Native,
+                "xla" => CompressionBackend::Xla,
+                other => panic!("unknown compression backend {other}"),
+            };
+        }
+        self
+    }
+
+    /// Number of devices in the configured fleet.
+    pub fn n_devices(&self) -> usize {
+        match self.fleet {
+            FleetKind::Jetson80 => 80,
+            FleetKind::Phone40 => 40,
+            FleetKind::JetsonScaled(n) => n,
+        }
+    }
+
+    /// Participants per round: max(1, round(α·n)).
+    pub fn participants_per_round(&self) -> usize {
+        ((self.alpha * self.n_devices() as f64).round() as usize).max(1)
+    }
+
+    /// Learning rate at round t (exponential decay, paper §6.1).
+    pub fn lr_at(&self, t: usize) -> f64 {
+        self.lr * self.lr_decay.powi(t as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_table() {
+        let c = ExperimentConfig::preset("cifar");
+        assert_eq!((c.rounds, c.tau, c.batch), (250, 30, 32));
+        assert_eq!(c.n_devices(), 80);
+        let h = ExperimentConfig::preset("har");
+        assert_eq!((h.rounds, h.tau, h.batch), (150, 10, 16));
+        // lr is re-tuned for the MLP stand-in (DESIGN.md §Substitutions);
+        // rounds/τ/batch keep the paper's Table values.
+        assert!((h.lr - 0.06).abs() < 1e-12);
+        let o = ExperimentConfig::preset("oppo");
+        assert_eq!(o.rounds, 50);
+        assert_eq!(o.n_devices(), 40);
+        let s = ExperimentConfig::preset("speech");
+        assert_eq!(s.rounds, 250);
+    }
+
+    #[test]
+    fn participants_respect_alpha() {
+        let c = ExperimentConfig::preset("cifar");
+        assert_eq!(c.participants_per_round(), 8);
+        let o = ExperimentConfig::preset("oppo");
+        assert_eq!(o.participants_per_round(), 4);
+    }
+
+    #[test]
+    fn lr_decays() {
+        let c = ExperimentConfig::preset("cifar");
+        assert!((c.lr_at(0) - 0.1).abs() < 1e-12);
+        assert!(c.lr_at(100) < c.lr_at(10));
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let args = Args::parse(
+            "x rounds=10 p=2.5 devices=100 trainer=native seed=7"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = ExperimentConfig::preset("cifar").apply_overrides(&args);
+        assert_eq!(c.rounds, 10);
+        assert_eq!(c.het_p, 2.5);
+        assert_eq!(c.n_devices(), 100);
+        assert_eq!(c.trainer, TrainerBackend::Native);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown task")]
+    fn unknown_preset_panics() {
+        ExperimentConfig::preset("mnist");
+    }
+}

@@ -1,0 +1,311 @@
+//! Codec execution engine — applies a [`DownloadCodec`]/[`UploadCodec`]
+//! through either the rust-native implementations in `compress/` or the
+//! AOT-lowered L1 Pallas kernels via the PJRT runtime.
+//!
+//! Both backends produce the same numerics (pinned by
+//! `tests/compress_parity.rs`); the native backend works at any shape and
+//! is the default, the XLA backend proves the three-layer path end to end.
+
+use anyhow::{anyhow, Result};
+
+use crate::compress::caesar_model::CompressedModel;
+use crate::compress::{self, quant, traffic};
+use crate::config::CompressionBackend;
+use crate::runtime::{lit_f32, lit_scalar, to_scalar_f32, to_vec_f32, Runtime};
+use crate::schemes::{DownloadCodec, UploadCodec};
+use crate::util::rng::Rng;
+
+/// One device's view of a compressed download after recovery, plus the
+/// exact wire size that was transferred.
+pub struct Recovered {
+    pub model: Vec<f32>,
+    pub wire_bits: usize,
+}
+
+/// A compressed upload ready for aggregation (dense, dropped = 0).
+pub struct Uploaded {
+    pub grad: Vec<f32>,
+    pub wire_bits: usize,
+}
+
+/// Stateless codec executor bound to a backend.
+pub struct CodecEngine<'a> {
+    backend: CompressionBackend,
+    rt: Option<&'a Runtime>,
+    task: &'a str,
+}
+
+impl<'a> CodecEngine<'a> {
+    pub fn native() -> CodecEngine<'static> {
+        CodecEngine { backend: CompressionBackend::Native, rt: None, task: "" }
+    }
+
+    pub fn new(
+        backend: CompressionBackend,
+        rt: Option<&'a Runtime>,
+        task: &'a str,
+    ) -> Result<CodecEngine<'a>> {
+        if backend == CompressionBackend::Xla && rt.is_none() {
+            return Err(anyhow!("XLA compression backend requires a runtime"));
+        }
+        Ok(CodecEngine { backend, rt, task })
+    }
+
+    fn xla(&self) -> &Runtime {
+        self.rt.expect("xla backend without runtime")
+    }
+
+    /// Compress the global model `w` for one device, transfer it, and
+    /// recover on-device using the stale `local` model (if any).
+    pub fn download(
+        &self,
+        codec: DownloadCodec,
+        w: &[f32],
+        local: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Result<Recovered> {
+        let n = w.len();
+        match codec {
+            DownloadCodec::Full => Ok(Recovered {
+                model: w.to_vec(),
+                wire_bits: traffic::full_model_bits(n),
+            }),
+            DownloadCodec::CaesarSplit { ratio } => {
+                let Some(local) = local else {
+                    // no local model → the scheme should have sent Full;
+                    // degrade gracefully to full precision
+                    return self.download(DownloadCodec::Full, w, None, rng);
+                };
+                match self.backend {
+                    CompressionBackend::Native => {
+                        let cm = compress::caesar_compress(w, ratio);
+                        let wire_bits = cm.wire_bits();
+                        Ok(Recovered { model: compress::caesar_recover(&cm, local), wire_bits })
+                    }
+                    CompressionBackend::Xla => {
+                        let rt = self.xla();
+                        let out = rt.exec(
+                            &format!("compress_{}", self.task),
+                            &[lit_f32(w, &[n as i64])?, lit_scalar(ratio as f32)],
+                        )?;
+                        let (kept, mask, sign) =
+                            (to_vec_f32(&out[0])?, to_vec_f32(&out[1])?, to_vec_f32(&out[2])?);
+                        let (avg, max) = (to_scalar_f32(&out[3])?, to_scalar_f32(&out[4])?);
+                        let n_quant = mask.iter().filter(|&&m| m > 0.5).count();
+                        let wire_bits = traffic::caesar_model_bits(n, n_quant);
+                        let rec = rt.exec(
+                            &format!("recover_{}", self.task),
+                            &[
+                                lit_f32(&kept, &[n as i64])?,
+                                lit_f32(&mask, &[n as i64])?,
+                                lit_f32(&sign, &[n as i64])?,
+                                lit_scalar(avg),
+                                lit_scalar(max),
+                                lit_f32(local, &[n as i64])?,
+                            ],
+                        )?;
+                        Ok(Recovered { model: to_vec_f32(&rec[0])?, wire_bits })
+                    }
+                }
+            }
+            DownloadCodec::TopK { ratio } => {
+                // GM-FIC / GM-CAC / Caesar-BR download: the (1-ratio)
+                // largest-|w| parameters travel; dropped positions are
+                // filled from the stale local model (zeros if none).
+                let (dense, kept) = self.topk_dense(w, ratio)?;
+                let thr = compress::topk::keep_threshold(w, ratio).0;
+                let model: Vec<f32> = (0..n)
+                    .map(|i| {
+                        if w[i].abs() >= thr {
+                            dense[i]
+                        } else {
+                            local.map_or(0.0, |l| l[i])
+                        }
+                    })
+                    .collect();
+                Ok(Recovered { model, wire_bits: traffic::topk_grad_bits(n, kept) })
+            }
+            DownloadCodec::Quant { bits } => {
+                let q = self.quantize(w, bits, rng)?;
+                Ok(Recovered { model: q, wire_bits: traffic::quantized_bits(n, bits) })
+            }
+        }
+    }
+
+    /// Compress a local gradient for upload. Output is dense
+    /// (aggregation-ready) with the exact wire size accounted.
+    pub fn upload(&self, codec: UploadCodec, g: &[f32], rng: &mut Rng) -> Result<Uploaded> {
+        let n = g.len();
+        match codec {
+            UploadCodec::Full => Ok(Uploaded {
+                grad: g.to_vec(),
+                wire_bits: traffic::full_model_bits(n),
+            }),
+            UploadCodec::TopK { ratio } => {
+                let (dense, kept) = self.topk_dense(g, ratio)?;
+                Ok(Uploaded { grad: dense, wire_bits: traffic::topk_grad_bits(n, kept) })
+            }
+            UploadCodec::Quant { bits } => {
+                let q = self.quantize(g, bits, rng)?;
+                Ok(Uploaded { grad: q, wire_bits: traffic::quantized_bits(n, bits) })
+            }
+        }
+    }
+
+    /// Top-K through the configured backend; returns (dense, kept-count).
+    fn topk_dense(&self, x: &[f32], ratio: f64) -> Result<(Vec<f32>, usize)> {
+        match self.backend {
+            CompressionBackend::Native => {
+                let s = compress::topk_sparsify(x, ratio);
+                Ok((s.dense, s.kept))
+            }
+            CompressionBackend::Xla => {
+                let n = x.len();
+                let out = self.xla().exec(
+                    &format!("topk_{}", self.task),
+                    &[lit_f32(x, &[n as i64])?, lit_scalar(ratio as f32)],
+                )?;
+                let dense = to_vec_f32(&out[0])?;
+                let kept = n - ((ratio * n as f64).floor() as usize).min(n);
+                Ok((dense, kept))
+            }
+        }
+    }
+
+    fn quantize(&self, x: &[f32], bits: u32, rng: &mut Rng) -> Result<Vec<f32>> {
+        let n = x.len();
+        let noise: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let levels = quant::levels_for_bits(bits);
+        match self.backend {
+            CompressionBackend::Native => Ok(quant::quantize_stochastic(x, levels, &noise)),
+            CompressionBackend::Xla => {
+                let out = self.xla().exec(
+                    &format!("quantize_{}", self.task),
+                    &[
+                        lit_f32(x, &[n as i64])?,
+                        lit_scalar(levels as f32),
+                        lit_f32(&noise, &[n as i64])?,
+                    ],
+                )?;
+                Ok(to_vec_f32(&out[0])?)
+            }
+        }
+    }
+}
+
+/// Expose the caesar codec's intermediate form for diagnostics (Fig. 1c).
+pub fn caesar_compressed(w: &[f32], ratio: f64) -> CompressedModel {
+    compress::caesar_compress(w, ratio)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn full_download_is_identity() {
+        let w = randn(512, 0);
+        let e = CodecEngine::native();
+        let r = e.download(DownloadCodec::Full, &w, None, &mut Rng::new(1)).unwrap();
+        assert_eq!(r.model, w);
+        assert_eq!(r.wire_bits, 512 * 32);
+    }
+
+    #[test]
+    fn caesar_download_recovers_with_fresh_local() {
+        let w = randn(1024, 2);
+        let e = CodecEngine::native();
+        let r = e
+            .download(DownloadCodec::CaesarSplit { ratio: 0.5 }, &w, Some(&w), &mut Rng::new(1))
+            .unwrap();
+        assert_eq!(r.model, w);
+        assert!(r.wire_bits < 1024 * 32);
+    }
+
+    #[test]
+    fn caesar_download_without_local_degrades_to_full() {
+        let w = randn(256, 3);
+        let e = CodecEngine::native();
+        let r = e
+            .download(DownloadCodec::CaesarSplit { ratio: 0.5 }, &w, None, &mut Rng::new(1))
+            .unwrap();
+        assert_eq!(r.model, w);
+        assert_eq!(r.wire_bits, 256 * 32);
+    }
+
+    #[test]
+    fn topk_download_fills_dropped_from_local() {
+        let w = randn(512, 4);
+        let local = randn(512, 5);
+        let e = CodecEngine::native();
+        let r = e
+            .download(DownloadCodec::TopK { ratio: 0.5 }, &w, Some(&local), &mut Rng::new(1))
+            .unwrap();
+        let thr = compress::topk::keep_threshold(&w, 0.5).0;
+        for i in 0..512 {
+            if w[i].abs() >= thr {
+                assert_eq!(r.model[i], w[i]);
+            } else {
+                assert_eq!(r.model[i], local[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn topk_download_without_local_zero_fills() {
+        let w = randn(512, 6);
+        let e = CodecEngine::native();
+        let r = e
+            .download(DownloadCodec::TopK { ratio: 0.9 }, &w, None, &mut Rng::new(1))
+            .unwrap();
+        let zeros = r.model.iter().filter(|&&x| x == 0.0).count();
+        assert!(zeros >= 450, "zeros={zeros}");
+    }
+
+    #[test]
+    fn quant_download_error_shrinks_with_bits() {
+        let w = randn(4096, 7);
+        let e = CodecEngine::native();
+        let mut prev = f64::MAX;
+        for bits in [2u32, 4, 8] {
+            let r = e
+                .download(DownloadCodec::Quant { bits }, &w, None, &mut Rng::new(9))
+                .unwrap();
+            let err = stats::mse(&r.model, &w);
+            assert!(err < prev, "bits={bits} err={err}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn upload_topk_bits_smaller_than_full() {
+        let g = randn(2048, 8);
+        let e = CodecEngine::native();
+        let f = e.upload(UploadCodec::Full, &g, &mut Rng::new(1)).unwrap();
+        let s = e.upload(UploadCodec::TopK { ratio: 0.6 }, &g, &mut Rng::new(1)).unwrap();
+        assert!(s.wire_bits < f.wire_bits);
+        let nz = s.grad.iter().filter(|&&x| x != 0.0).count();
+        assert!((nz as f64) < 0.5 * 2048.0);
+    }
+
+    #[test]
+    fn upload_quant_preserves_sign() {
+        let g = randn(1024, 9);
+        let e = CodecEngine::native();
+        let u = e.upload(UploadCodec::Quant { bits: 4 }, &g, &mut Rng::new(2)).unwrap();
+        for (a, b) in g.iter().zip(&u.grad) {
+            assert!(*b == 0.0 || a.signum() == b.signum());
+        }
+    }
+
+    #[test]
+    fn xla_engine_requires_runtime() {
+        assert!(CodecEngine::new(CompressionBackend::Xla, None, "cifar").is_err());
+    }
+}

@@ -1,0 +1,247 @@
+//! Per-round metrics, run results, and CSV/JSON export.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One communication round's record.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundRecord {
+    /// 1-based round index.
+    pub t: usize,
+    /// Cumulative simulated wall-clock (s).
+    pub sim_time_s: f64,
+    /// Cumulative traffic (GB, paper-scale payloads).
+    pub traffic_gb: f64,
+    /// Test accuracy (NaN when not evaluated this round).
+    pub accuracy: f64,
+    /// Test AUC for binary tasks.
+    pub auc: f64,
+    pub mean_loss: f64,
+    /// This round's duration (max over participants).
+    pub round_s: f64,
+    /// Mean idle waiting across participants this round.
+    pub avg_wait_s: f64,
+    pub participants: usize,
+}
+
+/// Result of one full FL run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub scheme: String,
+    pub task: String,
+    pub seed: u64,
+    pub records: Vec<RoundRecord>,
+    /// (round, sim_time_s, traffic_gb) at first reaching the target metric.
+    pub reached_target: Option<(usize, f64, f64)>,
+    pub target: f64,
+}
+
+impl RunResult {
+    /// Last evaluated accuracy (or AUC for binary tasks if `use_auc`).
+    pub fn final_metric(&self, use_auc: bool) -> f64 {
+        self.records
+            .iter()
+            .rev()
+            .find(|r| !r.accuracy.is_nan())
+            .map(|r| if use_auc { r.auc } else { r.accuracy })
+            .unwrap_or(0.0)
+    }
+
+    /// Best (max) metric over the run.
+    pub fn best_metric(&self, use_auc: bool) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| !r.accuracy.is_nan())
+            .map(|r| if use_auc { r.auc } else { r.accuracy })
+            .fold(0.0, f64::max)
+    }
+
+    /// Mean per-round waiting time across the run.
+    pub fn mean_wait_s(&self) -> f64 {
+        let xs: Vec<f64> = self.records.iter().map(|r| r.avg_wait_s).collect();
+        crate::util::stats::mean(&xs)
+    }
+
+    pub fn total_time_s(&self) -> f64 {
+        self.records.last().map(|r| r.sim_time_s).unwrap_or(0.0)
+    }
+
+    pub fn total_traffic_gb(&self) -> f64 {
+        self.records.last().map(|r| r.traffic_gb).unwrap_or(0.0)
+    }
+
+    /// First round whose *evaluated* metric reaches `target`; returns the
+    /// cumulative (time, traffic) there.
+    pub fn time_traffic_at(&self, target: f64, use_auc: bool) -> Option<(f64, f64)> {
+        self.records
+            .iter()
+            .find(|r| {
+                !r.accuracy.is_nan()
+                    && (if use_auc { r.auc } else { r.accuracy }) >= target
+            })
+            .map(|r| (r.sim_time_s, r.traffic_gb))
+    }
+
+    /// CSV with one row per round.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,sim_time_s,traffic_gb,accuracy,auc,mean_loss,round_s,avg_wait_s,participants\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{:.3},{:.6},{},{},{:.5},{:.3},{:.3},{}\n",
+                r.t,
+                r.sim_time_s,
+                r.traffic_gb,
+                if r.accuracy.is_nan() { String::new() } else { format!("{:.4}", r.accuracy) },
+                if r.accuracy.is_nan() { String::new() } else { format!("{:.4}", r.auc) },
+                r.mean_loss,
+                r.round_s,
+                r.avg_wait_s,
+                r.participants
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("scheme", json::s(&self.scheme))
+            .set("task", json::s(&self.task))
+            .set("seed", json::num(self.seed as f64))
+            .set("target", json::num(self.target))
+            .set("final_accuracy", json::num(self.final_metric(false)))
+            .set("final_auc", json::num(self.final_metric(true)))
+            .set("total_time_s", json::num(self.total_time_s()))
+            .set("total_traffic_gb", json::num(self.total_traffic_gb()))
+            .set("mean_wait_s", json::num(self.mean_wait_s()));
+        if let Some((t, time, gb)) = self.reached_target {
+            let mut r = Json::obj();
+            r.set("round", json::num(t as f64))
+                .set("time_s", json::num(time))
+                .set("traffic_gb", json::num(gb));
+            j.set("reached_target", r);
+        }
+        let rounds: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("t", json::num(r.t as f64))
+                    .set("time", json::num(r.sim_time_s))
+                    .set("gb", json::num(r.traffic_gb))
+                    .set("acc", if r.accuracy.is_nan() { Json::Null } else { json::num(r.accuracy) })
+                    .set("wait", json::num(r.avg_wait_s));
+                o
+            })
+            .collect();
+        j.set("rounds", Json::Arr(rounds));
+        j
+    }
+
+    /// Write `<dir>/<scheme>_<task>[_suffix].{csv,json}`.
+    pub fn save(&self, dir: &Path, suffix: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("mkdir {}", dir.display()))?;
+        let stem = if suffix.is_empty() {
+            format!("{}_{}", self.scheme, self.task)
+        } else {
+            format!("{}_{}_{}", self.scheme, self.task, suffix)
+        };
+        let mut f = std::fs::File::create(dir.join(format!("{stem}.csv")))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        let mut f = std::fs::File::create(dir.join(format!("{stem}.json")))?;
+        f.write_all(self.to_json().to_string().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t: usize, acc: f64, time: f64, gb: f64) -> RoundRecord {
+        RoundRecord {
+            t,
+            sim_time_s: time,
+            traffic_gb: gb,
+            accuracy: acc,
+            auc: acc,
+            mean_loss: 1.0,
+            round_s: 10.0,
+            avg_wait_s: 2.0,
+            participants: 8,
+        }
+    }
+
+    fn run() -> RunResult {
+        RunResult {
+            scheme: "caesar".into(),
+            task: "cifar".into(),
+            seed: 1,
+            records: vec![
+                rec(1, 0.3, 10.0, 1.0),
+                rec(2, f64::NAN, 20.0, 2.0),
+                rec(3, 0.7, 30.0, 3.0),
+                rec(4, 0.8, 40.0, 4.0),
+            ],
+            reached_target: Some((4, 40.0, 4.0)),
+            target: 0.8,
+        }
+    }
+
+    #[test]
+    fn final_metric_skips_unevaluated() {
+        let r = run();
+        assert_eq!(r.final_metric(false), 0.8);
+        assert_eq!(r.best_metric(false), 0.8);
+    }
+
+    #[test]
+    fn time_traffic_at_target() {
+        let r = run();
+        assert_eq!(r.time_traffic_at(0.7, false), Some((30.0, 3.0)));
+        assert_eq!(r.time_traffic_at(0.9, false), None);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let c = run().to_csv();
+        assert!(c.starts_with("round,"));
+        assert_eq!(c.lines().count(), 5);
+        // NaN accuracy renders as empty field
+        let row2: Vec<&str> = c.lines().nth(2).unwrap().split(',').collect();
+        assert_eq!(row2[3], "");
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let j = run().to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("scheme").unwrap().as_str(), Some("caesar"));
+        assert_eq!(
+            parsed
+                .get("reached_target")
+                .unwrap()
+                .get("round")
+                .unwrap()
+                .as_usize(),
+            Some(4)
+        );
+        assert_eq!(parsed.get("rounds").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn save_writes_files() {
+        let dir = std::env::temp_dir().join("caesar_metrics_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        run().save(&dir, "p5").unwrap();
+        assert!(dir.join("caesar_cifar_p5.csv").exists());
+        assert!(dir.join("caesar_cifar_p5.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,446 @@
+//! Layer-3 coordinator: the synchronous FL round loop (paper Algorithm 1).
+//!
+//! The [`Server`] owns the global model, the simulated device fleet, the
+//! non-IID data partition, the participation tracker, the traffic meter
+//! and the simulated clock. Each round it (1) selects participants,
+//! (2) asks the configured [`Scheme`] for a per-device plan (codec +
+//! batch + τ), (3) executes downloads, local training and uploads through
+//! the codec engine and trainer backends, (4) aggregates, and (5) records
+//! metrics. Training runs REAL SGD (native or AOT HLO via PJRT); time and
+//! traffic are simulated at paper scale per DESIGN.md §Substitutions.
+
+pub mod codec;
+pub mod metrics;
+pub mod trainer;
+
+pub use codec::CodecEngine;
+pub use metrics::{RoundRecord, RunResult};
+pub use trainer::{EvalOutcome, Trainer};
+
+use anyhow::{Context, Result};
+
+use crate::caesar::{ImportanceTable, ParticipationTracker};
+use crate::compress::traffic::{PayloadScale, TrafficMeter};
+use crate::config::{ExperimentConfig, TrainerBackend};
+use crate::data::{self, Dataset, Partition, TaskSpec};
+use crate::fleet::{Fleet, RoundCost};
+use crate::runtime::Runtime;
+use crate::schemes::{RoundCtx, Scheme};
+use crate::util::rng::Rng;
+
+/// The federated-learning server (PS) plus the simulated testbed.
+pub struct Server {
+    pub cfg: ExperimentConfig,
+    scheme: Box<dyn Scheme>,
+    fleet: Fleet,
+    train_ds: Dataset,
+    test_ds: Dataset,
+    partition: Partition,
+    importance: ImportanceTable,
+    tracker: ParticipationTracker,
+    trainer: Trainer,
+    scale: PayloadScale,
+    /// Current global model (flat parameter vector).
+    pub global: Vec<f32>,
+    /// Per-device stale local models (None until first participation).
+    locals: Vec<Option<Vec<f32>>>,
+    /// Last observed ||g_i|| per device (PyramidFL's ranking signal).
+    grad_norms: Vec<f64>,
+    traffic: TrafficMeter,
+    sim_time_s: f64,
+    rng: Rng,
+}
+
+/// Everything measured in one executed round.
+struct RoundOutcome {
+    round_s: f64,
+    avg_wait_s: f64,
+    mean_loss: f64,
+}
+
+impl Server {
+    /// Build a server from a config and scheme, reading AOT artifacts from
+    /// [`Runtime::default_dir`] when the XLA trainer is configured.
+    pub fn new(cfg: ExperimentConfig, scheme: Box<dyn Scheme>) -> Result<Server> {
+        Self::with_artifacts(cfg, scheme, &Runtime::default_dir())
+    }
+
+    /// Build a server with an explicit artifact directory.
+    pub fn with_artifacts(
+        cfg: ExperimentConfig,
+        scheme: Box<dyn Scheme>,
+        artifact_dir: &std::path::Path,
+    ) -> Result<Server> {
+        let mut rng = Rng::new(cfg.seed);
+        let spec = TaskSpec::by_name(&cfg.task)
+            .with_context(|| format!("unknown task {}", cfg.task))?;
+        let train_ds = Dataset::generate(&spec, cfg.n_train, &mut rng.fork(0xDA7A));
+        let test_ds = Dataset::generate(&spec, cfg.n_test, &mut rng.fork(0x7E57));
+        let n = cfg.n_devices();
+        let partition = data::partition(&train_ds, n, cfg.het_p, &mut rng.fork(0xD1FF));
+
+        // Static importance table (Eq. 4–5), computed once before training
+        // exactly as §4.2 prescribes.
+        let volumes: Vec<usize> = partition.shards.iter().map(|s| s.len()).collect();
+        let kls: Vec<f64> = partition
+            .shards
+            .iter()
+            .map(|s| s.kl_from_uniform(&train_ds))
+            .collect();
+        let importance = ImportanceTable::build(&volumes, &kls, cfg.lambda);
+
+        let trainer = match cfg.trainer {
+            TrainerBackend::Native => Trainer::native(&cfg.task),
+            TrainerBackend::Xla => Trainer::xla(&cfg.task, artifact_dir)
+                .with_context(|| format!("open artifacts at {}", artifact_dir.display()))?,
+        };
+        let scale = PayloadScale { n_real: trainer.n_params(), n_paper: cfg.n_params_paper };
+        let global = trainer.init_model(&mut rng.fork(0x1417));
+        let fleet = Fleet::new(cfg.fleet, cfg.seed);
+
+        Ok(Server {
+            tracker: ParticipationTracker::new(n),
+            locals: vec![None; n],
+            grad_norms: vec![0.0; n],
+            traffic: TrafficMeter::default(),
+            sim_time_s: 0.0,
+            scheme,
+            fleet,
+            train_ds,
+            test_ds,
+            partition,
+            importance,
+            trainer,
+            scale,
+            global,
+            cfg,
+            rng,
+        })
+    }
+
+    pub fn scheme_name(&self) -> &'static str {
+        self.scheme.name()
+    }
+
+    /// Whether the target metric for this task is AUC (binary tasks).
+    pub fn uses_auc(&self) -> bool {
+        self.test_ds.n_classes == 2
+    }
+
+    /// Per-device sample volumes (diagnostics / Fig. 1d).
+    pub fn volumes(&self) -> Vec<usize> {
+        self.partition.shards.iter().map(|s| s.len()).collect()
+    }
+
+    pub fn importance_table(&self) -> &ImportanceTable {
+        &self.importance
+    }
+
+    /// Evaluate the current global model on the held-out test set.
+    pub fn evaluate(&self) -> Result<EvalOutcome> {
+        self.trainer.eval(&self.global, &self.test_ds)
+    }
+
+    /// Execute rounds 1..=cfg.rounds, recording metrics every round and
+    /// evaluating every `cfg.eval_every` rounds. `cb` observes each record
+    /// as it is produced (progress printing).
+    pub fn run_cb(&mut self, mut cb: impl FnMut(&RoundRecord)) -> Result<RunResult> {
+        let mut records = Vec::with_capacity(self.cfg.rounds);
+        let mut reached: Option<(usize, f64, f64)> = None;
+        let use_auc = self.uses_auc();
+        for t in 1..=self.cfg.rounds {
+            let out = self.round(t)?;
+            let evaluated = t % self.cfg.eval_every == 0 || t == self.cfg.rounds;
+            let (acc, auc) = if evaluated {
+                let e = self.evaluate()?;
+                (e.accuracy, e.auc)
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            let rec = RoundRecord {
+                t,
+                sim_time_s: self.sim_time_s,
+                traffic_gb: self.traffic.total_gb(),
+                accuracy: acc,
+                auc,
+                mean_loss: out.mean_loss,
+                round_s: out.round_s,
+                avg_wait_s: out.avg_wait_s,
+                participants: self.cfg.participants_per_round(),
+            };
+            if reached.is_none() && evaluated {
+                let metric = if use_auc { auc } else { acc };
+                if metric >= self.cfg.target_acc {
+                    reached = Some((t, self.sim_time_s, self.traffic.total_gb()));
+                }
+            }
+            cb(&rec);
+            records.push(rec);
+        }
+        Ok(RunResult {
+            scheme: self.scheme.name().to_string(),
+            task: self.cfg.task.clone(),
+            seed: self.cfg.seed,
+            records,
+            reached_target: reached,
+            target: self.cfg.target_acc,
+        })
+    }
+
+    /// [`run_cb`] without a progress observer.
+    pub fn run(&mut self) -> Result<RunResult> {
+        self.run_cb(|_| {})
+    }
+
+    /// One communication round (1-based `t`). Public for step-by-step
+    /// drivers (examples, benches).
+    pub fn step(&mut self, t: usize) -> Result<()> {
+        self.round(t).map(|_| ())
+    }
+
+    fn round(&mut self, t: usize) -> Result<RoundOutcome> {
+        assert!(t >= 1, "rounds are 1-based (Eq. 3 divides by t)");
+        self.fleet.on_round_start(t);
+        let cfg = self.cfg.clone();
+        let k = cfg.participants_per_round();
+        let participants = self.rng.sample_indices(self.fleet.len(), k);
+
+        // --- gather the planning context ---
+        let staleness: Vec<usize> =
+            participants.iter().map(|&d| self.tracker.staleness(d, t)).collect();
+        let never: Vec<bool> =
+            participants.iter().map(|&d| self.tracker.never_participated(d)).collect();
+        let mut beta_d = Vec::with_capacity(k);
+        let mut beta_u = Vec::with_capacity(k);
+        let mut mu = Vec::with_capacity(k);
+        {
+            let Fleet { devices, bandwidth } = &mut self.fleet;
+            for &d in &participants {
+                let (bd, bu) = devices[d].draw_bandwidth(bandwidth);
+                beta_d.push(bd);
+                beta_u.push(bu);
+                mu.push(devices[d].mu(cfg.model_cost));
+            }
+        }
+        let plans = {
+            let ctx = RoundCtx {
+                t,
+                participants: &participants,
+                staleness: &staleness,
+                never: &never,
+                beta_d: &beta_d,
+                beta_u: &beta_u,
+                mu: &mu,
+                q_bits: self.scale.q_bits(),
+                importance: &self.importance,
+                grad_norms: &self.grad_norms,
+                cfg: &cfg,
+            };
+            self.scheme.plan_round(&ctx)
+        };
+        assert_eq!(plans.len(), k, "scheme must plan every participant");
+
+        // --- execute the round on every participant ---
+        let engine = CodecEngine::new(
+            cfg.compression,
+            self.trainer.runtime(),
+            &cfg.task,
+        )?;
+        let lr = cfg.lr_at(t - 1) as f32;
+        let p = self.trainer.n_params();
+        let mut agg = vec![0.0f64; p];
+        let mut costs: Vec<f64> = Vec::with_capacity(k);
+        let mut loss_sum = 0.0f64;
+        for (i, plan) in plans.iter().enumerate() {
+            let d = plan.device;
+            let mut dev_rng = self.rng.fork((t as u64) << 20 | d as u64);
+
+            // (1) download + on-device recovery (§4.1)
+            let rec = engine.download(
+                plan.download,
+                &self.global,
+                self.locals[d].as_deref(),
+                &mut dev_rng,
+            )?;
+            let down_bits = self.scale.scale_bits(rec.wire_bits);
+            self.traffic.add_down(down_bits);
+
+            // (2) local training (Eq. 2) from the recovered initial model
+            let shard = &self.partition.shards[d];
+            let (w_final, loss) = self.trainer.train(
+                &rec.model,
+                &self.train_ds,
+                shard,
+                plan.tau,
+                plan.batch,
+                lr,
+                &mut dev_rng,
+            )?;
+            loss_sum += loss;
+
+            // (3) derive g_i = w_i^{t,0} − w_i^{t,τ} = η·Σ∇ (paper §2.1)
+            let g: Vec<f32> =
+                rec.model.iter().zip(&w_final).map(|(a, b)| a - b).collect();
+            self.grad_norms[d] =
+                g.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+
+            // (4) upload compression (§4.2)
+            let up = engine.upload(plan.upload, &g, &mut dev_rng)?;
+            let up_bits = self.scale.scale_bits(up.wire_bits);
+            self.traffic.add_up(up_bits);
+            for (a, &x) in agg.iter_mut().zip(&up.grad) {
+                *a += x as f64;
+            }
+
+            // (5) device state + simulated cost (Eq. 7)
+            self.locals[d] = Some(w_final);
+            self.tracker.record(d, t);
+            costs.push(
+                RoundCost::new(down_bits, up_bits, beta_d[i], beta_u[i], plan.tau, plan.batch, mu[i])
+                    .total(),
+            );
+        }
+
+        // --- global aggregation: w ← w − mean(ḡ) (§2.1) ---
+        let inv = 1.0 / k as f64;
+        for (w, a) in self.global.iter_mut().zip(&agg) {
+            *w -= (a * inv) as f32;
+        }
+
+        // --- synchronous barrier timing ---
+        let round_s = costs.iter().fold(0.0f64, |a, &b| a.max(b));
+        let avg_wait_s =
+            costs.iter().map(|&c| round_s - c).sum::<f64>() / k as f64;
+        self.sim_time_s += round_s;
+        Ok(RoundOutcome { round_s, avg_wait_s, mean_loss: loss_sum / k as f64 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CompressionBackend, ExperimentConfig, TrainerBackend};
+    use crate::schemes;
+
+    fn tiny_cfg(task: &str, scheme_rounds: usize) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset(task);
+        cfg.trainer = TrainerBackend::Native;
+        cfg.compression = CompressionBackend::Native;
+        cfg.rounds = scheme_rounds;
+        cfg.n_train = 1200;
+        cfg.n_test = 400;
+        cfg.tau = 5;
+        cfg.alpha = 0.3; // more data per round so tiny runs visibly learn
+        cfg.lr = 0.1;
+        cfg.eval_every = 1;
+        cfg
+    }
+
+    fn run_scheme(task: &str, scheme: &str, rounds: usize) -> RunResult {
+        let cfg = tiny_cfg(task, rounds);
+        let mut srv = Server::new(cfg, schemes::by_name(scheme).unwrap()).unwrap();
+        srv.run().unwrap()
+    }
+
+    #[test]
+    fn fedavg_learns_on_tiny_run() {
+        let r = run_scheme("har", "fedavg", 30);
+        assert_eq!(r.records.len(), 30);
+        let first = r.records.first().unwrap().accuracy;
+        let last = r.final_metric(false);
+        assert!(last > first + 0.15, "acc {first} -> {last}");
+        // time and traffic are strictly increasing
+        assert!(r.total_time_s() > 0.0 && r.total_traffic_gb() > 0.0);
+        for w in r.records.windows(2) {
+            assert!(w[1].sim_time_s > w[0].sim_time_s);
+            assert!(w[1].traffic_gb > w[0].traffic_gb);
+        }
+    }
+
+    #[test]
+    fn caesar_uses_less_traffic_than_fedavg() {
+        let a = run_scheme("har", "fedavg", 8);
+        let b = run_scheme("har", "caesar", 8);
+        assert!(
+            b.total_traffic_gb() < 0.9 * a.total_traffic_gb(),
+            "caesar {} vs fedavg {}",
+            b.total_traffic_gb(),
+            a.total_traffic_gb()
+        );
+    }
+
+    #[test]
+    fn all_schemes_complete_a_round() {
+        for s in [
+            "fedavg",
+            "flexcom",
+            "prowd",
+            "pyramidfl",
+            "caesar",
+            "caesar-br",
+            "caesar-dc",
+            "nocomp",
+            "gm-fic",
+            "gm-cac",
+            "lg-fic",
+            "lg-cac",
+        ] {
+            let cfg = tiny_cfg("har", 2);
+            let mut srv = Server::new(cfg, schemes::by_name(s).unwrap()).unwrap();
+            let r = srv.run().unwrap();
+            assert_eq!(r.records.len(), 2, "{s}");
+            assert!(r.records[1].round_s > 0.0, "{s}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_scheme("har", "caesar", 4);
+        let b = run_scheme("har", "caesar", 4);
+        assert_eq!(a.final_metric(false), b.final_metric(false));
+        assert_eq!(a.total_traffic_gb(), b.total_traffic_gb());
+    }
+
+    #[test]
+    fn seeds_change_outcomes() {
+        let mut cfg = tiny_cfg("har", 4);
+        cfg.seed = 1;
+        let mut s1 = Server::new(cfg.clone(), schemes::by_name("caesar").unwrap()).unwrap();
+        let r1 = s1.run().unwrap();
+        cfg.seed = 2;
+        let mut s2 = Server::new(cfg, schemes::by_name("caesar").unwrap()).unwrap();
+        let r2 = s2.run().unwrap();
+        assert_ne!(r1.total_traffic_gb(), r2.total_traffic_gb());
+    }
+
+    #[test]
+    fn reached_target_recorded() {
+        let mut cfg = tiny_cfg("har", 30);
+        cfg.target_acc = 0.30; // low bar the tiny run will cross
+        let mut srv = Server::new(cfg, schemes::by_name("fedavg").unwrap()).unwrap();
+        let r = srv.run().unwrap();
+        let (t, time, gb) = r.reached_target.expect("target should be reached");
+        assert!(t >= 1 && time > 0.0 && gb > 0.0);
+    }
+
+    #[test]
+    fn waiting_time_lower_for_caesar_than_fedavg() {
+        // batch regulation (Eq. 7–9) should cut the synchronous-barrier
+        // idle time — the Fig. 7 phenomenon, already visible on tiny runs
+        let a = run_scheme("cifar", "fedavg", 6);
+        let b = run_scheme("cifar", "caesar", 6);
+        assert!(
+            b.mean_wait_s() < a.mean_wait_s(),
+            "caesar wait {} vs fedavg {}",
+            b.mean_wait_s(),
+            a.mean_wait_s()
+        );
+    }
+
+    #[test]
+    fn oppo_uses_auc() {
+        let cfg = tiny_cfg("oppo", 2);
+        let srv = Server::new(cfg, schemes::by_name("caesar").unwrap()).unwrap();
+        assert!(srv.uses_auc());
+    }
+}

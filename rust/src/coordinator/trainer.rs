@@ -1,0 +1,294 @@
+//! Local-training execution backends.
+//!
+//! [`Trainer::Xla`] is the production three-layer path: it executes the
+//! AOT train/eval HLO artifacts through the PJRT runtime (python never
+//! runs). [`Trainer::Native`] is the rust oracle from `nn/` — used by
+//! tests and as an artifact-free fallback; the two are pinned against each
+//! other in `tests/runtime_parity.rs`.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::{Dataset, Shard};
+use crate::nn::{self, MlpSpec};
+use crate::runtime::{lit_f32, lit_i32, lit_scalar, to_scalar_f32, to_vec_f32, Runtime};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Outcome of evaluating a model on the test set.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalOutcome {
+    pub accuracy: f64,
+    /// AUC for binary tasks (0.5 when not binary / degenerate).
+    pub auc: f64,
+    pub mean_loss: f64,
+}
+
+pub enum Trainer {
+    Native {
+        spec: MlpSpec,
+    },
+    Xla {
+        rt: Runtime,
+        task: String,
+        buckets: Vec<usize>,
+        chunk: usize,
+        eval_chunk: usize,
+        d: usize,
+        n_classes: usize,
+    },
+}
+
+impl Trainer {
+    pub fn native(task: &str) -> Trainer {
+        Trainer::Native { spec: MlpSpec::for_task(task) }
+    }
+
+    /// Open the XLA trainer from an artifact directory.
+    pub fn xla(task: &str, artifact_dir: &std::path::Path) -> Result<Trainer> {
+        let rt = Runtime::open(artifact_dir)?;
+        let m = rt.manifest();
+        let spec = m
+            .task(task)
+            .ok_or_else(|| anyhow!("task {task} not in manifest"))?;
+        let buckets = m.train_buckets(task);
+        if buckets.is_empty() {
+            return Err(anyhow!("no train buckets for {task}"));
+        }
+        Ok(Trainer::Xla {
+            task: task.to_string(),
+            buckets,
+            chunk: m.chunk,
+            eval_chunk: m.eval_chunk,
+            d: spec.d_in,
+            n_classes: spec.n_classes,
+            rt,
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        match self {
+            Trainer::Native { spec } => spec.n_params(),
+            Trainer::Xla { rt, task, .. } => rt.manifest().task(task).unwrap().n_params,
+        }
+    }
+
+    pub fn init_model(&self, rng: &mut Rng) -> Vec<f32> {
+        match self {
+            Trainer::Native { spec } => spec.init(rng),
+            Trainer::Xla { task, .. } => MlpSpec::for_task(task).init(rng),
+        }
+    }
+
+    /// Runtime access for the `--compression-backend xla` path.
+    pub fn runtime(&self) -> Option<&Runtime> {
+        match self {
+            Trainer::Xla { rt, .. } => Some(rt),
+            Trainer::Native { .. } => None,
+        }
+    }
+
+    /// The batch bucket the XLA path will actually execute for `batch`
+    /// (largest bucket ≤ batch, or the smallest available).
+    pub fn effective_batch(&self, batch: usize) -> usize {
+        match self {
+            Trainer::Native { .. } => batch,
+            Trainer::Xla { buckets, .. } => buckets
+                .iter()
+                .rev()
+                .find(|&&b| b <= batch)
+                .copied()
+                .unwrap_or(buckets[0]),
+        }
+    }
+
+    /// Run `tau` local SGD iterations from `w0` on the device's shard.
+    /// Batches are sampled with replacement by `rng`. Returns the final
+    /// model and the mean training loss.
+    pub fn train(
+        &self,
+        w0: &[f32],
+        ds: &Dataset,
+        shard: &Shard,
+        tau: usize,
+        batch: usize,
+        lr: f32,
+        rng: &mut Rng,
+    ) -> Result<(Vec<f32>, f64)> {
+        assert!(!shard.is_empty(), "device shard is empty");
+        match self {
+            Trainer::Native { spec } => {
+                let mut w = w0.to_vec();
+                let mut losses = 0.0;
+                for _ in 0..tau {
+                    let pos: Vec<usize> =
+                        (0..batch).map(|_| rng.below(shard.len())).collect();
+                    let (xs, ys) = shard.gather(ds, &pos);
+                    losses += nn::sgd_step(spec, &mut w, &xs, &ys, batch, lr);
+                }
+                Ok((w, losses / tau as f64))
+            }
+            Trainer::Xla { rt, task, chunk, d, .. } => {
+                let b = self.effective_batch(batch);
+                let module = format!("train_{task}_b{b}");
+                let n_chunks = tau.div_ceil(*chunk);
+                let mut w = w0.to_vec();
+                let mut losses = 0.0;
+                for _ in 0..n_chunks {
+                    let pos: Vec<usize> = (0..*chunk * b)
+                        .map(|_| rng.below(shard.len()))
+                        .collect();
+                    let (xs, ys) = shard.gather(ds, &pos);
+                    let out = rt
+                        .exec(
+                            &module,
+                            &[
+                                lit_f32(&w, &[w.len() as i64])?,
+                                lit_f32(&xs, &[*chunk as i64, b as i64, *d as i64])?,
+                                lit_i32(&ys, &[*chunk as i64, b as i64])?,
+                                lit_scalar(lr),
+                            ],
+                        )
+                        .with_context(|| format!("train chunk {module}"))?;
+                    w = to_vec_f32(&out[0])?;
+                    losses += to_scalar_f32(&out[1])? as f64;
+                }
+                Ok((w, losses / n_chunks as f64))
+            }
+        }
+    }
+
+    /// Evaluate on the whole test set (accuracy, AUC for binary tasks).
+    pub fn eval(&self, w: &[f32], test: &Dataset) -> Result<EvalOutcome> {
+        let n = test.len();
+        let h = test.n_classes;
+        let logits: Vec<f32> = match self {
+            Trainer::Native { spec } => nn::apply(spec, w, &test.features, n),
+            Trainer::Xla { rt, task, eval_chunk, d, .. } => {
+                let module = format!("eval_{task}");
+                let e = *eval_chunk;
+                let mut all = Vec::with_capacity(n * h);
+                let mut i = 0;
+                while i < n {
+                    let take = (n - i).min(e);
+                    // pad the last chunk by repeating the first rows
+                    let mut xs = Vec::with_capacity(e * d);
+                    xs.extend_from_slice(&test.features[i * d..(i + take) * d]);
+                    while xs.len() < e * d {
+                        xs.extend_from_slice(&test.features[..*d]);
+                    }
+                    let out = rt.exec(
+                        &module,
+                        &[
+                            lit_f32(w, &[w.len() as i64])?,
+                            lit_f32(&xs, &[e as i64, *d as i64])?,
+                        ],
+                    )?;
+                    let chunk_logits = to_vec_f32(&out[0])?;
+                    all.extend_from_slice(&chunk_logits[..take * h]);
+                    i += take;
+                }
+                all
+            }
+        };
+        Ok(score_logits(&logits, test))
+    }
+}
+
+/// Accuracy / AUC / mean CE loss from raw logits.
+pub fn score_logits(logits: &[f32], test: &Dataset) -> EvalOutcome {
+    let n = test.len();
+    let h = test.n_classes;
+    assert_eq!(logits.len(), n * h);
+    let mut correct = 0usize;
+    let mut loss = 0.0f64;
+    let mut scores = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let row = &logits[i * h..(i + 1) * h];
+        let y = test.labels[i] as usize;
+        if stats::argmax(row) == Some(y) {
+            correct += 1;
+        }
+        // CE via log-sum-exp
+        let m = row.iter().fold(f32::MIN, |a, &b| a.max(b)) as f64;
+        let lse = m + row.iter().map(|&v| (v as f64 - m).exp()).sum::<f64>().ln();
+        loss += lse - row[y] as f64;
+        if h == 2 {
+            scores.push(row[1] - row[0]);
+            labels.push(test.labels[i]);
+        }
+    }
+    EvalOutcome {
+        accuracy: correct as f64 / n.max(1) as f64,
+        auc: if h == 2 { stats::auc(&scores, &labels) } else { 0.5 },
+        mean_loss: loss / n.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Shard, TaskSpec};
+
+    fn setup(task: &str, n: usize) -> (Trainer, Dataset, Shard) {
+        let spec = TaskSpec::by_name(task).unwrap();
+        let ds = Dataset::generate(&spec, n, &mut Rng::new(5));
+        let shard = Shard { indices: (0..n).collect() };
+        (Trainer::native(task), ds, shard)
+    }
+
+    #[test]
+    fn native_training_learns() {
+        let (tr, ds, shard) = setup("har", 600);
+        let mut rng = Rng::new(0);
+        let mut w = tr.init_model(&mut rng);
+        let e0 = tr.eval(&w, &ds).unwrap();
+        for _ in 0..20 {
+            let (w2, _) = tr.train(&w, &ds, &shard, 10, 16, 0.05, &mut rng).unwrap();
+            w = w2;
+        }
+        let e1 = tr.eval(&w, &ds).unwrap();
+        assert!(
+            e1.accuracy > e0.accuracy + 0.2,
+            "acc {} -> {}",
+            e0.accuracy,
+            e1.accuracy
+        );
+        assert!(e1.mean_loss < e0.mean_loss);
+    }
+
+    #[test]
+    fn eval_outcome_auc_for_binary() {
+        let (tr, ds, shard) = setup("oppo", 800);
+        let mut rng = Rng::new(1);
+        let mut w = tr.init_model(&mut rng);
+        for _ in 0..30 {
+            let (w2, _) = tr.train(&w, &ds, &shard, 10, 32, 0.1, &mut rng).unwrap();
+            w = w2;
+        }
+        let e = tr.eval(&w, &ds).unwrap();
+        assert!(e.auc > 0.6, "auc={}", e.auc);
+    }
+
+    #[test]
+    fn effective_batch_is_identity_for_native() {
+        let (tr, _, _) = setup("cifar", 10);
+        assert_eq!(tr.effective_batch(17), 17);
+    }
+
+    #[test]
+    fn score_logits_counts_correctly() {
+        let spec = TaskSpec::har_like();
+        let mut ds = Dataset::generate(&spec, 4, &mut Rng::new(2));
+        ds.labels = vec![0, 1, 2, 3];
+        // logits that put all mass on the true label for first 3 samples
+        let h = ds.n_classes;
+        let mut logits = vec![0.0f32; 4 * h];
+        for i in 0..3 {
+            logits[i * h + ds.labels[i] as usize] = 10.0;
+        }
+        logits[3 * h + ((ds.labels[3] as usize + 1) % h)] = 10.0; // wrong
+        let out = score_logits(&logits, &ds);
+        assert!((out.accuracy - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,200 @@
+//! Dirichlet non-IID partitioning (paper §6.1, following Hsu et al.).
+//!
+//! Each device's class distribution is drawn from Dir(δ·q) with q the
+//! uniform prior and δ = 1/p; per-device volumes are drawn from a second
+//! Dirichlet whose concentration also shrinks with p, so higher p means
+//! both stronger label skew and stronger volume skew — exactly the paper's
+//! "given p > 0, both data volume and data distribution will be various".
+//! p == 0 is the special IID case with identical volumes.
+
+use super::synthetic::Dataset;
+use super::Shard;
+use crate::util::rng::Rng;
+
+/// Result of a partition: one shard per device.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub shards: Vec<Shard>,
+    /// The drawn per-device class distributions (diagnostics / tests).
+    pub class_dists: Vec<Vec<f64>>,
+}
+
+/// Partition `ds` across `n_devices` with heterogeneity level `p` (>= 0).
+pub fn partition(ds: &Dataset, n_devices: usize, p: f64, rng: &mut Rng) -> Partition {
+    assert!(n_devices > 0);
+    let n = ds.len();
+    let h = ds.n_classes;
+
+    // Pools of sample indices per class, shuffled.
+    let mut pools: Vec<Vec<usize>> = vec![vec![]; h];
+    for (i, &l) in ds.labels.iter().enumerate() {
+        pools[l as usize].push(i);
+    }
+    for pool in pools.iter_mut() {
+        rng.shuffle(pool);
+    }
+
+    // Target volumes.
+    let volumes: Vec<usize> = if p <= 0.0 {
+        let base = n / n_devices;
+        (0..n_devices)
+            .map(|i| base + usize::from(i < n % n_devices))
+            .collect()
+    } else {
+        // volume weights ~ Dir(20/p): mild skew at p=1, heavy at p=10
+        let conc = (20.0 / p).max(0.05);
+        let w = rng.dirichlet_sym(conc, n_devices);
+        let mut v: Vec<usize> = w.iter().map(|&x| (x * n as f64) as usize).collect();
+        // fix rounding so volumes sum to n and every device has >= 2 samples
+        let mut assigned: usize = v.iter().sum();
+        let mut i = 0;
+        while assigned < n {
+            v[i % n_devices] += 1;
+            assigned += 1;
+            i += 1;
+        }
+        for vi in v.iter_mut() {
+            if *vi < 2 {
+                *vi = 2;
+            }
+        }
+        v
+    };
+
+    // Per-device class distributions.
+    let delta = if p <= 0.0 { f64::INFINITY } else { 1.0 / p };
+    let class_dists: Vec<Vec<f64>> = (0..n_devices)
+        .map(|_| {
+            if delta.is_infinite() {
+                vec![1.0 / h as f64; h]
+            } else {
+                rng.dirichlet_sym(delta, h)
+            }
+        })
+        .collect();
+
+    // Greedy assignment: each device draws from its class distribution,
+    // falling back to the globally fullest pool when its class is empty.
+    let mut shards: Vec<Shard> = (0..n_devices)
+        .map(|_| Shard { indices: vec![] })
+        .collect();
+    for dev in 0..n_devices {
+        let dist = &class_dists[dev];
+        for _ in 0..volumes[dev] {
+            let mut class = rng.categorical(dist);
+            if pools[class].is_empty() {
+                // fullest pool fallback keeps total assignment feasible
+                match (0..h).max_by_key(|&c| pools[c].len()) {
+                    Some(c) if !pools[c].is_empty() => class = c,
+                    _ => break, // everything exhausted
+                }
+            }
+            shards[dev].indices.push(pools[class].pop().unwrap());
+        }
+    }
+    // The min-volume bump can over-commit the sample budget, leaving late
+    // devices empty once the pools drain. Every device must hold data
+    // (Eq. 2 needs a batch), so re-balance from the largest shard.
+    for dev in 0..n_devices {
+        if shards[dev].indices.is_empty() {
+            let donor = (0..n_devices)
+                .max_by_key(|&i| shards[i].indices.len())
+                .unwrap();
+            if shards[donor].indices.len() >= 2 {
+                let moved = shards[donor].indices.pop().unwrap();
+                shards[dev].indices.push(moved);
+            }
+        }
+    }
+    Partition { shards, class_dists }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::TaskSpec;
+    use crate::util::stats;
+
+    fn dataset(n: usize) -> Dataset {
+        Dataset::generate(&TaskSpec::cifar_like(), n, &mut Rng::new(99))
+    }
+
+    #[test]
+    fn covers_every_sample_at_most_once() {
+        let ds = dataset(5000);
+        let part = partition(&ds, 40, 5.0, &mut Rng::new(0));
+        let mut seen = vec![false; ds.len()];
+        for s in &part.shards {
+            for &i in &s.indices {
+                assert!(!seen[i], "sample {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        let total: usize = part.shards.iter().map(|s| s.len()).sum();
+        assert!(total as f64 > 0.95 * ds.len() as f64);
+    }
+
+    #[test]
+    fn iid_partition_is_balanced() {
+        let ds = dataset(4000);
+        let part = partition(&ds, 40, 0.0, &mut Rng::new(1));
+        for s in &part.shards {
+            assert_eq!(s.len(), 100);
+        }
+        // label distributions near-uniform
+        let avg_kl: f64 = part
+            .shards
+            .iter()
+            .map(|s| s.kl_from_uniform(&ds))
+            .sum::<f64>()
+            / 40.0;
+        assert!(avg_kl < 0.15, "avg_kl={avg_kl}");
+    }
+
+    #[test]
+    fn heterogeneity_increases_with_p() {
+        let ds = dataset(8000);
+        let kl_at = |p: f64| {
+            let part = partition(&ds, 40, p, &mut Rng::new(2));
+            part.shards
+                .iter()
+                .map(|s| s.kl_from_uniform(&ds))
+                .sum::<f64>()
+                / 40.0
+        };
+        let (k1, k5, k10) = (kl_at(1.0), kl_at(5.0), kl_at(10.0));
+        assert!(k1 < k5 && k5 < k10, "kl: p1={k1} p5={k5} p10={k10}");
+    }
+
+    #[test]
+    fn volume_skew_increases_with_p() {
+        let ds = dataset(8000);
+        let cv_at = |p: f64| {
+            let part = partition(&ds, 40, p, &mut Rng::new(3));
+            let vols: Vec<f64> = part.shards.iter().map(|s| s.len() as f64).collect();
+            stats::std_dev(&vols) / stats::mean(&vols)
+        };
+        assert!(cv_at(1.0) < cv_at(10.0));
+    }
+
+    #[test]
+    fn every_device_gets_samples() {
+        let ds = dataset(3000);
+        for p in [0.0, 1.0, 10.0] {
+            let part = partition(&ds, 80, p, &mut Rng::new(4));
+            for (i, s) in part.shards.iter().enumerate() {
+                assert!(!s.is_empty(), "device {i} empty at p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = dataset(2000);
+        let a = partition(&ds, 20, 5.0, &mut Rng::new(7));
+        let b = partition(&ds, 20, 5.0, &mut Rng::new(7));
+        for (x, y) in a.shards.iter().zip(&b.shards) {
+            assert_eq!(x.indices, y.indices);
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Extension ablations beyond the paper's figures — the design knobs
+//! §4.1/§4.2 call out but do not sweep:
+//!
+//! * `ablation-k` — staleness-cluster count K: server-side compression
+//!   work (K codec passes per round instead of |N^t|) vs recovery
+//!   precision / end metric. §4.1: "K can be adjusted flexibly to
+//!   achieve a balance between computational efficiency and model
+//!   recovery precision".
+//! * `ablation-lambda` — the Eq. 5 importance mix λ between sample
+//!   volume and label-distribution closeness.
+
+use anyhow::Result;
+
+use super::{out_dir, render_table, run_all, save_all, write_text, RunSpec};
+use crate::compress::caesar_compress;
+use crate::config::ExperimentConfig;
+use crate::util::cli::Args;
+
+/// K-cluster sweep: end-to-end metric + measured server compression cost.
+pub fn run_k_sweep(args: &Args) -> Result<()> {
+    let dir = out_dir(args).join("ablations");
+    let ks = [1usize, 2, 4, 8, 0]; // 0 = exact per-device ratios
+    let mut specs = vec![];
+    for &k in &ks {
+        let mut cfg = ExperimentConfig::preset(args.get_or("task", "cifar")).apply_overrides(args);
+        if args.get_usize("clusters").is_none() {
+            cfg.clusters = k;
+        }
+        specs.push(RunSpec {
+            scheme: "caesar".into(),
+            cfg,
+            suffix: format!("k{k}"),
+        });
+    }
+    println!("[ablation-k] cluster-count sweep K in {{1,2,4,8,exact}}");
+    let results = run_all(&specs, args.has_flag("quiet"))?;
+    save_all(&dir, &specs, &results)?;
+
+    // measured server-side codec cost per round: K compress passes vs
+    // |N^t| passes, on the paper-scale parameter count
+    let n = 100_000;
+    let w: Vec<f32> = {
+        let mut rng = crate::util::rng::Rng::new(11);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    };
+    let t0 = std::time::Instant::now();
+    caesar_compress(&w, 0.35);
+    let per_pass_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut rows = vec![];
+    let mut csv = String::from("k,final,time_s,traffic_gb,server_ms_per_round\n");
+    for (s, r) in specs.iter().zip(&results) {
+        let k_eff = if s.cfg.clusters == 0 {
+            s.cfg.participants_per_round()
+        } else {
+            s.cfg.clusters.min(s.cfg.participants_per_round())
+        };
+        let ms = per_pass_ms * k_eff as f64;
+        let label = if s.cfg.clusters == 0 { "exact".into() } else { s.cfg.clusters.to_string() };
+        rows.push(vec![
+            label.clone(),
+            format!("{:.4}", r.final_metric(s.cfg.task == "oppo")),
+            format!("{:.0}", r.total_time_s()),
+            format!("{:.2}", r.total_traffic_gb()),
+            format!("{ms:.2}"),
+        ]);
+        csv.push_str(&format!(
+            "{label},{:.4},{:.1},{:.4},{ms:.3}\n",
+            r.final_metric(s.cfg.task == "oppo"),
+            r.total_time_s(),
+            r.total_traffic_gb()
+        ));
+    }
+    let table = render_table(&["K", "final", "time_s", "traffic_GB", "server_ms/round"], &rows);
+    println!("{table}");
+    write_text(&dir.join("ablation_k.csv"), &csv)?;
+    write_text(&dir.join("ablation_k.txt"), &table)?;
+    Ok(())
+}
+
+/// λ sweep: how the Eq. 5 volume/KL mix affects the end metric.
+pub fn run_lambda_sweep(args: &Args) -> Result<()> {
+    let dir = out_dir(args).join("ablations");
+    let lambdas = [0.0, 0.25, 0.5, 0.75, 1.0];
+    let mut specs = vec![];
+    for &l in &lambdas {
+        let mut cfg = ExperimentConfig::preset(args.get_or("task", "cifar")).apply_overrides(args);
+        if args.get_f64("lambda").is_none() {
+            cfg.lambda = l;
+        }
+        specs.push(RunSpec {
+            scheme: "caesar".into(),
+            cfg,
+            suffix: format!("l{}", (l * 100.0) as usize),
+        });
+    }
+    println!("[ablation-lambda] importance mix sweep λ in {{0, .25, .5, .75, 1}}");
+    let results = run_all(&specs, args.has_flag("quiet"))?;
+    save_all(&dir, &specs, &results)?;
+
+    let mut rows = vec![];
+    let mut csv = String::from("lambda,final,traffic_at_target_gb\n");
+    for (s, r) in specs.iter().zip(&results) {
+        let use_auc = s.cfg.task == "oppo";
+        let at = r.time_traffic_at(s.cfg.target_acc, use_auc);
+        rows.push(vec![
+            format!("{:.2}", s.cfg.lambda),
+            format!("{:.4}", r.final_metric(use_auc)),
+            at.map_or("-".into(), |(_, g)| format!("{g:.2}")),
+        ]);
+        csv.push_str(&format!(
+            "{:.2},{:.4},{}\n",
+            s.cfg.lambda,
+            r.final_metric(use_auc),
+            at.map_or(String::new(), |(_, g)| format!("{g:.4}"))
+        ));
+    }
+    let table = render_table(&["lambda", "final", "GB@target"], &rows);
+    println!("{table}");
+    write_text(&dir.join("ablation_lambda.csv"), &csv)?;
+    write_text(&dir.join("ablation_lambda.txt"), &table)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_args(tmp: &std::path::Path, extra: &str) -> Args {
+        Args::parse(
+            format!(
+                "x out={} task=har rounds=2 n-train=600 tau=2 trainer=native --quiet {extra}",
+                tmp.display()
+            )
+            .split_whitespace()
+            .map(String::from),
+        )
+    }
+
+    #[test]
+    fn k_sweep_writes_artifacts() {
+        let tmp = std::env::temp_dir().join("caesar_abl_k");
+        let _ = std::fs::remove_dir_all(&tmp);
+        run_k_sweep(&fast_args(&tmp, "")).unwrap();
+        assert!(tmp.join("ablations/ablation_k.csv").exists());
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn lambda_sweep_writes_artifacts() {
+        let tmp = std::env::temp_dir().join("caesar_abl_l");
+        let _ = std::fs::remove_dir_all(&tmp);
+        run_lambda_sweep(&fast_args(&tmp, "")).unwrap();
+        let csv =
+            std::fs::read_to_string(tmp.join("ablations/ablation_lambda.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 6);
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

@@ -1,0 +1,95 @@
+//! Figure 10 — scalability: time- and traffic-to-target for the five
+//! schemes at device scales 100 / 200 / 300 (CIFAR-10). The paper runs
+//! this sweep on a workstation with one Linux process per device; here
+//! the fleet simulator scales directly.
+
+use anyhow::Result;
+
+use super::{out_dir, render_table, run_all, save_all, write_text, RunSpec};
+use crate::config::ExperimentConfig;
+use crate::fleet::FleetKind;
+use crate::schemes::MAIN_SCHEMES;
+use crate::util::cli::Args;
+
+pub const SCALES: [usize; 3] = [100, 200, 300];
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = out_dir(args).join("fig10");
+    let mut specs = vec![];
+    for &n in &SCALES {
+        let mut cfg = ExperimentConfig::preset("cifar").apply_overrides(args);
+        if args.get_usize("devices").is_none() {
+            cfg.fleet = FleetKind::JetsonScaled(n);
+        }
+        for s in MAIN_SCHEMES {
+            specs.push(RunSpec { scheme: s.to_string(), cfg: cfg.clone(), suffix: format!("n{n}") });
+        }
+    }
+    println!("[fig10] {} runs (3 scales x 5 schemes)", specs.len());
+    let results = run_all(&specs, args.has_flag("quiet"))?;
+    save_all(&dir, &specs, &results)?;
+
+    // common target per scale (the paper fixes 80%; we use the highest
+    // metric all schemes reach at that scale, capped at the paper's 0.80)
+    let mut csv = String::from("devices,scheme,target,time_s,traffic_gb,final\n");
+    let mut rows = vec![];
+    for &n in &SCALES {
+        let runs: Vec<_> = specs
+            .iter()
+            .zip(&results)
+            .filter(|(s, _)| s.suffix == format!("n{n}"))
+            .collect();
+        let target = runs
+            .iter()
+            .map(|(_, r)| r.best_metric(false))
+            .fold(f64::MAX, f64::min)
+            .min(0.80);
+        let target = (target * 100.0).floor() / 100.0;
+        for (s, r) in runs {
+            let at = r.time_traffic_at(target, false);
+            rows.push(vec![
+                n.to_string(),
+                s.scheme.clone(),
+                format!("{target:.2}"),
+                at.map_or("-".into(), |(t, _)| format!("{t:.0}")),
+                at.map_or("-".into(), |(_, g)| format!("{g:.2}")),
+                format!("{:.4}", r.final_metric(false)),
+            ]);
+            if let Some((t, g)) = at {
+                csv.push_str(&format!(
+                    "{n},{},{target:.2},{t:.1},{g:.4},{:.4}\n",
+                    s.scheme,
+                    r.final_metric(false)
+                ));
+            }
+        }
+    }
+    let table =
+        render_table(&["devices", "scheme", "target", "time_s", "traffic_GB", "final"], &rows);
+    println!("{table}");
+    write_text(&dir.join("fig10_scale.csv"), &csv)?;
+    write_text(&dir.join("fig10_scale.txt"), &table)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_fast_run() {
+        let tmp = std::env::temp_dir().join("caesar_fig10");
+        let _ = std::fs::remove_dir_all(&tmp);
+        let args = Args::parse(
+            format!(
+                "x out={} rounds=2 n-train=1200 tau=2 trainer=native devices=24 --quiet",
+                tmp.display()
+            )
+            .split_whitespace()
+            .map(String::from),
+        );
+        run(&args).unwrap();
+        assert!(tmp.join("fig10/fig10_scale.csv").exists());
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

@@ -1,0 +1,142 @@
+//! Figure 8 — final accuracy vs data-heterogeneity level p ∈ {1,2,4,5,10}
+//! under a fixed traffic budget, for the five main schemes on CIFAR-10,
+//! HAR and Speech; plus the p=1→10 accuracy-degradation summary (Fig 8d).
+
+use anyhow::Result;
+
+use super::{out_dir, render_table, run_all, save_all, write_text, RunSpec};
+use crate::config::ExperimentConfig;
+use crate::coordinator::RunResult;
+use crate::schemes::MAIN_SCHEMES;
+use crate::util::cli::Args;
+
+pub const P_LEVELS: [f64; 5] = [1.0, 2.0, 4.0, 5.0, 10.0];
+pub const TASKS: [&str; 3] = ["cifar", "har", "speech"];
+
+/// Paper §6.3 traffic budgets (GB): CIFAR 150, HAR 30, Speech 0.3.
+fn budget_gb(task: &str) -> f64 {
+    match task {
+        "cifar" => 150.0,
+        "har" => 30.0,
+        "speech" => 0.3,
+        _ => f64::MAX,
+    }
+}
+
+/// Accuracy at the traffic budget: last evaluated metric before the
+/// cumulative traffic exceeds the budget (final if never exceeded).
+pub fn acc_at_budget(r: &RunResult, budget_gb: f64, use_auc: bool) -> f64 {
+    let mut best = 0.0f64;
+    for rec in &r.records {
+        if rec.traffic_gb > budget_gb {
+            break;
+        }
+        if !rec.accuracy.is_nan() {
+            best = if use_auc { rec.auc } else { rec.accuracy };
+        }
+    }
+    best
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = out_dir(args).join("fig8");
+    let tasks: Vec<&str> = match args.get("task") {
+        Some(t) => vec![TASKS.iter().find(|&&x| x == t).copied().unwrap_or("cifar")],
+        None => TASKS.to_vec(),
+    };
+    let mut specs = vec![];
+    for task in &tasks {
+        for &p in &P_LEVELS {
+            let mut cfg = ExperimentConfig::preset(task).apply_overrides(args);
+            if args.get_f64("p").is_none() {
+                cfg.het_p = p;
+            }
+            for s in MAIN_SCHEMES {
+                specs.push(RunSpec {
+                    scheme: s.to_string(),
+                    cfg: cfg.clone(),
+                    suffix: format!("p{}", p as usize),
+                });
+            }
+        }
+    }
+    println!("[fig8] {} runs (tasks x p-levels x schemes)", specs.len());
+    let results = run_all(&specs, args.has_flag("quiet"))?;
+    save_all(&dir, &specs, &results)?;
+
+    let mut csv = String::from("task,p,scheme,acc_at_budget\n");
+    let mut rows = vec![];
+    for (s, r) in specs.iter().zip(&results) {
+        let acc = acc_at_budget(r, budget_gb(&s.cfg.task), s.cfg.task == "oppo");
+        csv.push_str(&format!("{},{},{},{acc:.4}\n", s.cfg.task, s.cfg.het_p, s.scheme));
+        rows.push(vec![
+            s.cfg.task.clone(),
+            format!("{}", s.cfg.het_p),
+            s.scheme.clone(),
+            format!("{acc:.4}"),
+        ]);
+    }
+    write_text(&dir.join("fig8_acc.csv"), &csv)?;
+    println!("{}", render_table(&["task", "p", "scheme", "acc@budget"], &rows));
+
+    // Fig 8d: degradation from p=1 to p=10 per scheme (averaged over tasks)
+    let mut d_rows = vec![];
+    let mut d_csv = String::from("scheme,acc_p1,acc_p10,degradation\n");
+    for s in MAIN_SCHEMES {
+        let acc_at_p = |p: f64| {
+            let xs: Vec<f64> = specs
+                .iter()
+                .zip(&results)
+                .filter(|(sp, _)| sp.scheme == s && (sp.cfg.het_p - p).abs() < 1e-9)
+                .map(|(sp, r)| acc_at_budget(r, budget_gb(&sp.cfg.task), false))
+                .collect();
+            crate::util::stats::mean(&xs)
+        };
+        let (a1, a10) = (acc_at_p(1.0), acc_at_p(10.0));
+        d_csv.push_str(&format!("{s},{a1:.4},{a10:.4},{:.4}\n", a1 - a10));
+        d_rows.push(vec![
+            s.to_string(),
+            format!("{a1:.4}"),
+            format!("{a10:.4}"),
+            format!("{:.4}", a1 - a10),
+        ]);
+    }
+    write_text(&dir.join("fig8d_degradation.csv"), &d_csv)?;
+    println!(
+        "[fig8d] accuracy degradation p=1 -> p=10:\n{}",
+        render_table(&["scheme", "acc@p1", "acc@p10", "drop"], &d_rows)
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::RoundRecord;
+
+    fn rec(t: usize, gb: f64, acc: f64) -> RoundRecord {
+        RoundRecord {
+            t,
+            sim_time_s: t as f64,
+            traffic_gb: gb,
+            accuracy: acc,
+            auc: acc,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn acc_at_budget_stops_at_budget() {
+        let r = RunResult {
+            scheme: "x".into(),
+            task: "cifar".into(),
+            seed: 0,
+            records: vec![rec(1, 1.0, 0.3), rec(2, 2.0, 0.5), rec(3, 5.0, 0.9)],
+            reached_target: None,
+            target: 0.8,
+        };
+        assert_eq!(acc_at_budget(&r, 2.5, false), 0.5);
+        assert_eq!(acc_at_budget(&r, 10.0, false), 0.9);
+        assert_eq!(acc_at_budget(&r, 0.5, false), 0.0);
+    }
+}

@@ -1,0 +1,89 @@
+//! Figure 9 — ablation: Caesar vs Caesar-BR (no deviation-aware
+//! compression) vs Caesar-DC (no adaptive batch regulation) on CIFAR-10,
+//! reporting time- and traffic-to-target plus the derived speedup/saving
+//! attributable to each strategy.
+
+use anyhow::Result;
+
+use super::{out_dir, render_table, run_all, save_all, write_text, RunSpec};
+use crate::config::ExperimentConfig;
+use crate::util::cli::Args;
+
+pub const ABLATIONS: [&str; 3] = ["caesar", "caesar-br", "caesar-dc"];
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = out_dir(args).join("fig9");
+    let cfg = ExperimentConfig::preset(args.get_or("task", "cifar")).apply_overrides(args);
+    let specs: Vec<RunSpec> = ABLATIONS
+        .iter()
+        .map(|s| RunSpec { scheme: s.to_string(), cfg: cfg.clone(), suffix: "abl".into() })
+        .collect();
+    println!("[fig9] ablation on {} ({} rounds)", cfg.task, cfg.rounds);
+    let results = run_all(&specs, args.has_flag("quiet"))?;
+    save_all(&dir, &specs, &results)?;
+
+    let use_auc = cfg.task == "oppo";
+    let target = results
+        .iter()
+        .map(|r| r.best_metric(use_auc))
+        .fold(f64::MAX, f64::min);
+    let target = (target * 100.0).floor() / 100.0;
+    let mut rows = vec![];
+    let mut csv = String::from("scheme,target,time_s,traffic_gb,final\n");
+    let mut at: Vec<Option<(f64, f64)>> = vec![];
+    for (s, r) in specs.iter().zip(&results) {
+        let a = r.time_traffic_at(target, use_auc);
+        at.push(a);
+        rows.push(vec![
+            s.scheme.clone(),
+            format!("{target:.2}"),
+            a.map_or("-".into(), |(t, _)| format!("{t:.0}")),
+            a.map_or("-".into(), |(_, g)| format!("{g:.2}")),
+            format!("{:.4}", r.final_metric(use_auc)),
+        ]);
+        if let Some((t, g)) = a {
+            csv.push_str(&format!("{},{target:.2},{t:.1},{g:.4},{:.4}\n", s.scheme, r.final_metric(use_auc)));
+        }
+    }
+    let table = render_table(&["scheme", "target", "time_s", "traffic_GB", "final"], &rows);
+    println!("{table}");
+    write_text(&dir.join("fig9_ablation.csv"), &csv)?;
+    write_text(&dir.join("fig9_ablation.txt"), &table)?;
+
+    // Derived contributions (the paper's 2.07x / 49.38% style numbers)
+    if let (Some((t0, g0)), Some((tbr, gbr)), Some((tdc, gdc))) = (at[0], at[1], at[2]) {
+        println!(
+            "deviation-aware compression: {:.2}x speedup, {:.1}% traffic saving (vs Caesar-BR)",
+            tbr / t0,
+            100.0 * (1.0 - g0 / gbr)
+        );
+        println!(
+            "batch regulation:            {:.2}x speedup, {:.1}% traffic saving (vs Caesar-DC)",
+            tdc / t0,
+            100.0 * (1.0 - g0 / gdc)
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_fast_run_writes_csv() {
+        let tmp = std::env::temp_dir().join("caesar_fig9");
+        let _ = std::fs::remove_dir_all(&tmp);
+        let args = Args::parse(
+            format!(
+                "x out={} task=har rounds=3 n-train=600 tau=3 trainer=native --quiet",
+                tmp.display()
+            )
+            .split_whitespace()
+            .map(String::from),
+        );
+        run(&args).unwrap();
+        assert!(tmp.join("fig9/fig9_ablation.txt").exists());
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

@@ -1,0 +1,113 @@
+//! Figures 5/6/7 + Table 3 — the head-to-head evaluation: five schemes
+//! (FedAvg, FlexCom, ProWD, PyramidFL, Caesar) on the four applications.
+//!
+//! All four artifacts come from the same 20 runs: Fig 5 is the
+//! accuracy-vs-time series, Fig 6 accuracy-vs-traffic, Fig 7 the mean
+//! per-round waiting time, Table 3 the traffic/time at the target
+//! accuracy (the highest value all schemes reach).
+
+use anyhow::Result;
+
+use super::{out_dir, render_table, run_all, save_all, write_text, RunSpec};
+use crate::config::ExperimentConfig;
+use crate::coordinator::RunResult;
+use crate::schemes::MAIN_SCHEMES;
+use crate::util::cli::Args;
+
+/// Tasks of §6.1 in paper order.
+pub const TASKS: [&str; 4] = ["cifar", "har", "speech", "oppo"];
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = out_dir(args).join("main");
+    let tasks: Vec<&str> = match args.get("task") {
+        Some(t) => vec![TASKS.iter().find(|&&x| x == t).copied().unwrap_or("cifar")],
+        None => TASKS.to_vec(),
+    };
+    let mut specs = vec![];
+    for task in &tasks {
+        let cfg = ExperimentConfig::preset(task).apply_overrides(args);
+        for s in MAIN_SCHEMES {
+            specs.push(RunSpec { scheme: s.to_string(), cfg: cfg.clone(), suffix: "main".into() });
+        }
+    }
+    println!("[fig5/6/7 + table3] {} runs ({} tasks x {} schemes)", specs.len(), tasks.len(), MAIN_SCHEMES.len());
+    let results = run_all(&specs, args.has_flag("quiet"))?;
+    save_all(&dir, &specs, &results)?;
+
+    // --- Table 3 ---
+    let mut t3_rows = vec![];
+    let mut csv = String::from("task,target,scheme,traffic_gb,time_h,final_metric,mean_wait_s\n");
+    for task in &tasks {
+        let use_auc = *task == "oppo";
+        let runs: Vec<(&RunSpec, &RunResult)> = specs
+            .iter()
+            .zip(&results)
+            .filter(|(s, _)| s.cfg.task == *task)
+            .collect();
+        // target = highest metric achieved by ALL schemes (paper's rule)
+        let target = runs
+            .iter()
+            .map(|(_, r)| r.best_metric(use_auc))
+            .fold(f64::MAX, f64::min);
+        let target = (target * 100.0).floor() / 100.0;
+        for (s, r) in &runs {
+            let at = r.time_traffic_at(target, use_auc);
+            let (gb, h) = at.map_or((f64::NAN, f64::NAN), |(t, g)| (g, t / 3600.0));
+            t3_rows.push(vec![
+                task.to_string(),
+                format!("{target:.2}"),
+                s.scheme.clone(),
+                if gb.is_nan() { "-".into() } else { format!("{gb:.2}") },
+                if h.is_nan() { "-".into() } else { format!("{h:.2}") },
+                format!("{:.4}", r.final_metric(use_auc)),
+                format!("{:.2}", r.mean_wait_s()),
+            ]);
+            csv.push_str(&format!(
+                "{task},{target:.2},{},{gb:.4},{h:.4},{:.4},{:.4}\n",
+                s.scheme,
+                r.final_metric(use_auc),
+                r.mean_wait_s()
+            ));
+        }
+    }
+    let table = render_table(
+        &["task", "target", "scheme", "traffic_GB", "time_h", "final", "wait_s"],
+        &t3_rows,
+    );
+    println!("{table}");
+    write_text(&dir.join("table3.csv"), &csv)?;
+    write_text(&dir.join("table3.txt"), &table)?;
+
+    // --- Fig 7: mean waiting time per scheme per task ---
+    let mut w_csv = String::from("task,scheme,mean_wait_s\n");
+    for (s, r) in specs.iter().zip(&results) {
+        w_csv.push_str(&format!("{},{},{:.4}\n", s.cfg.task, s.scheme, r.mean_wait_s()));
+    }
+    write_text(&dir.join("fig7_waiting.csv"), &w_csv)?;
+    println!("wrote {}", dir.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_task_fast_run() {
+        let tmp = std::env::temp_dir().join("caesar_main_runs");
+        let _ = std::fs::remove_dir_all(&tmp);
+        let args = Args::parse(
+            format!(
+                "x out={} task=har rounds=3 n-train=800 tau=3 trainer=native --quiet",
+                tmp.display()
+            )
+            .split_whitespace()
+            .map(String::from),
+        );
+        run(&args).unwrap();
+        assert!(tmp.join("main/table3.csv").exists());
+        assert!(tmp.join("main/fig7_waiting.csv").exists());
+        assert!(tmp.join("main/caesar_har_main.csv").exists());
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

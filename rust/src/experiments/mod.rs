@@ -1,0 +1,194 @@
+//! Experiment runners — one per paper table/figure (DESIGN.md §5).
+//!
+//! Every runner writes CSVs under an output directory and prints the same
+//! rows/series the paper reports. Absolute numbers are testbed-specific
+//! (our testbed is the simulator); the reproduced quantity is the *shape*:
+//! ordering, ratios, crossovers. See EXPERIMENTS.md for paper-vs-measured.
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig8;
+pub mod fig9;
+pub mod fig10;
+pub mod main_runs;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{RunResult, Server};
+use crate::schemes;
+use crate::util::cli::Args;
+use crate::util::threadpool::{scope_map, workers};
+
+/// A single (scheme, config) run request.
+#[derive(Clone)]
+pub struct RunSpec {
+    pub scheme: String,
+    pub cfg: ExperimentConfig,
+    /// Filename suffix for the saved CSV/JSON (e.g. "p5", "n200").
+    pub suffix: String,
+}
+
+/// Execute one run to completion.
+pub fn run_one(spec: &RunSpec) -> Result<RunResult> {
+    let scheme = schemes::by_name(&spec.scheme)
+        .ok_or_else(|| anyhow!("unknown scheme {}", spec.scheme))?;
+    let mut srv = Server::new(spec.cfg.clone(), scheme)?;
+    srv.run()
+}
+
+/// Execute many runs across a thread pool (one server per thread; the PJRT
+/// runtime is created inside the worker so it never crosses threads).
+/// Progress is printed as runs finish.
+pub fn run_all(specs: &[RunSpec], quiet: bool) -> Result<Vec<RunResult>> {
+    let n = specs.len();
+    let done = std::sync::atomic::AtomicUsize::new(0);
+    let results = scope_map(n, workers(n.min(8)), |i| {
+        let r = run_one(&specs[i]);
+        let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+        if !quiet {
+            match &r {
+                Ok(rr) => eprintln!(
+                    "  [{d}/{n}] {}/{} {} done: acc={:.4} traffic={:.3}GB time={:.1}s(sim)",
+                    specs[i].scheme,
+                    specs[i].cfg.task,
+                    specs[i].suffix,
+                    rr.final_metric(specs[i].cfg.task == "oppo"),
+                    rr.total_traffic_gb(),
+                    rr.total_time_s()
+                ),
+                Err(e) => eprintln!("  [{d}/{n}] {}/{} FAILED: {e:#}", specs[i].scheme, specs[i].cfg.task),
+            }
+        }
+        r
+    });
+    results.into_iter().collect()
+}
+
+/// Save every run's per-round CSV/JSON under `dir`.
+pub fn save_all(dir: &Path, specs: &[RunSpec], results: &[RunResult]) -> Result<()> {
+    for (s, r) in specs.iter().zip(results) {
+        r.save(dir, &s.suffix)?;
+    }
+    Ok(())
+}
+
+/// Output directory from CLI (`out=<dir>`, default `results/`).
+pub fn out_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("out", "results"))
+}
+
+/// Write a text file, creating parents.
+pub fn write_text(path: &Path, text: &str) -> Result<()> {
+    if let Some(p) = path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    std::fs::write(path, text)?;
+    Ok(())
+}
+
+/// Render an aligned text table (also printed to stdout by runners).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let mut out = line(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&line(row));
+        out.push('\n');
+    }
+    out
+}
+
+/// Run an experiment by name. Known names: fig1, fig1c, fig1d, fig5
+/// (= fig6/fig7/table3), fig8, fig9, fig10, table3, all.
+pub fn run_by_name(name: &str, args: &Args) -> Result<()> {
+    match name {
+        "fig1" => fig1::run_prelim(args),
+        "fig1c" => fig1::run_fig1c(args),
+        "fig1d" => fig1::run_fig1d(args),
+        "fig5" | "fig6" | "fig7" | "table3" => main_runs::run(args),
+        "fig8" => fig8::run(args),
+        "fig9" => fig9::run(args),
+        "fig10" => fig10::run(args),
+        "ablation-k" => ablations::run_k_sweep(args),
+        "ablation-lambda" => ablations::run_lambda_sweep(args),
+        "all" => {
+            fig1::run_prelim(args)?;
+            fig1::run_fig1c(args)?;
+            fig1::run_fig1d(args)?;
+            main_runs::run(args)?;
+            fig8::run(args)?;
+            fig9::run(args)?;
+            fig10::run(args)
+        }
+        other => Err(anyhow!("unknown experiment {other}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CompressionBackend, TrainerBackend};
+
+    pub(crate) fn fast_cfg(task: &str) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset(task);
+        cfg.trainer = TrainerBackend::Native;
+        cfg.compression = CompressionBackend::Native;
+        cfg.rounds = 3;
+        cfg.n_train = 800;
+        cfg.n_test = 200;
+        cfg.tau = 3;
+        cfg
+    }
+
+    #[test]
+    fn run_one_and_all() {
+        let specs: Vec<RunSpec> = ["fedavg", "caesar"]
+            .iter()
+            .map(|s| RunSpec {
+                scheme: s.to_string(),
+                cfg: fast_cfg("har"),
+                suffix: "t".into(),
+            })
+            .collect();
+        let results = run_all(&specs, true).unwrap();
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|r| r.records.len() == 3));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            &["a", "bbbb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("bbbb"));
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let args = Args::parse(std::iter::empty());
+        assert!(run_by_name("fig99", &args).is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! Device fleet simulator — the stand-in for the paper's two physical
+//! prototypes (80 NVIDIA Jetson kits, 40 OPPO smartphones).
+//!
+//! The FL coordinator only consumes two quantities per device per round:
+//! the per-sample training latency `μ_i^t` (heterogeneous and time-varying
+//! power modes, §6.1 "up to 100× difference", re-rolled every 20 rounds)
+//! and the download/upload bandwidths `β_{d,i}^t, β_{u,i}^t` (four WiFi
+//! distance groups, per-round fluctuation within [1, 30] Mb/s). This module
+//! reproduces exactly those distributions; see DESIGN.md §Substitutions.
+
+pub mod network;
+pub mod profiles;
+
+pub use network::{BandwidthModel, NetworkGroup};
+pub use profiles::{DeviceClass, Profile};
+
+use crate::util::rng::Rng;
+
+/// Rounds between power-mode re-rolls (paper §6.1: every 20 rounds).
+pub const MODE_REROLL_ROUNDS: usize = 20;
+
+/// One simulated device.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub id: usize,
+    pub class: DeviceClass,
+    pub group: NetworkGroup,
+    /// Current power-mode index into `class.profile().mode_multipliers`.
+    pub mode: usize,
+    rng: Rng,
+}
+
+impl Device {
+    /// Per-sample compute latency (seconds) in the current mode, for a
+    /// model with relative cost `model_cost` (1.0 = the CIFAR stand-in).
+    pub fn mu(&self, model_cost: f64) -> f64 {
+        let p = self.class.profile();
+        p.base_mu_s * p.mode_multipliers[self.mode] * model_cost
+    }
+
+    /// Re-roll the power mode (uniform over the class's modes).
+    pub fn reroll_mode(&mut self) {
+        let n = self.class.profile().mode_multipliers.len();
+        self.mode = self.rng.below(n);
+    }
+
+    /// Draw this round's (download, upload) bandwidth in bit/s.
+    pub fn draw_bandwidth(&mut self, model: &BandwidthModel) -> (f64, f64) {
+        model.draw(self.group, &mut self.rng)
+    }
+}
+
+/// The whole fleet plus its shared dynamics.
+pub struct Fleet {
+    pub devices: Vec<Device>,
+    pub bandwidth: BandwidthModel,
+}
+
+/// Fleet presets matching the paper's prototypes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetKind {
+    /// 30 TX2 + 40 NX + 10 AGX (image/HAR/speech experiments).
+    Jetson80,
+    /// 15 A1 + 15 Reno9 + 10 FindX6 (OPPO-TS experiments).
+    Phone40,
+    /// Fig. 10 scale-out: Jetson proportions replicated to `n` devices.
+    JetsonScaled(usize),
+}
+
+impl Fleet {
+    pub fn new(kind: FleetKind, seed: u64) -> Fleet {
+        let mut rng = Rng::new(seed ^ 0xF1EE7);
+        let classes: Vec<DeviceClass> = match kind {
+            FleetKind::Jetson80 => Self::mix(
+                &[
+                    (DeviceClass::JetsonTX2, 30),
+                    (DeviceClass::JetsonNX, 40),
+                    (DeviceClass::JetsonAGX, 10),
+                ],
+            ),
+            FleetKind::Phone40 => Self::mix(
+                &[
+                    (DeviceClass::PhoneA1, 15),
+                    (DeviceClass::PhoneReno9, 15),
+                    (DeviceClass::PhoneFindX6, 10),
+                ],
+            ),
+            FleetKind::JetsonScaled(n) => {
+                // keep 3:4:1 proportions
+                let tx2 = n * 3 / 8;
+                let agx = n / 8;
+                let nx = n - tx2 - agx;
+                Self::mix(&[
+                    (DeviceClass::JetsonTX2, tx2),
+                    (DeviceClass::JetsonNX, nx),
+                    (DeviceClass::JetsonAGX, agx),
+                ])
+            }
+        };
+        let n = classes.len();
+        let devices = classes
+            .into_iter()
+            .enumerate()
+            .map(|(id, class)| {
+                let mut drng = rng.fork(id as u64);
+                let group = NetworkGroup::from_index(id * 4 / n);
+                let mode = drng.below(class.profile().mode_multipliers.len());
+                Device { id, class, group, mode, rng: drng }
+            })
+            .collect();
+        Fleet { devices, bandwidth: BandwidthModel::default() }
+    }
+
+    fn mix(spec: &[(DeviceClass, usize)]) -> Vec<DeviceClass> {
+        let mut v = vec![];
+        for &(c, n) in spec {
+            v.extend(std::iter::repeat(c).take(n));
+        }
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Advance fleet dynamics to round `t` (mode re-roll every 20 rounds).
+    pub fn on_round_start(&mut self, t: usize) {
+        if t > 0 && t % MODE_REROLL_ROUNDS == 0 {
+            for d in self.devices.iter_mut() {
+                d.reroll_mode();
+            }
+        }
+    }
+}
+
+/// Simulated per-round cost of one participant (Eq. 7).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundCost {
+    pub download_s: f64,
+    pub compute_s: f64,
+    pub upload_s: f64,
+}
+
+impl RoundCost {
+    pub fn total(&self) -> f64 {
+        self.download_s + self.compute_s + self.upload_s
+    }
+
+    /// Eq. 7: M_i = bits_down/β_d + τ·b·μ + bits_up/β_u.
+    pub fn new(
+        bits_down: f64,
+        bits_up: f64,
+        beta_down: f64,
+        beta_up: f64,
+        tau: usize,
+        batch: usize,
+        mu: f64,
+    ) -> RoundCost {
+        RoundCost {
+            download_s: bits_down / beta_down,
+            compute_s: tau as f64 * batch as f64 * mu,
+            upload_s: bits_up / beta_up,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jetson80_composition() {
+        let f = Fleet::new(FleetKind::Jetson80, 0);
+        assert_eq!(f.len(), 80);
+        let tx2 = f.devices.iter().filter(|d| d.class == DeviceClass::JetsonTX2).count();
+        let nx = f.devices.iter().filter(|d| d.class == DeviceClass::JetsonNX).count();
+        let agx = f.devices.iter().filter(|d| d.class == DeviceClass::JetsonAGX).count();
+        assert_eq!((tx2, nx, agx), (30, 40, 10));
+    }
+
+    #[test]
+    fn phone40_composition() {
+        let f = Fleet::new(FleetKind::Phone40, 0);
+        assert_eq!(f.len(), 40);
+    }
+
+    #[test]
+    fn scaled_fleet_has_requested_size() {
+        for n in [100, 200, 300] {
+            let f = Fleet::new(FleetKind::JetsonScaled(n), 1);
+            assert_eq!(f.len(), n);
+        }
+    }
+
+    #[test]
+    fn network_groups_are_balanced() {
+        let f = Fleet::new(FleetKind::Jetson80, 2);
+        let mut counts = [0usize; 4];
+        for d in &f.devices {
+            counts[d.group as usize] += 1;
+        }
+        assert_eq!(counts, [20, 20, 20, 20]);
+    }
+
+    #[test]
+    fn mu_spread_is_about_100x() {
+        // paper: up to ~100× difference between fastest AGX mode and
+        // slowest TX2 mode
+        let f = Fleet::new(FleetKind::Jetson80, 3);
+        let best = DeviceClass::JetsonAGX.profile();
+        let worst = DeviceClass::JetsonTX2.profile();
+        let min_mu = best.base_mu_s
+            * best
+                .mode_multipliers
+                .iter()
+                .fold(f64::MAX, |a, &b| a.min(b));
+        let max_mu = worst.base_mu_s
+            * worst
+                .mode_multipliers
+                .iter()
+                .fold(f64::MIN, |a, &b| a.max(b));
+        let spread = max_mu / min_mu;
+        assert!(spread > 50.0 && spread < 200.0, "spread={spread}");
+        drop(f);
+    }
+
+    #[test]
+    fn mode_reroll_changes_modes() {
+        let mut f = Fleet::new(FleetKind::Jetson80, 4);
+        let before: Vec<usize> = f.devices.iter().map(|d| d.mode).collect();
+        f.on_round_start(MODE_REROLL_ROUNDS);
+        let after: Vec<usize> = f.devices.iter().map(|d| d.mode).collect();
+        assert_ne!(before, after);
+        // non-multiple rounds do not reroll
+        let snapshot = after.clone();
+        f.on_round_start(MODE_REROLL_ROUNDS + 1);
+        let same: Vec<usize> = f.devices.iter().map(|d| d.mode).collect();
+        assert_eq!(snapshot, same);
+    }
+
+    #[test]
+    fn round_cost_total_matches_eq7() {
+        let c = RoundCost::new(1e6, 5e5, 1e6, 5e5, 30, 32, 0.001);
+        assert!((c.download_s - 1.0).abs() < 1e-12);
+        assert!((c.upload_s - 1.0).abs() < 1e-12);
+        assert!((c.compute_s - 0.96).abs() < 1e-12);
+        assert!((c.total() - 2.96).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,119 @@
+//! WiFi bandwidth model — the stand-in for the paper's four rooms at
+//! 2 m / 8 m / 14 m / 20 m from the router with measured per-round
+//! fluctuation inside [1, 30] Mb/s (§6.1 "Setting of System Heterogeneity").
+
+use crate::util::rng::Rng;
+
+/// Distance group (index 0 = closest to the router).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetworkGroup {
+    Near = 0,   // ~2 m
+    Mid = 1,    // ~8 m
+    Far = 2,    // ~14 m
+    VeryFar = 3, // ~20 m
+}
+
+impl NetworkGroup {
+    pub fn from_index(i: usize) -> NetworkGroup {
+        match i {
+            0 => NetworkGroup::Near,
+            1 => NetworkGroup::Mid,
+            2 => NetworkGroup::Far,
+            _ => NetworkGroup::VeryFar,
+        }
+    }
+}
+
+/// Per-round bandwidth sampler.
+#[derive(Clone, Debug)]
+pub struct BandwidthModel {
+    /// Mean downlink bandwidth per group, bit/s.
+    pub mean_down_bps: [f64; 4],
+    /// Uplink mean as a fraction of downlink (WiFi is roughly symmetric;
+    /// contention skews uploads slightly down).
+    pub up_fraction: f64,
+    /// Lognormal sigma of the per-round fluctuation.
+    pub sigma: f64,
+    /// Hard clamp, bit/s (paper: [1, 30] Mb/s).
+    pub min_bps: f64,
+    pub max_bps: f64,
+}
+
+impl Default for BandwidthModel {
+    fn default() -> Self {
+        BandwidthModel {
+            // Calibrated so FedAvg's round time on the CIFAR stand-in sits
+            // near the paper's ~90 s/round with comm : compute ≈ 40 : 60
+            // (the paper's own FedAvg waiting time of ~12 s rules out a
+            // comm-starved testbed despite the quoted 1 Mb/s floor).
+            mean_down_bps: [26e6, 21e6, 15e6, 9e6],
+            up_fraction: 0.8,
+            sigma: 0.35,
+            min_bps: 1e6,
+            max_bps: 30e6,
+        }
+    }
+}
+
+impl BandwidthModel {
+    /// Draw (download, upload) bandwidth in bit/s for one round.
+    pub fn draw(&self, group: NetworkGroup, rng: &mut Rng) -> (f64, f64) {
+        let mean = self.mean_down_bps[group as usize];
+        let down = rng
+            .lognormal_mean(mean, self.sigma)
+            .clamp(self.min_bps, self.max_bps);
+        let up = rng
+            .lognormal_mean(mean * self.up_fraction, self.sigma)
+            .clamp(self.min_bps, self.max_bps);
+        (down, up)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draws_within_clamp() {
+        let m = BandwidthModel::default();
+        let mut rng = Rng::new(0);
+        for g in 0..4 {
+            for _ in 0..1000 {
+                let (d, u) = m.draw(NetworkGroup::from_index(g), &mut rng);
+                assert!((1e6..=30e6).contains(&d));
+                assert!((1e6..=30e6).contains(&u));
+            }
+        }
+    }
+
+    #[test]
+    fn nearer_groups_are_faster_on_average() {
+        let m = BandwidthModel::default();
+        let mut rng = Rng::new(1);
+        let avg = |g: usize, rng: &mut Rng| {
+            (0..2000)
+                .map(|_| m.draw(NetworkGroup::from_index(g), rng).0)
+                .sum::<f64>()
+                / 2000.0
+        };
+        let a = avg(0, &mut rng);
+        let b = avg(1, &mut rng);
+        let c = avg(2, &mut rng);
+        let d = avg(3, &mut rng);
+        assert!(a > b && b > c && c > d, "{a} {b} {c} {d}");
+    }
+
+    #[test]
+    fn fluctuates_round_to_round() {
+        let m = BandwidthModel::default();
+        let mut rng = Rng::new(2);
+        let draws: Vec<f64> = (0..50)
+            .map(|_| m.draw(NetworkGroup::Mid, &mut rng).0)
+            .collect();
+        let distinct = draws
+            .iter()
+            .filter(|&&x| (x - draws[0]).abs() > 1.0)
+            .count();
+        assert!(distinct > 40);
+    }
+}

@@ -1,0 +1,112 @@
+//! Device class profiles, derived from the paper's Tables 1–2.
+//!
+//! `base_mu_s` is the per-sample training latency (seconds) of the class in
+//! its fastest mode for the reference model (the CIFAR stand-in; other
+//! models scale it by their `model_cost`). Mode multipliers reproduce the
+//! paper's configurable power modes (TX2: 4 modes, NX/AGX: 8 modes,
+//! phones: normal + power-saving) and its observed ≈100× μ spread between
+//! AGX mode-0 and TX2's slowest mode.
+
+/// Hardware class of a simulated device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DeviceClass {
+    JetsonTX2,
+    JetsonNX,
+    JetsonAGX,
+    PhoneA1,
+    PhoneReno9,
+    PhoneFindX6,
+}
+
+/// Static per-class profile.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub name: &'static str,
+    /// Per-sample latency in the fastest mode, reference model (seconds).
+    pub base_mu_s: f64,
+    /// Slow-down factor per power mode (index 0 = fastest).
+    pub mode_multipliers: &'static [f64],
+}
+
+const TX2_MODES: &[f64] = &[1.0, 2.0, 8.0, 25.0];
+const NX_MODES: &[f64] = &[1.0, 1.4, 2.0, 2.8, 4.0, 5.6, 8.0, 11.0];
+const AGX_MODES: &[f64] = &[1.0, 1.3, 1.8, 2.4, 3.2, 4.2, 5.6, 7.5];
+const PHONE_MODES: &[f64] = &[1.0, 3.0];
+
+impl DeviceClass {
+    pub fn profile(&self) -> Profile {
+        match self {
+            // Jetson: AI perf 1.33 TFLOPs (TX2) vs 21 TOPs (NX) vs 32 TOPs
+            // (AGX) → base μ ordering AGX < NX < TX2.
+            DeviceClass::JetsonTX2 => Profile {
+                name: "jetson-tx2",
+                base_mu_s: 4.0e-3,
+                mode_multipliers: TX2_MODES,
+            },
+            DeviceClass::JetsonNX => Profile {
+                name: "jetson-nx",
+                base_mu_s: 1.8e-3,
+                mode_multipliers: NX_MODES,
+            },
+            DeviceClass::JetsonAGX => Profile {
+                name: "jetson-agx",
+                base_mu_s: 1.0e-3,
+                mode_multipliers: AGX_MODES,
+            },
+            // Phones: 486 GFLOPs (A1) vs 844 (Reno9) vs 3482 (FindX6).
+            DeviceClass::PhoneA1 => Profile {
+                name: "oppo-a1",
+                base_mu_s: 8.0e-3,
+                mode_multipliers: PHONE_MODES,
+            },
+            DeviceClass::PhoneReno9 => Profile {
+                name: "oppo-reno9",
+                base_mu_s: 4.6e-3,
+                mode_multipliers: PHONE_MODES,
+            },
+            DeviceClass::PhoneFindX6 => Profile {
+                name: "oppo-findx6",
+                base_mu_s: 1.1e-3,
+                mode_multipliers: PHONE_MODES,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_counts_match_paper() {
+        assert_eq!(DeviceClass::JetsonTX2.profile().mode_multipliers.len(), 4);
+        assert_eq!(DeviceClass::JetsonNX.profile().mode_multipliers.len(), 8);
+        assert_eq!(DeviceClass::JetsonAGX.profile().mode_multipliers.len(), 8);
+        assert_eq!(DeviceClass::PhoneA1.profile().mode_multipliers.len(), 2);
+    }
+
+    #[test]
+    fn perf_ordering_matches_spec_tables() {
+        let mu = |c: DeviceClass| c.profile().base_mu_s;
+        assert!(mu(DeviceClass::JetsonAGX) < mu(DeviceClass::JetsonNX));
+        assert!(mu(DeviceClass::JetsonNX) < mu(DeviceClass::JetsonTX2));
+        assert!(mu(DeviceClass::PhoneFindX6) < mu(DeviceClass::PhoneReno9));
+        assert!(mu(DeviceClass::PhoneReno9) < mu(DeviceClass::PhoneA1));
+    }
+
+    #[test]
+    fn mode_multipliers_start_at_one_and_increase() {
+        for c in [
+            DeviceClass::JetsonTX2,
+            DeviceClass::JetsonNX,
+            DeviceClass::JetsonAGX,
+            DeviceClass::PhoneA1,
+        ] {
+            let m = c.profile().mode_multipliers;
+            assert_eq!(m[0], 1.0);
+            for w in m.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Caesar: low-deviation model/gradient compression for efficient
+//! federated learning — a reproduction of Yan et al. (2024).
+//!
+//! Three-layer architecture (DESIGN.md §2): this rust crate is Layer 3
+//! (coordinator, fleet simulator, schemes, experiments) plus the PJRT
+//! runtime that executes the Layer-2 JAX / Layer-1 Pallas artifacts
+//! AOT-lowered by `python/compile/aot.py` into `artifacts/*.hlo.txt`.
+//!
+//! Public API tour:
+//! * [`coordinator::Server`] — the synchronous FL round loop.
+//! * [`schemes`] — Caesar and the paper's baselines behind one trait.
+//! * [`compress`] — the §4.1/§4.2 codecs (native; pinned to the L1 kernels).
+//! * [`caesar`] — Eq. 3–9: staleness, importance, batch-size regulation.
+//! * [`fleet`], [`data`] — the simulated testbed and non-IID datasets.
+//! * [`runtime`] — PJRT CPU execution of the AOT artifacts.
+//! * [`experiments`] — one runner per paper table/figure.
+
+pub mod caesar;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod fleet;
+pub mod nn;
+pub mod runtime;
+pub mod schemes;
+pub mod util;
+
+pub mod bench;
+
+pub use util::rng::Rng;

@@ -1,0 +1,113 @@
+//! `caesar` — leader entrypoint and CLI.
+//!
+//! Usage:
+//!   caesar run scheme=<name> task=<cifar|har|speech|oppo> [key=value ...]
+//!   caesar <fig1|fig1c|fig1d|fig5|fig8|fig9|fig10|table3|all> [overrides]
+//!   caesar info            # artifact/runtime inventory
+//!   caesar list            # schemes, tasks, experiments
+//!
+//! Common overrides: rounds= alpha= tau= batch= lr= p= theta-min= theta-max=
+//! lambda= clusters= devices= seed= target= eval-every= n-train=
+//! trainer=xla|native compression-backend=native|xla out=<dir> quiet
+
+use anyhow::Result;
+
+use caesar_fl::config::ExperimentConfig;
+use caesar_fl::coordinator::Server;
+use caesar_fl::experiments;
+use caesar_fl::runtime::Runtime;
+use caesar_fl::schemes;
+use caesar_fl::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(args),
+        Some("info") => cmd_info(),
+        Some("list") | None => cmd_list(),
+        Some(exp) => experiments::run_by_name(exp, args),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let task = args.get_or("task", "cifar");
+    let scheme_name = args.get_or("scheme", "caesar");
+    let cfg = ExperimentConfig::preset(task).apply_overrides(args);
+    let scheme = schemes::by_name(scheme_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown scheme {scheme_name} (try `caesar list`)"))?;
+    let use_auc = task == "oppo";
+    println!(
+        "run: scheme={scheme_name} task={task} rounds={} devices={} alpha={} p={} trainer={:?}",
+        cfg.rounds,
+        cfg.n_devices(),
+        cfg.alpha,
+        cfg.het_p,
+        cfg.trainer
+    );
+    let quiet = args.has_flag("quiet");
+    let every = args.get_usize("print-every").unwrap_or(10);
+    let mut srv = Server::new(cfg, scheme)?;
+    let result = srv.run_cb(|r| {
+        if !quiet && (r.t % every == 0 || r.t == 1) && !r.accuracy.is_nan() {
+            println!(
+                "  round {:>4}  acc={:.4}  auc={:.4}  loss={:.4}  time={:>8.1}s  traffic={:.3}GB  wait={:.2}s",
+                r.t, r.accuracy, r.auc, r.mean_loss, r.sim_time_s, r.traffic_gb, r.avg_wait_s
+            );
+        }
+    })?;
+    println!(
+        "final: metric={:.4}  time={:.1}s(sim)  traffic={:.3}GB  mean-wait={:.2}s",
+        result.final_metric(use_auc),
+        result.total_time_s(),
+        result.total_traffic_gb(),
+        result.mean_wait_s()
+    );
+    if let Some((t, time, gb)) = result.reached_target {
+        println!(
+            "target {:.2} reached at round {t}: {:.1}s(sim), {:.3}GB",
+            result.target, time, gb
+        );
+    } else {
+        println!("target {:.2} not reached", result.target);
+    }
+    let dir = experiments::out_dir(args).join("run");
+    result.save(&dir, "")?;
+    println!("saved per-round CSV/JSON under {}", dir.display());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = Runtime::default_dir();
+    println!("artifact dir: {}", dir.display());
+    match Runtime::open(&dir) {
+        Ok(rt) => {
+            let m = rt.manifest();
+            println!("train chunk={} eval_chunk={}", m.chunk, m.eval_chunk);
+            let mut names: Vec<&str> = m.module_names().collect();
+            names.sort();
+            println!("{} modules:", names.len());
+            for n in names {
+                println!("  {n}");
+            }
+        }
+        Err(e) => println!("runtime unavailable ({e}); native trainer still works"),
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("schemes:      fedavg flexcom prowd pyramidfl caesar caesar-br caesar-dc");
+    println!("              nocomp gm-fic gm-cac lg-fic lg-cac");
+    println!("tasks:        cifar har speech oppo");
+    println!("experiments:  fig1 fig1c fig1d fig5 (=fig6/fig7/table3) fig8 fig9 fig10 all");
+    println!("extensions:   ablation-k ablation-lambda");
+    println!("also:         run scheme=<s> task=<t> [key=value ...] | info");
+    Ok(())
+}

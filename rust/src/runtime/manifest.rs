@@ -1,0 +1,209 @@
+//! Artifact manifest (`artifacts/manifest.json`) — shapes and dtypes of
+//! every AOT module plus per-task model metadata, written by aot.py.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// dtype + shape of one tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One AOT-lowered module.
+#[derive(Clone, Debug)]
+pub struct ModuleSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Per-task model metadata (the `_spec_<task>` manifest entries).
+#[derive(Clone, Debug)]
+pub struct TaskModelSpec {
+    pub dims: Vec<usize>,
+    pub n_params: usize,
+    pub d_in: usize,
+    pub n_classes: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub chunk: usize,
+    pub eval_chunk: usize,
+    modules: BTreeMap<String, ModuleSpec>,
+    tasks: BTreeMap<String, TaskModelSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let chunk = j
+            .get("chunk")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing chunk"))?;
+        let eval_chunk = j
+            .get("eval_chunk")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing eval_chunk"))?;
+        let mods = j
+            .get("modules")
+            .ok_or_else(|| anyhow!("manifest missing modules"))?;
+        let mut modules = BTreeMap::new();
+        let mut tasks = BTreeMap::new();
+        for name in mods.keys() {
+            let entry = mods.get(name).unwrap();
+            if let Some(task) = name.strip_prefix("_spec_") {
+                tasks.insert(
+                    task.to_string(),
+                    TaskModelSpec {
+                        dims: usize_arr(entry.get("dims"))?,
+                        n_params: req_usize(entry, "n_params")?,
+                        d_in: req_usize(entry, "d_in")?,
+                        n_classes: req_usize(entry, "n_classes")?,
+                    },
+                );
+                continue;
+            }
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing file"))?
+                .to_string();
+            modules.insert(
+                name.to_string(),
+                ModuleSpec {
+                    file,
+                    inputs: tensor_specs(entry.get("inputs"))?,
+                    outputs: tensor_specs(entry.get("outputs"))?,
+                },
+            );
+        }
+        Ok(Manifest { chunk, eval_chunk, modules, tasks })
+    }
+
+    pub fn module(&self, name: &str) -> Option<&ModuleSpec> {
+        self.modules.get(name)
+    }
+
+    pub fn task(&self, name: &str) -> Option<&TaskModelSpec> {
+        self.tasks.get(name)
+    }
+
+    pub fn module_names(&self) -> impl Iterator<Item = &str> {
+        self.modules.keys().map(|s| s.as_str())
+    }
+
+    /// Batch buckets available for a task's train module, ascending.
+    pub fn train_buckets(&self, task: &str) -> Vec<usize> {
+        let prefix = format!("train_{task}_b");
+        let mut v: Vec<usize> = self
+            .modules
+            .keys()
+            .filter_map(|k| k.strip_prefix(&prefix).and_then(|b| b.parse().ok()))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("missing {key}"))
+}
+
+fn usize_arr(j: Option<&Json>) -> Result<Vec<usize>> {
+    j.and_then(Json::as_arr)
+        .map(|v| v.iter().filter_map(Json::as_usize).collect())
+        .ok_or_else(|| anyhow!("expected usize array"))
+}
+
+fn tensor_specs(j: Option<&Json>) -> Result<Vec<TensorSpec>> {
+    let arr = j
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("expected tensor spec array"))?;
+    arr.iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                dtype: t
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("f32")
+                    .to_string(),
+                shape: usize_arr(t.get("shape"))?,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "chunk": 5, "eval_chunk": 256,
+      "modules": {
+        "train_har_b4": {"file": "train_har_b4.hlo.txt",
+          "inputs": [{"dtype": "f32", "shape": [2758]},
+                     {"dtype": "f32", "shape": [5, 4, 36]},
+                     {"dtype": "i32", "shape": [5, 4]},
+                     {"dtype": "f32", "shape": []}],
+          "outputs": [{"dtype": "f32", "shape": [2758]},
+                      {"dtype": "f32", "shape": []}]},
+        "train_har_b16": {"file": "x", "inputs": [], "outputs": []},
+        "_spec_har": {"dims": [36, 64, 6], "n_params": 2758,
+                      "d_in": 36, "n_classes": 6}
+      }
+    }"#;
+
+    #[test]
+    fn parses_modules_and_tasks() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.chunk, 5);
+        assert_eq!(m.eval_chunk, 256);
+        let t = m.module("train_har_b4").unwrap();
+        assert_eq!(t.inputs.len(), 4);
+        assert_eq!(t.inputs[1].shape, vec![5, 4, 36]);
+        assert_eq!(t.inputs[2].dtype, "i32");
+        assert_eq!(t.outputs[0].shape, vec![2758]);
+        let spec = m.task("har").unwrap();
+        assert_eq!(spec.dims, vec![36, 64, 6]);
+        assert_eq!(spec.n_params, 2758);
+        assert!(m.module("_spec_har").is_none());
+    }
+
+    #[test]
+    fn train_buckets_sorted() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.train_buckets("har"), vec![4, 16]);
+        assert!(m.train_buckets("nope").is_empty());
+    }
+
+    #[test]
+    fn scalar_shape_is_empty_vec() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let t = m.module("train_har_b4").unwrap();
+        assert!(t.inputs[3].shape.is_empty());
+        let n: usize = t.inputs[3].shape.iter().product();
+        assert_eq!(n, 1); // empty product = 1 = scalar element count
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) emitted by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos; the text parser reassigns instruction ids
+//! — see DESIGN.md §2 and /opt/xla-example/README.md). Modules are
+//! compiled lazily on first use and cached for the life of the process:
+//! python never runs on the request path.
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ModuleSpec, TensorSpec};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// A loaded artifact set + PJRT client with a lazy executable cache.
+///
+/// NOTE: the underlying PJRT wrappers hold raw pointers; `Runtime` is
+/// intentionally not Sync — callers on worker threads create one runtime
+/// each or serialize access (the coordinator uses one runtime per worker).
+pub struct Runtime {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            dir: dir.to_path_buf(),
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// The default artifact directory (`$CAESAR_ARTIFACTS` or `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CAESAR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) a module by manifest name.
+    fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .module(name)
+            .ok_or_else(|| anyhow!("module {name} not in manifest"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let rc = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Pre-compile a list of modules (warm-up; avoids first-call latency).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute a module. Inputs are validated against the manifest.
+    /// All our modules are lowered with `return_tuple=True`, so the result
+    /// is always the decomposed tuple of output literals.
+    pub fn exec(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self
+            .manifest
+            .module(name)
+            .ok_or_else(|| anyhow!("module {name} not in manifest"))?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (lit, ts)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let n: usize = ts.shape.iter().product();
+            if lit.element_count() != n {
+                return Err(anyhow!(
+                    "{name}: input {i} has {} elements, manifest says {:?}",
+                    lit.element_count(),
+                    ts.shape
+                ));
+            }
+        }
+        let exe = self.executable(name)?;
+        // NOTE: we deliberately avoid `PjRtLoadedExecutable::execute`
+        // (literal inputs): its C++ shim `release()`s the uploaded input
+        // buffers without ever freeing them, leaking ~the full input
+        // payload per call (≈1 GB per 250-round run). Uploading through
+        // `buffer_from_host_literal` keeps ownership on our side — the
+        // buffers free on drop — and `execute_b` borrows them.
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for (i, lit) in inputs.iter().enumerate() {
+            bufs.push(
+                self.client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow!("uploading input {i} of {name}: {e:?}"))?,
+            );
+        }
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&bufs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+}
+
+/// Build a f32 literal with the given dims.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("lit_f32: {} elements for dims {dims:?}", data.len()));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal with the given dims.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("lit_i32: {} elements for dims {dims:?}", data.len()));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Extract a f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+/// Extract the single f32 from a scalar literal.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar f32: {e:?}"))
+}

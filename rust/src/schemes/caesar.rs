@@ -1,0 +1,213 @@
+//! Caesar (this paper) and its Fig. 9 ablations.
+//!
+//! * download: staleness-aware ratio (Eq. 3) via K-cluster grouping,
+//!   threshold-split + 1-bit codec with local-model recovery (§4.1)
+//! * upload: importance-ranked Top-K ratio (Eq. 4–6, §4.2)
+//! * batch: greedy Eq. 7–9 regulation (§4.3)
+//!
+//! Ablations: `Caesar-BR` replaces the deviation-aware ratios with
+//! capability-aware (CAC) ones and plain Top-K download (keeping batch
+//! regulation); `Caesar-DC` keeps the deviation-aware compression but uses
+//! the fixed identical batch.
+
+use super::{DevicePlan, DownloadCodec, RoundCtx, Scheme, UploadCodec};
+use crate::caesar::batchsize::{optimize_batches, BatchPlanInput};
+use crate::caesar::staleness::cluster_download_ratios;
+
+pub struct Caesar {
+    /// Deviation-aware compression (staleness Eq. 3 + importance Eq. 6).
+    /// When false (Caesar-BR): CAC ratios + plain Top-K download codec.
+    pub deviation_aware: bool,
+    /// Adaptive batch regulation Eq. 7–9. When false (Caesar-DC): fixed.
+    pub batch_regulation: bool,
+    name: &'static str,
+}
+
+impl Caesar {
+    pub fn full() -> Caesar {
+        Caesar { deviation_aware: true, batch_regulation: true, name: "caesar" }
+    }
+
+    /// Fig. 9's Caesar-BR: batch regulation only.
+    pub fn without_deviation_aware() -> Caesar {
+        Caesar { deviation_aware: false, batch_regulation: true, name: "caesar-br" }
+    }
+
+    /// Fig. 9's Caesar-DC: deviation-aware compression only.
+    pub fn without_batch_regulation() -> Caesar {
+        Caesar { deviation_aware: true, batch_regulation: false, name: "caesar-dc" }
+    }
+}
+
+impl Scheme for Caesar {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn plan_round(&mut self, ctx: &RoundCtx) -> Vec<DevicePlan> {
+        let k = ctx.participants.len();
+        let cfg = ctx.cfg;
+
+        // --- download ratios ---
+        let theta_d: Vec<f64> = if self.deviation_aware {
+            let clusters = if cfg.clusters == 0 { k } else { cfg.clusters };
+            let (ratios, _) =
+                cluster_download_ratios(ctx.staleness, ctx.t, cfg.theta_max, clusters);
+            ratios
+        } else {
+            (0..k)
+                .map(|i| ctx.cac_ratio(ctx.beta_d[i], ctx.beta_d))
+                .collect()
+        };
+
+        // --- upload ratios ---
+        let theta_u: Vec<f64> = if self.deviation_aware {
+            ctx.participants
+                .iter()
+                .map(|&d| ctx.importance.upload_ratio(d, cfg.theta_min, cfg.theta_max))
+                .collect()
+        } else {
+            (0..k)
+                .map(|i| ctx.cac_ratio(ctx.beta_u[i], ctx.beta_u))
+                .collect()
+        };
+
+        // --- batch sizes (Eq. 7–9 with nominal payload estimates) ---
+        let batches: Vec<usize> = if self.batch_regulation {
+            let inputs: Vec<BatchPlanInput> = (0..k)
+                .map(|i| BatchPlanInput {
+                    // estimated transfer: (1-θ)·Q plus the 1-bit plane for
+                    // the caesar codec, matching Eq. 7's θ·Q/β shape
+                    download_s: (1.0 - theta_d[i] * (31.0 / 32.0)) * ctx.q_bits
+                        / ctx.beta_d[i],
+                    upload_s: (1.0 - theta_u[i]) * ctx.q_bits / ctx.beta_u[i],
+                    mu: ctx.mu[i],
+                })
+                .collect();
+            optimize_batches(&inputs, cfg.tau, cfg.batch).0
+        } else {
+            vec![cfg.batch; k]
+        };
+
+        (0..k)
+            .map(|i| {
+                let device = ctx.participants[i];
+                let download = if !self.deviation_aware {
+                    DownloadCodec::TopK { ratio: theta_d[i] }
+                } else if ctx.never[i] {
+                    // never participated → no local model → full precision
+                    // (Eq. 3 with δ = t gives θ = 0)
+                    DownloadCodec::Full
+                } else {
+                    DownloadCodec::CaesarSplit { ratio: theta_d[i] }
+                };
+                DevicePlan {
+                    device,
+                    download,
+                    upload: UploadCodec::TopK { ratio: theta_u[i] },
+                    batch: batches[i],
+                    tau: cfg.tau,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schemes::tests_support::ctx_fixture;
+
+    fn dl_ratio(p: &DevicePlan) -> f64 {
+        match p.download {
+            DownloadCodec::CaesarSplit { ratio } | DownloadCodec::TopK { ratio } => ratio,
+            DownloadCodec::Full => 0.0,
+            _ => panic!(),
+        }
+    }
+
+    fn ul_ratio(p: &DevicePlan) -> f64 {
+        match p.upload {
+            UploadCodec::TopK { ratio } => ratio,
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn fresher_devices_get_more_download_compression() {
+        let fx = ctx_fixture(6, 12);
+        let mut s = Caesar::full();
+        // exact per-device ratios: clusters = participants
+        let mut cfg = fx.cfg.clone();
+        cfg.clusters = 0;
+        let mut fx2 = fx;
+        fx2.cfg = cfg;
+        let plans = s.plan_round(&fx2.ctx());
+        // fixture staleness increases with i → ratio decreases
+        for w in plans.windows(2) {
+            assert!(dl_ratio(&w[0]) >= dl_ratio(&w[1]) - 1e-9);
+        }
+    }
+
+    #[test]
+    fn never_participated_gets_full_precision() {
+        let mut fx = ctx_fixture(3, 5);
+        fx.never[2] = true;
+        fx.staleness[2] = 5;
+        let mut s = Caesar::full();
+        let plans = s.plan_round(&fx.ctx());
+        assert_eq!(plans[2].download, DownloadCodec::Full);
+        assert!(matches!(plans[0].download, DownloadCodec::CaesarSplit { .. }));
+    }
+
+    #[test]
+    fn important_devices_get_low_upload_ratio() {
+        let fx = ctx_fixture(5, 10);
+        let mut s = Caesar::full();
+        let plans = s.plan_round(&fx.ctx());
+        // fixture: importance score grows with device id (volume up, but KL
+        // up too — check against the table's own ranks instead)
+        for (i, p) in plans.iter().enumerate() {
+            let want = fx
+                .importance
+                .upload_ratio(fx.participants[i], fx.cfg.theta_min, fx.cfg.theta_max);
+            assert!((ul_ratio(p) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn batch_regulation_gives_leader_bmax_and_others_less_or_equal() {
+        let fx = ctx_fixture(5, 10);
+        let mut s = Caesar::full();
+        let plans = s.plan_round(&fx.ctx());
+        assert!(plans.iter().any(|p| p.batch == fx.cfg.batch));
+        assert!(plans.iter().all(|p| (1..=fx.cfg.batch).contains(&p.batch)));
+        // heterogeneous fixture → not all equal
+        assert!(!plans.iter().all(|p| p.batch == fx.cfg.batch));
+    }
+
+    #[test]
+    fn ablation_br_uses_cac_and_topk_download() {
+        let fx = ctx_fixture(4, 10);
+        let mut s = Caesar::without_deviation_aware();
+        assert_eq!(s.name(), "caesar-br");
+        let plans = s.plan_round(&fx.ctx());
+        for p in &plans {
+            assert!(matches!(p.download, DownloadCodec::TopK { .. }));
+        }
+        // CAC: best downlink (participant 0) → θ_min
+        assert!((dl_ratio(&plans[0]) - fx.cfg.theta_min).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ablation_dc_uses_fixed_batch() {
+        let fx = ctx_fixture(4, 10);
+        let mut s = Caesar::without_batch_regulation();
+        assert_eq!(s.name(), "caesar-dc");
+        let plans = s.plan_round(&fx.ctx());
+        assert!(plans.iter().all(|p| p.batch == fx.cfg.batch));
+        assert!(plans
+            .iter()
+            .any(|p| matches!(p.download, DownloadCodec::CaesarSplit { .. })));
+    }
+}

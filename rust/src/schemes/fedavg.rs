@@ -1,0 +1,52 @@
+//! FedAvg (McMahan et al.) — the uncompressed baseline: full-precision
+//! model and gradient, identical fixed batch size on every device.
+
+use super::{DevicePlan, DownloadCodec, RoundCtx, Scheme, UploadCodec};
+
+#[derive(Default)]
+pub struct FedAvg;
+
+impl FedAvg {
+    pub fn new() -> FedAvg {
+        FedAvg
+    }
+}
+
+impl Scheme for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn plan_round(&mut self, ctx: &RoundCtx) -> Vec<DevicePlan> {
+        ctx.participants
+            .iter()
+            .map(|&device| DevicePlan {
+                device,
+                download: DownloadCodec::Full,
+                upload: UploadCodec::Full,
+                batch: ctx.cfg.batch,
+                tau: ctx.cfg.tau,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schemes::tests_support::ctx_fixture;
+
+    #[test]
+    fn plans_are_uncompressed_and_uniform() {
+        let fx = ctx_fixture(4, 3);
+        let mut s = FedAvg::new();
+        let plans = s.plan_round(&fx.ctx());
+        assert_eq!(plans.len(), 4);
+        for p in &plans {
+            assert_eq!(p.download, DownloadCodec::Full);
+            assert_eq!(p.upload, UploadCodec::Full);
+            assert_eq!(p.batch, fx.cfg.batch);
+            assert_eq!(p.tau, fx.cfg.tau);
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! FlexCom (Li et al., INFOCOM'21) — capability-aware Top-K compression of
+//! the *local gradients only*: participants with weaker upload bandwidth
+//! use larger compression ratios. Devices share an identical, gradually
+//! increasing batch size (§6.1).
+
+use super::{DevicePlan, DownloadCodec, RoundCtx, Scheme, UploadCodec};
+
+pub struct FlexCom {
+    /// Batch ramp start (grows linearly to cfg.batch over the run).
+    start_batch: usize,
+}
+
+impl FlexCom {
+    pub fn new() -> FlexCom {
+        FlexCom { start_batch: 8 }
+    }
+}
+
+impl Default for FlexCom {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheme for FlexCom {
+    fn name(&self) -> &'static str {
+        "flexcom"
+    }
+
+    fn plan_round(&mut self, ctx: &RoundCtx) -> Vec<DevicePlan> {
+        // identical gradually-increasing batch: linear ramp over the run
+        let frac = (ctx.t as f64 / ctx.cfg.rounds.max(1) as f64).min(1.0);
+        let batch = (self.start_batch as f64
+            + frac * (ctx.cfg.batch.saturating_sub(self.start_batch)) as f64)
+            .round() as usize;
+        let batch = batch.clamp(1, ctx.cfg.batch);
+        ctx.participants
+            .iter()
+            .enumerate()
+            .map(|(i, &device)| DevicePlan {
+                device,
+                download: DownloadCodec::Full,
+                upload: UploadCodec::TopK {
+                    ratio: ctx.cac_ratio(ctx.beta_u[i], ctx.beta_u),
+                },
+                batch,
+                tau: ctx.cfg.tau,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schemes::tests_support::ctx_fixture;
+
+    #[test]
+    fn weakest_uplink_gets_largest_ratio() {
+        let fx = ctx_fixture(5, 10);
+        let mut s = FlexCom::new();
+        let plans = s.plan_round(&fx.ctx());
+        let ratios: Vec<f64> = plans
+            .iter()
+            .map(|p| match p.upload {
+                UploadCodec::TopK { ratio } => ratio,
+                _ => panic!("expected topk"),
+            })
+            .collect();
+        // fixture: beta_u decreases with i → ratio increases with i
+        for w in ratios.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+        assert!((ratios[0] - fx.cfg.theta_min).abs() < 1e-9);
+        assert!((ratios[4] - fx.cfg.theta_max).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_ramps_up_over_rounds() {
+        let fx_early = ctx_fixture(3, 1);
+        let fx_late = ctx_fixture(3, 250);
+        let mut s = FlexCom::new();
+        let b_early = s.plan_round(&fx_early.ctx())[0].batch;
+        let b_late = s.plan_round(&fx_late.ctx())[0].batch;
+        assert!(b_early < b_late);
+        assert_eq!(b_late, fx_late.cfg.batch);
+        // identical across participants
+        let plans = s.plan_round(&fx_early.ctx());
+        assert!(plans.iter().all(|p| p.batch == plans[0].batch));
+    }
+
+    #[test]
+    fn model_download_uncompressed() {
+        let fx = ctx_fixture(3, 5);
+        let mut s = FlexCom::new();
+        for p in s.plan_round(&fx.ctx()) {
+            assert_eq!(p.download, DownloadCodec::Full);
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! FL schemes: Caesar and the paper's baselines behind one trait.
+//!
+//! A scheme decides, per round, each participant's download codec, upload
+//! codec, batch size and local-iteration count. The coordinator executes
+//! the plan; schemes never touch tensors.
+//!
+//! Paper mapping (§6.1 Baselines):
+//! * [`fedavg`]    — FedAvg: no compression, fixed identical batch.
+//! * [`flexcom`]   — FlexCom: bandwidth-aware Top-K gradient compression,
+//!                   identical gradually-increasing batch.
+//! * [`prowd`]     — ProWD: bandwidth-chosen quantization of model AND
+//!                   gradient.
+//! * [`pyramidfl`] — PyramidFL: gradient-norm-ranked gradient compression,
+//!                   per-device local-iteration adjustment.
+//! * [`caesar`]    — Caesar (+ the Fig. 9 ablations Caesar-BR/Caesar-DC).
+//! * [`prelim`]    — the Fig. 1 preliminary schemes (GM/LG × FIC/CAC).
+
+pub mod caesar;
+pub mod fedavg;
+pub mod flexcom;
+pub mod prelim;
+pub mod prowd;
+pub mod pyramidfl;
+
+#[cfg(test)]
+pub mod tests_support;
+
+use crate::caesar::ImportanceTable;
+use crate::config::ExperimentConfig;
+
+/// How the global model is compressed for download.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DownloadCodec {
+    /// Full fp32 model.
+    Full,
+    /// Caesar §4.1 threshold-split + 1-bit + recovery. `ratio` = quantized
+    /// fraction.
+    CaesarSplit { ratio: f64 },
+    /// Plain Top-K sparsification; dropped positions are filled from the
+    /// receiver's stale local model (the GM-FIC/GM-CAC baselines).
+    TopK { ratio: f64 },
+    /// Stochastic uniform quantization to `bits` value bits (ProWD).
+    Quant { bits: u32 },
+}
+
+/// How the local gradient is compressed for upload.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UploadCodec {
+    Full,
+    /// Top-K: `ratio` = dropped fraction.
+    TopK { ratio: f64 },
+    Quant { bits: u32 },
+}
+
+/// The per-participant decision for one round.
+#[derive(Clone, Copy, Debug)]
+pub struct DevicePlan {
+    pub device: usize,
+    pub download: DownloadCodec,
+    pub upload: UploadCodec,
+    pub batch: usize,
+    pub tau: usize,
+}
+
+/// Everything a scheme may consult when planning a round. Slices are
+/// indexed by participant position (not device id) unless noted.
+pub struct RoundCtx<'a> {
+    /// 1-based round number.
+    pub t: usize,
+    /// Selected device ids.
+    pub participants: &'a [usize],
+    /// δ_i^t per participant.
+    pub staleness: &'a [usize],
+    /// True if the participant has never trained (no local model).
+    pub never: &'a [bool],
+    /// This round's download/upload bandwidth (bit/s) per participant.
+    pub beta_d: &'a [f64],
+    pub beta_u: &'a [f64],
+    /// Per-sample compute latency (s) per participant.
+    pub mu: &'a [f64],
+    /// Paper-scale uncompressed payload Q in bits (Eq. 7).
+    pub q_bits: f64,
+    /// Static data-importance table over ALL devices (indexed by id).
+    pub importance: &'a ImportanceTable,
+    /// Last observed gradient norm per device id (0.0 = none yet).
+    pub grad_norms: &'a [f64],
+    pub cfg: &'a ExperimentConfig,
+}
+
+impl<'a> RoundCtx<'a> {
+    /// Normalized position of `x` within `xs` (0 = min, 1 = max).
+    pub fn norm_frac(xs: &[f64], x: f64) -> f64 {
+        let (mut lo, mut hi) = (f64::MAX, f64::MIN);
+        for &v in xs {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if hi <= lo {
+            return 0.5;
+        }
+        (x - lo) / (hi - lo)
+    }
+
+    /// Capability-aware compression ratio (the CAC policy used by the
+    /// preliminary experiments and FlexCom): weakest link → θ_max.
+    pub fn cac_ratio(&self, bandwidth: f64, all: &[f64]) -> f64 {
+        let frac = Self::norm_frac(all, bandwidth);
+        self.cfg.theta_max - (self.cfg.theta_max - self.cfg.theta_min) * frac
+    }
+}
+
+/// A federated-learning scheme.
+pub trait Scheme: Send {
+    fn name(&self) -> &'static str;
+
+    /// Plan one round (returns one plan per participant, same order).
+    fn plan_round(&mut self, ctx: &RoundCtx) -> Vec<DevicePlan>;
+}
+
+/// Construct a scheme by CLI name.
+pub fn by_name(name: &str) -> Option<Box<dyn Scheme>> {
+    match name {
+        "fedavg" => Some(Box::new(fedavg::FedAvg::new())),
+        "flexcom" => Some(Box::new(flexcom::FlexCom::new())),
+        "prowd" => Some(Box::new(prowd::ProWd::new())),
+        "pyramidfl" => Some(Box::new(pyramidfl::PyramidFl::new())),
+        "caesar" => Some(Box::new(caesar::Caesar::full())),
+        "caesar-br" => Some(Box::new(caesar::Caesar::without_deviation_aware())),
+        "caesar-dc" => Some(Box::new(caesar::Caesar::without_batch_regulation())),
+        "nocomp" => Some(Box::new(prelim::Prelim::no_compression())),
+        "gm-fic" => Some(Box::new(prelim::Prelim::gm_fic())),
+        "gm-cac" => Some(Box::new(prelim::Prelim::gm_cac())),
+        "lg-fic" => Some(Box::new(prelim::Prelim::lg_fic())),
+        "lg-cac" => Some(Box::new(prelim::Prelim::lg_cac())),
+        _ => None,
+    }
+}
+
+/// The five head-to-head schemes of Figures 5–7 / Table 3.
+pub const MAIN_SCHEMES: [&str; 5] = ["fedavg", "flexcom", "prowd", "pyramidfl", "caesar"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_covers_all() {
+        for n in [
+            "fedavg",
+            "flexcom",
+            "prowd",
+            "pyramidfl",
+            "caesar",
+            "caesar-br",
+            "caesar-dc",
+            "nocomp",
+            "gm-fic",
+            "gm-cac",
+            "lg-fic",
+            "lg-cac",
+        ] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("sgd").is_none());
+    }
+
+    #[test]
+    fn norm_frac_bounds() {
+        let xs = [1.0, 5.0, 9.0];
+        assert_eq!(RoundCtx::norm_frac(&xs, 1.0), 0.0);
+        assert_eq!(RoundCtx::norm_frac(&xs, 9.0), 1.0);
+        assert_eq!(RoundCtx::norm_frac(&xs, 5.0), 0.5);
+        assert_eq!(RoundCtx::norm_frac(&[3.0, 3.0], 3.0), 0.5);
+    }
+}

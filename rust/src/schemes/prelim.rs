@@ -1,0 +1,154 @@
+//! The Fig. 1 preliminary schemes: FIC (fixed identical compression) and
+//! CAC (capability-aware compression) applied to the global model only
+//! (GM-*) or the local gradient only (LG-*), plus the no-compression
+//! reference. Top-K is the codec for both directions (§2.2); FIC uses a
+//! fixed ratio of 0.35, CAC spans [0.1, 0.6] by capability.
+
+use super::{DevicePlan, DownloadCodec, RoundCtx, Scheme, UploadCodec};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Target {
+    None,
+    GlobalModel,
+    LocalGradient,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Policy {
+    Fixed,
+    CapabilityAware,
+}
+
+pub struct Prelim {
+    target: Target,
+    policy: Policy,
+    name: &'static str,
+    /// FIC ratio (paper §2.2: 0.35).
+    pub fixed_ratio: f64,
+}
+
+impl Prelim {
+    pub fn no_compression() -> Prelim {
+        Prelim { target: Target::None, policy: Policy::Fixed, name: "nocomp", fixed_ratio: 0.0 }
+    }
+
+    pub fn gm_fic() -> Prelim {
+        Prelim {
+            target: Target::GlobalModel,
+            policy: Policy::Fixed,
+            name: "gm-fic",
+            fixed_ratio: 0.35,
+        }
+    }
+
+    pub fn gm_cac() -> Prelim {
+        Prelim {
+            target: Target::GlobalModel,
+            policy: Policy::CapabilityAware,
+            name: "gm-cac",
+            fixed_ratio: 0.35,
+        }
+    }
+
+    pub fn lg_fic() -> Prelim {
+        Prelim {
+            target: Target::LocalGradient,
+            policy: Policy::Fixed,
+            name: "lg-fic",
+            fixed_ratio: 0.35,
+        }
+    }
+
+    pub fn lg_cac() -> Prelim {
+        Prelim {
+            target: Target::LocalGradient,
+            policy: Policy::CapabilityAware,
+            name: "lg-cac",
+            fixed_ratio: 0.35,
+        }
+    }
+}
+
+impl Scheme for Prelim {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn plan_round(&mut self, ctx: &RoundCtx) -> Vec<DevicePlan> {
+        ctx.participants
+            .iter()
+            .enumerate()
+            .map(|(i, &device)| {
+                let ratio_d = match self.policy {
+                    Policy::Fixed => self.fixed_ratio,
+                    Policy::CapabilityAware => ctx.cac_ratio(ctx.beta_d[i], ctx.beta_d),
+                };
+                let ratio_u = match self.policy {
+                    Policy::Fixed => self.fixed_ratio,
+                    Policy::CapabilityAware => ctx.cac_ratio(ctx.beta_u[i], ctx.beta_u),
+                };
+                DevicePlan {
+                    device,
+                    download: if self.target == Target::GlobalModel {
+                        DownloadCodec::TopK { ratio: ratio_d }
+                    } else {
+                        DownloadCodec::Full
+                    },
+                    upload: if self.target == Target::LocalGradient {
+                        UploadCodec::TopK { ratio: ratio_u }
+                    } else {
+                        UploadCodec::Full
+                    },
+                    batch: ctx.cfg.batch,
+                    tau: ctx.cfg.tau,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schemes::tests_support::ctx_fixture;
+
+    #[test]
+    fn nocomp_is_fully_uncompressed() {
+        let fx = ctx_fixture(3, 5);
+        let mut s = Prelim::no_compression();
+        for p in s.plan_round(&fx.ctx()) {
+            assert_eq!(p.download, DownloadCodec::Full);
+            assert_eq!(p.upload, UploadCodec::Full);
+        }
+    }
+
+    #[test]
+    fn gm_fic_compresses_model_only_at_fixed_ratio() {
+        let fx = ctx_fixture(4, 5);
+        let mut s = Prelim::gm_fic();
+        for p in s.plan_round(&fx.ctx()) {
+            assert_eq!(p.download, DownloadCodec::TopK { ratio: 0.35 });
+            assert_eq!(p.upload, UploadCodec::Full);
+        }
+    }
+
+    #[test]
+    fn lg_cac_compresses_gradient_by_capability() {
+        let fx = ctx_fixture(4, 5);
+        let mut s = Prelim::lg_cac();
+        let plans = s.plan_round(&fx.ctx());
+        let ratios: Vec<f64> = plans
+            .iter()
+            .map(|p| match p.upload {
+                UploadCodec::TopK { ratio } => ratio,
+                _ => panic!(),
+            })
+            .collect();
+        for p in &plans {
+            assert_eq!(p.download, DownloadCodec::Full);
+        }
+        // weakest uplink (last participant in fixture) gets θ_max
+        assert!((ratios[3] - fx.cfg.theta_max).abs() < 1e-9);
+        assert!((ratios[0] - fx.cfg.theta_min).abs() < 1e-9);
+    }
+}

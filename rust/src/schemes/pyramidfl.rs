@@ -1,0 +1,141 @@
+//! PyramidFL (Li et al., MobiCom'22) — ranks devices by their last
+//! observed *gradient norm* and uses the rank to set the gradient
+//! compression ratio (high-norm devices compressed less), and fills
+//! faster devices' idle time with extra local iterations. The model
+//! download stays uncompressed (the paper's Fig. 7 discussion: PyramidFL
+//! ignores download time).
+
+use super::{DevicePlan, DownloadCodec, RoundCtx, Scheme, UploadCodec};
+
+pub struct PyramidFl {
+    /// Max extra local-iteration multiplier when filling idle time.
+    pub max_tau_factor: f64,
+    /// Local-iteration granularity (must match the AOT chunk size).
+    pub tau_step: usize,
+}
+
+impl PyramidFl {
+    pub fn new() -> PyramidFl {
+        PyramidFl { max_tau_factor: 2.0, tau_step: 5 }
+    }
+}
+
+impl Default for PyramidFl {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheme for PyramidFl {
+    fn name(&self) -> &'static str {
+        "pyramidfl"
+    }
+
+    fn plan_round(&mut self, ctx: &RoundCtx) -> Vec<DevicePlan> {
+        let k = ctx.participants.len();
+        // rank participants by last-known gradient norm, descending;
+        // unseen devices (norm 0.0 sentinel) are treated as most important
+        // so they get probed with low compression.
+        let mut order: Vec<usize> = (0..k).collect();
+        let key = |i: usize| {
+            let n = ctx.grad_norms[ctx.participants[i]];
+            if n == 0.0 {
+                f64::MAX
+            } else {
+                n
+            }
+        };
+        order.sort_by(|&a, &b| key(b).partial_cmp(&key(a)).unwrap().then(a.cmp(&b)));
+        let mut rank = vec![0usize; k];
+        for (pos, &i) in order.iter().enumerate() {
+            rank[i] = pos;
+        }
+        // gradient compression ratio from rank (Eq. 6 shape)
+        let span = ctx.cfg.theta_max - ctx.cfg.theta_min;
+        let ratios: Vec<f64> = (0..k)
+            .map(|i| ctx.cfg.theta_min + span * rank[i] as f64 / k.max(1) as f64)
+            .collect();
+
+        // per-device iteration count: the slowest participant (at base τ)
+        // sets the pace; faster ones fill idle time with extra iterations.
+        let base_tau = ctx.cfg.tau;
+        let comm =
+            |i: usize| ctx.q_bits / ctx.beta_d[i] + (1.0 - ratios[i]) * ctx.q_bits / ctx.beta_u[i];
+        let cost = |i: usize, tau: usize| {
+            comm(i) + tau as f64 * ctx.cfg.batch as f64 * ctx.mu[i]
+        };
+        let pace = (0..k)
+            .map(|i| cost(i, base_tau))
+            .fold(f64::MIN, f64::max);
+        ctx.participants
+            .iter()
+            .enumerate()
+            .map(|(i, &device)| {
+                let budget = pace - comm(i);
+                let tau_fill =
+                    (budget / (ctx.cfg.batch as f64 * ctx.mu[i])).floor() as usize;
+                let tau_max = (base_tau as f64 * self.max_tau_factor) as usize;
+                let tau = tau_fill.clamp(base_tau, tau_max);
+                let tau = (tau / self.tau_step.max(1)) * self.tau_step.max(1);
+                DevicePlan {
+                    device,
+                    download: DownloadCodec::Full,
+                    upload: UploadCodec::TopK { ratio: ratios[i] },
+                    batch: ctx.cfg.batch,
+                    tau: tau.max(self.tau_step),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schemes::tests_support::ctx_fixture;
+
+    #[test]
+    fn high_norm_devices_get_low_ratio() {
+        let fx = ctx_fixture(5, 10);
+        // fixture grad_norms increase with device id → participant 4 has
+        // the biggest norm → rank 0 → θ_min
+        let mut s = PyramidFl::new();
+        let plans = s.plan_round(&fx.ctx());
+        let r = |i: usize| match plans[i].upload {
+            UploadCodec::TopK { ratio } => ratio,
+            _ => panic!(),
+        };
+        assert!(r(4) < r(1));
+        assert!((r(4) - fx.cfg.theta_min).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unseen_devices_probed_with_low_compression() {
+        let mut fx = ctx_fixture(3, 5);
+        fx.grad_norms[0] = 0.0; // device 0 unseen
+        fx.grad_norms[1] = 10.0;
+        fx.grad_norms[2] = 5.0;
+        let mut s = PyramidFl::new();
+        let plans = s.plan_round(&fx.ctx());
+        let r = |i: usize| match plans[i].upload {
+            UploadCodec::TopK { ratio } => ratio,
+            _ => panic!(),
+        };
+        assert!(r(0) < r(1) && r(1) < r(2));
+    }
+
+    #[test]
+    fn fast_devices_do_more_iterations() {
+        let fx = ctx_fixture(5, 10);
+        let mut s = PyramidFl::new();
+        let plans = s.plan_round(&fx.ctx());
+        // fixture: μ increases with i → participant 0 is fastest → most τ
+        assert!(plans[0].tau >= plans[4].tau);
+        assert!(plans[0].tau >= fx.cfg.tau);
+        for p in &plans {
+            assert_eq!(p.tau % 5, 0, "tau must align to the AOT chunk");
+            assert!(p.tau <= fx.cfg.tau * 2);
+            assert_eq!(p.download, DownloadCodec::Full);
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Shared fixture for scheme unit tests: owns the vectors a RoundCtx
+//! borrows, with simple deterministic heterogeneity.
+
+use crate::caesar::ImportanceTable;
+use crate::config::ExperimentConfig;
+use crate::schemes::RoundCtx;
+
+pub struct CtxFixture {
+    pub cfg: ExperimentConfig,
+    pub t: usize,
+    pub participants: Vec<usize>,
+    pub staleness: Vec<usize>,
+    pub never: Vec<bool>,
+    pub beta_d: Vec<f64>,
+    pub beta_u: Vec<f64>,
+    pub mu: Vec<f64>,
+    pub importance: ImportanceTable,
+    pub grad_norms: Vec<f64>,
+}
+
+/// `k` participants out of a 10-device pool, round `t`.
+/// Participant i: staleness i, bandwidth decreasing with i (device 0 is
+/// the best-connected), μ increasing with i (device 0 is the fastest).
+pub fn ctx_fixture(k: usize, t: usize) -> CtxFixture {
+    let cfg = ExperimentConfig::preset("cifar");
+    let n_dev = 10;
+    let volumes: Vec<usize> = (0..n_dev).map(|i| 100 + i * 50).collect();
+    let kls: Vec<f64> = (0..n_dev).map(|i| 0.1 * i as f64).collect();
+    CtxFixture {
+        cfg,
+        t,
+        participants: (0..k).collect(),
+        staleness: (0..k).map(|i| i.min(t)).collect(),
+        never: vec![false; k],
+        beta_d: (0..k).map(|i| 20e6 / (1.0 + i as f64)).collect(),
+        beta_u: (0..k).map(|i| 16e6 / (1.0 + i as f64)).collect(),
+        mu: (0..k).map(|i| 1e-3 * (1.0 + i as f64)).collect(),
+        importance: ImportanceTable::build(&volumes, &kls, 0.5),
+        // strictly positive (0.0 is the "unseen" sentinel for PyramidFL)
+        grad_norms: (0..n_dev).map(|i| (i as f64 + 1.0) * 0.5).collect(),
+    }
+}
+
+impl CtxFixture {
+    pub fn ctx(&self) -> RoundCtx<'_> {
+        RoundCtx {
+            t: self.t,
+            participants: &self.participants,
+            staleness: &self.staleness,
+            never: &self.never,
+            beta_d: &self.beta_d,
+            beta_u: &self.beta_u,
+            mu: &self.mu,
+            q_bits: self.cfg.n_params_paper as f64 * 32.0,
+            importance: &self.importance,
+            grad_norms: &self.grad_norms,
+            cfg: &self.cfg,
+        }
+    }
+}

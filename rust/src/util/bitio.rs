@@ -1,0 +1,137 @@
+//! Bit-level packing used by the wire-format traffic accounting and the
+//! (optional) actual serialization of compressed payloads.
+
+/// Append-only bit writer (LSB-first within each byte).
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    nbits: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push_bit(&mut self, bit: bool) {
+        let byte = self.nbits / 8;
+        if byte == self.buf.len() {
+            self.buf.push(0);
+        }
+        if bit {
+            self.buf[byte] |= 1 << (self.nbits % 8);
+        }
+        self.nbits += 1;
+    }
+
+    /// Write the low `width` bits of `value`.
+    pub fn push_bits(&mut self, value: u64, width: u32) {
+        debug_assert!(width <= 64);
+        for i in 0..width {
+            self.push_bit((value >> i) & 1 == 1);
+        }
+    }
+
+    pub fn push_f32(&mut self, x: f32) {
+        self.push_bits(x.to_bits() as u64, 32);
+    }
+
+    pub fn len_bits(&self) -> usize {
+        self.nbits
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Sequential bit reader matching [`BitWriter`]'s layout.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    pub fn read_bit(&mut self) -> bool {
+        let b = (self.buf[self.pos / 8] >> (self.pos % 8)) & 1 == 1;
+        self.pos += 1;
+        b
+    }
+
+    pub fn read_bits(&mut self, width: u32) -> u64 {
+        let mut v = 0u64;
+        for i in 0..width {
+            if self.read_bit() {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+
+    pub fn read_f32(&mut self) -> f32 {
+        f32::from_bits(self.read_bits(32) as u32)
+    }
+
+    pub fn remaining_bits(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+}
+
+/// Bits needed to store values in [0, n) (0 for n <= 1).
+pub fn bits_for(n: usize) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        usize::BITS - (n - 1).leading_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_roundtrip() {
+        let mut w = BitWriter::new();
+        w.push_bit(true);
+        w.push_bit(false);
+        w.push_bits(0b1011, 4);
+        w.push_f32(3.5);
+        w.push_bits(u64::MAX, 64);
+        let bits = w.len_bits();
+        assert_eq!(bits, 1 + 1 + 4 + 32 + 64);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bit());
+        assert!(!r.read_bit());
+        assert_eq!(r.read_bits(4), 0b1011);
+        assert_eq!(r.read_f32(), 3.5);
+        assert_eq!(r.read_bits(64), u64::MAX);
+    }
+
+    #[test]
+    fn bits_for_ranges() {
+        assert_eq!(bits_for(0), 0);
+        assert_eq!(bits_for(1), 0);
+        assert_eq!(bits_for(2), 1);
+        assert_eq!(bits_for(3), 2);
+        assert_eq!(bits_for(256), 8);
+        assert_eq!(bits_for(257), 9);
+        assert_eq!(bits_for(9610), 14);
+    }
+
+    #[test]
+    fn f32_special_values_roundtrip() {
+        for x in [0.0f32, -0.0, f32::INFINITY, f32::MIN_POSITIVE, -1e-38] {
+            let mut w = BitWriter::new();
+            w.push_f32(x);
+            let b = w.into_bytes();
+            let got = BitReader::new(&b).read_f32();
+            assert_eq!(got.to_bits(), x.to_bits());
+        }
+    }
+}

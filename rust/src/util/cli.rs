@@ -1,0 +1,122 @@
+//! Tiny CLI parser (offline build: no `clap`).
+//!
+//! Grammar: `caesar <subcommand> [--flag] [--key value] [key=value ...]`.
+//! `--key value` and `key=value` are equivalent; the experiment configs
+//! consume them as overrides.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: Vec<String>,
+    pub opts: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--") && !n.contains('='))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if let Some((k, v)) = a.split_once('=') {
+                out.opts.insert(k.to_string(), v.to_string());
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_u64(&self, key: &str) -> Option<u64> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_kv() {
+        let a = parse("fig5 dataset=cifar rounds=250 --out results --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("fig5"));
+        assert_eq!(a.get("dataset"), Some("cifar"));
+        assert_eq!(a.get_usize("rounds"), Some(250));
+        assert_eq!(a.get("out"), Some("results"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn double_dash_equals() {
+        let a = parse("run --seed=7 --alpha 0.1");
+        assert_eq!(a.get_u64("seed"), Some(7));
+        assert_eq!(a.get_f64("alpha"), Some(0.1));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("run --dry-run");
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse("bench compress recover");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["compress", "recover"]);
+    }
+
+    #[test]
+    fn kv_value_with_equals_not_consumed_as_option_value() {
+        // `--out x=y` : x=y looks like kv, so --out becomes a flag and x=y an opt
+        let a = parse("run --out x=y");
+        assert!(a.has_flag("out"));
+        assert_eq!(a.get("x"), Some("y"));
+    }
+}

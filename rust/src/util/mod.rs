@@ -1,0 +1,10 @@
+//! Self-built substrates (offline environment: no rand / serde / clap /
+//! criterion / proptest — see DESIGN.md §8).
+
+pub mod bitio;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,125 @@
+//! Miniature property-testing harness (offline build: no `proptest`).
+//!
+//! `forall(seed, cases, gen, check)` draws `cases` random inputs from `gen`
+//! and asserts `check`; on failure it performs a simple halving shrink via
+//! the generator's size parameter and reports the smallest failing case's
+//! seed so the failure replays exactly.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xCAE5A5 }
+    }
+}
+
+/// Run `check` on `cases` inputs drawn by `gen(rng, size)`, with `size`
+/// ramping from small to large (so early failures are small). On failure,
+/// retries smaller sizes with the same case-seed to shrink, then panics
+/// with a replayable report.
+pub fn forall<T, G, C>(cfg: Config, mut gen: G, mut check: C)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng, usize) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    let mut master = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = master.next_u64();
+        // size ramp: 1 .. ~2^10, roughly exponential over the run
+        let size = 1usize << (1 + (case * 10 / cfg.cases.max(1))).min(12);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = check(&input) {
+            // shrink: halve size with same seed while it still fails
+            let mut best: (usize, String, String) = (size, msg, format!("{input:?}"));
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(case_seed);
+                let smaller = gen(&mut rng, s);
+                match check(&smaller) {
+                    Err(m) => {
+                        best = (s, m, format!("{smaller:?}"));
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property failed (case {case}, case_seed {case_seed:#x}, size {}):\n  {}\n  input: {}",
+                best.0, best.1, best.2
+            );
+        }
+    }
+}
+
+/// Convenience: generate a f32 vector of length ~size with the given scale.
+pub fn gen_vec_f32(rng: &mut Rng, size: usize, scale: f32) -> Vec<f32> {
+    let n = 1 + rng.below(size.max(1));
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            Config::default(),
+            |rng, size| gen_vec_f32(rng, size, 1.0),
+            |v| {
+                if v.iter().all(|x| x.is_finite()) {
+                    Ok(())
+                } else {
+                    Err("non-finite".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_report() {
+        forall(
+            Config { cases: 32, seed: 1 },
+            |rng, size| gen_vec_f32(rng, size, 1.0),
+            |v| {
+                if v.len() < 4 {
+                    Ok(())
+                } else {
+                    Err(format!("len {} >= 4", v.len()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn replays_deterministically() {
+        let mut lens1 = Vec::new();
+        forall(
+            Config { cases: 16, seed: 9 },
+            |rng, size| gen_vec_f32(rng, size, 1.0),
+            |v| {
+                lens1.push(v.len());
+                Ok(())
+            },
+        );
+        let mut lens2 = Vec::new();
+        forall(
+            Config { cases: 16, seed: 9 },
+            |rng, size| gen_vec_f32(rng, size, 1.0),
+            |v| {
+                lens2.push(v.len());
+                Ok(())
+            },
+        );
+        assert_eq!(lens1, lens2);
+    }
+}

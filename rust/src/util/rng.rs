@@ -1,0 +1,393 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build environment has no `rand` crate, so we implement the
+//! generators we need: SplitMix64 for seeding and xoshiro256** as the
+//! workhorse, plus the distributions the simulator uses (uniform, normal
+//! via Box–Muller, gamma via Marsaglia–Tsang, Dirichlet, categorical,
+//! Fisher–Yates shuffling and reservoir-free subset sampling).
+//!
+//! Everything is deterministic given the seed: every experiment in
+//! EXPERIMENTS.md records its seed and replays exactly.
+
+/// SplitMix64 — used to expand a single `u64` seed into the xoshiro state.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** PRNG (Blackman–Vigna), period 2^256 − 1.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal deviate from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent child generator (e.g. one per device) without
+    /// correlation with the parent stream.
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        // Mix the tag through SplitMix so adjacent tags diverge fully.
+        let mut sm = self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits → [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n). Uses Lemire's multiply-shift rejection.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (n as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo < n {
+                let t = n.wrapping_neg() % n;
+                if lo < t {
+                    continue;
+                }
+            }
+            return hi as usize;
+        }
+    }
+
+    /// Uniform integer in [lo, hi).
+    #[inline]
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare_normal = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Normal with mean/std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Lognormal parameterized by the *target* mean and the sigma of the
+    /// underlying normal (used by the bandwidth fluctuation model).
+    pub fn lognormal_mean(&mut self, mean: f64, sigma: f64) -> f64 {
+        // E[exp(N(mu, sigma^2))] = exp(mu + sigma^2/2) = mean
+        let mu = mean.ln() - sigma * sigma / 2.0;
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang; shape > 0.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let u = loop {
+                let u = self.f64();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha) sample: `alpha[i] > 0`, returns a probability vector.
+    pub fn dirichlet(&mut self, alpha: &[f64]) -> Vec<f64> {
+        let mut g: Vec<f64> = alpha.iter().map(|&a| self.gamma(a).max(1e-300)).collect();
+        let sum: f64 = g.iter().sum();
+        for x in &mut g {
+            *x /= sum;
+        }
+        g
+    }
+
+    /// Symmetric Dirichlet(alpha/k, ..., alpha/k)? No — Dir(conc * prior).
+    pub fn dirichlet_sym(&mut self, conc: f64, k: usize) -> Vec<f64> {
+        self.dirichlet(&vec![conc; k])
+    }
+
+    /// Sample an index from an (unnormalized) weight vector.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut x = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            x -= w;
+            if x < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Uniform sample of `k` distinct indices from [0, n) (partial shuffle).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = self.range_usize(i, n);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn determinism() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fork_diverges_from_parent() {
+        let mut a = Rng::new(7);
+        let mut c = a.fork(0);
+        let mut d = a.fork(1);
+        let eq = (0..100).filter(|_| c.next_u64() == d.next_u64()).count();
+        assert_eq!(eq, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close() {
+        let mut r = Rng::new(4);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(5);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let x = r.below(7);
+            assert!(x < 7);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(6);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(7);
+        for &shape in &[0.3, 1.0, 2.5, 10.0] {
+            let n = 50_000;
+            let mean = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() / shape < 0.08,
+                "shape={shape} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_is_positive() {
+        let mut r = Rng::new(8);
+        for &c in &[0.05, 0.5, 5.0] {
+            let v = r.dirichlet_sym(c, 10);
+            assert_eq!(v.len(), 10);
+            assert!((v.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(v.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_concentration_controls_skew() {
+        // Low concentration → one class dominates; high → near-uniform.
+        let mut r = Rng::new(9);
+        let n = 500;
+        let max_low: f64 = (0..n)
+            .map(|_| {
+                r.dirichlet_sym(0.1, 10)
+                    .into_iter()
+                    .fold(f64::MIN, f64::max)
+            })
+            .sum::<f64>()
+            / n as f64;
+        let max_high: f64 = (0..n)
+            .map(|_| {
+                r.dirichlet_sym(100.0, 10)
+                    .into_iter()
+                    .fold(f64::MIN, f64::max)
+            })
+            .sum::<f64>()
+            / n as f64;
+        assert!(max_low > 0.6, "max_low={max_low}");
+        assert!(max_high < 0.25, "max_high={max_high}");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(10);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.25, "ratio={ratio}");
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(11);
+        for _ in 0..100 {
+            let s = r.sample_indices(50, 10);
+            assert_eq!(s.len(), 10);
+            let mut t = s.clone();
+            t.sort_unstable();
+            t.dedup();
+            assert_eq!(t.len(), 10);
+            assert!(s.iter().all(|&i| i < 50));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(12);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut ys = xs.clone();
+        ys.sort_unstable();
+        assert_eq!(ys, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lognormal_mean_targets_mean() {
+        let mut r = Rng::new(13);
+        let n = 100_000;
+        let m = (0..n).map(|_| r.lognormal_mean(10.0, 0.5)).sum::<f64>() / n as f64;
+        assert!((m - 10.0).abs() < 0.3, "m={m}");
+    }
+}

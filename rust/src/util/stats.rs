@@ -1,0 +1,205 @@
+//! Small statistics helpers used across the simulator and benches.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance; 0.0 for fewer than 2 elements.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted copy; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Mean squared error between two equal-length vectors.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// MSE normalized by the mean square of the reference (`b`).
+pub fn normalized_mse(a: &[f32], b: &[f32]) -> f64 {
+    let denom = b.iter().map(|y| (*y as f64) * (*y as f64)).sum::<f64>() / b.len().max(1) as f64;
+    if denom == 0.0 {
+        return 0.0;
+    }
+    mse(a, b) / denom
+}
+
+/// Area under the ROC curve via the Mann–Whitney U statistic.
+///
+/// `scores[i]` is the model score for sample i, `labels[i]` is 0/1.
+/// Ties contribute 1/2. Returns 0.5 when one class is absent.
+pub fn auc(scores: &[f32], labels: &[u8]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&i, &j| scores[i].partial_cmp(&scores[j]).unwrap());
+    // ranks with tie-averaging
+    let n = scores.len();
+    let mut rank = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0; // 1-based average rank
+        for k in i..=j {
+            rank[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    let n_pos = labels.iter().filter(|&&l| l == 1).count() as f64;
+    let n_neg = n as f64 - n_pos;
+    if n_pos == 0.0 || n_neg == 0.0 {
+        return 0.5;
+    }
+    let rank_sum_pos: f64 = labels
+        .iter()
+        .enumerate()
+        .filter(|(_, &l)| l == 1)
+        .map(|(i, _)| rank[i])
+        .sum();
+    (rank_sum_pos - n_pos * (n_pos + 1.0) / 2.0) / (n_pos * n_neg)
+}
+
+/// KL divergence KL(p || q) over discrete distributions (natural log).
+/// Zero-probability entries in `p` contribute 0; `q` entries are floored.
+pub fn kl_divergence(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    p.iter()
+        .zip(q)
+        .filter(|(&pi, _)| pi > 0.0)
+        .map(|(&pi, &qi)| pi * (pi / qi.max(1e-12)).ln())
+        .sum()
+}
+
+/// Argmax index (first on ties); None for empty.
+pub fn argmax(xs: &[f32]) -> Option<usize> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    Some(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mse_and_normalized() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 2.0, 5.0];
+        assert!((mse(&a, &b) - 4.0 / 3.0).abs() < 1e-9);
+        assert_eq!(mse(&a, &a), 0.0);
+        assert!(normalized_mse(&a, &b) > 0.0);
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let scores = [0.1f32, 0.2, 0.8, 0.9];
+        let labels = [0u8, 0, 1, 1];
+        assert!((auc(&scores, &labels) - 1.0).abs() < 1e-12);
+        let inv = [1u8, 1, 0, 0];
+        assert!((auc(&scores, &inv) - 0.0).abs() < 1e-12);
+        // one class absent
+        assert_eq!(auc(&scores, &[0, 0, 0, 0]), 0.5);
+    }
+
+    #[test]
+    fn auc_handles_ties() {
+        let scores = [0.5f32, 0.5, 0.5, 0.5];
+        let labels = [0u8, 1, 0, 1];
+        assert!((auc(&scores, &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let p = [0.25, 0.25, 0.25, 0.25];
+        assert!(kl_divergence(&p, &p).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_positive_for_skewed() {
+        let p = [0.7, 0.1, 0.1, 0.1];
+        let q = [0.25, 0.25, 0.25, 0.25];
+        let d = kl_divergence(&p, &q);
+        assert!(d > 0.0);
+        // hand computation
+        let expect = 0.7 * (0.7f64 / 0.25).ln() + 3.0 * (0.1 * (0.1f64 / 0.25).ln());
+        assert!((d - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_ignores_zero_p() {
+        let p = [1.0, 0.0];
+        let q = [0.5, 0.5];
+        assert!((kl_divergence(&p, &q) - (2.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), Some(1));
+        assert_eq!(argmax(&[]), None);
+    }
+}

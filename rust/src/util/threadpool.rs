@@ -1,0 +1,83 @@
+//! Scoped worker pool for per-device round work (offline build: no tokio /
+//! rayon). `scope_map` fans a closure over items on N std threads and
+//! returns the results in input order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use: min(available_parallelism, cap).
+pub fn workers(cap: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(cap.max(1))
+}
+
+/// Apply `f` to each item index in parallel over `n_workers` scoped threads;
+/// results are collected in input order. `f` must be Sync (called from many
+/// threads) and the per-item outputs are written into a pre-sized Vec.
+pub fn scope_map<T, F>(n_items: usize, n_workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n_items == 0 {
+        return Vec::new();
+    }
+    let n_workers = n_workers.clamp(1, n_items);
+    if n_workers == 1 {
+        return (0..n_items).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Vec<Mutex<Option<T>>> = (0..n_items).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..n_workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_items {
+                    break;
+                }
+                let v = f(i);
+                *out[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    out.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker missed item"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn maps_in_order() {
+        let out = scope_map(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_item_exactly_once() {
+        let counter = AtomicU64::new(0);
+        let out = scope_map(1000, 8, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+        assert_eq!(out.len(), 1000);
+    }
+
+    #[test]
+    fn single_worker_and_empty() {
+        assert_eq!(scope_map(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+        assert_eq!(scope_map(0, 4, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn workers_capped() {
+        assert!(workers(4) >= 1 && workers(4) <= 4);
+        assert_eq!(workers(0), 1.min(workers(1)));
+    }
+}

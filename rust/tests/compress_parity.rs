@@ -1,0 +1,183 @@
+//! Parity pin: the rust-native codecs in `compress/` must match the
+//! AOT-lowered L1 Pallas kernels executed through PJRT, elementwise, for
+//! every task's parameter size — so the native simulator and the XLA
+//! three-layer path can never drift apart.
+//!
+//! Requires `make artifacts`; every test skips cleanly when missing.
+
+use caesar_fl::compress::{caesar_compress, caesar_recover, quantize_stochastic, topk_sparsify};
+use caesar_fl::runtime::{lit_f32, lit_scalar, to_scalar_f32, to_vec_f32, Runtime};
+use caesar_fl::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    Runtime::open(&Runtime::default_dir()).ok()
+}
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+const TASKS: [&str; 4] = ["cifar", "har", "speech", "oppo"];
+const RATIOS: [f64; 4] = [0.0, 0.1, 0.35, 0.6];
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol + tol * x.abs(),
+            "{what}: elem {i}: native {x} vs xla {y}"
+        );
+    }
+}
+
+#[test]
+fn caesar_compress_kernel_matches_native() {
+    let Some(rt) = runtime() else { return };
+    for task in TASKS {
+        let p = rt.manifest().task(task).unwrap().n_params;
+        let w = randn(p, 0xC0);
+        for &ratio in &RATIOS {
+            let cm = caesar_compress(&w, ratio);
+            let out = rt
+                .exec(
+                    &format!("compress_{task}"),
+                    &[lit_f32(&w, &[p as i64]).unwrap(), lit_scalar(ratio as f32)],
+                )
+                .unwrap();
+            let kept = to_vec_f32(&out[0]).unwrap();
+            let mask = to_vec_f32(&out[1]).unwrap();
+            let sign = to_vec_f32(&out[2]).unwrap();
+            let avg = to_scalar_f32(&out[3]).unwrap();
+            let max = to_scalar_f32(&out[4]).unwrap();
+            assert_close(&cm.kept, &kept, 1e-6, &format!("{task} θ={ratio} kept"));
+            for i in 0..p {
+                assert_eq!(
+                    cm.mask[i],
+                    mask[i] > 0.5,
+                    "{task} θ={ratio} mask at {i}"
+                );
+                if cm.mask[i] {
+                    assert_eq!(cm.sign[i] as f32, sign[i], "{task} θ={ratio} sign at {i}");
+                }
+            }
+            assert!((cm.avg_abs - avg).abs() < 1e-5, "{task} θ={ratio} avg");
+            assert!((cm.max_abs - max).abs() < 1e-6, "{task} θ={ratio} max");
+        }
+    }
+}
+
+#[test]
+fn caesar_recover_kernel_matches_native() {
+    let Some(rt) = runtime() else { return };
+    for task in TASKS {
+        let p = rt.manifest().task(task).unwrap().n_params;
+        let w = randn(p, 0xC1);
+        // drifted local model: some sign flips, some magnitude overflows
+        let mut rng = Rng::new(0xC2);
+        let local: Vec<f32> = w.iter().map(|&x| x + 0.3 * rng.normal() as f32).collect();
+        for &ratio in &RATIOS {
+            let cm = caesar_compress(&w, ratio);
+            let native = caesar_recover(&cm, &local);
+            let mask_f: Vec<f32> =
+                cm.mask.iter().map(|&m| if m { 1.0 } else { 0.0 }).collect();
+            let sign_f: Vec<f32> = cm.sign.iter().map(|&s| s as f32).collect();
+            let out = rt
+                .exec(
+                    &format!("recover_{task}"),
+                    &[
+                        lit_f32(&cm.kept, &[p as i64]).unwrap(),
+                        lit_f32(&mask_f, &[p as i64]).unwrap(),
+                        lit_f32(&sign_f, &[p as i64]).unwrap(),
+                        lit_scalar(cm.avg_abs),
+                        lit_scalar(cm.max_abs),
+                        lit_f32(&local, &[p as i64]).unwrap(),
+                    ],
+                )
+                .unwrap();
+            let xla = to_vec_f32(&out[0]).unwrap();
+            assert_close(&native, &xla, 1e-6, &format!("{task} θ={ratio} recover"));
+        }
+    }
+}
+
+#[test]
+fn topk_kernel_matches_native() {
+    let Some(rt) = runtime() else { return };
+    for task in TASKS {
+        let p = rt.manifest().task(task).unwrap().n_params;
+        let g = randn(p, 0xC3);
+        for &ratio in &RATIOS {
+            let native = topk_sparsify(&g, ratio);
+            let out = rt
+                .exec(
+                    &format!("topk_{task}"),
+                    &[lit_f32(&g, &[p as i64]).unwrap(), lit_scalar(ratio as f32)],
+                )
+                .unwrap();
+            let xla = to_vec_f32(&out[0]).unwrap();
+            assert_close(&native.dense, &xla, 1e-6, &format!("{task} θ={ratio} topk"));
+        }
+    }
+}
+
+#[test]
+fn quantize_kernel_matches_native() {
+    let Some(rt) = runtime() else { return };
+    for task in TASKS {
+        let p = rt.manifest().task(task).unwrap().n_params;
+        let x = randn(p, 0xC4);
+        let noise: Vec<f32> = {
+            let mut rng = Rng::new(0xC5);
+            (0..p).map(|_| rng.f32()).collect()
+        };
+        for levels in [3u32, 15, 255] {
+            let native = quantize_stochastic(&x, levels, &noise);
+            let out = rt
+                .exec(
+                    &format!("quantize_{task}"),
+                    &[
+                        lit_f32(&x, &[p as i64]).unwrap(),
+                        lit_scalar(levels as f32),
+                        lit_f32(&noise, &[p as i64]).unwrap(),
+                    ],
+                )
+                .unwrap();
+            let xla = to_vec_f32(&out[0]).unwrap();
+            assert_close(&native, &xla, 1e-5, &format!("{task} s={levels} quantize"));
+        }
+    }
+}
+
+#[test]
+fn codec_engine_backends_agree_end_to_end() {
+    use caesar_fl::config::CompressionBackend;
+    use caesar_fl::coordinator::CodecEngine;
+    use caesar_fl::schemes::{DownloadCodec, UploadCodec};
+    let Some(rt) = runtime() else { return };
+    let task = "har";
+    let p = rt.manifest().task(task).unwrap().n_params;
+    let w = randn(p, 0xC6);
+    let local: Vec<f32> = {
+        let mut rng = Rng::new(0xC7);
+        w.iter().map(|&x| x + 0.1 * rng.normal() as f32).collect()
+    };
+    let native = CodecEngine::native();
+    let xla = CodecEngine::new(CompressionBackend::Xla, Some(&rt), task).unwrap();
+    for codec in [
+        DownloadCodec::Full,
+        DownloadCodec::CaesarSplit { ratio: 0.35 },
+        DownloadCodec::TopK { ratio: 0.35 },
+    ] {
+        let a = native.download(codec, &w, Some(&local), &mut Rng::new(9)).unwrap();
+        let b = xla.download(codec, &w, Some(&local), &mut Rng::new(9)).unwrap();
+        assert_close(&a.model, &b.model, 1e-6, &format!("download {codec:?}"));
+        assert_eq!(a.wire_bits, b.wire_bits, "download bits {codec:?}");
+    }
+    let g = randn(p, 0xC8);
+    for codec in [UploadCodec::Full, UploadCodec::TopK { ratio: 0.6 }, UploadCodec::Quant { bits: 4 }] {
+        let a = native.upload(codec, &g, &mut Rng::new(11)).unwrap();
+        let b = xla.upload(codec, &g, &mut Rng::new(11)).unwrap();
+        assert_close(&a.grad, &b.grad, 1e-5, &format!("upload {codec:?}"));
+    }
+}

@@ -1,0 +1,113 @@
+//! End-to-end smoke over the REAL three-layer stack: every scheme drives
+//! the XLA trainer + (where configured) XLA codecs for a couple of
+//! rounds, and a longer Caesar-vs-FedAvg run checks the paper's headline
+//! ordering (less traffic at equal-or-better accuracy).
+//!
+//! Requires `make artifacts`; skips cleanly when missing.
+
+use caesar_fl::config::{CompressionBackend, ExperimentConfig, TrainerBackend};
+use caesar_fl::coordinator::Server;
+use caesar_fl::runtime::Runtime;
+use caesar_fl::schemes;
+
+fn artifacts_available() -> bool {
+    Runtime::open(&Runtime::default_dir()).is_ok()
+}
+
+fn xla_cfg(task: &str, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(task);
+    cfg.trainer = TrainerBackend::Xla;
+    cfg.rounds = rounds;
+    cfg.n_train = 1500;
+    cfg.n_test = 300;
+    cfg.tau = 5;
+    cfg
+}
+
+#[test]
+fn every_scheme_runs_on_the_xla_stack() {
+    if !artifacts_available() {
+        return;
+    }
+    for s in [
+        "fedavg", "flexcom", "prowd", "pyramidfl", "caesar", "caesar-br", "caesar-dc",
+    ] {
+        let mut srv = Server::new(xla_cfg("har", 2), schemes::by_name(s).unwrap()).unwrap();
+        let r = srv.run().unwrap();
+        assert_eq!(r.records.len(), 2, "{s}");
+        assert!(r.total_traffic_gb() > 0.0, "{s}");
+        assert!(r.final_metric(false) > 0.0, "{s}");
+    }
+}
+
+#[test]
+fn xla_compression_backend_runs_caesar() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut cfg = xla_cfg("har", 3);
+    cfg.compression = CompressionBackend::Xla;
+    let mut srv = Server::new(cfg, schemes::by_name("caesar").unwrap()).unwrap();
+    let r = srv.run().unwrap();
+    assert_eq!(r.records.len(), 3);
+}
+
+#[test]
+fn all_four_tasks_run_on_xla() {
+    if !artifacts_available() {
+        return;
+    }
+    for task in ["cifar", "har", "speech", "oppo"] {
+        let mut srv =
+            Server::new(xla_cfg(task, 2), schemes::by_name("caesar").unwrap()).unwrap();
+        let r = srv.run().unwrap();
+        assert_eq!(r.records.len(), 2, "{task}");
+    }
+}
+
+#[test]
+fn caesar_beats_fedavg_on_traffic_at_equal_rounds_xla() {
+    if !artifacts_available() {
+        return;
+    }
+    let run = |s: &str| {
+        let mut cfg = xla_cfg("har", 10);
+        cfg.alpha = 0.2;
+        let mut srv = Server::new(cfg, schemes::by_name(s).unwrap()).unwrap();
+        srv.run().unwrap()
+    };
+    let caesar = run("caesar");
+    let fedavg = run("fedavg");
+    assert!(
+        caesar.total_traffic_gb() < 0.85 * fedavg.total_traffic_gb(),
+        "caesar {} GB vs fedavg {} GB",
+        caesar.total_traffic_gb(),
+        fedavg.total_traffic_gb()
+    );
+    assert!(
+        caesar.mean_wait_s() < fedavg.mean_wait_s(),
+        "caesar wait {} vs fedavg {}",
+        caesar.mean_wait_s(),
+        fedavg.mean_wait_s()
+    );
+}
+
+#[test]
+fn xla_and_native_trainers_converge_similarly() {
+    if !artifacts_available() {
+        return;
+    }
+    let run = |backend: TrainerBackend| {
+        let mut cfg = xla_cfg("har", 12);
+        cfg.trainer = backend;
+        cfg.alpha = 0.3;
+        let mut srv = Server::new(cfg, schemes::by_name("fedavg").unwrap()).unwrap();
+        srv.run().unwrap().final_metric(false)
+    };
+    let xla = run(TrainerBackend::Xla);
+    let native = run(TrainerBackend::Native);
+    assert!(
+        (xla - native).abs() < 0.15,
+        "backends diverged: xla {xla} vs native {native}"
+    );
+}

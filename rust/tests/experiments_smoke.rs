@@ -1,0 +1,79 @@
+//! Fast versions of every paper experiment runner — proves each figure's
+//! driver executes end to end and writes its artifacts. Uses the native
+//! trainer with shrunken workloads; full-fidelity runs are `caesar all`.
+
+use caesar_fl::experiments;
+use caesar_fl::util::cli::Args;
+
+fn args(tmp: &std::path::Path, extra: &str) -> Args {
+    Args::parse(
+        format!(
+            "x out={} rounds=3 n-train=700 tau=2 eval-every=1 trainer=native --quiet {extra}",
+            tmp.display()
+        )
+        .split_whitespace()
+        .map(String::from),
+    )
+}
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("caesar_exp_smoke_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn fig1_prelim_writes_runs_and_summary() {
+    let tmp = tmpdir("fig1");
+    experiments::run_by_name("fig1", &args(&tmp, "")).unwrap();
+    assert!(tmp.join("fig1/fig1b_summary.txt").exists());
+    assert!(tmp.join("fig1/nocomp_cifar_prelim.csv").exists());
+    assert!(tmp.join("fig1/gm-cac_cifar_prelim.csv").exists());
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn fig5_table3_all_tasks_single() {
+    let tmp = tmpdir("fig5");
+    experiments::run_by_name("fig5", &args(&tmp, "task=har")).unwrap();
+    let t3 = std::fs::read_to_string(tmp.join("main/table3.csv")).unwrap();
+    assert_eq!(t3.lines().count(), 6); // header + 5 schemes
+    assert!(t3.contains("caesar"));
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn fig8_heterogeneity_sweep() {
+    let tmp = tmpdir("fig8");
+    // pin p via override so the sweep collapses to one level per task
+    experiments::run_by_name("fig8", &args(&tmp, "task=har p=5")).unwrap();
+    let csv = std::fs::read_to_string(tmp.join("fig8/fig8_acc.csv")).unwrap();
+    assert!(csv.lines().count() > 5);
+    assert!(tmp.join("fig8/fig8d_degradation.csv").exists());
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn fig9_ablation() {
+    let tmp = tmpdir("fig9");
+    experiments::run_by_name("fig9", &args(&tmp, "task=har")).unwrap();
+    assert!(tmp.join("fig9/fig9_ablation.txt").exists());
+    assert!(tmp.join("fig9/caesar-br_har_abl.csv").exists());
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn fig10_scale() {
+    let tmp = tmpdir("fig10");
+    experiments::run_by_name("fig10", &args(&tmp, "devices=16")).unwrap();
+    assert!(tmp.join("fig10/fig10_scale.txt").exists());
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn table3_is_an_alias_for_fig5() {
+    let tmp = tmpdir("t3");
+    experiments::run_by_name("table3", &args(&tmp, "task=oppo")).unwrap();
+    assert!(tmp.join("main/table3.csv").exists());
+    let _ = std::fs::remove_dir_all(&tmp);
+}
