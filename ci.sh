@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, build, and the tier-1 test suite.
+#
+# Usage: ./ci.sh [--quick]
+#   --quick   skip the release build (debug test run only)
+#
+# Python-side kernel tests run separately (python/tests) and require jax;
+# they are not part of the rust tier-1 gate.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+quick=0
+[[ "${1:-}" == "--quick" ]] && quick=1
+
+echo "== cargo fmt --check =="
+cargo fmt --all -- --check
+
+echo "== cargo clippy (-D warnings) =="
+cargo clippy --workspace --all-targets -- -D warnings
+
+if [[ $quick -eq 0 ]]; then
+  echo "== cargo build --release =="
+  cargo build --release
+fi
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "CI OK"

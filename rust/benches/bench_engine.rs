@@ -1,0 +1,110 @@
+//! Sequential vs parallel round-engine benchmark at fleet scale.
+//!
+//! Runs full communication rounds (plan → download codec → local SGD →
+//! upload codec → sharded aggregation) on the HAR stand-in with the fleet
+//! scaled to 100 / 1 000 / 10 000 simulated devices (α = 0.1 → 10 / 100 /
+//! 1 000 participants per round), once with `engine.workers = 1` (the
+//! sequential baseline) and once with one worker per host core. The two
+//! paths produce bit-identical models (pinned by tests/engine_parity.rs),
+//! so the speedup is free.
+//!
+//! Results are written to BENCH_engine.json in the current directory.
+//! Quick mode: CAESAR_BENCH_QUICK=1 (fewer rounds, skips the 10k scale).
+
+use std::time::Instant;
+
+use caesar_fl::config::{CompressionBackend, ExperimentConfig, TrainerBackend};
+use caesar_fl::coordinator::Server;
+use caesar_fl::fleet::FleetKind;
+use caesar_fl::schemes;
+use caesar_fl::util::json::{self, Json};
+use caesar_fl::util::threadpool::workers;
+
+struct Case {
+    devices: usize,
+    participants: usize,
+    seq_ms: f64,
+    par_ms: f64,
+    par_workers: usize,
+}
+
+fn cfg_at(devices: usize, engine_workers: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("har");
+    cfg.fleet = FleetKind::JetsonScaled(devices);
+    cfg.trainer = TrainerBackend::Native;
+    cfg.compression = CompressionBackend::Native;
+    // enough data that every device holds a shard even at 10k devices
+    cfg.n_train = (4 * devices).max(8_000);
+    cfg.n_test = 200;
+    cfg.tau = 5;
+    cfg.eval_every = usize::MAX; // eval is benchmarked elsewhere
+    cfg.engine.workers = engine_workers;
+    cfg
+}
+
+/// Mean host milliseconds per round over `rounds` timed rounds (after one
+/// warm-up round).
+fn ms_per_round(devices: usize, engine_workers: usize, rounds: usize) -> f64 {
+    let cfg = cfg_at(devices, engine_workers);
+    let mut srv = Server::new(cfg, schemes::by_name("caesar").unwrap()).unwrap();
+    srv.step(1).unwrap(); // warm-up: first-touch allocations, locals fill
+    let t0 = Instant::now();
+    for t in 2..2 + rounds {
+        srv.step(t).unwrap();
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / rounds as f64
+}
+
+fn main() {
+    let quick = std::env::var("CAESAR_BENCH_QUICK").is_ok();
+    let par_workers = workers(usize::MAX);
+    let scales: &[usize] = if quick { &[100, 1_000] } else { &[100, 1_000, 10_000] };
+    let rounds = |devices: usize| -> usize {
+        match (quick, devices) {
+            (true, _) => 2,
+            (false, d) if d >= 10_000 => 3,
+            _ => 5,
+        }
+    };
+
+    println!("== bench: engine (sequential vs {par_workers} workers) ==");
+    println!(
+        "{:>8}  {:>12}  {:>12}  {:>12}  {:>8}",
+        "devices", "participants", "seq ms/round", "par ms/round", "speedup"
+    );
+    let mut cases = Vec::new();
+    for &n in scales {
+        let r = rounds(n);
+        let seq_ms = ms_per_round(n, 1, r);
+        let par_ms = ms_per_round(n, par_workers, r);
+        let participants = cfg_at(n, 1).participants_per_round();
+        println!(
+            "{n:>8}  {participants:>12}  {seq_ms:>12.1}  {par_ms:>12.1}  {:>7.2}x",
+            seq_ms / par_ms
+        );
+        cases.push(Case { devices: n, participants, seq_ms, par_ms, par_workers });
+    }
+
+    let mut out = Json::obj();
+    out.set("bench", json::s("engine_round"))
+        .set("task", json::s("har"))
+        .set("trainer", json::s("native"))
+        .set("quick", Json::Bool(quick))
+        .set("host_workers", json::num(par_workers as f64));
+    let rows: Vec<Json> = cases
+        .iter()
+        .map(|c| {
+            let mut o = Json::obj();
+            o.set("devices", json::num(c.devices as f64))
+                .set("participants", json::num(c.participants as f64))
+                .set("seq_ms_per_round", json::num(c.seq_ms))
+                .set("par_ms_per_round", json::num(c.par_ms))
+                .set("workers", json::num(c.par_workers as f64))
+                .set("speedup", json::num(c.seq_ms / c.par_ms));
+            o
+        })
+        .collect();
+    out.set("cases", Json::Arr(rows));
+    std::fs::write("BENCH_engine.json", out.to_string()).expect("write BENCH_engine.json");
+    println!("wrote BENCH_engine.json");
+}

@@ -23,6 +23,31 @@ pub enum CompressionBackend {
     Xla,
 }
 
+/// Round-engine knobs (the event-driven coordinator in `engine/`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EngineConfig {
+    /// Worker threads executing device rounds. 1 = sequential execution on
+    /// the coordinator thread (the default, and the parity baseline);
+    /// values above the host's parallelism are clamped.
+    pub workers: usize,
+    /// Devices per aggregation group — the fixed fan-in of the canonical
+    /// f64 reduction tree. Results are bit-identical across worker counts
+    /// precisely because this does NOT depend on `workers`; changing it
+    /// changes last-bit rounding (like changing batch order would).
+    pub agg_group: usize,
+    /// Per-device probability of vanishing mid-round (0 disables).
+    pub dropout_rate: f64,
+    /// Simulated device heartbeat interval in seconds (<= 0 disables
+    /// liveness pings).
+    pub heartbeat_s: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { workers: 1, agg_group: 8, dropout_rate: 0.0, heartbeat_s: 10.0 }
+    }
+}
+
 /// Full configuration of one FL experiment run.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -64,6 +89,8 @@ pub struct ExperimentConfig {
     pub seed: u64,
     pub trainer: TrainerBackend,
     pub compression: CompressionBackend,
+    /// Event-driven round-engine knobs.
+    pub engine: EngineConfig,
 }
 
 impl ExperimentConfig {
@@ -92,6 +119,7 @@ impl ExperimentConfig {
             seed: 42,
             trainer: TrainerBackend::Xla,
             compression: CompressionBackend::Native,
+            engine: EngineConfig::default(),
         };
         match task {
             "cifar" => base,
@@ -189,6 +217,18 @@ impl ExperimentConfig {
                 other => panic!("unknown trainer {other}"),
             };
         }
+        if let Some(v) = args.get_usize("engine-workers") {
+            self.engine.workers = v.max(1);
+        }
+        if let Some(v) = args.get_usize("agg-group") {
+            self.engine.agg_group = v.max(1);
+        }
+        if let Some(v) = args.get_f64("dropout") {
+            self.engine.dropout_rate = v.clamp(0.0, 1.0);
+        }
+        if let Some(v) = args.get_f64("heartbeat") {
+            self.engine.heartbeat_s = v;
+        }
         if let Some(v) = args.get("compression-backend") {
             self.compression = match v {
                 "native" => CompressionBackend::Native,
@@ -268,6 +308,24 @@ mod tests {
         assert_eq!(c.n_devices(), 100);
         assert_eq!(c.trainer, TrainerBackend::Native);
         assert_eq!(c.seed, 7);
+        assert_eq!(c.engine, EngineConfig::default());
+    }
+
+    #[test]
+    fn engine_overrides_apply_and_clamp() {
+        let args = Args::parse(
+            "x engine-workers=4 agg-group=16 dropout=1.5 heartbeat=2.5"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = ExperimentConfig::preset("har").apply_overrides(&args);
+        assert_eq!(c.engine.workers, 4);
+        assert_eq!(c.engine.agg_group, 16);
+        assert_eq!(c.engine.dropout_rate, 1.0); // clamped to a probability
+        assert_eq!(c.engine.heartbeat_s, 2.5);
+        // zero workers clamps up to 1
+        let z = Args::parse("x engine-workers=0".split_whitespace().map(String::from));
+        assert_eq!(ExperimentConfig::preset("har").apply_overrides(&z).engine.workers, 1);
     }
 
     #[test]

@@ -4,10 +4,18 @@
 //! non-IID data partition, the participation tracker, the traffic meter
 //! and the simulated clock. Each round it (1) selects participants,
 //! (2) asks the configured [`Scheme`] for a per-device plan (codec +
-//! batch + τ), (3) executes downloads, local training and uploads through
-//! the codec engine and trainer backends, (4) aggregates, and (5) records
-//! metrics. Training runs REAL SGD (native or AOT HLO via PJRT); time and
-//! traffic are simulated at paper scale per DESIGN.md §Substitutions.
+//! batch + τ), (3) hands the plans to the event-driven [`crate::engine`]
+//! as `StartRound` messages — which executes downloads, local training and
+//! uploads (in parallel when `cfg.engine.workers > 1`) and streams the
+//! updates back through sharded order-exact aggregation — then (4) applies
+//! the round output to the global model and (5) records metrics. Training
+//! runs REAL SGD (native or AOT HLO via PJRT); time and traffic are
+//! simulated at paper scale per DESIGN.md §Substitutions.
+//!
+//! The engine is configuration-transparent: with the default
+//! `engine.workers = 1` the round executes sequentially on this thread,
+//! and any other worker count produces bit-identical results
+//! (`tests/engine_parity.rs`).
 
 pub mod codec;
 pub mod metrics;
@@ -17,16 +25,22 @@ pub use codec::CodecEngine;
 pub use metrics::{RoundRecord, RunResult};
 pub use trainer::{EvalOutcome, Trainer};
 
+use std::path::PathBuf;
+
 use anyhow::{Context, Result};
 
 use crate::caesar::{ImportanceTable, ParticipationTracker};
 use crate::compress::traffic::{PayloadScale, TrafficMeter};
 use crate::config::{ExperimentConfig, TrainerBackend};
 use crate::data::{self, Dataset, Partition, TaskSpec};
-use crate::fleet::{Fleet, RoundCost};
-use crate::runtime::Runtime;
+use crate::engine::{self, Engine, StartRound, TrainerProvider};
+use crate::fleet::Fleet;
 use crate::schemes::{RoundCtx, Scheme};
+use crate::runtime::Runtime;
 use crate::util::rng::Rng;
+
+/// Stream-key salt for per-(round, device) link-bandwidth draws.
+const LINK_SALT: u64 = 0x11C4;
 
 /// The federated-learning server (PS) plus the simulated testbed.
 pub struct Server {
@@ -49,6 +63,12 @@ pub struct Server {
     traffic: TrafficMeter,
     sim_time_s: f64,
     rng: Rng,
+    /// Base key of the pure per-(round, device) RNG streams.
+    stream_base: u64,
+    /// The event-driven round engine (state machine + workers).
+    engine: Engine,
+    /// Where per-worker XLA trainers load artifacts from.
+    artifact_dir: PathBuf,
 }
 
 /// Everything measured in one executed round.
@@ -97,6 +117,8 @@ impl Server {
         let scale = PayloadScale { n_real: trainer.n_params(), n_paper: cfg.n_params_paper };
         let global = trainer.init_model(&mut rng.fork(0x1417));
         let fleet = Fleet::new(cfg.fleet, cfg.seed);
+        let stream_base = rng.fork(0x57EA).next_u64();
+        let engine = Engine::new(cfg.engine, n);
 
         Ok(Server {
             tracker: ParticipationTracker::new(n),
@@ -113,6 +135,9 @@ impl Server {
             trainer,
             scale,
             global,
+            stream_base,
+            engine,
+            artifact_dir: artifact_dir.to_path_buf(),
             cfg,
             rng,
         })
@@ -134,6 +159,17 @@ impl Server {
 
     pub fn importance_table(&self) -> &ImportanceTable {
         &self.importance
+    }
+
+    /// The event-driven round engine (phase, registry, message stats).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Participation tracker (staleness bookkeeping) — read access for
+    /// diagnostics and tests.
+    pub fn tracker(&self) -> &ParticipationTracker {
+        &self.tracker
     }
 
     /// Evaluate the current global model on the held-out test set.
@@ -214,9 +250,13 @@ impl Server {
         let mut beta_u = Vec::with_capacity(k);
         let mut mu = Vec::with_capacity(k);
         {
-            let Fleet { devices, bandwidth } = &mut self.fleet;
+            let Fleet { devices, bandwidth } = &self.fleet;
             for &d in &participants {
-                let (bd, bu) = devices[d].draw_bandwidth(bandwidth);
+                // pure per-(round, device) stream: draws are independent of
+                // participant iteration order (prerequisite for parallelism)
+                let mut link_rng =
+                    Rng::stream(self.stream_base ^ LINK_SALT, t as u64, d as u64);
+                let (bd, bu) = devices[d].draw_bandwidth(bandwidth, &mut link_rng);
                 beta_d.push(bd);
                 beta_u.push(bu);
                 mu.push(devices[d].mu(cfg.model_cost));
@@ -240,79 +280,84 @@ impl Server {
         };
         assert_eq!(plans.len(), k, "scheme must plan every participant");
 
-        // --- execute the round on every participant ---
-        let engine = CodecEngine::new(
-            cfg.compression,
-            self.trainer.runtime(),
-            &cfg.task,
-        )?;
+        // --- hand the round to the engine as StartRound messages ---
         let lr = cfg.lr_at(t - 1) as f32;
-        let p = self.trainer.n_params();
-        let mut agg = vec![0.0f64; p];
-        let mut costs: Vec<f64> = Vec::with_capacity(k);
-        let mut loss_sum = 0.0f64;
-        for (i, plan) in plans.iter().enumerate() {
-            let d = plan.device;
-            let mut dev_rng = self.rng.fork((t as u64) << 20 | d as u64);
-
-            // (1) download + on-device recovery (§4.1)
-            let rec = engine.download(
-                plan.download,
-                &self.global,
-                self.locals[d].as_deref(),
-                &mut dev_rng,
-            )?;
-            let down_bits = self.scale.scale_bits(rec.wire_bits);
-            self.traffic.add_down(down_bits);
-
-            // (2) local training (Eq. 2) from the recovered initial model
-            let shard = &self.partition.shards[d];
-            let (w_final, loss) = self.trainer.train(
-                &rec.model,
-                &self.train_ds,
-                shard,
-                plan.tau,
-                plan.batch,
-                lr,
-                &mut dev_rng,
-            )?;
-            loss_sum += loss;
-
-            // (3) derive g_i = w_i^{t,0} − w_i^{t,τ} = η·Σ∇ (paper §2.1)
-            let g: Vec<f32> =
-                rec.model.iter().zip(&w_final).map(|(a, b)| a - b).collect();
-            self.grad_norms[d] =
-                g.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
-
-            // (4) upload compression (§4.2)
-            let up = engine.upload(plan.upload, &g, &mut dev_rng)?;
-            let up_bits = self.scale.scale_bits(up.wire_bits);
-            self.traffic.add_up(up_bits);
-            for (a, &x) in agg.iter_mut().zip(&up.grad) {
-                *a += x as f64;
+        let items: Vec<StartRound> = plans
+            .iter()
+            .enumerate()
+            .map(|(i, &plan)| StartRound { t, plan, beta_d: beta_d[i], beta_u: beta_u[i], mu: mu[i] })
+            .collect();
+        let env = engine::RoundEnv {
+            t,
+            lr,
+            cfg: &cfg,
+            global: &self.global,
+            locals: &self.locals,
+            train_ds: &self.train_ds,
+            partition: &self.partition,
+            scale: &self.scale,
+            stream_base: self.stream_base,
+            sim_now_s: self.sim_time_s,
+        };
+        let task = cfg.task.clone();
+        let backend = cfg.trainer;
+        let dir = self.artifact_dir.clone();
+        let factory = move || -> Result<Trainer> {
+            match backend {
+                TrainerBackend::Native => Ok(Trainer::native(&task)),
+                TrainerBackend::Xla => Trainer::xla(&task, &dir),
             }
+        };
+        let provider = if cfg.engine.workers <= 1 {
+            TrainerProvider::Inline(&self.trainer)
+        } else {
+            TrainerProvider::PerWorker(&factory)
+        };
+        let engine::RoundOutput { agg, updates, dropped } =
+            self.engine.execute_round(&env, &items, provider)?;
 
-            // (5) device state + simulated cost (Eq. 7)
-            self.locals[d] = Some(w_final);
-            self.tracker.record(d, t);
-            costs.push(
-                RoundCost::new(down_bits, up_bits, beta_d[i], beta_u[i], plan.tau, plan.batch, mu[i])
-                    .total(),
-            );
+        // --- apply the round output in canonical (device-id) order ---
+        let completers = updates.len();
+        let mut costs: Vec<f64> = Vec::with_capacity(completers);
+        let mut loss_sum = 0.0f64;
+        for u in updates {
+            self.traffic.add_down(u.down_bits);
+            self.traffic.add_up(u.up_bits);
+            self.grad_norms[u.device] = u.grad_norm;
+            self.locals[u.device] = Some(u.w_final);
+            self.tracker.record(u.device, t);
+            loss_sum += u.loss;
+            costs.push(u.cost.total());
+        }
+        for d in &dropped {
+            // a dropped device consumed its download before vanishing; it
+            // contributes no update and its staleness keeps growing
+            self.traffic.add_down(d.down_bits);
         }
 
-        // --- global aggregation: w ← w − mean(ḡ) (§2.1) ---
-        let inv = 1.0 / k as f64;
-        for (w, a) in self.global.iter_mut().zip(&agg) {
-            *w -= (a * inv) as f32;
+        // --- global aggregation: w ← w − mean(ḡ) over completers (§2.1) ---
+        if completers > 0 {
+            let inv = 1.0 / completers as f64;
+            for (w, a) in self.global.iter_mut().zip(&agg) {
+                *w -= (a * inv) as f32;
+            }
         }
 
-        // --- synchronous barrier timing ---
-        let round_s = costs.iter().fold(0.0f64, |a, &b| a.max(b));
-        let avg_wait_s =
-            costs.iter().map(|&c| round_s - c).sum::<f64>() / k as f64;
+        // --- synchronous barrier timing (dropouts hold the barrier until
+        // the PS notices them vanish) ---
+        let round_s = costs
+            .iter()
+            .copied()
+            .chain(dropped.iter().map(|d| d.after_s))
+            .fold(0.0f64, f64::max);
+        let avg_wait_s = if completers > 0 {
+            costs.iter().map(|&c| round_s - c).sum::<f64>() / completers as f64
+        } else {
+            0.0
+        };
         self.sim_time_s += round_s;
-        Ok(RoundOutcome { round_s, avg_wait_s, mean_loss: loss_sum / k as f64 })
+        let mean_loss = if completers > 0 { loss_sum / completers as f64 } else { f64::NAN };
+        Ok(RoundOutcome { round_s, avg_wait_s, mean_loss })
     }
 }
 

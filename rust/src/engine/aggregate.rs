@@ -1,0 +1,223 @@
+//! Streaming, sharded, *order-exact* aggregation.
+//!
+//! Floating-point addition is not associative, so a parallel sum is only
+//! bit-identical to a sequential one if both evaluate the SAME reduction
+//! tree. The engine therefore fixes a canonical tree up front, independent
+//! of how many workers execute it:
+//!
+//! 1. participants are sorted by device id and chunked into groups of
+//!    `agg_group` (a config constant — never derived from worker count);
+//! 2. an [`AggregatorShard`] accumulates one group's weighted partial sum
+//!    in sorted order, folding each device's update the moment it is
+//!    produced (the update vector is then dropped — at most one update
+//!    per worker is ever alive);
+//! 3. the [`ShardReducer`] folds finished shards into the global sum in
+//!    ascending group order, buffering the occasional shard that finishes
+//!    early.
+//!
+//! Any worker count — including 1, the sequential driver — walks this
+//! exact tree, which is what the `engine_parity` integration test pins.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Weighted f64 partial sum over one group of devices. Devices must be
+/// folded in the (sorted) order fixed at construction.
+#[derive(Debug)]
+pub struct AggregatorShard {
+    group: usize,
+    sum: Vec<f64>,
+    /// Device ids this shard expects, ascending.
+    expect: Vec<usize>,
+    /// Position of the next expected device.
+    cursor: usize,
+    /// Devices actually folded (dropouts are skipped).
+    folded: usize,
+}
+
+impl AggregatorShard {
+    pub fn new(group: usize, n_params: usize, expect: Vec<usize>) -> AggregatorShard {
+        debug_assert!(expect.windows(2).all(|w| w[0] < w[1]), "expect must be sorted");
+        AggregatorShard { group, sum: vec![0.0; n_params], expect, cursor: 0, folded: 0 }
+    }
+
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    pub fn folded(&self) -> usize {
+        self.folded
+    }
+
+    /// Fold one device's dense update with aggregation weight `weight`.
+    /// Must be called in the shard's expected device order.
+    pub fn fold(&mut self, device: usize, update: &[f32], weight: f64) {
+        assert_eq!(
+            self.expect.get(self.cursor).copied(),
+            Some(device),
+            "shard {}: device {device} folded out of order",
+            self.group
+        );
+        assert_eq!(update.len(), self.sum.len(), "update length mismatch");
+        for (s, &x) in self.sum.iter_mut().zip(update) {
+            *s += (x as f64) * weight;
+        }
+        self.cursor += 1;
+        self.folded += 1;
+    }
+
+    /// Skip the next expected device (it dropped out mid-round).
+    pub fn mark_dropped(&mut self, device: usize) {
+        assert_eq!(
+            self.expect.get(self.cursor).copied(),
+            Some(device),
+            "shard {}: dropout {device} out of order",
+            self.group
+        );
+        self.cursor += 1;
+    }
+
+    /// True once every expected device was folded or dropped.
+    pub fn complete(&self) -> bool {
+        self.cursor == self.expect.len()
+    }
+}
+
+/// Folds [`AggregatorShard`]s into the global sum in ascending group
+/// order, regardless of the (nondeterministic) order they finish in.
+#[derive(Debug)]
+pub struct ShardReducer {
+    total: Vec<f64>,
+    next_group: usize,
+    n_groups: usize,
+    pending: BTreeMap<usize, AggregatorShard>,
+    folded_devices: usize,
+}
+
+impl ShardReducer {
+    pub fn new(n_params: usize, n_groups: usize) -> ShardReducer {
+        ShardReducer {
+            total: vec![0.0; n_params],
+            next_group: 0,
+            n_groups,
+            pending: BTreeMap::new(),
+            folded_devices: 0,
+        }
+    }
+
+    /// Accept a finished shard; folds immediately if it is the next group
+    /// in canonical order, otherwise buffers it (bounded by the number of
+    /// in-flight workers in practice).
+    pub fn push(&mut self, shard: AggregatorShard) -> Result<()> {
+        if !shard.complete() {
+            return Err(anyhow!("group {} shard pushed incomplete", shard.group()));
+        }
+        if shard.group() >= self.n_groups {
+            return Err(anyhow!("group {} out of range ({})", shard.group(), self.n_groups));
+        }
+        if shard.group() < self.next_group || self.pending.contains_key(&shard.group()) {
+            return Err(anyhow!("group {} reduced twice", shard.group()));
+        }
+        self.pending.insert(shard.group(), shard);
+        while let Some(s) = self.pending.remove(&self.next_group) {
+            for (t, x) in self.total.iter_mut().zip(&s.sum) {
+                *t += x;
+            }
+            self.folded_devices += s.folded;
+            self.next_group += 1;
+        }
+        Ok(())
+    }
+
+    /// Finish: every group must have reduced. Returns the canonical sum
+    /// and the number of device updates inside it.
+    pub fn finish(self) -> Result<(Vec<f64>, usize)> {
+        if self.next_group != self.n_groups {
+            return Err(anyhow!(
+                "aggregation incomplete: {}/{} groups reduced",
+                self.next_group,
+                self.n_groups
+            ));
+        }
+        Ok((self.total, self.folded_devices))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard_of(group: usize, devices: &[usize], vals: &[f32]) -> AggregatorShard {
+        let mut s = AggregatorShard::new(group, vals.len(), devices.to_vec());
+        for &d in devices {
+            let update: Vec<f32> = vals.iter().map(|&v| v + d as f32).collect();
+            s.fold(d, &update, 1.0);
+        }
+        s
+    }
+
+    #[test]
+    fn out_of_order_shards_reduce_to_in_order_total() {
+        let mk = |order: &[usize]| {
+            let mut r = ShardReducer::new(3, 3);
+            for &g in order {
+                let devices = [g * 2, g * 2 + 1];
+                r.push(shard_of(g, &devices, &[0.5, -1.25, 3.0])).unwrap();
+            }
+            r.finish().unwrap()
+        };
+        let (a, na) = mk(&[0, 1, 2]);
+        let (b, nb) = mk(&[2, 0, 1]);
+        assert_eq!(na, 6);
+        assert_eq!(nb, 6);
+        // bit-exact equality, not approximate
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn shard_enforces_fold_order() {
+        let mut s = AggregatorShard::new(0, 2, vec![3, 9]);
+        s.fold(3, &[1.0, 1.0], 1.0);
+        s.fold(9, &[1.0, 1.0], 2.0);
+        assert!(s.complete());
+        assert_eq!(s.folded(), 2);
+        assert_eq!(s.sum, vec![3.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of order")]
+    fn shard_panics_on_wrong_device() {
+        let mut s = AggregatorShard::new(0, 1, vec![3, 9]);
+        s.fold(9, &[1.0], 1.0);
+    }
+
+    #[test]
+    fn dropouts_are_skipped_not_summed() {
+        let mut s = AggregatorShard::new(0, 2, vec![1, 2, 5]);
+        s.fold(1, &[1.0, 2.0], 1.0);
+        s.mark_dropped(2);
+        s.fold(5, &[10.0, 20.0], 1.0);
+        assert!(s.complete());
+        assert_eq!(s.folded(), 2);
+        assert_eq!(s.sum, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn reducer_rejects_incomplete_and_duplicate() {
+        let mut r = ShardReducer::new(1, 2);
+        let s = AggregatorShard::new(0, 1, vec![0, 1]); // incomplete
+        assert!(r.push(s).is_err());
+        r.push(shard_of(0, &[0], &[1.0])).unwrap();
+        assert!(r.push(shard_of(0, &[0], &[1.0])).is_err()); // duplicate
+        let r2 = ShardReducer::new(1, 2);
+        assert!(r2.finish().is_err()); // nothing reduced
+    }
+
+    #[test]
+    fn weight_scales_contributions() {
+        let mut s = AggregatorShard::new(0, 1, vec![0]);
+        s.fold(0, &[2.0], 0.25);
+        assert_eq!(s.sum, vec![0.5]);
+    }
+}

@@ -1,0 +1,84 @@
+//! Typed messages between the coordinator state machine and its simulated
+//! devices.
+//!
+//! Real FL coordinators (xaynet, FedScale) are message-driven: devices
+//! rendezvous (`Join`), prove liveness (`Heartbeat`), receive a round plan
+//! (`StartRound`), and either report an update (`EndRound`) or vanish
+//! (`Dropout`). Here devices are simulated on worker threads, so the same
+//! vocabulary flows over an in-process channel; the coordinator side of
+//! the protocol (registry updates, aggregation, accounting) is identical
+//! to what a networked transport would drive.
+
+use crate::fleet::RoundCost;
+use crate::schemes::DevicePlan;
+
+use super::aggregate::AggregatorShard;
+
+/// Coordinator → device: kick off one round of local work. Carries the
+/// scheme's plan plus this round's modelled link/compute draws.
+#[derive(Clone, Copy, Debug)]
+pub struct StartRound {
+    /// 1-based round number.
+    pub t: usize,
+    pub plan: DevicePlan,
+    /// Download / upload bandwidth (bit/s) drawn for this round.
+    pub beta_d: f64,
+    pub beta_u: f64,
+    /// Per-sample compute latency (s).
+    pub mu: f64,
+}
+
+/// A completed device round, ready for coordinator-side application.
+/// The update *gradient* is deliberately absent: it was already folded
+/// into the worker's [`AggregatorShard`] so full per-device update
+/// vectors are never all materialized at once.
+#[derive(Clone, Debug)]
+pub struct RoundUpdate {
+    pub device: usize,
+    /// Final local model `w_i^{t,τ}` (becomes the device's stale local).
+    pub w_final: Vec<f32>,
+    /// ‖g_i‖₂ — PyramidFL's ranking signal.
+    pub grad_norm: f64,
+    /// Mean local training loss over the τ iterations.
+    pub loss: f64,
+    /// Paper-scale wire traffic (bits) this device moved.
+    pub down_bits: f64,
+    pub up_bits: f64,
+    /// Simulated Eq. 7 cost of the device's round.
+    pub cost: RoundCost,
+}
+
+/// Device → coordinator messages.
+#[derive(Clone, Debug)]
+pub enum DeviceMsg {
+    /// Rendezvous: the device is online and schedulable.
+    Join { device: usize },
+    /// Liveness ping at simulated time `sim_t_s`.
+    Heartbeat { device: usize, sim_t_s: f64 },
+    /// The device finished its round.
+    EndRound(Box<RoundUpdate>),
+    /// The device vanished mid-round, `after_s` seconds in. Its download
+    /// had already completed (`down_bits` of traffic were spent); no
+    /// update reaches aggregation.
+    Dropout { device: usize, after_s: f64, down_bits: f64 },
+}
+
+/// Everything a worker thread sends back to the coordinator loop.
+#[derive(Debug)]
+pub enum Event {
+    Device(DeviceMsg),
+    /// A finished aggregation shard (one per device group).
+    Shard(AggregatorShard),
+    /// A worker-side failure, stringified so it crosses the channel.
+    Error(String),
+}
+
+/// Record of a device that dropped out of the current round.
+#[derive(Clone, Copy, Debug)]
+pub struct DroppedDevice {
+    pub device: usize,
+    /// Simulated seconds into the round at which it vanished.
+    pub after_s: f64,
+    /// Download traffic it had already consumed (paper-scale bits).
+    pub down_bits: f64,
+}

@@ -1,0 +1,546 @@
+//! Event-driven round engine: the coordinator as a state machine
+//! (`Standby → Round(t) → Finished`) over typed device messages, with the
+//! per-device work of a round (decode download → local SGD → encode
+//! upload) executed in parallel across worker threads and aggregated
+//! through streaming, order-exact shards.
+//!
+//! ```text
+//!                 Join/Heartbeat
+//!                   ┌───────┐
+//!                   ▼       │
+//!   ┌─────────┐  StartRound{plan}   ┌──────────┐   finish()   ┌──────────┐
+//!   │ Standby ├────────────────────▶│ Round(t) ├─────────────▶│ Finished │
+//!   └─────────┘                     └────┬─────┘              └──────────┘
+//!        ▲      EndRound{update} /       │
+//!        └────── Dropout drained ◀───────┘
+//! ```
+//!
+//! One `execute_round` call performs a full `Standby → Round(t) → Standby`
+//! cycle: participants join the [`Registry`], each receives a
+//! [`StartRound`] message, device work runs on up to `EngineConfig::
+//! workers` threads (each building its own trainer — one PJRT runtime per
+//! worker, never shared), and [`DeviceMsg`]s stream back to the
+//! coordinator loop which maintains liveness and reduces
+//! [`AggregatorShard`]s in canonical order.
+//!
+//! **Determinism contract.** For a fixed seed the engine's output is
+//! bit-identical for ANY worker count, because every source of
+//! nondeterminism is pinned:
+//! * per-device randomness comes from pure [`Rng::stream`] keys
+//!   `(base, t, device)` — no shared generator is advanced;
+//! * devices execute in sorted-device-id order within fixed-size groups
+//!   (`EngineConfig::agg_group`), and group partial sums reduce in group
+//!   order ([`aggregate`]) — the same f64 reduction tree regardless of
+//!   which thread runs what, when;
+//! * coordinator-side application (traffic, locals, tracker) happens in
+//!   sorted order after the round drains.
+//!
+//! `tests/engine_parity.rs` pins this contract end-to-end.
+
+pub mod aggregate;
+pub mod message;
+pub mod registry;
+
+pub use aggregate::{AggregatorShard, ShardReducer};
+pub use message::{DeviceMsg, DroppedDevice, Event, RoundUpdate, StartRound};
+pub use registry::{DeviceStatus, Registry};
+
+use anyhow::{anyhow, Result};
+
+use crate::compress::traffic::PayloadScale;
+use crate::config::{EngineConfig, ExperimentConfig};
+use crate::coordinator::{CodecEngine, Trainer};
+use crate::data::{Dataset, Partition};
+use crate::fleet::RoundCost;
+use crate::util::rng::Rng;
+use crate::util::threadpool;
+
+/// Stream-key salt separating device "fate" draws (dropout lottery) from
+/// device work draws, so enabling dropout never perturbs the randomness
+/// of devices that complete.
+const FATE_SALT: u64 = 0xD60_D60;
+
+/// Upper bound on simulated heartbeats emitted per device per round.
+const MAX_HEARTBEATS: usize = 1_000;
+
+/// Coordinator state-machine phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Between rounds; devices may join, rounds may start.
+    Standby,
+    /// Executing round `t`.
+    Round(usize),
+    /// Terminal; no further rounds accepted.
+    Finished,
+}
+
+/// Cumulative engine counters (diagnostics; surfaced by `caesar info`-style
+/// tooling and tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub rounds: usize,
+    pub messages: usize,
+    pub heartbeats: usize,
+    pub dropouts: usize,
+}
+
+/// Read-only view of everything a device round needs from the server.
+pub struct RoundEnv<'a> {
+    /// 1-based round number.
+    pub t: usize,
+    /// Learning rate at this round.
+    pub lr: f32,
+    pub cfg: &'a ExperimentConfig,
+    /// Current global model.
+    pub global: &'a [f32],
+    /// Per-device stale local models.
+    pub locals: &'a [Option<Vec<f32>>],
+    pub train_ds: &'a Dataset,
+    pub partition: &'a Partition,
+    pub scale: &'a PayloadScale,
+    /// Base key of the pure per-(round, device) RNG streams.
+    pub stream_base: u64,
+    /// Simulated wall-clock at round start (registry timestamps).
+    pub sim_now_s: f64,
+}
+
+/// How worker threads obtain a trainer. PJRT runtimes are not `Sync`, so
+/// the parallel path constructs one trainer per worker *on that worker's
+/// thread*; the sequential path reuses the caller's trainer directly.
+pub enum TrainerProvider<'a> {
+    /// Run inline on the calling thread with this trainer (workers == 1).
+    Inline(&'a Trainer),
+    /// Build a fresh trainer inside each worker thread. Called once per
+    /// worker per round (trainers cannot be cached across rounds in the
+    /// engine: the XLA variant is not `Send`, so it must be born and die
+    /// on its worker's scoped thread). Negligible for the native trainer;
+    /// for the XLA backend this re-opens a PJRT runtime per worker per
+    /// round — prefer `trainer=native` for high worker counts until a
+    /// persistent worker pool exists.
+    PerWorker(&'a (dyn Fn() -> Result<Trainer> + Sync)),
+}
+
+/// What one executed round hands back to the driver.
+pub struct RoundOutput {
+    /// Canonical f64 sum of the (weighted) device updates.
+    pub agg: Vec<f64>,
+    /// Completed device rounds, sorted by device id.
+    pub updates: Vec<RoundUpdate>,
+    /// Devices that vanished mid-round, sorted by device id.
+    pub dropped: Vec<DroppedDevice>,
+}
+
+/// The event-driven coordinator engine.
+pub struct Engine {
+    cfg: EngineConfig,
+    phase: Phase,
+    registry: Registry,
+    stats: EngineStats,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig, n_devices: usize) -> Engine {
+        Engine {
+            registry: Registry::new(n_devices, cfg.heartbeat_s),
+            phase: Phase::Standby,
+            stats: EngineStats::default(),
+            cfg,
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    pub fn config(&self) -> EngineConfig {
+        self.cfg
+    }
+
+    /// Transition to the terminal phase; later rounds are rejected.
+    pub fn finish(&mut self) {
+        self.phase = Phase::Finished;
+    }
+
+    /// Execute one full round: `Standby → Round(t) → Standby`.
+    ///
+    /// `items` are the coordinator→device [`StartRound`] messages, one per
+    /// participant (any order — execution is canonicalized internally).
+    pub fn execute_round(
+        &mut self,
+        env: &RoundEnv,
+        items: &[StartRound],
+        provider: TrainerProvider,
+    ) -> Result<RoundOutput> {
+        match self.phase {
+            Phase::Standby => {}
+            Phase::Round(r) => return Err(anyhow!("engine re-entered while in round {r}")),
+            Phase::Finished => return Err(anyhow!("engine is finished; no further rounds")),
+        }
+        self.phase = Phase::Round(env.t);
+        let out = self.round_inner(env, items, provider);
+        self.phase = Phase::Standby;
+        if out.is_ok() {
+            self.stats.rounds += 1;
+        }
+        out
+    }
+
+    fn round_inner(
+        &mut self,
+        env: &RoundEnv,
+        items: &[StartRound],
+        provider: TrainerProvider,
+    ) -> Result<RoundOutput> {
+        let n_params = env.global.len();
+
+        // Canonical execution order: item indices sorted by device id.
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        order.sort_by_key(|&i| items[i].plan.device);
+
+        // Rendezvous + kickoff bookkeeping (coordinator-side sends).
+        for &i in &order {
+            let d = items[i].plan.device;
+            self.registry.join(d, env.sim_now_s);
+            self.registry.start_round(d, env.sim_now_s);
+            self.stats.messages += 2; // Join ack + StartRound
+        }
+
+        let group = self.cfg.agg_group.max(1);
+        let groups: Vec<&[usize]> = order.chunks(group).collect();
+        let n_groups = groups.len();
+        let ecfg = self.cfg;
+
+        let mut reducer = ShardReducer::new(n_params, n_groups);
+        let mut updates: Vec<RoundUpdate> = Vec::with_capacity(order.len());
+        let mut dropped: Vec<DroppedDevice> = Vec::new();
+        let mut worker_err: Option<anyhow::Error> = None;
+
+        match provider {
+            TrainerProvider::Inline(trainer) => {
+                let codec =
+                    CodecEngine::new(env.cfg.compression, trainer.runtime(), &env.cfg.task)?;
+                for (g, members) in groups.iter().enumerate() {
+                    let events = execute_group(env, items, &ecfg, g, members, trainer, &codec)?;
+                    for ev in events {
+                        self.apply_event(ev, env.sim_now_s, &mut reducer, &mut updates, &mut dropped)?;
+                    }
+                }
+            }
+            TrainerProvider::PerWorker(factory) => {
+                let n_workers = threadpool::workers(self.cfg.workers);
+                let groups = &groups;
+                threadpool::scope_stream(
+                    n_groups,
+                    n_workers,
+                    // per-worker state: its own trainer (and PJRT runtime)
+                    |_wi| factory(),
+                    |trainer, g| -> Vec<Event> {
+                        let trainer = match trainer {
+                            Ok(t) => t,
+                            Err(e) => return vec![Event::Error(format!("worker trainer: {e:#}"))],
+                        };
+                        let codec = match CodecEngine::new(
+                            env.cfg.compression,
+                            trainer.runtime(),
+                            &env.cfg.task,
+                        ) {
+                            Ok(c) => c,
+                            Err(e) => return vec![Event::Error(format!("worker codec: {e:#}"))],
+                        };
+                        match execute_group(env, items, &ecfg, g, groups[g], trainer, &codec) {
+                            Ok(events) => events,
+                            Err(e) => vec![Event::Error(format!("group {g}: {e:#}"))],
+                        }
+                    },
+                    |events| {
+                        for ev in events {
+                            if let Err(e) = self.apply_event(
+                                ev,
+                                env.sim_now_s,
+                                &mut reducer,
+                                &mut updates,
+                                &mut dropped,
+                            ) {
+                                if worker_err.is_none() {
+                                    worker_err = Some(e);
+                                }
+                            }
+                        }
+                    },
+                );
+                if let Some(e) = worker_err {
+                    return Err(e);
+                }
+            }
+        }
+
+        // Canonical application order for the driver.
+        updates.sort_by_key(|u| u.device);
+        dropped.sort_by_key(|d| d.device);
+
+        let (agg, folded) = reducer.finish()?;
+        if folded != updates.len() {
+            return Err(anyhow!(
+                "aggregation folded {folded} updates but {} EndRound messages arrived",
+                updates.len()
+            ));
+        }
+        Ok(RoundOutput { agg, updates, dropped })
+    }
+
+    /// Coordinator-side handler for one drained event. Must be
+    /// order-insensitive across devices: events from different worker
+    /// threads interleave nondeterministically.
+    fn apply_event(
+        &mut self,
+        ev: Event,
+        round_start_s: f64,
+        reducer: &mut ShardReducer,
+        updates: &mut Vec<RoundUpdate>,
+        dropped: &mut Vec<DroppedDevice>,
+    ) -> Result<()> {
+        self.stats.messages += 1;
+        match ev {
+            Event::Device(DeviceMsg::Join { device }) => {
+                self.registry.join(device, round_start_s);
+            }
+            Event::Device(DeviceMsg::Heartbeat { device, sim_t_s }) => {
+                self.stats.heartbeats += 1;
+                self.registry.heartbeat(device, sim_t_s);
+            }
+            Event::Device(DeviceMsg::EndRound(update)) => {
+                self.registry.end_round(update.device, round_start_s + update.cost.total());
+                updates.push(*update);
+            }
+            Event::Device(DeviceMsg::Dropout { device, after_s, down_bits }) => {
+                self.stats.dropouts += 1;
+                self.registry.dropout(device, round_start_s + after_s);
+                dropped.push(DroppedDevice { device, after_s, down_bits });
+            }
+            Event::Shard(shard) => reducer.push(shard)?,
+            Event::Error(msg) => return Err(anyhow!("engine worker failed: {msg}")),
+        }
+        Ok(())
+    }
+}
+
+/// Execute one aggregation group of devices in canonical (sorted) order,
+/// folding each update into the group's shard as soon as it is produced.
+/// Returns the group's event batch, ending with the finished shard.
+fn execute_group(
+    env: &RoundEnv,
+    items: &[StartRound],
+    ecfg: &EngineConfig,
+    group: usize,
+    members: &[usize],
+    trainer: &Trainer,
+    codec: &CodecEngine,
+) -> Result<Vec<Event>> {
+    let expect: Vec<usize> = members.iter().map(|&i| items[i].plan.device).collect();
+    let mut shard = AggregatorShard::new(group, env.global.len(), expect);
+    let mut events = Vec::new();
+    for &i in members {
+        run_device(env, &items[i], ecfg, trainer, codec, &mut events, &mut shard)?;
+    }
+    events.push(Event::Shard(shard));
+    Ok(events)
+}
+
+/// Simulate one device's round: download + recover, (maybe) drop out,
+/// local SGD, upload. Emits Heartbeat and EndRound/Dropout messages and
+/// folds the upload into `shard`.
+fn run_device(
+    env: &RoundEnv,
+    item: &StartRound,
+    ecfg: &EngineConfig,
+    trainer: &Trainer,
+    codec: &CodecEngine,
+    events: &mut Vec<Event>,
+    shard: &mut AggregatorShard,
+) -> Result<()> {
+    debug_assert_eq!(item.t, env.t, "StartRound round number disagrees with RoundEnv");
+    let plan = item.plan;
+    let d = plan.device;
+    let mut dev_rng = Rng::stream(env.stream_base, env.t as u64, d as u64);
+
+    // (1) download + on-device recovery (§4.1)
+    let rec = codec.download(plan.download, env.global, env.locals[d].as_deref(), &mut dev_rng)?;
+    let down_bits = env.scale.scale_bits(rec.wire_bits);
+
+    // Dropout lottery on an independent stream: enabling it never changes
+    // the work randomness of devices that survive.
+    if ecfg.dropout_rate > 0.0 {
+        let mut fate = Rng::stream(env.stream_base ^ FATE_SALT, env.t as u64, d as u64);
+        if fate.f64() < ecfg.dropout_rate {
+            // the device vanishes partway through local training: the
+            // download completed, the upload never happens
+            let download_s = down_bits / item.beta_d;
+            let compute_s = (plan.tau * plan.batch) as f64 * item.mu;
+            let after_s = download_s + fate.f64() * compute_s;
+            emit_heartbeats(events, ecfg, d, env.sim_now_s, after_s);
+            events.push(Event::Device(DeviceMsg::Dropout { device: d, after_s, down_bits }));
+            shard.mark_dropped(d);
+            return Ok(());
+        }
+    }
+
+    // (2) local training (Eq. 2) from the recovered initial model
+    let data_shard = &env.partition.shards[d];
+    let (w_final, loss) = trainer.train(
+        &rec.model,
+        env.train_ds,
+        data_shard,
+        plan.tau,
+        plan.batch,
+        env.lr,
+        &mut dev_rng,
+    )?;
+
+    // (3) g_i = w_i^{t,0} − w_i^{t,τ} = η·Σ∇ (paper §2.1)
+    let g: Vec<f32> = rec.model.iter().zip(&w_final).map(|(a, b)| a - b).collect();
+    let grad_norm = g.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+
+    // (4) upload compression (§4.2), folded straight into the shard — the
+    // dense update never leaves this worker
+    let up = codec.upload(plan.upload, &g, &mut dev_rng)?;
+    let up_bits = env.scale.scale_bits(up.wire_bits);
+    shard.fold(d, &up.grad, 1.0);
+
+    // (5) simulated cost (Eq. 7) + liveness traffic
+    let cost =
+        RoundCost::new(down_bits, up_bits, item.beta_d, item.beta_u, plan.tau, plan.batch, item.mu);
+    emit_heartbeats(events, ecfg, d, env.sim_now_s, cost.total());
+    events.push(Event::Device(DeviceMsg::EndRound(Box::new(RoundUpdate {
+        device: d,
+        w_final,
+        grad_norm,
+        loss,
+        down_bits,
+        up_bits,
+        cost,
+    }))));
+    Ok(())
+}
+
+/// Emit the periodic liveness pings a device would send over a round
+/// lasting `duration_s` simulated seconds.
+fn emit_heartbeats(
+    events: &mut Vec<Event>,
+    ecfg: &EngineConfig,
+    device: usize,
+    start_s: f64,
+    duration_s: f64,
+) {
+    if ecfg.heartbeat_s <= 0.0 {
+        return;
+    }
+    let n = ((duration_s / ecfg.heartbeat_s) as usize).min(MAX_HEARTBEATS);
+    for k in 1..=n {
+        events.push(Event::Device(DeviceMsg::Heartbeat {
+            device,
+            sim_t_s: start_s + k as f64 * ecfg.heartbeat_s,
+        }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_transitions_and_terminal_state() {
+        let mut e = Engine::new(EngineConfig::default(), 8);
+        assert_eq!(e.phase(), Phase::Standby);
+        e.finish();
+        assert_eq!(e.phase(), Phase::Finished);
+        // a finished engine rejects rounds
+        let cfg = ExperimentConfig::preset("har");
+        let scale = PayloadScale::identity(4);
+        let ds = Dataset::generate(
+            &crate::data::TaskSpec::by_name("har").unwrap(),
+            64,
+            &mut Rng::new(0),
+        );
+        let part = crate::data::partition(&ds, 8, 0.0, &mut Rng::new(1));
+        let global = vec![0.0f32; 4];
+        let locals: Vec<Option<Vec<f32>>> = vec![None; 8];
+        let env = RoundEnv {
+            t: 1,
+            lr: 0.1,
+            cfg: &cfg,
+            global: &global,
+            locals: &locals,
+            train_ds: &ds,
+            partition: &part,
+            scale: &scale,
+            stream_base: 7,
+            sim_now_s: 0.0,
+        };
+        let trainer = Trainer::native("har");
+        let err = e
+            .execute_round(&env, &[], TrainerProvider::Inline(&trainer))
+            .unwrap_err();
+        assert!(format!("{err}").contains("finished"), "{err}");
+    }
+
+    #[test]
+    fn empty_round_yields_empty_output() {
+        let mut e = Engine::new(EngineConfig::default(), 4);
+        let cfg = ExperimentConfig::preset("har");
+        let scale = PayloadScale::identity(4);
+        let ds = Dataset::generate(
+            &crate::data::TaskSpec::by_name("har").unwrap(),
+            64,
+            &mut Rng::new(0),
+        );
+        let part = crate::data::partition(&ds, 4, 0.0, &mut Rng::new(1));
+        let global = vec![0.0f32; 4];
+        let locals: Vec<Option<Vec<f32>>> = vec![None; 4];
+        let env = RoundEnv {
+            t: 1,
+            lr: 0.1,
+            cfg: &cfg,
+            global: &global,
+            locals: &locals,
+            train_ds: &ds,
+            partition: &part,
+            scale: &scale,
+            stream_base: 7,
+            sim_now_s: 0.0,
+        };
+        let trainer = Trainer::native("har");
+        let out = e.execute_round(&env, &[], TrainerProvider::Inline(&trainer)).unwrap();
+        assert!(out.updates.is_empty() && out.dropped.is_empty());
+        assert_eq!(out.agg, vec![0.0f64; 4]);
+        assert_eq!(e.phase(), Phase::Standby);
+        assert_eq!(e.stats().rounds, 1);
+    }
+
+    #[test]
+    fn heartbeat_emission_counts() {
+        let ecfg = EngineConfig { heartbeat_s: 10.0, ..EngineConfig::default() };
+        let mut events = Vec::new();
+        emit_heartbeats(&mut events, &ecfg, 3, 100.0, 35.0);
+        assert_eq!(events.len(), 3);
+        match &events[0] {
+            Event::Device(DeviceMsg::Heartbeat { device, sim_t_s }) => {
+                assert_eq!(*device, 3);
+                assert_eq!(*sim_t_s, 110.0);
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+        // disabled heartbeats emit nothing
+        let off = EngineConfig { heartbeat_s: 0.0, ..EngineConfig::default() };
+        let mut none = Vec::new();
+        emit_heartbeats(&mut none, &off, 0, 0.0, 1e9);
+        assert!(none.is_empty());
+    }
+}

@@ -1,0 +1,191 @@
+//! Participant registry with liveness tracking.
+//!
+//! The coordinator's view of every device it has ever heard from: current
+//! status, last-seen simulated time, and cumulative participation /
+//! dropout counters. Mirrors the bookkeeping a networked FL coordinator
+//! keeps to decide who is schedulable and who timed out.
+
+/// A device's status as seen by the coordinator.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DeviceStatus {
+    /// Never joined (no message received yet).
+    #[default]
+    Offline,
+    /// Joined and schedulable.
+    Idle,
+    /// Currently executing a round.
+    Training,
+    /// Vanished mid-round; back to schedulable once it re-joins.
+    Dropped,
+}
+
+/// Registry over a fixed device-id space `0..n`.
+#[derive(Clone, Debug)]
+pub struct Registry {
+    status: Vec<DeviceStatus>,
+    /// Simulated time of the last message from each device.
+    last_seen_s: Vec<f64>,
+    /// Completed rounds per device.
+    completions: Vec<u32>,
+    /// Mid-round dropouts per device.
+    dropouts: Vec<u32>,
+    /// Expected heartbeat interval (s); liveness allows 2 missed beats.
+    heartbeat_s: f64,
+}
+
+impl Registry {
+    pub fn new(n_devices: usize, heartbeat_s: f64) -> Registry {
+        Registry {
+            status: vec![DeviceStatus::Offline; n_devices],
+            last_seen_s: vec![f64::NEG_INFINITY; n_devices],
+            completions: vec![0; n_devices],
+            dropouts: vec![0; n_devices],
+            heartbeat_s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.status.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.status.is_empty()
+    }
+
+    pub fn status(&self, device: usize) -> DeviceStatus {
+        self.status[device]
+    }
+
+    /// Handle a rendezvous (idempotent; also how a dropped device returns).
+    pub fn join(&mut self, device: usize, now_s: f64) {
+        if self.status[device] != DeviceStatus::Training {
+            self.status[device] = DeviceStatus::Idle;
+        }
+        self.touch(device, now_s);
+    }
+
+    pub fn heartbeat(&mut self, device: usize, now_s: f64) {
+        self.touch(device, now_s);
+    }
+
+    pub fn start_round(&mut self, device: usize, now_s: f64) {
+        self.status[device] = DeviceStatus::Training;
+        self.touch(device, now_s);
+    }
+
+    pub fn end_round(&mut self, device: usize, now_s: f64) {
+        self.status[device] = DeviceStatus::Idle;
+        self.completions[device] = self.completions[device].saturating_add(1);
+        self.touch(device, now_s);
+    }
+
+    pub fn dropout(&mut self, device: usize, now_s: f64) {
+        self.status[device] = DeviceStatus::Dropped;
+        self.dropouts[device] = self.dropouts[device].saturating_add(1);
+        self.touch(device, now_s);
+    }
+
+    fn touch(&mut self, device: usize, now_s: f64) {
+        let t = &mut self.last_seen_s[device];
+        *t = t.max(now_s);
+    }
+
+    /// A device is live at `now_s` if it has been heard from within two
+    /// heartbeat intervals (and is not dropped/offline). With heartbeats
+    /// disabled (`heartbeat_s <= 0`) there is no timeout: any joined,
+    /// non-dropped device counts as live.
+    pub fn live(&self, device: usize, now_s: f64) -> bool {
+        match self.status[device] {
+            DeviceStatus::Offline | DeviceStatus::Dropped => false,
+            DeviceStatus::Idle | DeviceStatus::Training => {
+                self.heartbeat_s <= 0.0
+                    || now_s - self.last_seen_s[device] <= 2.0 * self.heartbeat_s
+            }
+        }
+    }
+
+    pub fn completions(&self, device: usize) -> u32 {
+        self.completions[device]
+    }
+
+    pub fn dropouts(&self, device: usize) -> u32 {
+        self.dropouts[device]
+    }
+
+    /// (offline, idle, training, dropped) population counts.
+    pub fn census(&self) -> (usize, usize, usize, usize) {
+        let mut c = (0, 0, 0, 0);
+        for s in &self.status {
+            match s {
+                DeviceStatus::Offline => c.0 += 1,
+                DeviceStatus::Idle => c.1 += 1,
+                DeviceStatus::Training => c.2 += 1,
+                DeviceStatus::Dropped => c.3 += 1,
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_standby_training_idle() {
+        let mut r = Registry::new(4, 10.0);
+        assert_eq!(r.status(0), DeviceStatus::Offline);
+        assert!(!r.live(0, 0.0));
+        r.join(0, 0.0);
+        assert_eq!(r.status(0), DeviceStatus::Idle);
+        assert!(r.live(0, 5.0));
+        r.start_round(0, 5.0);
+        assert_eq!(r.status(0), DeviceStatus::Training);
+        r.end_round(0, 42.0);
+        assert_eq!(r.status(0), DeviceStatus::Idle);
+        assert_eq!(r.completions(0), 1);
+        assert_eq!(r.census(), (3, 1, 0, 0));
+    }
+
+    #[test]
+    fn liveness_expires_after_two_heartbeats() {
+        let mut r = Registry::new(1, 10.0);
+        r.join(0, 100.0);
+        assert!(r.live(0, 119.9));
+        assert!(!r.live(0, 120.1));
+        r.heartbeat(0, 115.0);
+        assert!(r.live(0, 130.0));
+    }
+
+    #[test]
+    fn disabled_heartbeats_mean_no_timeout() {
+        let mut r = Registry::new(1, 0.0);
+        r.join(0, 0.0);
+        assert!(r.live(0, 1e12)); // joined + never dropped = live forever
+        r.dropout(0, 5.0);
+        assert!(!r.live(0, 6.0)); // dropped still means dead
+    }
+
+    #[test]
+    fn dropout_and_rejoin() {
+        let mut r = Registry::new(2, 10.0);
+        r.join(1, 0.0);
+        r.start_round(1, 0.0);
+        r.dropout(1, 30.0);
+        assert_eq!(r.status(1), DeviceStatus::Dropped);
+        assert!(!r.live(1, 30.0));
+        assert_eq!(r.dropouts(1), 1);
+        assert_eq!(r.completions(1), 0);
+        r.join(1, 60.0);
+        assert_eq!(r.status(1), DeviceStatus::Idle);
+        assert!(r.live(1, 60.0));
+    }
+
+    #[test]
+    fn last_seen_is_monotone() {
+        let mut r = Registry::new(1, 10.0);
+        r.join(0, 50.0);
+        r.heartbeat(0, 20.0); // stale message cannot rewind liveness
+        assert!(r.live(0, 65.0));
+    }
+}

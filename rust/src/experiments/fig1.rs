@@ -125,13 +125,14 @@ pub fn run_fig1d(args: &Args) -> Result<()> {
     let table = srv.importance_table();
 
     // one synchronized bandwidth draw across the whole fleet
-    let mut fleet = crate::fleet::Fleet::new(cfg.fleet, cfg.seed ^ 0x1D);
+    let fleet = crate::fleet::Fleet::new(cfg.fleet, cfg.seed ^ 0x1D);
     let n = fleet.len();
     let mut beta_u = Vec::with_capacity(n);
     {
-        let crate::fleet::Fleet { devices, bandwidth } = &mut fleet;
-        for d in devices.iter_mut() {
-            beta_u.push(d.draw_bandwidth(bandwidth).1);
+        let crate::fleet::Fleet { devices, bandwidth } = &fleet;
+        for (i, d) in devices.iter().enumerate() {
+            let mut rng = crate::util::rng::Rng::stream(cfg.seed ^ 0x1D, 1, i as u64);
+            beta_u.push(d.draw_bandwidth(bandwidth, &mut rng).1);
         }
     }
     let mut csv = String::from("device,importance,cac_ratio,caesar_ratio\n");

@@ -45,8 +45,14 @@ impl Device {
     }
 
     /// Draw this round's (download, upload) bandwidth in bit/s.
-    pub fn draw_bandwidth(&mut self, model: &BandwidthModel) -> (f64, f64) {
-        model.draw(self.group, &mut self.rng)
+    ///
+    /// Takes the caller's per-(round, device) RNG stream rather than the
+    /// device's own generator: bandwidth draws must be a pure function of
+    /// `(seed, round, device)` so the round engine can evaluate them in
+    /// any order (or in parallel) with bit-identical results. The device's
+    /// internal RNG is reserved for fleet dynamics (power-mode re-rolls).
+    pub fn draw_bandwidth(&self, model: &BandwidthModel, rng: &mut Rng) -> (f64, f64) {
+        model.draw(self.group, rng)
     }
 }
 
@@ -240,6 +246,22 @@ mod tests {
         f.on_round_start(MODE_REROLL_ROUNDS + 1);
         let same: Vec<usize> = f.devices.iter().map(|d| d.mode).collect();
         assert_eq!(snapshot, same);
+    }
+
+    #[test]
+    fn bandwidth_draws_are_order_independent() {
+        // the same (base, round, device) stream yields the same draw no
+        // matter how many other devices drew before it
+        let f = Fleet::new(FleetKind::Jetson80, 5);
+        let draw = |d: usize| {
+            let mut rng = Rng::stream(0xBEEF, 9, d as u64);
+            f.devices[d].draw_bandwidth(&f.bandwidth, &mut rng)
+        };
+        let forward: Vec<(f64, f64)> = (0..10).map(draw).collect();
+        let backward: Vec<(f64, f64)> = (0..10).rev().map(draw).collect();
+        for (i, b) in backward.into_iter().rev().enumerate() {
+            assert_eq!(forward[i], b, "device {i}");
+        }
     }
 
     #[test]

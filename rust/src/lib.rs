@@ -7,19 +7,37 @@
 //! AOT-lowered by `python/compile/aot.py` into `artifacts/*.hlo.txt`.
 //!
 //! Public API tour:
-//! * [`coordinator::Server`] — the synchronous FL round loop.
+//! * [`coordinator::Server`] — the synchronous FL round loop. `Server::run`
+//!   is the one-call driver: select → plan → execute → aggregate → record,
+//!   round after round.
+//! * [`engine`] — the event-driven round engine underneath `Server`: a
+//!   coordinator state machine (`Standby → Round(t) → Finished`) exchanging
+//!   typed messages (`Join`/`Heartbeat`/`StartRound`/`EndRound`/`Dropout`)
+//!   with simulated devices, executing device work across worker threads
+//!   (one PJRT runtime per worker) and aggregating through streaming,
+//!   order-exact shards. `cfg.engine.workers` selects the parallelism;
+//!   every worker count is bit-identical for a fixed seed.
 //! * [`schemes`] — Caesar and the paper's baselines behind one trait.
 //! * [`compress`] — the §4.1/§4.2 codecs (native; pinned to the L1 kernels).
 //! * [`caesar`] — Eq. 3–9: staleness, importance, batch-size regulation.
 //! * [`fleet`], [`data`] — the simulated testbed and non-IID datasets.
 //! * [`runtime`] — PJRT CPU execution of the AOT artifacts.
 //! * [`experiments`] — one runner per paper table/figure.
+//!
+//! When to use what: drive [`coordinator::Server::run`] (or `step`) for
+//! experiments and anything that wants the paper's Algorithm 1 semantics —
+//! it owns the fleet, clock and traffic ledger and already routes every
+//! round through the engine. Reach for [`engine::Engine`] directly only
+//! when building a new driver (custom selection loops, asynchronous
+//! protocols, transport integration) that needs the state machine and
+//! sharded aggregation without the Server's bookkeeping.
 
 pub mod caesar;
 pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod experiments;
 pub mod fleet;
 pub mod nn;

@@ -9,6 +9,7 @@
 //! Common overrides: rounds= alpha= tau= batch= lr= p= theta-min= theta-max=
 //! lambda= clusters= devices= seed= target= eval-every= n-train=
 //! trainer=xla|native compression-backend=native|xla out=<dir> quiet
+//! Engine knobs:     engine-workers= agg-group= dropout= heartbeat=
 
 use anyhow::Result;
 
@@ -109,5 +110,6 @@ fn cmd_list() -> Result<()> {
     println!("experiments:  fig1 fig1c fig1d fig5 (=fig6/fig7/table3) fig8 fig9 fig10 all");
     println!("extensions:   ablation-k ablation-lambda");
     println!("also:         run scheme=<s> task=<t> [key=value ...] | info");
+    println!("engine knobs: engine-workers= agg-group= dropout= heartbeat=");
     Ok(())
 }

@@ -47,6 +47,69 @@ where
         .collect()
 }
 
+/// Fan work items over `n_workers` scoped threads like [`scope_map`], with
+/// two differences the round engine needs:
+///
+/// 1. each worker builds per-thread state once via `setup(worker_idx)` —
+///    this is where non-`Sync` resources (a PJRT runtime, a trainer) are
+///    constructed on the thread that will own them;
+/// 2. outputs stream back to `sink` on the calling thread as they
+///    complete (completion order, NOT input order) instead of being
+///    collected, so at most ~`n_workers` outputs are in flight at once.
+///
+/// With `n_workers == 1` everything runs inline on the calling thread in
+/// input order — the degenerate case parallel callers compare against.
+pub fn scope_stream<T, W, S, F>(
+    n_items: usize,
+    n_workers: usize,
+    setup: S,
+    f: F,
+    mut sink: impl FnMut(T),
+) where
+    T: Send,
+    S: Fn(usize) -> W + Sync,
+    F: Fn(&mut W, usize) -> T + Sync,
+{
+    if n_items == 0 {
+        return;
+    }
+    let n_workers = n_workers.clamp(1, n_items);
+    if n_workers == 1 {
+        let mut state = setup(0);
+        for i in 0..n_items {
+            sink(f(&mut state, i));
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    // Bounded channel: a worker that races ahead of the sink blocks after
+    // n_workers undelivered outputs, enforcing the in-flight bound above
+    // (there is no reverse edge, so blocked senders cannot deadlock).
+    let (tx, rx) = std::sync::mpsc::sync_channel::<T>(n_workers);
+    std::thread::scope(|scope| {
+        for wi in 0..n_workers {
+            let tx = tx.clone();
+            let (next, setup, f) = (&next, &setup, &f);
+            scope.spawn(move || {
+                let mut state = setup(wi);
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_items {
+                        break;
+                    }
+                    if tx.send(f(&mut state, i)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+        for t in rx.iter() {
+            sink(t);
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,6 +136,37 @@ mod tests {
     fn single_worker_and_empty() {
         assert_eq!(scope_map(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
         assert_eq!(scope_map(0, 4, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn scope_stream_covers_every_item_with_worker_state() {
+        let setups = AtomicU64::new(0);
+        let mut got: Vec<usize> = Vec::new();
+        scope_stream(
+            200,
+            4,
+            |wi| {
+                setups.fetch_add(1, Ordering::Relaxed);
+                wi // worker state = worker index
+            },
+            |_state, i| i * 2,
+            |v| got.push(v),
+        );
+        // every item exactly once (order is completion order)
+        got.sort_unstable();
+        assert_eq!(got, (0..200).map(|i| i * 2).collect::<Vec<_>>());
+        // setup ran once per worker, not once per item
+        assert!(setups.load(Ordering::Relaxed) <= 4);
+    }
+
+    #[test]
+    fn scope_stream_single_worker_is_in_order() {
+        let mut got = Vec::new();
+        scope_stream(5, 1, |_| (), |_, i| i, |v| got.push(v));
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        let mut none = Vec::new();
+        scope_stream(0, 4, |_| (), |_, i| i, |v: usize| none.push(v));
+        assert!(none.is_empty());
     }
 
     #[test]

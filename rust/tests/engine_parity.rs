@@ -1,0 +1,177 @@
+//! Engine determinism contract: for a fixed seed, the event-driven round
+//! engine produces BIT-IDENTICAL results for any worker count — the
+//! parallel path is indistinguishable from the sequential
+//! `Server::round()` driver — and mid-round dropouts are excluded from
+//! aggregation with consistent staleness/participation tracking.
+
+use caesar_fl::config::{CompressionBackend, ExperimentConfig, TrainerBackend};
+use caesar_fl::coordinator::Server;
+use caesar_fl::engine::Phase;
+use caesar_fl::schemes;
+
+fn tiny_cfg(task: &str, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(task);
+    cfg.trainer = TrainerBackend::Native;
+    cfg.compression = CompressionBackend::Native;
+    cfg.rounds = rounds;
+    cfg.n_train = 1200;
+    cfg.n_test = 300;
+    cfg.tau = 4;
+    cfg.alpha = 0.2;
+    cfg.eval_every = 1;
+    cfg
+}
+
+fn run_with_workers(task: &str, scheme: &str, rounds: usize, workers: usize) -> Server {
+    let mut cfg = tiny_cfg(task, rounds);
+    cfg.engine.workers = workers;
+    let mut srv = Server::new(cfg, schemes::by_name(scheme).unwrap()).unwrap();
+    srv.run().unwrap();
+    srv
+}
+
+/// f32 slices compared by bit pattern — NaN-safe and stricter than `==`.
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: elem {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn parallel_engine_is_bit_identical_to_sequential() {
+    for scheme in ["fedavg", "caesar"] {
+        let seq = run_with_workers("har", scheme, 5, 1);
+        let par = run_with_workers("har", scheme, 5, 4);
+        assert_bits_eq(&seq.global, &par.global, scheme);
+    }
+}
+
+#[test]
+fn every_worker_count_matches_including_odd_ones() {
+    let seq = run_with_workers("har", "caesar", 3, 1);
+    for workers in [2, 3, 7] {
+        let par = run_with_workers("har", "caesar", 3, workers);
+        assert_bits_eq(&seq.global, &par.global, &format!("workers={workers}"));
+    }
+}
+
+#[test]
+fn traffic_and_clock_match_across_worker_counts() {
+    let run = |workers: usize| {
+        let mut cfg = tiny_cfg("har", 4);
+        cfg.engine.workers = workers;
+        let mut srv = Server::new(cfg, schemes::by_name("caesar").unwrap()).unwrap();
+        srv.run().unwrap()
+    };
+    let a = run(1);
+    let b = run(8);
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.traffic_gb.to_bits(), rb.traffic_gb.to_bits(), "round {}", ra.t);
+        assert_eq!(ra.sim_time_s.to_bits(), rb.sim_time_s.to_bits(), "round {}", ra.t);
+        assert_eq!(ra.mean_loss.to_bits(), rb.mean_loss.to_bits(), "round {}", ra.t);
+    }
+}
+
+#[test]
+fn agg_group_is_part_of_the_contract_not_the_worker_count() {
+    // changing agg_group changes the reduction tree (like changing batch
+    // order would) — but for a FIXED agg_group every worker count agrees
+    let run = |workers: usize, group: usize| {
+        let mut cfg = tiny_cfg("har", 3);
+        cfg.engine.workers = workers;
+        cfg.engine.agg_group = group;
+        let mut srv = Server::new(cfg, schemes::by_name("fedavg").unwrap()).unwrap();
+        srv.run().unwrap();
+        srv
+    };
+    let a = run(1, 3);
+    let b = run(5, 3);
+    assert_bits_eq(&a.global, &b.global, "group=3");
+}
+
+#[test]
+fn engine_runs_all_schemes_in_parallel_mode() {
+    for scheme in ["flexcom", "prowd", "pyramidfl", "caesar-br", "caesar-dc"] {
+        let srv = run_with_workers("har", scheme, 2, 4);
+        assert_eq!(srv.engine().stats().rounds, 2, "{scheme}");
+        assert_eq!(srv.engine().phase(), Phase::Standby, "{scheme}");
+    }
+}
+
+#[test]
+fn dropouts_are_excluded_and_tracking_stays_consistent() {
+    let rounds = 6;
+    let mut cfg = tiny_cfg("har", rounds);
+    cfg.engine.workers = 4;
+    cfg.engine.dropout_rate = 0.4;
+    let mut srv = Server::new(cfg, schemes::by_name("fedavg").unwrap()).unwrap();
+    let r = srv.run().unwrap();
+    assert_eq!(r.records.len(), rounds);
+    let stats = srv.engine().stats();
+    assert!(stats.dropouts > 0, "40% dropout over 6 rounds must hit someone");
+    // a dropped device sent no EndRound: completions + dropouts account for
+    // every StartRound the registry saw, and the participation tracker's
+    // staleness only resets for completers
+    let reg = srv.engine().registry();
+    for d in 0..reg.len() {
+        let started = reg.completions(d) + reg.dropouts(d);
+        if srv.tracker().never_participated(d) {
+            // never completed: every start (if any) ended in dropout
+            assert_eq!(reg.completions(d), 0, "device {d}");
+            assert_eq!(started, reg.dropouts(d), "device {d}");
+        } else {
+            assert!(reg.completions(d) > 0, "device {d} tracked but never completed");
+            let s = srv.tracker().staleness(d, rounds + 1);
+            assert!((1..=rounds).contains(&s), "device {d} staleness {s}");
+        }
+    }
+}
+
+#[test]
+fn full_dropout_means_the_model_never_moves() {
+    let mut cfg = tiny_cfg("har", 3);
+    cfg.engine.workers = 2;
+    cfg.engine.dropout_rate = 1.0;
+    let mut srv = Server::new(cfg, schemes::by_name("fedavg").unwrap()).unwrap();
+    let before = srv.global.clone();
+    let r = srv.run().unwrap();
+    assert_bits_eq(&before, &srv.global, "all-dropout run");
+    // downloads still cost traffic; uploads never happen
+    assert!(r.total_traffic_gb() > 0.0);
+    // every device the registry saw this run is dropped or untouched
+    let reg = srv.engine().registry();
+    for d in 0..reg.len() {
+        assert_eq!(reg.completions(d), 0, "device {d}");
+        assert!(srv.tracker().never_participated(d), "device {d}");
+    }
+}
+
+#[test]
+fn dropout_rounds_are_deterministic_across_worker_counts() {
+    let run = |workers: usize| {
+        let mut cfg = tiny_cfg("har", 4);
+        cfg.engine.workers = workers;
+        cfg.engine.dropout_rate = 0.3;
+        let mut srv = Server::new(cfg, schemes::by_name("caesar").unwrap()).unwrap();
+        srv.run().unwrap();
+        srv
+    };
+    let a = run(1);
+    let b = run(6);
+    assert_bits_eq(&a.global, &b.global, "dropout determinism");
+    assert_eq!(a.engine().stats().dropouts, b.engine().stats().dropouts);
+}
+
+#[test]
+fn heartbeats_flow_and_liveness_is_tracked() {
+    let mut cfg = tiny_cfg("har", 2);
+    cfg.engine.workers = 2;
+    cfg.engine.heartbeat_s = 5.0;
+    let mut srv = Server::new(cfg, schemes::by_name("fedavg").unwrap()).unwrap();
+    srv.run().unwrap();
+    let stats = srv.engine().stats();
+    // simulated rounds last tens of seconds → heartbeats must have flowed
+    assert!(stats.heartbeats > 0, "no heartbeats at 5s interval");
+    assert!(stats.messages > stats.heartbeats);
+}

@@ -1,0 +1,204 @@
+//! Vendored offline subset of the `anyhow` API (the build environment has
+//! no network access to crates.io). Implements the slice this workspace
+//! uses: [`Error`], [`Result`], the [`Context`] extension trait for
+//! `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Like the real crate, `Error` deliberately does NOT implement
+//! `std::error::Error` (that keeps the blanket `From<E: Error>` impl
+//! coherent) and the alternate form `{:#}` renders the full context chain
+//! (`outermost: ...: root cause`).
+
+use std::fmt;
+
+/// A string-chained error value. Each `.context(...)` layer wraps the
+/// previous error as its `source`.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from any displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: c.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain outermost-first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut out = vec![self.msg.as_str()];
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        out.into_iter()
+    }
+
+    /// The root cause's message (innermost layer).
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(src) = self.source.as_deref() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = Some(src);
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the std error's own source chain as context layers.
+        let mut layers = vec![e.to_string()];
+        let mut cur = e.source();
+        while let Some(s) = cur {
+            layers.push(s.to_string());
+            cur = s.source();
+        }
+        let mut err = Error::msg(layers.pop().unwrap());
+        while let Some(m) = layers.pop() {
+            err = err.context(m);
+        }
+        err
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $msg))
+    };
+}
+
+/// Return early with an error built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading manifest".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: no such file");
+        assert_eq!(e.root_cause(), "no such file");
+    }
+
+    #[test]
+    fn option_context() {
+        let e = None::<u32>.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky 7");
+        let e = anyhow!("plain {}", 1);
+        assert_eq!(format!("{e}"), "plain 1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn g() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(g().is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real three-layer path executes AOT HLO artifacts through
+//! `xla_extension` (a native C++ library). That toolchain is not present
+//! in the offline build image, so this crate provides the exact API
+//! surface `caesar_fl::runtime` consumes, with one behavioral rule:
+//!
+//! * [`Literal`] is fully functional (host-side tensor container), so the
+//!   literal helpers and their tests work everywhere;
+//! * every PJRT entry point ([`PjRtClient::cpu`] first of all) returns
+//!   [`XlaError`] — `Runtime::open` then fails, `artifacts_available()`
+//!   style guards report false, and every XLA-gated test/bench skips
+//!   cleanly while the rust-native backends carry the workload.
+//!
+//! On a host with the real bindings, add to the workspace root:
+//! ```toml
+//! [patch."<this path>"]  # or just repoint the `xla` path dependency
+//! xla = { path = "/opt/xla-rs" }
+//! ```
+
+use std::fmt;
+
+/// Error type matching the real bindings' `{e:?}` formatting usage.
+pub struct XlaError(pub String);
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: PJRT unavailable (offline `xla` stub build; the native trainer/compression \
+         backends are the supported path here)"
+    ))
+}
+
+/// Element payload of a [`Literal`]. Only the dtypes the workspace moves
+/// across the PJRT boundary are represented.
+#[derive(Clone, Debug, PartialEq)]
+enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Element types storable in a stub [`Literal`].
+pub trait NativeType: Copy + Sized {
+    fn wrap(v: Vec<Self>) -> Payload;
+    fn unwrap(p: &Payload) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Payload {
+        Payload::F32(v)
+    }
+    fn unwrap(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::F32(v) => Some(v.clone()),
+            Payload::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Payload {
+        Payload::I32(v)
+    }
+    fn unwrap(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::I32(v) => Some(v.clone()),
+            Payload::F32(_) => None,
+        }
+    }
+}
+
+/// Host-side tensor: data + dims. Fully functional in the stub.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { payload: T::wrap(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    /// Scalar f32 literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal { payload: Payload::F32(vec![x]), dims: vec![] }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(XlaError(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+        }
+    }
+
+    /// Copy out as a host vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.payload).ok_or_else(|| XlaError("to_vec: dtype mismatch".into()))
+    }
+
+    /// First element as `T` (scalar extraction).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| XlaError("get_first_element: empty literal".into()))
+    }
+
+    /// Decompose a tuple literal. Stub literals are never tuples (they can
+    /// only come back from `exec`, which is unavailable), so this errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module text. Construction requires the native parser.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("HloModuleProto::from_text_file({path})")))
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] is the stub's single gate:
+/// it always errors, so no downstream PJRT call is ever reachable.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_literal"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+        assert_eq!(Literal::scalar(7.5).get_first_element::<f32>().unwrap(), 7.5);
+    }
+
+    #[test]
+    fn pjrt_is_gated() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e:?}").contains("stub"));
+    }
+}
