@@ -26,4 +26,7 @@ fi
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== bench_wire smoke =="
+CAESAR_BENCH_QUICK=1 cargo bench --bench bench_wire
+
 echo "CI OK"

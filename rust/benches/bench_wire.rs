@@ -1,0 +1,125 @@
+//! Wire-format benchmark: payload encode/decode throughput per codec, and
+//! sparse-payload vs densified aggregation at fleet scale (100 / 1k / 10k
+//! devices' uploads folded into one round's shards).
+//!
+//! Results are written to BENCH_wire.json in the current directory with
+//! `"placeholder": false` (the flag marks hand-authored files committed
+//! from toolchain-less environments; this binary always measures).
+//! Quick mode: CAESAR_BENCH_QUICK=1 (shorter cases, skips the 10k scale).
+
+use std::time::Instant;
+
+use caesar_fl::bench::Bench;
+use caesar_fl::compress::{quant, topk};
+use caesar_fl::engine::AggregatorShard;
+use caesar_fl::util::json::{self, Json};
+use caesar_fl::util::rng::Rng;
+use caesar_fl::wire::Payload;
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn payloads_for(n: usize, seed: u64) -> Vec<(&'static str, Payload)> {
+    let x = randn(n, seed);
+    let noise: Vec<f32> = {
+        let mut rng = Rng::new(seed ^ 0xA0);
+        (0..n).map(|_| rng.f32()).collect()
+    };
+    let levels = quant::levels_for_bits(4);
+    let (norm, codes) = quant::quantize_codes(&x, levels, Some(&noise));
+    vec![
+        ("dense", Payload::Dense(x.clone())),
+        ("topk θ=0.9", topk::topk_encode(&x, 0.9).0),
+        (
+            "caesar θ=0.35",
+            Payload::CaesarSplit(caesar_fl::compress::caesar_compress(&x, 0.35)),
+        ),
+        ("quant 4b", Payload::Quant { bits: 4, levels, norm, codes }),
+    ]
+}
+
+fn main() {
+    let quick = std::env::var("CAESAR_BENCH_QUICK").is_ok();
+    let n_params = if quick { 16_384 } else { 131_072 };
+    let mut rows: Vec<Json> = Vec::new();
+
+    // --- encode / decode throughput per codec ---
+    let b = Bench::new(&format!("payload encode (P={n_params})")).quick();
+    for (name, p) in payloads_for(n_params, 1) {
+        let r = b.case(name, n_params, || {
+            std::hint::black_box(std::hint::black_box(&p).encode());
+        });
+        let mut o = Json::obj();
+        o.set("case", json::s(&r.name)).set("mean_ns", json::num(r.mean_ns));
+        rows.push(o);
+    }
+    let b = Bench::new(&format!("payload decode (P={n_params})")).quick();
+    for (name, p) in payloads_for(n_params, 2) {
+        let enc = p.encode();
+        let r = b.case(name, n_params, || {
+            std::hint::black_box(std::hint::black_box(&enc).decode());
+        });
+        let mut o = Json::obj();
+        o.set("case", json::s(&r.name)).set("mean_ns", json::num(r.mean_ns));
+        rows.push(o);
+    }
+
+    // --- sparse vs dense aggregation of one round's uploads ---
+    // α = 0.1 participants, Top-K θ=0.9 uploads: the sparse path folds
+    // O(kept) per device instead of densifying to O(n).
+    let scales: &[usize] = if quick { &[100, 1_000] } else { &[100, 1_000, 10_000] };
+    println!("\n== bench: sparse vs dense aggregation (P={n_params}, θ=0.9) ==");
+    println!(
+        "{:>8}  {:>12}  {:>14}  {:>14}  {:>8}",
+        "devices", "participants", "dense ms", "sparse ms", "speedup"
+    );
+    let mut agg_rows: Vec<Json> = Vec::new();
+    for &devices in scales {
+        let participants = (devices / 10).max(1);
+        let payloads: Vec<Payload> = (0..participants)
+            .map(|d| topk::topk_encode(&randn(n_params, 0xB0 + d as u64), 0.9).0)
+            .collect();
+        let expect: Vec<usize> = (0..participants).collect();
+        let reps = if quick { 2 } else { 5 };
+        let time_ms = |sparse: bool| -> f64 {
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                let mut shard = AggregatorShard::new(0, n_params, expect.clone());
+                for (d, p) in payloads.iter().enumerate() {
+                    if sparse {
+                        shard.fold_payload(d, p, 1.0);
+                    } else {
+                        shard.fold(d, &p.to_dense(), 1.0);
+                    }
+                }
+                std::hint::black_box(&shard);
+            }
+            t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+        };
+        let dense_ms = time_ms(false);
+        let sparse_ms = time_ms(true);
+        println!(
+            "{devices:>8}  {participants:>12}  {dense_ms:>14.2}  {sparse_ms:>14.2}  {:>7.2}x",
+            dense_ms / sparse_ms
+        );
+        let mut o = Json::obj();
+        o.set("devices", json::num(devices as f64))
+            .set("participants", json::num(participants as f64))
+            .set("dense_ms", json::num(dense_ms))
+            .set("sparse_ms", json::num(sparse_ms))
+            .set("speedup", json::num(dense_ms / sparse_ms));
+        agg_rows.push(o);
+    }
+
+    let mut out = Json::obj();
+    out.set("bench", json::s("wire"))
+        .set("n_params", json::num(n_params as f64))
+        .set("quick", Json::Bool(quick))
+        .set("placeholder", Json::Bool(false))
+        .set("codec_cases", Json::Arr(rows))
+        .set("aggregation", Json::Arr(agg_rows));
+    std::fs::write("BENCH_wire.json", out.to_string()).expect("write BENCH_wire.json");
+    println!("wrote BENCH_wire.json");
+}

@@ -50,10 +50,25 @@ impl CompressedModel {
         super::traffic::caesar_model_bits(self.len(), self.n_quantized())
     }
 
-    /// Serialize to the actual wire format (bitmap + signs + fp32 payload +
-    /// 2 scalars). Used by tests to prove the accounting matches reality.
-    pub fn encode(&self) -> Vec<u8> {
-        let mut w = BitWriter::new();
+    /// Prior-free reconstruction: `sign·avg_abs` at quantized slots, kept
+    /// values elsewhere — what a receiver WITHOUT a stale local model can
+    /// compute. Receivers with one use [`caesar_recover`] instead.
+    pub fn naive_reconstruction(&self) -> Vec<f32> {
+        (0..self.len())
+            .map(|i| {
+                if self.mask[i] {
+                    self.sign[i] as f32 * self.avg_abs
+                } else {
+                    self.kept[i]
+                }
+            })
+            .collect()
+    }
+
+    /// Serialize to the wire format (bitmap + signs + fp32 payload +
+    /// 2 scalars) into an in-progress writer. This IS the byte stream the
+    /// simulator moves for a `wire::Payload::CaesarSplit` download.
+    pub fn encode_into(&self, w: &mut BitWriter) {
         for &m in &self.mask {
             w.push_bit(m);
         }
@@ -66,12 +81,17 @@ impl CompressedModel {
         }
         w.push_f32(self.avg_abs);
         w.push_f32(self.max_abs);
+    }
+
+    /// [`encode_into`] to a fresh byte buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = BitWriter::new();
+        self.encode_into(&mut w);
         w.into_bytes()
     }
 
-    /// Inverse of [`encode`]; `n` is the parameter count.
-    pub fn decode(bytes: &[u8], n: usize) -> CompressedModel {
-        let mut r = BitReader::new(bytes);
+    /// Inverse of [`encode_into`]; `n` is the parameter count.
+    pub fn decode_from(r: &mut BitReader, n: usize) -> CompressedModel {
         let mask: Vec<bool> = (0..n).map(|_| r.read_bit()).collect();
         let mut kept = vec![0.0f32; n];
         let mut sign = vec![0i8; n];
@@ -85,6 +105,11 @@ impl CompressedModel {
         let avg_abs = r.read_f32();
         let max_abs = r.read_f32();
         CompressedModel { kept, mask, sign, avg_abs, max_abs }
+    }
+
+    /// Inverse of [`encode`]; `n` is the parameter count.
+    pub fn decode(bytes: &[u8], n: usize) -> CompressedModel {
+        Self::decode_from(&mut BitReader::new(bytes), n)
     }
 }
 

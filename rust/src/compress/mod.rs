@@ -11,7 +11,14 @@
 //! * [`topk`] — Top-K gradient sparsification (§4.2 upload codec, also the
 //!   FIC/CAC/FlexCom baselines' codec).
 //! * [`quant`] — QSGD-style stochastic uniform quantization (ProWD).
-//! * [`traffic`] — exact wire-format bit accounting for all of the above.
+//! * [`traffic`] — legacy closed-form bit accounting, kept as the
+//!   cross-check for the *measured* wire lengths (`crate::wire`), plus the
+//!   paper-scale [`traffic::PayloadScale`] and [`traffic::TrafficMeter`].
+//!
+//! Codecs emit first-class [`crate::wire::Payload`]s ([`topk::topk_encode`],
+//! [`quant::quantize_codes`], `CompressedModel` wrapped by
+//! `Payload::CaesarSplit`); the dense helpers remain as bit-identical
+//! views for the kernel-parity pins.
 
 pub mod caesar_model;
 pub mod quant;
@@ -19,5 +26,5 @@ pub mod topk;
 pub mod traffic;
 
 pub use caesar_model::{caesar_compress, caesar_recover, CompressedModel};
-pub use quant::quantize_stochastic;
-pub use topk::topk_sparsify;
+pub use quant::{quantize_floor, quantize_stochastic};
+pub use topk::{topk_encode, topk_sparsify};

@@ -1,26 +1,122 @@
 //! QSGD-style stochastic uniform quantization — the codec behind the ProWD
 //! baseline (bandwidth-chosen bit-width). Mirrors the L1 `quantize` kernel:
 //! q(x) = sign(x) · ⌊|x|/norm·s + u⌋/s · norm with norm = max|x|.
+//!
+//! The wire-facing form is integer *codes* (`quantize_codes` /
+//! `dequantize_code`): one sign bit plus a bucket index per element, which
+//! is exactly what `wire::Payload::Quant` serializes. The dense helpers
+//! below are thin reconstructions over the codes and stay bit-identical to
+//! the historical element-wise formula.
+//!
+//! **RNG contract** (the codec layer depends on this for reproducibility):
+//! a quantize call consumes exactly `x.len()` uniform draws from the
+//! device stream iff [`noise_needed`] holds — i.e. the input has a nonzero
+//! norm AND the bucket count is below [`DETERMINISTIC_LEVELS`]. In every
+//! other case (zero vector, or `bits >= 23`-style wide quantizers whose
+//! buckets are finer than f32 resolution) the stream is left untouched and
+//! the deterministic floor path is used.
+
+/// Bucket count at/above which stochastic rounding is dropped: from
+/// `levels_for_bits(23)` = 2^23−1 buckets up, the quantization step is at
+/// or below the f32 mantissa resolution of the scaled input, so the codec
+/// uses the deterministic floor and skips the per-element draws entirely
+/// (the `bits >= 23` wide-width case).
+pub const DETERMINISTIC_LEVELS: u32 = (1 << 23) - 1;
+
+/// Whether the stochastic path (and therefore `x.len()` RNG draws) is
+/// actually needed. See the module-level RNG contract.
+pub fn noise_needed(norm: f32, levels: u32) -> bool {
+    norm != 0.0 && levels < DETERMINISTIC_LEVELS
+}
+
+/// Levels for a given bit-width: with 1 sign bit + b value bits,
+/// s = 2^b − 1 buckets. Capped at 24 value bits: every `2^b − 1` up to
+/// `2^24 − 1` is exactly representable in f32 (no `.min(s)` rounding trap
+/// past the mantissa), and finer buckets are below f32 resolution anyway —
+/// widths ≥ 23 already take the deterministic path ([`noise_needed`]).
+pub fn levels_for_bits(bits: u32) -> u32 {
+    (1u32 << bits.clamp(1, 24)) - 1
+}
+
+/// Quantize to integer wire codes: returns `(norm, codes)` with
+/// `code = (q << 1) | negative` and bucket `q ∈ [0, levels]`.
+/// `noise = None` selects the deterministic floor path (u = 0).
+pub fn quantize_codes(x: &[f32], levels: u32, noise: Option<&[f32]>) -> (f32, Vec<u32>) {
+    if let Some(u) = noise {
+        assert_eq!(x.len(), u.len());
+    }
+    assert!(levels >= 1);
+    let norm = x.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+    (norm, codes_for(x, levels, noise, norm))
+}
+
+/// The code map given a precomputed `norm` (single max-norm pass for
+/// callers that already needed it for the RNG gate).
+fn codes_for(x: &[f32], levels: u32, noise: Option<&[f32]>, norm: f32) -> Vec<u32> {
+    let s = levels as f32;
+    x.iter()
+        .enumerate()
+        .map(|(i, &xi)| {
+            // sign(0) = +1, matching the historical `xi >= 0.0` test
+            let neg = if xi >= 0.0 { 0u32 } else { 1 };
+            let q = if norm == 0.0 {
+                0
+            } else {
+                let u = noise.map_or(0.0, |u| u[i]);
+                let scaled = xi.abs() / norm * s;
+                (scaled + u).floor().min(s) as u32
+            };
+            (q << 1) | neg
+        })
+        .collect()
+}
+
+/// Build the `Quant` wire payload for `x` — the ONE place that owns the
+/// RNG gate ([`noise_needed`]), the single max-norm pass, and the payload
+/// assembly, shared by the native and XLA codec paths. The drawn noise is
+/// returned alongside (the XLA kernel consumes it as an input literal);
+/// `None` means the deterministic path ran and no draws were consumed.
+pub fn quant_payload(
+    x: &[f32],
+    bits: u32,
+    rng: &mut crate::util::rng::Rng,
+) -> (crate::wire::Payload, Option<Vec<f32>>) {
+    let levels = levels_for_bits(bits);
+    let norm = x.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+    let noise: Option<Vec<f32>> = if noise_needed(norm, levels) {
+        Some((0..x.len()).map(|_| rng.f32()).collect())
+    } else {
+        None
+    };
+    let codes = codes_for(x, levels, noise.as_deref(), norm);
+    (crate::wire::Payload::Quant { bits: bits.max(1), levels, norm, codes }, noise)
+}
+
+/// Reconstruct the f32 value of one wire code — bit-identical to what the
+/// dense quantizers produce for the same element (same expression, same
+/// operation order).
+#[inline]
+pub fn dequantize_code(code: u32, levels: u32, norm: f32) -> f32 {
+    if norm == 0.0 {
+        return 0.0;
+    }
+    let sign = if code & 1 == 0 { 1.0f32 } else { -1.0 };
+    let q = (code >> 1) as f32;
+    sign * q / levels as f32 * norm
+}
 
 /// Quantize `x` to `levels` buckets using the caller-supplied uniform[0,1)
 /// `noise` (same-length). Deterministic given its inputs.
 pub fn quantize_stochastic(x: &[f32], levels: u32, noise: &[f32]) -> Vec<f32> {
-    assert_eq!(x.len(), noise.len());
-    assert!(levels >= 1);
-    let norm = x.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
-    if norm == 0.0 {
-        return vec![0.0; x.len()];
-    }
-    let s = levels as f32;
-    x.iter()
-        .zip(noise)
-        .map(|(&xi, &u)| {
-            let scaled = xi.abs() / norm * s;
-            let q = (scaled + u).floor().min(s);
-            let sign = if xi >= 0.0 { 1.0 } else { -1.0 };
-            sign * q / s * norm
-        })
-        .collect()
+    let (norm, codes) = quantize_codes(x, levels, Some(noise));
+    codes.iter().map(|&c| dequantize_code(c, levels, norm)).collect()
+}
+
+/// Deterministic (u = 0) quantization — the wide-width / zero-norm path
+/// where the stochastic draws are skipped (see [`noise_needed`]).
+pub fn quantize_floor(x: &[f32], levels: u32) -> Vec<f32> {
+    let (norm, codes) = quantize_codes(x, levels, None);
+    codes.iter().map(|&c| dequantize_code(c, levels, norm)).collect()
 }
 
 /// Map a bandwidth fraction (0 = worst, 1 = best observed) to a
@@ -31,11 +127,6 @@ pub fn bits_for_bandwidth(frac: f64, min_bits: u32, max_bits: u32) -> u32 {
     min_bits + ((max_bits - min_bits) as f64 * f).round() as u32
 }
 
-/// Levels for a given bit-width: with 1 sign bit + b value bits,
-/// s = 2^b − 1 buckets.
-pub fn levels_for_bits(bits: u32) -> u32 {
-    (1u32 << bits.clamp(1, 16)) - 1
-}
 
 #[cfg(test)]
 mod tests {
@@ -116,6 +207,67 @@ mod tests {
             if *q != 0.0 {
                 assert_eq!(q.signum(), xi.signum());
             }
+        }
+    }
+
+    #[test]
+    fn codes_reconstruct_bit_identically() {
+        let x = randn(4096, 10);
+        let u = unif(4096, 11);
+        for levels in [1u32, 3, 15, 255, 65_535] {
+            let dense = quantize_stochastic(&x, levels, &u);
+            let (norm, codes) = quantize_codes(&x, levels, Some(&u));
+            for (i, &c) in codes.iter().enumerate() {
+                let v = dequantize_code(c, levels, norm);
+                assert_eq!(v.to_bits(), dense[i].to_bits(), "levels={levels} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn floor_path_is_deterministic_and_bounded() {
+        let x = randn(1024, 12);
+        let q = quantize_floor(&x, 15);
+        assert_eq!(q, quantize_floor(&x, 15));
+        let norm = x.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        for (a, b) in x.iter().zip(&q) {
+            // floor always rounds toward zero: |q| <= |x|, within a bucket
+            assert!(b.abs() <= a.abs() + 1e-6);
+            assert!((a - b).abs() <= norm / 15.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn noise_gate_matches_contract() {
+        assert!(noise_needed(1.0, 15));
+        assert!(!noise_needed(0.0, 15), "zero norm never draws");
+        assert!(!noise_needed(1.0, DETERMINISTIC_LEVELS), "wide widths never draw");
+        assert!(noise_needed(1.0, DETERMINISTIC_LEVELS - 1));
+        // the wide-width arm is REACHABLE: bits >= 23 maps to levels at or
+        // above the threshold (levels_for_bits caps at 24 value bits)
+        assert!(!noise_needed(1.0, levels_for_bits(23)));
+        assert!(!noise_needed(1.0, levels_for_bits(28)));
+        assert!(noise_needed(1.0, levels_for_bits(22)));
+        assert_eq!(levels_for_bits(28), (1 << 24) - 1);
+    }
+
+    #[test]
+    fn wide_width_payload_consumes_no_rng() {
+        let x = randn(64, 20);
+        let mut rng = Rng::new(21);
+        let before = rng.clone();
+        let (payload, noise) = quant_payload(&x, 23, &mut rng);
+        assert!(noise.is_none(), "bits=23 must take the deterministic path");
+        let mut b = before;
+        assert_eq!(rng.next_u64(), b.next_u64(), "rng advanced on wide-width quantize");
+        // and the payload is the deterministic floor reconstruction
+        if let crate::wire::Payload::Quant { levels, norm, codes, .. } = payload {
+            let want = quantize_floor(&x, levels);
+            for (i, &c) in codes.iter().enumerate() {
+                assert_eq!(dequantize_code(c, levels, norm).to_bits(), want[i].to_bits());
+            }
+        } else {
+            panic!("expected Quant payload");
         }
     }
 

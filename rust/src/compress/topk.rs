@@ -3,6 +3,13 @@
 //!
 //! `ratio` is the *dropped* fraction: k = n − floor(ratio·n) largest-|g|
 //! elements survive. Inclusive-tie semantics match the L1 kernel.
+//!
+//! The wire-facing form is [`topk_encode`], which produces a
+//! `wire::Payload::TopK` (indices + values) in one pass; [`topk_sparsify`]
+//! is its densified view kept for the kernel-parity pins and callers that
+//! want an aggregation-ready dense vector.
+
+use crate::wire::Payload;
 
 /// Sparse result of a Top-K pass.
 #[derive(Clone, Debug, PartialEq)]
@@ -36,22 +43,34 @@ pub fn keep_threshold(g: &[f32], ratio: f64) -> (f32, usize) {
     (f32::from_bits(*v), drop)
 }
 
-/// Drop the `ratio` fraction of smallest-|g| elements.
-pub fn topk_sparsify(g: &[f32], ratio: f64) -> SparseGrad {
+/// One-pass Top-K encode: runs the threshold selection once and emits the
+/// sparse wire payload (ascending indices + kept values). The realized
+/// threshold is returned alongside so callers never re-run the selection
+/// (`CodecEngine::download` used to sort the tensor twice).
+pub fn topk_encode(g: &[f32], ratio: f64) -> (Payload, f32) {
     let n = g.len();
     let (thr, drop) = keep_threshold(g, ratio);
     if drop >= n {
-        return SparseGrad { dense: vec![0.0; n], kept: 0 };
+        return (Payload::TopK { n, indices: Vec::new(), values: Vec::new() }, thr);
     }
-    let mut dense = vec![0.0f32; n];
-    let mut kept = 0usize;
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
     for i in 0..n {
         if g[i].abs() >= thr {
-            dense[i] = g[i];
-            kept += 1;
+            indices.push(i as u32);
+            values.push(g[i]);
         }
     }
-    SparseGrad { dense, kept }
+    (Payload::TopK { n, indices, values }, thr)
+}
+
+/// Drop the `ratio` fraction of smallest-|g| elements (densified view of
+/// [`topk_encode`]; bit-identical to the historical eager implementation).
+pub fn topk_sparsify(g: &[f32], ratio: f64) -> SparseGrad {
+    let (payload, _) = topk_encode(g, ratio);
+    let Payload::TopK { ref indices, .. } = payload else { unreachable!() };
+    let kept = indices.len();
+    SparseGrad { dense: payload.to_dense(), kept }
 }
 
 #[cfg(test)]

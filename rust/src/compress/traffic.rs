@@ -1,7 +1,15 @@
-//! Exact wire-format bit accounting.
+//! Closed-form wire-size accounting — now the *cross-check*, not the
+//! source of truth.
 //!
-//! The paper reports traffic as θ·Q (ignoring position metadata). We
-//! account the *real* wire formats — position bitmaps / index lists, side
+//! Production traffic numbers are measured from actually serialized
+//! payloads (`crate::wire`): `EncodedPayload::bits` is what the meter and
+//! the transfer-time model consume. The per-codec formulas below survive
+//! as debug-assert cross-checks inside `wire::Payload::encode` and as the
+//! pinned equalities in `tests/wire_format.rs`, so serialization and
+//! accounting can never silently drift apart again.
+//!
+//! The paper reports traffic as θ·Q (ignoring position metadata). The wire
+//! formats carry the real metadata — position bitmaps / index lists, side
 //! scalars — so traffic numbers are honest; DESIGN.md notes where this
 //! differs from the paper's idealized accounting (it is a few percent).
 //!

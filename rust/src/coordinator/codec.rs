@@ -1,6 +1,16 @@
 //! Codec execution engine — applies a [`DownloadCodec`]/[`UploadCodec`]
 //! through either the rust-native implementations in `compress/` or the
-//! AOT-lowered L1 Pallas kernels via the PJRT runtime.
+//! AOT-lowered L1 Pallas kernels via the PJRT runtime, producing and
+//! consuming *serialized* [`wire::EncodedPayload`]s.
+//!
+//! The split API mirrors the real protocol: `encode_download` runs on the
+//! PS, the returned bytes are what crosses the wire, and
+//! `recover_download` runs on the device over the decoded payload;
+//! `encode_upload` runs on the device and the coordinator folds the
+//! decoded payload into its aggregation shard. Every reported wire size is
+//! the *measured* serialized length (`EncodedPayload::bits`) — the legacy
+//! `compress::traffic` formulas are debug-assert cross-checks inside
+//! `wire::Payload::encode`.
 //!
 //! Both backends produce the same numerics (pinned by
 //! `tests/compress_parity.rs`); the native backend works at any shape and
@@ -9,23 +19,34 @@
 use anyhow::{anyhow, Result};
 
 use crate::compress::caesar_model::CompressedModel;
-use crate::compress::{self, quant, traffic};
+use crate::compress::{self, quant};
 use crate::config::CompressionBackend;
 use crate::runtime::{lit_f32, lit_scalar, to_scalar_f32, to_vec_f32, Runtime};
 use crate::schemes::{DownloadCodec, UploadCodec};
 use crate::util::rng::Rng;
+use crate::wire::{EncodedPayload, Payload};
 
 /// One device's view of a compressed download after recovery, plus the
-/// exact wire size that was transferred.
+/// measured wire size that was transferred.
 pub struct Recovered {
     pub model: Vec<f32>,
     pub wire_bits: usize,
 }
 
-/// A compressed upload ready for aggregation (dense, dropped = 0).
+/// A compressed upload decoded back to dense (aggregation-ready) form,
+/// plus the measured wire size.
 pub struct Uploaded {
     pub grad: Vec<f32>,
     pub wire_bits: usize,
+}
+
+/// `CaesarSplit` needs a stale local model on the receiver; schemes send
+/// `Full` to first-time participants. Degrade gracefully if one slips by.
+pub fn effective_download(codec: DownloadCodec, has_local: bool) -> DownloadCodec {
+    match codec {
+        DownloadCodec::CaesarSplit { .. } if !has_local => DownloadCodec::Full,
+        c => c,
+    }
 }
 
 /// Stateless codec executor bound to a backend.
@@ -55,8 +76,70 @@ impl<'a> CodecEngine<'a> {
         self.rt.expect("xla backend without runtime")
     }
 
-    /// Compress the global model `w` for one device, transfer it, and
-    /// recover on-device using the stale `local` model (if any).
+    /// PS-side: compress + serialize the global model for one device. The
+    /// returned bytes are the wire truth; `bits` is their measured length.
+    ///
+    /// Callers that may serve a receiver WITHOUT a stale local model must
+    /// resolve [`effective_download`] first (CaesarSplit degrades to Full
+    /// there) — [`CodecEngine::download`] and the round engine both do.
+    /// Encoding CaesarSplit for a local-less receiver is not an error, but
+    /// recovery can only produce the naive sign·avg reconstruction.
+    pub fn encode_download(
+        &self,
+        codec: DownloadCodec,
+        w: &[f32],
+        rng: &mut Rng,
+    ) -> Result<EncodedPayload> {
+        let payload = match self.backend {
+            CompressionBackend::Native => codec.encode_payload(w, rng),
+            CompressionBackend::Xla => match codec {
+                DownloadCodec::Full => Payload::Dense(w.to_vec()),
+                DownloadCodec::CaesarSplit { ratio } => self.caesar_payload_xla(w, ratio)?,
+                DownloadCodec::TopK { ratio } => self.topk_payload_xla(w, ratio)?,
+                DownloadCodec::Quant { bits } => self.quant_payload_xla(w, bits, rng)?,
+            },
+        };
+        Ok(payload.encode())
+    }
+
+    /// Device-side: decode the received bytes and reconstruct the dense
+    /// model, consulting the stale `local` model for the codecs that need
+    /// it (`CaesarSplit` recovery, `TopK` hole-filling).
+    pub fn recover_download(
+        &self,
+        enc: &EncodedPayload,
+        local: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        match enc.decode() {
+            Payload::CaesarSplit(cm) => match local {
+                Some(l) => match self.backend {
+                    CompressionBackend::Native => Ok(compress::caesar_recover(&cm, l)),
+                    CompressionBackend::Xla => self.recover_xla(&cm, l),
+                },
+                // no prior: the receiver can only build the naive
+                // sign·avg reconstruction
+                None => Ok(cm.naive_reconstruction()),
+            },
+            Payload::TopK { n, indices, values } => {
+                let mut model: Vec<f32> = match local {
+                    Some(l) => {
+                        debug_assert_eq!(l.len(), n);
+                        l.to_vec()
+                    }
+                    None => vec![0.0; n],
+                };
+                for (i, v) in indices.into_iter().zip(values) {
+                    model[i as usize] = v;
+                }
+                Ok(model)
+            }
+            // Dense moves its vector out; Quant dequantizes
+            other => Ok(other.into_dense()),
+        }
+    }
+
+    /// Composition used by sequential drivers, tools and tests: encode,
+    /// "transfer", decode + recover. `wire_bits` is the measured length.
     pub fn download(
         &self,
         codec: DownloadCodec,
@@ -64,132 +147,138 @@ impl<'a> CodecEngine<'a> {
         local: Option<&[f32]>,
         rng: &mut Rng,
     ) -> Result<Recovered> {
+        let enc = self.encode_download(effective_download(codec, local.is_some()), w, rng)?;
+        let model = self.recover_download(&enc, local)?;
+        Ok(Recovered { model, wire_bits: enc.bits })
+    }
+
+    /// Device-side: compress + serialize the local gradient for upload.
+    pub fn encode_upload(
+        &self,
+        codec: UploadCodec,
+        g: &[f32],
+        rng: &mut Rng,
+    ) -> Result<EncodedPayload> {
+        let payload = match self.backend {
+            CompressionBackend::Native => codec.encode_payload(g, rng),
+            CompressionBackend::Xla => match codec {
+                UploadCodec::Full => Payload::Dense(g.to_vec()),
+                UploadCodec::TopK { ratio } => self.topk_payload_xla(g, ratio)?,
+                UploadCodec::Quant { bits } => self.quant_payload_xla(g, bits, rng)?,
+            },
+        };
+        Ok(payload.encode())
+    }
+
+    /// Composition for tools and tests: encode then decode back to a
+    /// dense, aggregation-ready gradient (the engine's hot path folds the
+    /// decoded payload sparsely instead — `AggregatorShard::fold_payload`).
+    pub fn upload(&self, codec: UploadCodec, g: &[f32], rng: &mut Rng) -> Result<Uploaded> {
+        let enc = self.encode_upload(codec, g, rng)?;
+        Ok(Uploaded { grad: enc.decode().into_dense(), wire_bits: enc.bits })
+    }
+
+    /// Caesar compress through the L1 kernel, canonicalized to the wire
+    /// invariants (kept = 0 and sign ∈ {±1} at quantized slots, sign = 0
+    /// elsewhere).
+    fn caesar_payload_xla(&self, w: &[f32], ratio: f64) -> Result<Payload> {
         let n = w.len();
-        match codec {
-            DownloadCodec::Full => Ok(Recovered {
-                model: w.to_vec(),
-                wire_bits: traffic::full_model_bits(n),
-            }),
-            DownloadCodec::CaesarSplit { ratio } => {
-                let Some(local) = local else {
-                    // no local model → the scheme should have sent Full;
-                    // degrade gracefully to full precision
-                    return self.download(DownloadCodec::Full, w, None, rng);
-                };
-                match self.backend {
-                    CompressionBackend::Native => {
-                        let cm = compress::caesar_compress(w, ratio);
-                        let wire_bits = cm.wire_bits();
-                        Ok(Recovered { model: compress::caesar_recover(&cm, local), wire_bits })
-                    }
-                    CompressionBackend::Xla => {
-                        let rt = self.xla();
-                        let out = rt.exec(
-                            &format!("compress_{}", self.task),
-                            &[lit_f32(w, &[n as i64])?, lit_scalar(ratio as f32)],
-                        )?;
-                        let (kept, mask, sign) =
-                            (to_vec_f32(&out[0])?, to_vec_f32(&out[1])?, to_vec_f32(&out[2])?);
-                        let (avg, max) = (to_scalar_f32(&out[3])?, to_scalar_f32(&out[4])?);
-                        let n_quant = mask.iter().filter(|&&m| m > 0.5).count();
-                        let wire_bits = traffic::caesar_model_bits(n, n_quant);
-                        let rec = rt.exec(
-                            &format!("recover_{}", self.task),
-                            &[
-                                lit_f32(&kept, &[n as i64])?,
-                                lit_f32(&mask, &[n as i64])?,
-                                lit_f32(&sign, &[n as i64])?,
-                                lit_scalar(avg),
-                                lit_scalar(max),
-                                lit_f32(local, &[n as i64])?,
-                            ],
-                        )?;
-                        Ok(Recovered { model: to_vec_f32(&rec[0])?, wire_bits })
-                    }
+        let out = self.xla().exec(
+            &format!("compress_{}", self.task),
+            &[lit_f32(w, &[n as i64])?, lit_scalar(ratio as f32)],
+        )?;
+        let (kept_raw, mask_raw, sign_raw) =
+            (to_vec_f32(&out[0])?, to_vec_f32(&out[1])?, to_vec_f32(&out[2])?);
+        let (avg_abs, max_abs) = (to_scalar_f32(&out[3])?, to_scalar_f32(&out[4])?);
+        let mask: Vec<bool> = mask_raw.iter().map(|&m| m > 0.5).collect();
+        let mut kept = vec![0.0f32; n];
+        let mut sign = vec![0i8; n];
+        for i in 0..n {
+            if mask[i] {
+                sign[i] = if sign_raw[i] >= 0.0 { 1 } else { -1 };
+            } else {
+                kept[i] = kept_raw[i];
+            }
+        }
+        Ok(Payload::CaesarSplit(CompressedModel { kept, mask, sign, avg_abs, max_abs }))
+    }
+
+    /// Caesar recovery through the L1 kernel.
+    fn recover_xla(&self, cm: &CompressedModel, local: &[f32]) -> Result<Vec<f32>> {
+        let n = cm.len();
+        let mask_f: Vec<f32> = cm.mask.iter().map(|&m| if m { 1.0 } else { 0.0 }).collect();
+        let sign_f: Vec<f32> = cm.sign.iter().map(|&s| s as f32).collect();
+        let rec = self.xla().exec(
+            &format!("recover_{}", self.task),
+            &[
+                lit_f32(&cm.kept, &[n as i64])?,
+                lit_f32(&mask_f, &[n as i64])?,
+                lit_f32(&sign_f, &[n as i64])?,
+                lit_scalar(cm.avg_abs),
+                lit_scalar(cm.max_abs),
+                lit_f32(local, &[n as i64])?,
+            ],
+        )?;
+        to_vec_f32(&rec[0])
+    }
+
+    /// Top-K through the L1 kernel: the kernel produces the dense masked
+    /// vector; ONE native threshold selection (parity-pinned to the
+    /// kernel) realizes the index set — no second sort.
+    fn topk_payload_xla(&self, x: &[f32], ratio: f64) -> Result<Payload> {
+        let n = x.len();
+        let out = self.xla().exec(
+            &format!("topk_{}", self.task),
+            &[lit_f32(x, &[n as i64])?, lit_scalar(ratio as f32)],
+        )?;
+        let dense = to_vec_f32(&out[0])?;
+        let (thr, drop) = compress::topk::keep_threshold(x, ratio);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        if drop < n {
+            for i in 0..n {
+                if x[i].abs() >= thr {
+                    indices.push(i as u32);
+                    values.push(dense[i]);
                 }
             }
-            DownloadCodec::TopK { ratio } => {
-                // GM-FIC / GM-CAC / Caesar-BR download: the (1-ratio)
-                // largest-|w| parameters travel; dropped positions are
-                // filled from the stale local model (zeros if none).
-                let (dense, kept) = self.topk_dense(w, ratio)?;
-                let thr = compress::topk::keep_threshold(w, ratio).0;
-                let model: Vec<f32> = (0..n)
-                    .map(|i| {
-                        if w[i].abs() >= thr {
-                            dense[i]
-                        } else {
-                            local.map_or(0.0, |l| l[i])
-                        }
-                    })
-                    .collect();
-                Ok(Recovered { model, wire_bits: traffic::topk_grad_bits(n, kept) })
-            }
-            DownloadCodec::Quant { bits } => {
-                let q = self.quantize(w, bits, rng)?;
-                Ok(Recovered { model: q, wire_bits: traffic::quantized_bits(n, bits) })
-            }
         }
+        Ok(Payload::TopK { n, indices, values })
     }
 
-    /// Compress a local gradient for upload. Output is dense
-    /// (aggregation-ready) with the exact wire size accounted.
-    pub fn upload(&self, codec: UploadCodec, g: &[f32], rng: &mut Rng) -> Result<Uploaded> {
-        let n = g.len();
-        match codec {
-            UploadCodec::Full => Ok(Uploaded {
-                grad: g.to_vec(),
-                wire_bits: traffic::full_model_bits(n),
-            }),
-            UploadCodec::TopK { ratio } => {
-                let (dense, kept) = self.topk_dense(g, ratio)?;
-                Ok(Uploaded { grad: dense, wire_bits: traffic::topk_grad_bits(n, kept) })
-            }
-            UploadCodec::Quant { bits } => {
-                let q = self.quantize(g, bits, rng)?;
-                Ok(Uploaded { grad: q, wire_bits: traffic::quantized_bits(n, bits) })
-            }
-        }
-    }
-
-    /// Top-K through the configured backend; returns (dense, kept-count).
-    fn topk_dense(&self, x: &[f32], ratio: f64) -> Result<(Vec<f32>, usize)> {
-        match self.backend {
-            CompressionBackend::Native => {
-                let s = compress::topk_sparsify(x, ratio);
-                Ok((s.dense, s.kept))
-            }
-            CompressionBackend::Xla => {
-                let n = x.len();
-                let out = self.xla().exec(
-                    &format!("topk_{}", self.task),
-                    &[lit_f32(x, &[n as i64])?, lit_scalar(ratio as f32)],
-                )?;
-                let dense = to_vec_f32(&out[0])?;
-                let kept = n - ((ratio * n as f64).floor() as usize).min(n);
-                Ok((dense, kept))
+    /// Quantization for the XLA backend. The wire payload (codes, norm,
+    /// noise draws) comes from the single shared constructor
+    /// `quant::quant_payload` — one RNG contract for both backends. Debug
+    /// builds additionally run the L1 kernel over the same inputs and
+    /// cross-check it against the wire codes (the parity pin); release
+    /// builds skip the kernel exec entirely — its output is never the
+    /// returned value, the wire is.
+    fn quant_payload_xla(&self, x: &[f32], bits: u32, rng: &mut Rng) -> Result<Payload> {
+        let (payload, noise) = quant::quant_payload(x, bits, rng);
+        if cfg!(debug_assertions) {
+            let n = x.len();
+            let levels = quant::levels_for_bits(bits);
+            let noise = noise.unwrap_or_else(|| vec![0.0; n]);
+            let out = self.xla().exec(
+                &format!("quantize_{}", self.task),
+                &[
+                    lit_f32(x, &[n as i64])?,
+                    lit_scalar(levels as f32),
+                    lit_f32(&noise, &[n as i64])?,
+                ],
+            )?;
+            let kernel = to_vec_f32(&out[0])?;
+            if let Payload::Quant { levels, norm, codes, .. } = &payload {
+                for (i, &k) in kernel.iter().enumerate() {
+                    let v = quant::dequantize_code(codes[i], *levels, *norm);
+                    debug_assert!(
+                        (k - v).abs() <= 1e-5 * (1.0 + k.abs()),
+                        "quantize kernel drift at {i}: kernel {k} vs wire {v}"
+                    );
+                }
             }
         }
-    }
-
-    fn quantize(&self, x: &[f32], bits: u32, rng: &mut Rng) -> Result<Vec<f32>> {
-        let n = x.len();
-        let noise: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
-        let levels = quant::levels_for_bits(bits);
-        match self.backend {
-            CompressionBackend::Native => Ok(quant::quantize_stochastic(x, levels, &noise)),
-            CompressionBackend::Xla => {
-                let out = self.xla().exec(
-                    &format!("quantize_{}", self.task),
-                    &[
-                        lit_f32(x, &[n as i64])?,
-                        lit_scalar(levels as f32),
-                        lit_f32(&noise, &[n as i64])?,
-                    ],
-                )?;
-                Ok(to_vec_f32(&out[0])?)
-            }
-        }
+        Ok(payload)
     }
 }
 
@@ -201,6 +290,7 @@ pub fn caesar_compressed(w: &[f32], ratio: f64) -> CompressedModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::traffic;
     use crate::util::stats;
 
     fn randn(n: usize, seed: u64) -> Vec<f32> {
@@ -302,6 +392,62 @@ mod tests {
         for (a, b) in g.iter().zip(&u.grad) {
             assert!(*b == 0.0 || a.signum() == b.signum());
         }
+    }
+
+    #[test]
+    fn wire_bits_are_measured_and_match_legacy_formulas() {
+        let e = CodecEngine::native();
+        let w = randn(777, 10); // odd size: exercises padding paths
+        let r = e
+            .download(DownloadCodec::CaesarSplit { ratio: 0.35 }, &w, Some(&w), &mut Rng::new(3))
+            .unwrap();
+        let cm = compress::caesar_compress(&w, 0.35);
+        assert_eq!(r.wire_bits, traffic::caesar_model_bits(777, cm.n_quantized()));
+        let g = randn(777, 11);
+        let u = e.upload(UploadCodec::TopK { ratio: 0.8 }, &g, &mut Rng::new(4)).unwrap();
+        let kept = u.grad.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(u.wire_bits, traffic::topk_grad_bits(777, kept));
+        let q = e.upload(UploadCodec::Quant { bits: 6 }, &g, &mut Rng::new(5)).unwrap();
+        assert_eq!(q.wire_bits, traffic::quantized_bits(777, 6));
+    }
+
+    #[test]
+    fn split_encode_recover_matches_composed_download() {
+        let e = CodecEngine::native();
+        let w = randn(600, 12);
+        let local = randn(600, 13);
+        for codec in [
+            DownloadCodec::Full,
+            DownloadCodec::CaesarSplit { ratio: 0.4 },
+            DownloadCodec::TopK { ratio: 0.7 },
+            DownloadCodec::Quant { bits: 5 },
+        ] {
+            let composed =
+                e.download(codec, &w, Some(&local), &mut Rng::new(21)).unwrap();
+            let enc = e.encode_download(codec, &w, &mut Rng::new(21)).unwrap();
+            assert_eq!(enc.bits, composed.wire_bits, "{codec:?}");
+            let model = e.recover_download(&enc, Some(&local)).unwrap();
+            for i in 0..600 {
+                assert_eq!(
+                    model[i].to_bits(),
+                    composed.model[i].to_bits(),
+                    "{codec:?} elem {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quant_zero_vector_consumes_no_rng() {
+        // the documented RNG contract: no draws on the deterministic path
+        let e = CodecEngine::native();
+        let zeros = vec![0.0f32; 128];
+        let mut rng = Rng::new(7);
+        let before = rng.clone();
+        let u = e.upload(UploadCodec::Quant { bits: 4 }, &zeros, &mut rng).unwrap();
+        assert_eq!(u.grad, zeros);
+        let mut b = before;
+        assert_eq!(rng.next_u64(), b.next_u64(), "rng advanced on zero-norm quantize");
     }
 
     #[test]

@@ -317,12 +317,14 @@ impl Server {
             self.engine.execute_round(&env, &items, provider)?;
 
         // --- apply the round output in canonical (device-id) order ---
+        // traffic is derived from the measured wire lengths of the actual
+        // serialized payloads (scaled to paper size), not from formulas
         let completers = updates.len();
         let mut costs: Vec<f64> = Vec::with_capacity(completers);
         let mut loss_sum = 0.0f64;
         for u in updates {
-            self.traffic.add_down(u.down_bits);
-            self.traffic.add_up(u.up_bits);
+            self.traffic.add_down(self.scale.scale_bits(u.down_wire_bits));
+            self.traffic.add_up(self.scale.scale_bits(u.upload.bits));
             self.grad_norms[u.device] = u.grad_norm;
             self.locals[u.device] = Some(u.w_final);
             self.tracker.record(u.device, t);
@@ -332,7 +334,7 @@ impl Server {
         for d in &dropped {
             // a dropped device consumed its download before vanishing; it
             // contributes no update and its staleness keeps growing
-            self.traffic.add_down(d.down_bits);
+            self.traffic.add_down(self.scale.scale_bits(d.down_wire_bits));
         }
 
         // --- global aggregation: w ← w − mean(ḡ) over completers (§2.1) ---

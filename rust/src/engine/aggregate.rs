@@ -22,6 +22,9 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
+use crate::compress::quant;
+use crate::wire::Payload;
+
 /// Weighted f64 partial sum over one group of devices. Devices must be
 /// folded in the (sorted) order fixed at construction.
 #[derive(Debug)]
@@ -50,32 +53,70 @@ impl AggregatorShard {
         self.folded
     }
 
-    /// Fold one device's dense update with aggregation weight `weight`.
-    /// Must be called in the shard's expected device order.
-    pub fn fold(&mut self, device: usize, update: &[f32], weight: f64) {
+    /// Order check shared by every fold/skip entry point: `device` must be
+    /// the next expected id in the shard's canonical order.
+    fn advance(&mut self, device: usize, what: &str) {
         assert_eq!(
             self.expect.get(self.cursor).copied(),
             Some(device),
-            "shard {}: device {device} folded out of order",
+            "shard {}: {what} {device} out of order",
             self.group
         );
+        self.cursor += 1;
+    }
+
+    /// Fold one device's dense update with aggregation weight `weight`.
+    /// Must be called in the shard's expected device order.
+    pub fn fold(&mut self, device: usize, update: &[f32], weight: f64) {
+        self.advance(device, "device");
         assert_eq!(update.len(), self.sum.len(), "update length mismatch");
         for (s, &x) in self.sum.iter_mut().zip(update) {
             *s += (x as f64) * weight;
         }
-        self.cursor += 1;
+        self.folded += 1;
+    }
+
+    /// Fold one device's decoded wire payload without densifying it first.
+    ///
+    /// Top-K folds only its kept entries — O(kept) work and no O(n)
+    /// scratch vector — which is bit-identical to the dense fold because
+    /// every skipped entry is an exact `0.0` (adding `0.0 * weight` to an
+    /// f64 partial sum is a no-op, so the canonical reduction tree is
+    /// unchanged). Quant dequantizes streaming with no intermediate
+    /// allocation; Dense matches [`AggregatorShard::fold`] exactly.
+    pub fn fold_payload(&mut self, device: usize, payload: &Payload, weight: f64) {
+        self.advance(device, "device");
+        assert_eq!(payload.n(), self.sum.len(), "payload length mismatch");
+        match payload {
+            Payload::Dense(values) => {
+                for (s, &x) in self.sum.iter_mut().zip(values) {
+                    *s += (x as f64) * weight;
+                }
+            }
+            Payload::TopK { indices, values, .. } => {
+                for (&i, &v) in indices.iter().zip(values) {
+                    self.sum[i as usize] += (v as f64) * weight;
+                }
+            }
+            Payload::Quant { levels, norm, codes, .. } => {
+                for (s, &c) in self.sum.iter_mut().zip(codes) {
+                    *s += (quant::dequantize_code(c, *levels, *norm) as f64) * weight;
+                }
+            }
+            // downloads-only codec; accepted for completeness via the
+            // prior-free densification
+            Payload::CaesarSplit(cm) => {
+                for (s, &x) in self.sum.iter_mut().zip(&cm.naive_reconstruction()) {
+                    *s += (x as f64) * weight;
+                }
+            }
+        }
         self.folded += 1;
     }
 
     /// Skip the next expected device (it dropped out mid-round).
     pub fn mark_dropped(&mut self, device: usize) {
-        assert_eq!(
-            self.expect.get(self.cursor).copied(),
-            Some(device),
-            "shard {}: dropout {device} out of order",
-            self.group
-        );
-        self.cursor += 1;
+        self.advance(device, "dropout");
     }
 
     /// True once every expected device was folded or dropped.
@@ -219,5 +260,47 @@ mod tests {
         let mut s = AggregatorShard::new(0, 1, vec![0]);
         s.fold(0, &[2.0], 0.25);
         assert_eq!(s.sum, vec![0.5]);
+    }
+
+    #[test]
+    fn sparse_payload_fold_is_bit_identical_to_dense_fold() {
+        use crate::compress::{quant, topk};
+        use crate::util::rng::Rng;
+        let n = 512;
+        let mut rng = Rng::new(0xF01D);
+        let grads: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let expect: Vec<usize> = (0..6).collect();
+        let mut dense_shard = AggregatorShard::new(0, n, expect.clone());
+        let mut payload_shard = AggregatorShard::new(0, n, expect);
+        for (d, g) in grads.iter().enumerate() {
+            // alternate codecs to cover every fold_payload arm
+            let payload = match d % 3 {
+                0 => topk::topk_encode(g, 0.8).0,
+                1 => Payload::Dense(g.clone()),
+                _ => {
+                    let levels = quant::levels_for_bits(4);
+                    let noise: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+                    let (norm, codes) = quant::quantize_codes(g, levels, Some(&noise));
+                    Payload::Quant { bits: 4, levels, norm, codes }
+                }
+            };
+            // the wire really is traversed: encode → bytes → decode
+            let decoded = payload.encode().decode();
+            dense_shard.fold(d, &decoded.to_dense(), 0.7);
+            payload_shard.fold_payload(d, &decoded, 0.7);
+        }
+        assert!(dense_shard.complete() && payload_shard.complete());
+        for (a, b) in dense_shard.sum.iter().zip(&payload_shard.sum) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of order")]
+    fn payload_fold_enforces_order_too() {
+        let mut s = AggregatorShard::new(0, 2, vec![3, 9]);
+        s.fold_payload(9, &Payload::Dense(vec![1.0, 2.0]), 1.0);
     }
 }

@@ -11,6 +11,7 @@
 
 use crate::fleet::RoundCost;
 use crate::schemes::DevicePlan;
+use crate::wire::EncodedPayload;
 
 use super::aggregate::AggregatorShard;
 
@@ -37,13 +38,21 @@ pub struct RoundUpdate {
     pub device: usize,
     /// Final local model `w_i^{t,τ}` (becomes the device's stale local).
     pub w_final: Vec<f32>,
+    /// The exact serialized upload the device put on the wire. The
+    /// coordinator shard already folded its decoded payload; traffic
+    /// accounting derives from `upload.bits` (the measured length).
+    /// Retaining the bytes (rather than just the length) keeps the
+    /// message an honest transcript of the transport; it is at most the
+    /// size of `w_final` above (compressed codecs: far smaller), so the
+    /// per-round memory order is unchanged.
+    pub upload: EncodedPayload,
     /// ‖g_i‖₂ — PyramidFL's ranking signal.
     pub grad_norm: f64,
     /// Mean local training loss over the τ iterations.
     pub loss: f64,
-    /// Paper-scale wire traffic (bits) this device moved.
-    pub down_bits: f64,
-    pub up_bits: f64,
+    /// Measured wire length (bits) of the download this device received,
+    /// at stand-in scale; the Server scales it to paper size.
+    pub down_wire_bits: usize,
     /// Simulated Eq. 7 cost of the device's round.
     pub cost: RoundCost,
 }
@@ -58,9 +67,9 @@ pub enum DeviceMsg {
     /// The device finished its round.
     EndRound(Box<RoundUpdate>),
     /// The device vanished mid-round, `after_s` seconds in. Its download
-    /// had already completed (`down_bits` of traffic were spent); no
-    /// update reaches aggregation.
-    Dropout { device: usize, after_s: f64, down_bits: f64 },
+    /// had already completed (`down_wire_bits` measured bits were spent);
+    /// no update reaches aggregation.
+    Dropout { device: usize, after_s: f64, down_wire_bits: usize },
 }
 
 /// Everything a worker thread sends back to the coordinator loop.
@@ -79,6 +88,6 @@ pub struct DroppedDevice {
     pub device: usize,
     /// Simulated seconds into the round at which it vanished.
     pub after_s: f64,
-    /// Download traffic it had already consumed (paper-scale bits).
-    pub down_bits: f64,
+    /// Download traffic it had already consumed (measured stand-in bits).
+    pub down_wire_bits: usize,
 }

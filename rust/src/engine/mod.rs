@@ -49,6 +49,7 @@ use anyhow::{anyhow, Result};
 
 use crate::compress::traffic::PayloadScale;
 use crate::config::{EngineConfig, ExperimentConfig};
+use crate::coordinator::codec::effective_download;
 use crate::coordinator::{CodecEngine, Trainer};
 use crate::data::{Dataset, Partition};
 use crate::fleet::RoundCost;
@@ -320,10 +321,10 @@ impl Engine {
                 self.registry.end_round(update.device, round_start_s + update.cost.total());
                 updates.push(*update);
             }
-            Event::Device(DeviceMsg::Dropout { device, after_s, down_bits }) => {
+            Event::Device(DeviceMsg::Dropout { device, after_s, down_wire_bits }) => {
                 self.stats.dropouts += 1;
                 self.registry.dropout(device, round_start_s + after_s);
-                dropped.push(DroppedDevice { device, after_s, down_bits });
+                dropped.push(DroppedDevice { device, after_s, down_wire_bits });
             }
             Event::Shard(shard) => reducer.push(shard)?,
             Event::Error(msg) => return Err(anyhow!("engine worker failed: {msg}")),
@@ -354,9 +355,11 @@ fn execute_group(
     Ok(events)
 }
 
-/// Simulate one device's round: download + recover, (maybe) drop out,
-/// local SGD, upload. Emits Heartbeat and EndRound/Dropout messages and
-/// folds the upload into `shard`.
+/// Simulate one device's round: serialize + transfer the download, (maybe)
+/// drop out, decode + recover, local SGD, serialize the upload and fold
+/// its decoded payload into `shard`. Every payload that "crosses the wire"
+/// here really is encoded to bytes and decoded back — traffic and transfer
+/// time derive from the measured encoded lengths.
 fn run_device(
     env: &RoundEnv,
     item: &StartRound,
@@ -370,10 +373,14 @@ fn run_device(
     let plan = item.plan;
     let d = plan.device;
     let mut dev_rng = Rng::stream(env.stream_base, env.t as u64, d as u64);
+    let local = env.locals[d].as_deref();
 
-    // (1) download + on-device recovery (§4.1)
-    let rec = codec.download(plan.download, env.global, env.locals[d].as_deref(), &mut dev_rng)?;
-    let down_bits = env.scale.scale_bits(rec.wire_bits);
+    // (1) PS-side download encode (§4.1): the serialized bytes are the
+    // wire truth
+    let down_codec = effective_download(plan.download, local.is_some());
+    let down_enc = codec.encode_download(down_codec, env.global, &mut dev_rng)?;
+    let down_wire_bits = down_enc.bits;
+    let down_bits = env.scale.scale_bits(down_wire_bits);
 
     // Dropout lottery on an independent stream: enabling it never changes
     // the work randomness of devices that survive.
@@ -386,16 +393,23 @@ fn run_device(
             let compute_s = (plan.tau * plan.batch) as f64 * item.mu;
             let after_s = download_s + fate.f64() * compute_s;
             emit_heartbeats(events, ecfg, d, env.sim_now_s, after_s);
-            events.push(Event::Device(DeviceMsg::Dropout { device: d, after_s, down_bits }));
+            events.push(Event::Device(DeviceMsg::Dropout {
+                device: d,
+                after_s,
+                down_wire_bits,
+            }));
             shard.mark_dropped(d);
             return Ok(());
         }
     }
 
-    // (2) local training (Eq. 2) from the recovered initial model
+    // (2) device-side decode + recovery, then local training (Eq. 2) from
+    // the recovered initial model
+    let model = codec.recover_download(&down_enc, local)?;
+    drop(down_enc);
     let data_shard = &env.partition.shards[d];
     let (w_final, loss) = trainer.train(
-        &rec.model,
+        &model,
         env.train_ds,
         data_shard,
         plan.tau,
@@ -405,26 +419,35 @@ fn run_device(
     )?;
 
     // (3) g_i = w_i^{t,0} − w_i^{t,τ} = η·Σ∇ (paper §2.1)
-    let g: Vec<f32> = rec.model.iter().zip(&w_final).map(|(a, b)| a - b).collect();
+    let g: Vec<f32> = model.iter().zip(&w_final).map(|(a, b)| a - b).collect();
     let grad_norm = g.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
 
-    // (4) upload compression (§4.2), folded straight into the shard — the
-    // dense update never leaves this worker
-    let up = codec.upload(plan.upload, &g, &mut dev_rng)?;
-    let up_bits = env.scale.scale_bits(up.wire_bits);
-    shard.fold(d, &up.grad, 1.0);
+    // (4) upload compression (§4.2): the device serializes, the
+    // coordinator-side shard folds the decoded payload — sparsely for
+    // Top-K (O(kept)), and the dense update never leaves this worker
+    let up_enc = codec.encode_upload(plan.upload, &g, &mut dev_rng)?;
+    shard.fold_payload(d, &up_enc.decode(), 1.0);
 
-    // (5) simulated cost (Eq. 7) + liveness traffic
-    let cost =
-        RoundCost::new(down_bits, up_bits, item.beta_d, item.beta_u, plan.tau, plan.batch, item.mu);
+    // (5) simulated cost (Eq. 7) from the measured wire lengths +
+    // liveness traffic
+    let cost = RoundCost::from_wire(
+        down_wire_bits,
+        up_enc.bits,
+        env.scale,
+        item.beta_d,
+        item.beta_u,
+        plan.tau,
+        plan.batch,
+        item.mu,
+    );
     emit_heartbeats(events, ecfg, d, env.sim_now_s, cost.total());
     events.push(Event::Device(DeviceMsg::EndRound(Box::new(RoundUpdate {
         device: d,
         w_final,
+        upload: up_enc,
         grad_norm,
         loss,
-        down_bits,
-        up_bits,
+        down_wire_bits,
         cost,
     }))));
     Ok(())

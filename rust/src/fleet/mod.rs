@@ -172,6 +172,31 @@ impl RoundCost {
             upload_s: bits_up / beta_up,
         }
     }
+
+    /// Eq. 7 from *measured* wire lengths: the transfer terms derive from
+    /// the actual encoded payload sizes (stand-in bits, scaled to paper
+    /// size by `scale`) rather than from closed-form codec formulas.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_wire(
+        down_wire_bits: usize,
+        up_wire_bits: usize,
+        scale: &crate::compress::traffic::PayloadScale,
+        beta_down: f64,
+        beta_up: f64,
+        tau: usize,
+        batch: usize,
+        mu: f64,
+    ) -> RoundCost {
+        RoundCost::new(
+            scale.scale_bits(down_wire_bits),
+            scale.scale_bits(up_wire_bits),
+            beta_down,
+            beta_up,
+            tau,
+            batch,
+            mu,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -271,5 +296,16 @@ mod tests {
         assert!((c.upload_s - 1.0).abs() < 1e-12);
         assert!((c.compute_s - 0.96).abs() < 1e-12);
         assert!((c.total() - 2.96).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_cost_from_wire_scales_measured_bits() {
+        use crate::compress::traffic::PayloadScale;
+        let scale = PayloadScale { n_real: 1_000, n_paper: 2_000 };
+        let c = RoundCost::from_wire(500_000, 250_000, &scale, 1e6, 5e5, 30, 32, 0.001);
+        // 500k stand-in bits → 1M paper bits at 1 Mb/s = 1 s, same uplink
+        assert!((c.download_s - 1.0).abs() < 1e-12);
+        assert!((c.upload_s - 1.0).abs() < 1e-12);
+        assert!((c.compute_s - 0.96).abs() < 1e-12);
     }
 }

@@ -17,8 +17,17 @@
 //!   (one PJRT runtime per worker) and aggregating through streaming,
 //!   order-exact shards. `cfg.engine.workers` selects the parallelism;
 //!   every worker count is bit-identical for a fixed seed.
-//! * [`schemes`] — Caesar and the paper's baselines behind one trait.
+//! * [`schemes`] — Caesar and the paper's baselines behind one trait; the
+//!   codec enums carry `encode_payload` constructors for the wire forms.
 //! * [`compress`] — the §4.1/§4.2 codecs (native; pinned to the L1 kernels).
+//! * [`wire`] — the serialized form of every compressed tensor: a
+//!   [`wire::Payload`] (Dense / TopK / CaesarSplit / Quant) with bit-exact
+//!   `encode`/`decode` over [`util::bitio`]. Downloads and uploads really
+//!   cross the simulated wire as bytes; traffic and transfer time derive
+//!   from the measured `EncodedPayload::bits`, with the legacy
+//!   `compress::traffic` formulas demoted to debug-assert cross-checks.
+//!   Top-K uploads aggregate sparsely straight from the payload
+//!   (`engine::AggregatorShard::fold_payload`, O(kept) per device).
 //! * [`caesar`] — Eq. 3–9: staleness, importance, batch-size regulation.
 //! * [`fleet`], [`data`] — the simulated testbed and non-IID datasets.
 //! * [`runtime`] — PJRT CPU execution of the AOT artifacts.
@@ -44,6 +53,7 @@ pub mod nn;
 pub mod runtime;
 pub mod schemes;
 pub mod util;
+pub mod wire;
 
 pub mod bench;
 

@@ -26,7 +26,10 @@ pub mod pyramidfl;
 pub mod tests_support;
 
 use crate::caesar::ImportanceTable;
+use crate::compress::{self, quant, topk};
 use crate::config::ExperimentConfig;
+use crate::util::rng::Rng;
+use crate::wire::Payload;
 
 /// How the global model is compressed for download.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -43,6 +46,22 @@ pub enum DownloadCodec {
     Quant { bits: u32 },
 }
 
+impl DownloadCodec {
+    /// Construct the exact wire payload this codec emits for the global
+    /// model `w` (native backend; the PJRT path lives in `CodecEngine`).
+    /// Quant draws from `rng` per the contract in `compress::quant`.
+    pub fn encode_payload(self, w: &[f32], rng: &mut Rng) -> Payload {
+        match self {
+            DownloadCodec::Full => Payload::Dense(w.to_vec()),
+            DownloadCodec::CaesarSplit { ratio } => {
+                Payload::CaesarSplit(compress::caesar_compress(w, ratio))
+            }
+            DownloadCodec::TopK { ratio } => topk::topk_encode(w, ratio).0,
+            DownloadCodec::Quant { bits } => quant::quant_payload(w, bits, rng).0,
+        }
+    }
+}
+
 /// How the local gradient is compressed for upload.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum UploadCodec {
@@ -50,6 +69,18 @@ pub enum UploadCodec {
     /// Top-K: `ratio` = dropped fraction.
     TopK { ratio: f64 },
     Quant { bits: u32 },
+}
+
+impl UploadCodec {
+    /// Construct the exact wire payload this codec emits for gradient `g`
+    /// (native backend; the PJRT path lives in `CodecEngine`).
+    pub fn encode_payload(self, g: &[f32], rng: &mut Rng) -> Payload {
+        match self {
+            UploadCodec::Full => Payload::Dense(g.to_vec()),
+            UploadCodec::TopK { ratio } => topk::topk_encode(g, ratio).0,
+            UploadCodec::Quant { bits } => quant::quant_payload(g, bits, rng).0,
+        }
+    }
 }
 
 /// The per-participant decision for one round.

@@ -1,9 +1,14 @@
-//! Bit-level packing used by the wire-format traffic accounting and the
-//! (optional) actual serialization of compressed payloads.
+//! Bit-level packing: the serialization substrate of the `wire` payload
+//! format. Every compressed tensor that "crosses the wire" in the
+//! simulator is actually packed through these types, so they are on the
+//! per-device round hot path — `push_bits`/`read_bits` move whole bytes
+//! at a time instead of looping bit-by-bit.
 
 /// Append-only bit writer (LSB-first within each byte).
 #[derive(Default)]
 pub struct BitWriter {
+    /// Invariant: `buf.len() == nbits.div_ceil(8)` — the tail byte exists
+    /// as soon as any of its bits do, with unused high bits zero.
     buf: Vec<u8>,
     nbits: usize,
 }
@@ -24,11 +29,34 @@ impl BitWriter {
         self.nbits += 1;
     }
 
-    /// Write the low `width` bits of `value`.
+    /// Write the low `width` bits of `value` (byte-at-a-time).
     pub fn push_bits(&mut self, value: u64, width: u32) {
         debug_assert!(width <= 64);
-        for i in 0..width {
-            self.push_bit((value >> i) & 1 == 1);
+        if width == 0 {
+            return;
+        }
+        let mut v = if width == 64 { value } else { value & ((1u64 << width) - 1) };
+        let mut remaining = width as usize;
+        // top up the partial tail byte first
+        let used = self.nbits % 8;
+        if used != 0 {
+            let take = remaining.min(8 - used); // <= 7
+            let mask = (1u8 << take) - 1;
+            let last = self.buf.len() - 1;
+            self.buf[last] |= ((v as u8) & mask) << used;
+            v >>= take;
+            remaining -= take;
+            self.nbits += take;
+        }
+        while remaining >= 8 {
+            self.buf.push(v as u8);
+            v >>= 8;
+            remaining -= 8;
+            self.nbits += 8;
+        }
+        if remaining > 0 {
+            self.buf.push((v as u8) & ((1u8 << remaining) - 1));
+            self.nbits += remaining;
         }
     }
 
@@ -62,12 +90,32 @@ impl<'a> BitReader<'a> {
         b
     }
 
+    /// Read `width` bits (byte-at-a-time, inverse of `push_bits`).
     pub fn read_bits(&mut self, width: u32) -> u64 {
+        debug_assert!(width <= 64);
         let mut v = 0u64;
-        for i in 0..width {
-            if self.read_bit() {
-                v |= 1 << i;
-            }
+        let mut got = 0u32;
+        let mut remaining = width;
+        // drain the partial head byte first
+        let used = (self.pos % 8) as u32;
+        if remaining > 0 && used != 0 {
+            let take = remaining.min(8 - used); // <= 7
+            let mask = (1u8 << take) - 1;
+            v |= ((self.buf[self.pos / 8] >> used) & mask) as u64;
+            got += take;
+            self.pos += take as usize;
+            remaining -= take;
+        }
+        while remaining >= 8 {
+            v |= (self.buf[self.pos / 8] as u64) << got;
+            got += 8;
+            self.pos += 8;
+            remaining -= 8;
+        }
+        if remaining > 0 {
+            let mask = (1u8 << remaining) - 1;
+            v |= ((self.buf[self.pos / 8] & mask) as u64) << got;
+            self.pos += remaining as usize;
         }
         v
     }
@@ -133,5 +181,71 @@ mod tests {
             let got = BitReader::new(&b).read_f32();
             assert_eq!(got.to_bits(), x.to_bits());
         }
+    }
+
+    #[test]
+    fn every_width_roundtrips_at_every_alignment() {
+        // write k bits / read k bits identity for all widths 1..=64,
+        // starting from every possible bit offset within a byte
+        let v = 0xDEAD_BEEF_CAFE_F00Du64;
+        for prefix in 0..8usize {
+            for width in 1..=64u32 {
+                let mut w = BitWriter::new();
+                for i in 0..prefix {
+                    w.push_bit(i % 2 == 0);
+                }
+                w.push_bits(v, width);
+                w.push_bits(0b101, 3);
+                assert_eq!(w.len_bits(), prefix + width as usize + 3);
+                let bytes = w.into_bytes();
+                let mut r = BitReader::new(&bytes);
+                for i in 0..prefix {
+                    assert_eq!(r.read_bit(), i % 2 == 0, "prefix bit {i}");
+                }
+                let want = if width == 64 { v } else { v & ((1u64 << width) - 1) };
+                assert_eq!(r.read_bits(width), want, "prefix={prefix} width={width}");
+                assert_eq!(r.read_bits(3), 0b101, "prefix={prefix} width={width} tail");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_mixed_width_sequences_roundtrip() {
+        use crate::util::prop::{forall, Config};
+        forall(
+            Config { cases: 96, seed: 0xB170 },
+            |rng, size| {
+                let n = 1 + rng.below(size * 4);
+                (0..n)
+                    .map(|_| (rng.next_u64(), 1 + rng.below(64) as u32))
+                    .collect::<Vec<(u64, u32)>>()
+            },
+            |items| {
+                let mut w = BitWriter::new();
+                for &(v, width) in items {
+                    w.push_bits(v, width);
+                }
+                let total: usize = items.iter().map(|&(_, wd)| wd as usize).sum();
+                if w.len_bits() != total {
+                    return Err(format!("len_bits {} != {total}", w.len_bits()));
+                }
+                let bytes = w.into_bytes();
+                if bytes.len() != total.div_ceil(8) {
+                    return Err(format!("byte len {} != ceil({total}/8)", bytes.len()));
+                }
+                let mut r = BitReader::new(&bytes);
+                for (i, &(v, width)) in items.iter().enumerate() {
+                    let want = if width == 64 { v } else { v & ((1u64 << width) - 1) };
+                    let got = r.read_bits(width);
+                    if got != want {
+                        return Err(format!("item {i} width {width}: {got:#x} != {want:#x}"));
+                    }
+                }
+                if r.remaining_bits() >= 8 {
+                    return Err(format!("{} bits left over", r.remaining_bits()));
+                }
+                Ok(())
+            },
+        );
     }
 }

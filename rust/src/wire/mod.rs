@@ -1,0 +1,34 @@
+//! First-class wire format for compressed FL payloads.
+//!
+//! Historically the codecs densified immediately to `Vec<f32>` and wire
+//! cost was a *parallel* hand-maintained formula in `compress::traffic`
+//! that could silently drift from what a codec actually emits. This module
+//! makes the serialized form the source of truth: every compressed tensor
+//! that crosses the simulated wire is a [`Payload`] with a bit-exact
+//! `encode`/`decode` built on [`crate::util::bitio`], and traffic /
+//! transfer-time accounting derives from the *measured* encoded length
+//! ([`Payload::len_bits`] / [`EncodedPayload::bits`]). The legacy
+//! closed-form formulas survive only as cross-checks ([`legacy_bits`],
+//! debug-asserted on every encode and pinned by tests).
+//!
+//! Bit layout of each variant (LSB-first within each byte; see README
+//! §Wire format):
+//!
+//! | variant       | layout                                                          |
+//! |---------------|-----------------------------------------------------------------|
+//! | `Dense`       | n × f32                                                         |
+//! | `TopK`        | positions (n-bit bitmap OR k × ⌈log₂n⌉ index list, whichever is |
+//! |               | cheaper) then k × f32 values in ascending-index order           |
+//! | `CaesarSplit` | n-bit quantized bitmap, then per position: sign bit (quantized) |
+//! |               | or f32 (kept), then avg_abs + max_abs as 2 × f32                |
+//! | `Quant`       | f32 norm, then n × (sign bit + `bits`-wide bucket code)         |
+//!
+//! Decoding needs the out-of-band [`PayloadSpec`] (codec kind, element
+//! count, Top-K kept count, quantizer width). A real transport would spend
+//! a few header bytes on this; the legacy accounting never charged for it
+//! and the measured lengths stay pinned to those formulas, so the spec
+//! rides alongside the bytes in [`EncodedPayload`] instead.
+
+pub mod payload;
+
+pub use payload::{legacy_bits, EncodedPayload, Payload, PayloadSpec};

@@ -1,0 +1,397 @@
+//! The [`Payload`] enum and its bit-exact serialization.
+
+use crate::compress::caesar_model::CompressedModel;
+use crate::compress::{quant, traffic};
+use crate::util::bitio::{bits_for, BitReader, BitWriter};
+
+/// A compressed tensor in its wire form — what a codec actually emits.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Uncompressed fp32 vector.
+    Dense(Vec<f32>),
+    /// Top-K sparsification: the surviving entries of an `n`-vector, as
+    /// ascending `indices` with their fp32 `values`.
+    TopK { n: usize, indices: Vec<u32>, values: Vec<f32> },
+    /// Caesar's §4.1 download codec: threshold-split Top-K + 1-bit signs
+    /// with avg/max side info.
+    CaesarSplit(CompressedModel),
+    /// QSGD-style quantization: `levels` buckets, one `bits`-wide code +
+    /// sign bit per element, and the fp32 max-norm. `code = (q << 1) | neg`
+    /// (see `quant::quantize_codes`).
+    Quant { bits: u32, levels: u32, norm: f32, codes: Vec<u32> },
+}
+
+/// Out-of-band decode context: what a transport header would carry. Not
+/// charged to traffic (the legacy accounting never charged it either).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadSpec {
+    Dense { n: usize },
+    TopK { n: usize, kept: usize },
+    CaesarSplit { n: usize },
+    Quant { n: usize, bits: u32, levels: u32 },
+}
+
+impl PayloadSpec {
+    /// Dense element count of the described tensor.
+    pub fn n(&self) -> usize {
+        match *self {
+            PayloadSpec::Dense { n }
+            | PayloadSpec::TopK { n, .. }
+            | PayloadSpec::CaesarSplit { n }
+            | PayloadSpec::Quant { n, .. } => n,
+        }
+    }
+}
+
+/// A serialized payload: the bytes that cross the wire plus the measured
+/// bit length (`bytes` are padded to the next byte boundary) and the
+/// out-of-band decode spec.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EncodedPayload {
+    pub spec: PayloadSpec,
+    pub bytes: Vec<u8>,
+    /// Exact serialized length in bits — the wire truth that traffic and
+    /// transfer-time accounting derive from.
+    pub bits: usize,
+}
+
+impl EncodedPayload {
+    pub fn decode(&self) -> Payload {
+        Payload::decode_from(&mut BitReader::new(&self.bytes), &self.spec)
+    }
+
+    pub fn len_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+/// Top-K position encoding: an index list costs `kept·⌈log₂n⌉` bits, a
+/// bitmap costs `n`; the encoder picks the cheaper (ties → index list) and
+/// the decoder re-derives the choice from the same `(n, kept)`.
+fn index_list_is_cheaper(n: usize, kept: usize) -> bool {
+    kept * bits_for(n) as usize <= n
+}
+
+fn position_bits(n: usize, kept: usize) -> usize {
+    (kept * bits_for(n) as usize).min(n)
+}
+
+impl Payload {
+    /// Dense element count.
+    pub fn n(&self) -> usize {
+        match self {
+            Payload::Dense(v) => v.len(),
+            Payload::TopK { n, .. } => *n,
+            Payload::CaesarSplit(cm) => cm.len(),
+            Payload::Quant { codes, .. } => codes.len(),
+        }
+    }
+
+    /// The out-of-band decode context for this payload.
+    pub fn spec(&self) -> PayloadSpec {
+        match self {
+            Payload::Dense(v) => PayloadSpec::Dense { n: v.len() },
+            Payload::TopK { n, indices, .. } => {
+                PayloadSpec::TopK { n: *n, kept: indices.len() }
+            }
+            Payload::CaesarSplit(cm) => PayloadSpec::CaesarSplit { n: cm.len() },
+            Payload::Quant { bits, levels, codes, .. } => {
+                PayloadSpec::Quant { n: codes.len(), bits: *bits, levels: *levels }
+            }
+        }
+    }
+
+    /// Exact serialized size in bits, computed from the layout (no
+    /// encoding pass). `encode` debug-asserts this against both the real
+    /// writer output and the legacy `traffic` closed forms.
+    pub fn len_bits(&self) -> usize {
+        match self {
+            Payload::Dense(v) => v.len() * 32,
+            Payload::TopK { n, indices, values } => {
+                debug_assert_eq!(indices.len(), values.len());
+                values.len() * 32 + position_bits(*n, indices.len())
+            }
+            Payload::CaesarSplit(cm) => {
+                let q = cm.n_quantized();
+                cm.len() + q + (cm.len() - q) * 32 + 64
+            }
+            Payload::Quant { bits, codes, .. } => codes.len() * (1 + *bits as usize) + 32,
+        }
+    }
+
+    /// Serialize into an in-progress writer.
+    pub fn encode_into(&self, w: &mut BitWriter) {
+        match self {
+            Payload::Dense(v) => {
+                for &x in v {
+                    w.push_f32(x);
+                }
+            }
+            Payload::TopK { n, indices, values } => {
+                debug_assert!(
+                    indices.windows(2).all(|p| p[0] < p[1]),
+                    "TopK indices must be ascending"
+                );
+                debug_assert!(indices.iter().all(|&i| (i as usize) < *n));
+                if index_list_is_cheaper(*n, indices.len()) {
+                    let idx_bits = bits_for(*n);
+                    for &i in indices {
+                        w.push_bits(i as u64, idx_bits);
+                    }
+                } else {
+                    let mut it = indices.iter().peekable();
+                    for pos in 0..*n {
+                        let hit = it.peek().is_some_and(|&&p| p as usize == pos);
+                        if hit {
+                            it.next();
+                        }
+                        w.push_bit(hit);
+                    }
+                }
+                for &v in values {
+                    w.push_f32(v);
+                }
+            }
+            Payload::CaesarSplit(cm) => cm.encode_into(w),
+            Payload::Quant { bits, levels, norm, codes } => {
+                debug_assert!(*bits >= 1 && *bits <= 32);
+                debug_assert!(
+                    (*levels as u64) < (1u64 << *bits),
+                    "bucket range must fit the charged width"
+                );
+                w.push_f32(*norm);
+                for &c in codes {
+                    w.push_bit(c & 1 == 1);
+                    w.push_bits((c >> 1) as u64, *bits);
+                }
+            }
+        }
+    }
+
+    /// Serialize to bytes. The measured length is debug-asserted against
+    /// both `len_bits` and the legacy traffic formulas — the cross-check
+    /// that replaced formula-only accounting.
+    pub fn encode(&self) -> EncodedPayload {
+        let mut w = BitWriter::new();
+        self.encode_into(&mut w);
+        let bits = w.len_bits();
+        debug_assert_eq!(bits, self.len_bits(), "layout drifted from len_bits");
+        debug_assert_eq!(bits, legacy_bits(self), "wire drifted from traffic formulas");
+        EncodedPayload { spec: self.spec(), bits, bytes: w.into_bytes() }
+    }
+
+    /// Inverse of [`Payload::encode_into`] given the out-of-band spec.
+    pub fn decode_from(r: &mut BitReader, spec: &PayloadSpec) -> Payload {
+        match *spec {
+            PayloadSpec::Dense { n } => {
+                Payload::Dense((0..n).map(|_| r.read_f32()).collect())
+            }
+            PayloadSpec::TopK { n, kept } => {
+                let indices: Vec<u32> = if index_list_is_cheaper(n, kept) {
+                    let idx_bits = bits_for(n);
+                    (0..kept).map(|_| r.read_bits(idx_bits) as u32).collect()
+                } else {
+                    let mut idx = Vec::with_capacity(kept);
+                    for pos in 0..n {
+                        if r.read_bit() {
+                            idx.push(pos as u32);
+                        }
+                    }
+                    idx
+                };
+                debug_assert_eq!(indices.len(), kept, "bitmap popcount disagrees with spec");
+                let values = (0..indices.len()).map(|_| r.read_f32()).collect();
+                Payload::TopK { n, indices, values }
+            }
+            PayloadSpec::CaesarSplit { n } => {
+                Payload::CaesarSplit(CompressedModel::decode_from(r, n))
+            }
+            PayloadSpec::Quant { n, bits, levels } => {
+                let norm = r.read_f32();
+                let codes = (0..n)
+                    .map(|_| {
+                        let neg = r.read_bit() as u32;
+                        let q = r.read_bits(bits) as u32;
+                        (q << 1) | neg
+                    })
+                    .collect();
+                Payload::Quant { bits, levels, norm, codes }
+            }
+        }
+    }
+
+    /// Densify to a flat f32 vector. For `Dense`/`TopK`/`Quant` this is
+    /// bit-identical to what the legacy eager codecs produced. For
+    /// `CaesarSplit` it is the *prior-free* reconstruction (`sign·avg_abs`
+    /// at quantized slots) — receivers with a stale local model should use
+    /// `compress::caesar_recover` instead.
+    pub fn to_dense(&self) -> Vec<f32> {
+        match self {
+            Payload::Dense(v) => v.clone(),
+            Payload::TopK { n, indices, values } => {
+                let mut out = vec![0.0f32; *n];
+                for (&i, &v) in indices.iter().zip(values) {
+                    out[i as usize] = v;
+                }
+                out
+            }
+            Payload::CaesarSplit(cm) => cm.naive_reconstruction(),
+            Payload::Quant { levels, norm, codes, .. } => codes
+                .iter()
+                .map(|&c| quant::dequantize_code(c, *levels, *norm))
+                .collect(),
+        }
+    }
+
+    /// Consuming densify: moves the vector out for `Dense` (no clone on
+    /// the uncompressed hot path); other variants fall back to
+    /// [`Payload::to_dense`].
+    pub fn into_dense(self) -> Vec<f32> {
+        match self {
+            Payload::Dense(v) => v,
+            other => other.to_dense(),
+        }
+    }
+}
+
+/// The legacy closed-form accounting from [`crate::compress::traffic`] —
+/// now a cross-check only: `encode` debug-asserts the measured length
+/// against it, and `tests/wire_format.rs` pins the equality per codec.
+pub fn legacy_bits(p: &Payload) -> usize {
+    match p {
+        Payload::Dense(v) => traffic::full_model_bits(v.len()),
+        Payload::TopK { n, indices, .. } => traffic::topk_grad_bits(*n, indices.len()),
+        Payload::CaesarSplit(cm) => traffic::caesar_model_bits(cm.len(), cm.n_quantized()),
+        Payload::Quant { bits, codes, .. } => traffic::quantized_bits(codes.len(), *bits),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{caesar_compress, topk};
+    use crate::util::prop::{forall, gen_vec_f32, Config};
+    use crate::util::rng::Rng;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn roundtrip(p: &Payload) -> Payload {
+        let enc = p.encode();
+        assert_eq!(enc.bits, p.len_bits());
+        assert_eq!(enc.bits, legacy_bits(p));
+        assert_eq!(enc.len_bytes(), enc.bits.div_ceil(8));
+        enc.decode()
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let p = Payload::Dense(randn(257, 0));
+        assert_eq!(roundtrip(&p), p);
+        assert_eq!(p.len_bits(), 257 * 32);
+    }
+
+    #[test]
+    fn topk_roundtrip_both_position_encodings() {
+        let g = randn(4096, 1);
+        // sparse → index list; dense → bitmap
+        for ratio in [0.99, 0.2] {
+            let (p, _) = topk::topk_encode(&g, ratio);
+            let back = roundtrip(&p);
+            assert_eq!(back, p, "ratio={ratio}");
+            assert_eq!(back.to_dense(), topk::topk_sparsify(&g, ratio).dense);
+        }
+    }
+
+    #[test]
+    fn topk_empty_and_full() {
+        let g = randn(64, 2);
+        let (empty, _) = topk::topk_encode(&g, 1.0);
+        assert_eq!(empty.len_bits(), 0);
+        assert_eq!(roundtrip(&empty), empty);
+        let (full, _) = topk::topk_encode(&g, 0.0);
+        assert_eq!(roundtrip(&full), full);
+        assert_eq!(full.to_dense(), g);
+    }
+
+    #[test]
+    fn caesar_roundtrip() {
+        let w = randn(1000, 3);
+        let p = Payload::CaesarSplit(caesar_compress(&w, 0.35));
+        assert_eq!(roundtrip(&p), p);
+    }
+
+    #[test]
+    fn quant_roundtrip_and_dense_parity() {
+        let x = randn(2048, 4);
+        let noise: Vec<f32> = {
+            let mut rng = Rng::new(5);
+            (0..2048).map(|_| rng.f32()).collect()
+        };
+        for bits in [1u32, 4, 12, 28] {
+            let levels = quant::levels_for_bits(bits);
+            let (norm, codes) = quant::quantize_codes(&x, levels, Some(&noise));
+            let p = Payload::Quant { bits, levels, norm, codes };
+            let back = roundtrip(&p);
+            assert_eq!(back, p, "bits={bits}");
+            let want = quant::quantize_stochastic(&x, levels, &noise);
+            let got = back.to_dense();
+            for i in 0..want.len() {
+                assert_eq!(got[i].to_bits(), want[i].to_bits(), "bits={bits} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_zero_norm_roundtrip() {
+        let x = vec![0.0f32; 33];
+        let levels = quant::levels_for_bits(4);
+        let (norm, codes) = quant::quantize_codes(&x, levels, None);
+        let p = Payload::Quant { bits: 4, levels, norm, codes };
+        assert_eq!(roundtrip(&p).to_dense(), x);
+    }
+
+    #[test]
+    fn prop_payload_roundtrip_fuzz() {
+        forall(
+            Config { cases: 64, seed: 0x31BE },
+            |rng, size| {
+                let x = gen_vec_f32(rng, size * 4, 1.0);
+                let kind = rng.below(4);
+                let ratio = rng.f64();
+                let bits = 1 + rng.below(28) as u32;
+                (x, kind, ratio, bits)
+            },
+            |(x, kind, ratio, bits)| {
+                let p = match kind {
+                    0 => Payload::Dense(x.clone()),
+                    1 => topk::topk_encode(x, *ratio).0,
+                    2 => Payload::CaesarSplit(caesar_compress(x, *ratio)),
+                    _ => {
+                        let levels = quant::levels_for_bits(*bits);
+                        let (norm, codes) = quant::quantize_codes(x, levels, None);
+                        Payload::Quant { bits: *bits, levels, norm, codes }
+                    }
+                };
+                let enc = p.encode();
+                if enc.bits != legacy_bits(&p) {
+                    return Err(format!("bits {} != legacy {}", enc.bits, legacy_bits(&p)));
+                }
+                if enc.decode() != p {
+                    return Err("decode(encode(p)) != p".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn spec_reports_n() {
+        assert_eq!(PayloadSpec::Dense { n: 5 }.n(), 5);
+        assert_eq!(PayloadSpec::TopK { n: 7, kept: 2 }.n(), 7);
+        assert_eq!(PayloadSpec::CaesarSplit { n: 9 }.n(), 9);
+        assert_eq!(PayloadSpec::Quant { n: 3, bits: 4, levels: 15 }.n(), 3);
+    }
+}
