@@ -12,6 +12,35 @@ cd "$(dirname "$0")"
 quick=0
 [[ "${1:-}" == "--quick" ]] && quick=1
 
+# --- BENCH_*.json schema check (no toolchain needed) ---
+# Committed bench files are either written by the bench binaries
+# (placeholder: false) or hand-authored placeholders (placeholder: true,
+# see CHANGES.md conventions). Either way they must carry the writers'
+# required keys, so placeholder files can't silently drift from the
+# format rust/benches/bench_{engine,wire}.rs emit.
+echo "== BENCH_*.json schema check =="
+require_keys() {
+  local f=$1; shift
+  [[ -f "$f" ]] || { echo "schema check: $f missing"; exit 1; }
+  grep -Eq '"placeholder": *(true|false)' "$f" \
+    || { echo "schema check: $f lacks a boolean \"placeholder\" flag"; exit 1; }
+  local k
+  for k in "$@"; do
+    grep -q "\"$k\"" "$f" \
+      || { echo "schema check: $f missing required key \"$k\""; exit 1; }
+  done
+  echo "  $f ok"
+}
+# keep these lists in sync with the JSON writers in rust/benches/
+require_keys BENCH_engine.json bench task trainer host_workers cases \
+  devices participants seq_ms_per_round par_ms_per_round workers speedup \
+  seq_alloc_bytes_per_round par_alloc_bytes_per_round \
+  seq_encode_calls_per_round encode_cache encode_requests_per_round \
+  encode_calls_per_round encode_reduction
+require_keys BENCH_wire.json bench n_params codec_cases recovery aggregation \
+  recover_ms recover_into_ms recover_alloc_bytes_per_call \
+  recover_into_alloc_bytes_per_call dense_ms sparse_ms speedup
+
 echo "== cargo fmt --check =="
 cargo fmt --all -- --check
 
@@ -27,6 +56,15 @@ echo "== cargo test -q =="
 cargo test -q
 
 echo "== bench_wire smoke =="
-CAESAR_BENCH_QUICK=1 cargo bench --bench bench_wire
+# run from a temp dir: the bench writes BENCH_wire.json to its cwd, and
+# quick-mode numbers must never clobber the committed (schema-checked)
+# file at the repo root
+smoke_dir=$(mktemp -d)
+trap 'rm -rf "$smoke_dir"' EXIT
+(
+  cd "$smoke_dir"
+  CAESAR_BENCH_QUICK=1 cargo bench \
+    --manifest-path "$OLDPWD/Cargo.toml" --bench bench_wire
+)
 
 echo "CI OK"

@@ -1,4 +1,5 @@
-//! Sequential vs parallel round-engine benchmark at fleet scale.
+//! Sequential vs parallel round-engine benchmark at fleet scale, with
+//! allocation traffic and download-encode work as first-class metrics.
 //!
 //! Runs full communication rounds (plan → download codec → local SGD →
 //! upload codec → sharded aggregation) on the HAR stand-in with the fleet
@@ -7,6 +8,16 @@
 //! sequential baseline) and once with one worker per host core. The two
 //! paths produce bit-identical models (pinned by tests/engine_parity.rs),
 //! so the speedup is free.
+//!
+//! Per case this reports, alongside ms/round:
+//! * `alloc_bytes_per_round` / `allocs_per_round` — allocation traffic
+//!   measured by a counting global allocator (the hot path is supposed to
+//!   be reuse-dominated: encode cache, pooled scratch, in-place recovery);
+//! * `encode_calls_per_round` vs `encode_requests_per_round` — downloads
+//!   served vs `encode_download` executions. With the per-round encode
+//!   cache, calls scale with DISTINCT codecs, not participants; the
+//!   dedicated `encode_cache` case pins the acceptance target (100
+//!   participants sharing ≤ 4 distinct codecs → ≥ 25× fewer encodes).
 //!
 //! Results are written to BENCH_engine.json in the current directory.
 //! Quick mode: CAESAR_BENCH_QUICK=1 (fewer rounds, skips the 10k scale).
@@ -17,14 +28,28 @@ use caesar_fl::config::{CompressionBackend, ExperimentConfig, TrainerBackend};
 use caesar_fl::coordinator::Server;
 use caesar_fl::fleet::FleetKind;
 use caesar_fl::schemes;
+use caesar_fl::util::alloc_count::{self, CountingAlloc};
 use caesar_fl::util::json::{self, Json};
 use caesar_fl::util::threadpool::workers;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// One timed configuration: host time, allocation traffic and download
+/// encode counts, all per round.
+struct Measured {
+    ms: f64,
+    alloc_bytes: f64,
+    allocs: f64,
+    encode_requests: f64,
+    encode_calls: f64,
+}
 
 struct Case {
     devices: usize,
     participants: usize,
-    seq_ms: f64,
-    par_ms: f64,
+    seq: Measured,
+    par: Measured,
     par_workers: usize,
 }
 
@@ -42,17 +67,38 @@ fn cfg_at(devices: usize, engine_workers: usize) -> ExperimentConfig {
     cfg
 }
 
-/// Mean host milliseconds per round over `rounds` timed rounds (after one
-/// warm-up round).
-fn ms_per_round(devices: usize, engine_workers: usize, rounds: usize) -> f64 {
-    let cfg = cfg_at(devices, engine_workers);
-    let mut srv = Server::new(cfg, schemes::by_name("caesar").unwrap()).unwrap();
+/// Mean per-round host milliseconds, allocation traffic and encode counts
+/// over `rounds` timed rounds (after one warm-up round).
+fn measure(cfg: ExperimentConfig, scheme: &str, rounds: usize) -> Measured {
+    let mut srv = Server::new(cfg, schemes::by_name(scheme).unwrap()).unwrap();
     srv.step(1).unwrap(); // warm-up: first-touch allocations, locals fill
+    let stats0 = srv.engine().stats();
+    let alloc0 = alloc_count::snapshot();
     let t0 = Instant::now();
     for t in 2..2 + rounds {
         srv.step(t).unwrap();
     }
-    t0.elapsed().as_secs_f64() * 1e3 / rounds as f64
+    let ms = t0.elapsed().as_secs_f64() * 1e3 / rounds as f64;
+    let alloc = alloc_count::snapshot().since(&alloc0);
+    let stats = srv.engine().stats();
+    let per = |x: usize, y: usize| (x - y) as f64 / rounds as f64;
+    Measured {
+        ms,
+        alloc_bytes: alloc.bytes as f64 / rounds as f64,
+        allocs: alloc.count as f64 / rounds as f64,
+        encode_requests: per(stats.download_requests, stats0.download_requests),
+        encode_calls: per(stats.download_encodes, stats0.download_encodes),
+    }
+}
+
+fn measured_json(m: &Measured) -> Vec<(&'static str, Json)> {
+    vec![
+        ("ms_per_round", json::num(m.ms)),
+        ("alloc_bytes_per_round", json::num(m.alloc_bytes)),
+        ("allocs_per_round", json::num(m.allocs)),
+        ("encode_requests_per_round", json::num(m.encode_requests)),
+        ("encode_calls_per_round", json::num(m.encode_calls)),
+    ]
 }
 
 fn main() {
@@ -69,21 +115,40 @@ fn main() {
 
     println!("== bench: engine (sequential vs {par_workers} workers) ==");
     println!(
-        "{:>8}  {:>12}  {:>12}  {:>12}  {:>8}",
-        "devices", "participants", "seq ms/round", "par ms/round", "speedup"
+        "{:>8}  {:>12}  {:>12}  {:>12}  {:>8}  {:>14}  {:>12}",
+        "devices", "participants", "seq ms/round", "par ms/round", "speedup", "seq MB/round", "enc/round"
     );
     let mut cases = Vec::new();
     for &n in scales {
         let r = rounds(n);
-        let seq_ms = ms_per_round(n, 1, r);
-        let par_ms = ms_per_round(n, par_workers, r);
+        let seq = measure(cfg_at(n, 1), "caesar", r);
+        let par = measure(cfg_at(n, par_workers), "caesar", r);
         let participants = cfg_at(n, 1).participants_per_round();
         println!(
-            "{n:>8}  {participants:>12}  {seq_ms:>12.1}  {par_ms:>12.1}  {:>7.2}x",
-            seq_ms / par_ms
+            "{n:>8}  {participants:>12}  {:>12.1}  {:>12.1}  {:>7.2}x  {:>14.2}  {:>12.1}",
+            seq.ms,
+            par.ms,
+            seq.ms / par.ms,
+            seq.alloc_bytes / (1024.0 * 1024.0),
+            seq.encode_calls,
         );
-        cases.push(Case { devices: n, participants, seq_ms, par_ms, par_workers });
+        cases.push(Case { devices: n, participants, seq, par, par_workers });
     }
+
+    // --- encode-cache acceptance case (ISSUE 3): 1000 devices → 100
+    // participants per round, staleness clustering pinned to 3 → at most
+    // 4 distinct download codecs (3 CaesarSplit ratios + Full for
+    // first-timers). Target: encodes drop ≥ 25× vs per-device encoding.
+    let cache_rounds = if quick { 3 } else { 6 };
+    let mut cache_cfg = cfg_at(1_000, 1);
+    cache_cfg.clusters = 3;
+    let m = measure(cache_cfg, "caesar", cache_rounds);
+    let reduction = if m.encode_calls > 0.0 { m.encode_requests / m.encode_calls } else { 0.0 };
+    println!(
+        "\n== bench: encode cache (1000 devices, clusters=3) ==\n\
+         {:>12.1} downloads/round  {:>8.1} encodes/round  {:>7.1}x reduction",
+        m.encode_requests, m.encode_calls, reduction
+    );
 
     let mut out = Json::obj();
     out.set("bench", json::s("engine_round"))
@@ -100,14 +165,29 @@ fn main() {
             let mut o = Json::obj();
             o.set("devices", json::num(c.devices as f64))
                 .set("participants", json::num(c.participants as f64))
-                .set("seq_ms_per_round", json::num(c.seq_ms))
-                .set("par_ms_per_round", json::num(c.par_ms))
                 .set("workers", json::num(c.par_workers as f64))
-                .set("speedup", json::num(c.seq_ms / c.par_ms));
+                .set("speedup", json::num(c.seq.ms / c.par.ms));
+            // seq_/par_ prefixes expand to seq_ms_per_round etc.
+            for (k, v) in measured_json(&c.seq) {
+                o.set(&format!("seq_{k}"), v);
+            }
+            for (k, v) in measured_json(&c.par) {
+                o.set(&format!("par_{k}"), v);
+            }
             o
         })
         .collect();
     out.set("cases", Json::Arr(rows));
+    let mut cache_row = Json::obj();
+    cache_row
+        .set("devices", json::num(1_000.0))
+        .set("participants", json::num(100.0))
+        .set("clusters", json::num(3.0))
+        .set("encode_requests_per_round", json::num(m.encode_requests))
+        .set("encode_calls_per_round", json::num(m.encode_calls))
+        .set("encode_reduction", json::num(reduction))
+        .set("alloc_bytes_per_round", json::num(m.alloc_bytes));
+    out.set("encode_cache", cache_row);
     std::fs::write("BENCH_engine.json", out.to_string()).expect("write BENCH_engine.json");
     println!("wrote BENCH_engine.json");
 }

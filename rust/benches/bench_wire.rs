@@ -1,6 +1,8 @@
-//! Wire-format benchmark: payload encode/decode throughput per codec, and
-//! sparse-payload vs densified aggregation at fleet scale (100 / 1k / 10k
-//! devices' uploads folded into one round's shards).
+//! Wire-format benchmark: payload encode/decode throughput per codec,
+//! in-place (`recover_download_into`) vs materializing recovery with
+//! allocation traffic per call, and sparse-payload vs densified
+//! aggregation at fleet scale (100 / 1k / 10k devices' uploads folded
+//! into one round's shards).
 //!
 //! Results are written to BENCH_wire.json in the current directory with
 //! `"placeholder": false` (the flag marks hand-authored files committed
@@ -11,10 +13,16 @@ use std::time::Instant;
 
 use caesar_fl::bench::Bench;
 use caesar_fl::compress::{quant, topk};
+use caesar_fl::coordinator::CodecEngine;
 use caesar_fl::engine::AggregatorShard;
+use caesar_fl::schemes::DownloadCodec;
+use caesar_fl::util::alloc_count::{self, CountingAlloc};
 use caesar_fl::util::json::{self, Json};
 use caesar_fl::util::rng::Rng;
 use caesar_fl::wire::Payload;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 fn randn(n: usize, seed: u64) -> Vec<f32> {
     let mut rng = Rng::new(seed);
@@ -66,9 +74,61 @@ fn main() {
         rows.push(o);
     }
 
+    // --- materializing vs in-place download recovery ---
+    // recover_download allocates the decoded payload AND the recovered
+    // model per call; recover_download_into streams off the bytes into a
+    // reused buffer. Alloc traffic is measured around the timed loop.
+    println!("\n== bench: recovery (P={n_params}) ==");
+    println!(
+        "{:>14}  {:>14}  {:>14}  {:>14}  {:>14}",
+        "codec", "alloc ms", "into ms", "alloc B/call", "into B/call"
+    );
+    let e = CodecEngine::native();
+    let w = randn(n_params, 3);
+    let local = randn(n_params, 4);
+    let reps = if quick { 50 } else { 200 };
+    let mut rec_rows: Vec<Json> = Vec::new();
+    for (name, codec) in [
+        ("full", DownloadCodec::Full),
+        ("topk θ=0.9", DownloadCodec::TopK { ratio: 0.9 }),
+        ("caesar θ=0.35", DownloadCodec::CaesarSplit { ratio: 0.35 }),
+        ("quant 4b", DownloadCodec::Quant { bits: 4 }),
+    ] {
+        let enc = e.encode_download(codec, &w, &mut Rng::new(5)).unwrap();
+        let time_and_alloc = |into: bool| -> (f64, f64) {
+            let mut out = Vec::new();
+            let a0 = alloc_count::snapshot();
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                if into {
+                    e.recover_download_into(&enc, Some(&local), &mut out).unwrap();
+                    std::hint::black_box(&out);
+                } else {
+                    std::hint::black_box(e.recover_download(&enc, Some(&local)).unwrap());
+                }
+            }
+            let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+            let bytes = alloc_count::snapshot().since(&a0).bytes as f64 / reps as f64;
+            (ms, bytes)
+        };
+        let (alloc_ms, alloc_bytes) = time_and_alloc(false);
+        let (into_ms, into_bytes) = time_and_alloc(true);
+        println!(
+            "{name:>14}  {alloc_ms:>14.3}  {into_ms:>14.3}  {alloc_bytes:>14.0}  {into_bytes:>14.0}"
+        );
+        let mut o = Json::obj();
+        o.set("codec", json::s(name))
+            .set("recover_ms", json::num(alloc_ms))
+            .set("recover_into_ms", json::num(into_ms))
+            .set("recover_alloc_bytes_per_call", json::num(alloc_bytes))
+            .set("recover_into_alloc_bytes_per_call", json::num(into_bytes));
+        rec_rows.push(o);
+    }
+
     // --- sparse vs dense aggregation of one round's uploads ---
     // α = 0.1 participants, Top-K θ=0.9 uploads: the sparse path folds
-    // O(kept) per device instead of densifying to O(n).
+    // O(kept) per device straight off the serialized bytes instead of
+    // densifying to O(n).
     let scales: &[usize] = if quick { &[100, 1_000] } else { &[100, 1_000, 10_000] };
     println!("\n== bench: sparse vs dense aggregation (P={n_params}, θ=0.9) ==");
     println!(
@@ -78,8 +138,8 @@ fn main() {
     let mut agg_rows: Vec<Json> = Vec::new();
     for &devices in scales {
         let participants = (devices / 10).max(1);
-        let payloads: Vec<Payload> = (0..participants)
-            .map(|d| topk::topk_encode(&randn(n_params, 0xB0 + d as u64), 0.9).0)
+        let encoded: Vec<caesar_fl::wire::EncodedPayload> = (0..participants)
+            .map(|d| topk::topk_encode(&randn(n_params, 0xB0 + d as u64), 0.9).0.encode())
             .collect();
         let expect: Vec<usize> = (0..participants).collect();
         let reps = if quick { 2 } else { 5 };
@@ -87,11 +147,11 @@ fn main() {
             let t0 = Instant::now();
             for _ in 0..reps {
                 let mut shard = AggregatorShard::new(0, n_params, expect.clone());
-                for (d, p) in payloads.iter().enumerate() {
+                for (d, enc) in encoded.iter().enumerate() {
                     if sparse {
-                        shard.fold_payload(d, p, 1.0);
+                        shard.fold_encoded(d, enc, 1.0);
                     } else {
-                        shard.fold(d, &p.to_dense(), 1.0);
+                        shard.fold(d, &enc.decode().to_dense(), 1.0);
                     }
                 }
                 std::hint::black_box(&shard);
@@ -119,6 +179,7 @@ fn main() {
         .set("quick", Json::Bool(quick))
         .set("placeholder", Json::Bool(false))
         .set("codec_cases", Json::Arr(rows))
+        .set("recovery", Json::Arr(rec_rows))
         .set("aggregation", Json::Arr(agg_rows));
     std::fs::write("BENCH_wire.json", out.to_string()).expect("write BENCH_wire.json");
     println!("wrote BENCH_wire.json");

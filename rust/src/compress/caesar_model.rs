@@ -15,6 +15,7 @@
 //! exactly; the parity integration test pins all three implementations.
 
 use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::pool;
 
 /// A compressed global model as produced by the PS for one device.
 #[derive(Clone, Debug, PartialEq)]
@@ -124,7 +125,10 @@ pub fn quant_threshold(w: &[f32], ratio: f64) -> f32 {
     // |w| is non-negative, so the IEEE-754 bit pattern orders exactly like
     // the float value — integer-keyed selection avoids the branchy float
     // comparator (≈2x faster at 1M elements; see EXPERIMENTS.md §Perf).
-    let mut abs: Vec<u32> = w.iter().map(|x| x.abs().to_bits()).collect();
+    // The key buffer is pooled per-thread scratch, not a per-call
+    // allocation.
+    let mut abs = pool::u32_buf();
+    abs.extend(w.iter().map(|x| x.abs().to_bits()));
     let idx = k.min(n) - 1;
     let (_, kth, _) = abs.select_nth_unstable(idx);
     f32::from_bits(*kth)

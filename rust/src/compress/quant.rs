@@ -76,19 +76,25 @@ fn codes_for(x: &[f32], levels: u32, noise: Option<&[f32]>, norm: f32) -> Vec<u3
 /// assembly, shared by the native and XLA codec paths. The drawn noise is
 /// returned alongside (the XLA kernel consumes it as an input literal);
 /// `None` means the deterministic path ran and no draws were consumed.
+/// The noise lives in pooled per-thread scratch
+/// ([`crate::util::pool::F32Buf`]) — dropping it recycles the n-word
+/// buffer instead of freeing it, so the native hot path's only surviving
+/// allocation is the codes vector that becomes the payload.
 pub fn quant_payload(
     x: &[f32],
     bits: u32,
     rng: &mut crate::util::rng::Rng,
-) -> (crate::wire::Payload, Option<Vec<f32>>) {
+) -> (crate::wire::Payload, Option<crate::util::pool::F32Buf>) {
     let levels = levels_for_bits(bits);
     let norm = x.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
-    let noise: Option<Vec<f32>> = if noise_needed(norm, levels) {
-        Some((0..x.len()).map(|_| rng.f32()).collect())
+    let noise: Option<crate::util::pool::F32Buf> = if noise_needed(norm, levels) {
+        let mut buf = crate::util::pool::f32_buf();
+        buf.extend((0..x.len()).map(|_| rng.f32()));
+        Some(buf)
     } else {
         None
     };
-    let codes = codes_for(x, levels, noise.as_deref(), norm);
+    let codes = codes_for(x, levels, noise.as_ref().map(|b| &b[..]), norm);
     (crate::wire::Payload::Quant { bits: bits.max(1), levels, norm, codes }, noise)
 }
 

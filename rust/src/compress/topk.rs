@@ -9,6 +9,7 @@
 //! is its densified view kept for the kernel-parity pins and callers that
 //! want an aggregation-ready dense vector.
 
+use crate::util::pool;
 use crate::wire::Payload;
 
 /// Sparse result of a Top-K pass.
@@ -36,8 +37,10 @@ pub fn keep_threshold(g: &[f32], ratio: f64) -> (f32, usize) {
         return (0.0, 0);
     }
     // non-negative f32 orders by bit pattern — integer selection is ~2x
-    // faster than the float comparator (EXPERIMENTS.md §Perf)
-    let mut abs: Vec<u32> = g.iter().map(|x| x.abs().to_bits()).collect();
+    // faster than the float comparator (EXPERIMENTS.md §Perf); the key
+    // buffer is pooled per-thread scratch, not a per-call allocation
+    let mut abs = pool::u32_buf();
+    abs.extend(g.iter().map(|x| x.abs().to_bits()));
     let idx = drop.min(n - 1);
     let (_, v, _) = abs.select_nth_unstable(idx);
     (f32::from_bits(*v), drop)
@@ -53,8 +56,10 @@ pub fn topk_encode(g: &[f32], ratio: f64) -> (Payload, f32) {
     if drop >= n {
         return (Payload::TopK { n, indices: Vec::new(), values: Vec::new() }, thr);
     }
-    let mut indices = Vec::new();
-    let mut values = Vec::new();
+    // the kept count is at least n - drop (inclusive ties add more);
+    // pre-sizing to it avoids the doubling-regrowth churn of Vec::new
+    let mut indices = Vec::with_capacity(n - drop);
+    let mut values = Vec::with_capacity(n - drop);
     for i in 0..n {
         if g[i].abs() >= thr {
             indices.push(i as u32);
@@ -155,12 +160,12 @@ mod tests {
                 if s.kept < nz {
                     return Err(format!("kept {} < nonzeros {}", s.kept, nz));
                 }
+                // inclusive ties at the threshold can only *keep more*
+                // than the n - drop target, never fewer: the invariants
+                // are kept >= n - drop whenever drop < n, and kept <= n.
                 let drop = (ratio * g.len() as f64).floor() as usize;
-                if s.kept > g.len() - drop.min(g.len()) {
-                    // inclusive ties can only *keep more*, never fewer...
-                    // actually ties at the threshold keep extras, so kept can
-                    // exceed n - drop; the real invariant is kept >= n - drop
-                    // when drop < n. Flag only the impossible direction:
+                if s.kept > g.len() {
+                    return Err(format!("kept {} > n {}", s.kept, g.len()));
                 }
                 if drop < g.len() && s.kept < g.len() - drop {
                     return Err(format!(

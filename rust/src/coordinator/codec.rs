@@ -24,7 +24,7 @@ use crate::config::CompressionBackend;
 use crate::runtime::{lit_f32, lit_scalar, to_scalar_f32, to_vec_f32, Runtime};
 use crate::schemes::{DownloadCodec, UploadCodec};
 use crate::util::rng::Rng;
-use crate::wire::{EncodedPayload, Payload};
+use crate::wire::{EncodedPayload, Payload, PayloadView};
 
 /// One device's view of a compressed download after recovery, plus the
 /// measured wire size that was transferred.
@@ -138,6 +138,53 @@ impl<'a> CodecEngine<'a> {
         }
     }
 
+    /// [`CodecEngine::recover_download`] writing into a caller-owned
+    /// buffer — the round engine's form. Decodes lazily through
+    /// [`PayloadView`] (no intermediate index/value/`CompressedModel`
+    /// vectors) and reuses `out`'s capacity, so a worker that processes
+    /// many devices recovers every download into the same allocation.
+    /// Bit-identical to `recover_download` for every codec and local-model
+    /// state (pinned by `tests/wire_format.rs`).
+    pub fn recover_download_into(
+        &self,
+        enc: &EncodedPayload,
+        local: Option<&[f32]>,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        match enc.view() {
+            PayloadView::CaesarSplit(v) => match local {
+                Some(l) => match self.backend {
+                    CompressionBackend::Native => v.recover_into(l, out),
+                    // the XLA kernel consumes the materialized model; the
+                    // zero-copy path is native-only
+                    CompressionBackend::Xla => {
+                        let Payload::CaesarSplit(cm) = enc.decode() else {
+                            unreachable!("CaesarSplit spec decoded to another variant")
+                        };
+                        let rec = self.recover_xla(&cm, l)?;
+                        out.clear();
+                        out.extend_from_slice(&rec);
+                    }
+                },
+                None => v.naive_into(out),
+            },
+            PayloadView::TopK(v) => {
+                out.clear();
+                match local {
+                    Some(l) => {
+                        debug_assert_eq!(l.len(), v.n());
+                        out.extend_from_slice(l);
+                    }
+                    None => out.resize(v.n(), 0.0),
+                }
+                v.for_each(|i, val| out[i] = val);
+            }
+            PayloadView::Dense(v) => v.read_into(out),
+            PayloadView::Quant(v) => v.read_into(out),
+        }
+        Ok(())
+    }
+
     /// Composition used by sequential drivers, tools and tests: encode,
     /// "transfer", decode + recover. `wire_bits` is the measured length.
     pub fn download(
@@ -223,8 +270,10 @@ impl<'a> CodecEngine<'a> {
     }
 
     /// Top-K through the L1 kernel: the kernel produces the dense masked
-    /// vector; ONE native threshold selection (parity-pinned to the
-    /// kernel) realizes the index set — no second sort.
+    /// vector; ONE native selection ([`compress::topk::topk_encode`],
+    /// parity-pinned to the kernel — the single owner of the
+    /// inclusive-tie semantics) realizes the index set, and the wire
+    /// values are the kernel's outputs at those indices.
     fn topk_payload_xla(&self, x: &[f32], ratio: f64) -> Result<Payload> {
         let n = x.len();
         let out = self.xla().exec(
@@ -232,16 +281,13 @@ impl<'a> CodecEngine<'a> {
             &[lit_f32(x, &[n as i64])?, lit_scalar(ratio as f32)],
         )?;
         let dense = to_vec_f32(&out[0])?;
-        let (thr, drop) = compress::topk::keep_threshold(x, ratio);
-        let mut indices = Vec::new();
-        let mut values = Vec::new();
-        if drop < n {
-            for i in 0..n {
-                if x[i].abs() >= thr {
-                    indices.push(i as u32);
-                    values.push(dense[i]);
-                }
-            }
+        let (payload, _) = compress::topk::topk_encode(x, ratio);
+        let Payload::TopK { indices, mut values, .. } = payload else {
+            unreachable!("topk_encode produced a non-TopK payload")
+        };
+        // overwrite the exact-size values buffer with the kernel's outputs
+        for (v, &i) in values.iter_mut().zip(&indices) {
+            *v = dense[i as usize];
         }
         Ok(Payload::TopK { n, indices, values })
     }
@@ -258,13 +304,20 @@ impl<'a> CodecEngine<'a> {
         if cfg!(debug_assertions) {
             let n = x.len();
             let levels = quant::levels_for_bits(bits);
-            let noise = noise.unwrap_or_else(|| vec![0.0; n]);
+            let zeros;
+            let noise: &[f32] = match &noise {
+                Some(buf) => &buf[..],
+                None => {
+                    zeros = vec![0.0f32; n];
+                    &zeros
+                }
+            };
             let out = self.xla().exec(
                 &format!("quantize_{}", self.task),
                 &[
                     lit_f32(x, &[n as i64])?,
                     lit_scalar(levels as f32),
-                    lit_f32(&noise, &[n as i64])?,
+                    lit_f32(noise, &[n as i64])?,
                 ],
             )?;
             let kernel = to_vec_f32(&out[0])?;

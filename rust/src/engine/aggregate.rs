@@ -23,7 +23,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, Result};
 
 use crate::compress::quant;
-use crate::wire::Payload;
+use crate::wire::{CaesarSlot, EncodedPayload, Payload, PayloadView};
 
 /// Weighted f64 partial sum over one group of devices. Devices must be
 /// folded in the (sorted) order fixed at construction.
@@ -109,6 +109,36 @@ impl AggregatorShard {
                 for (s, &x) in self.sum.iter_mut().zip(&cm.naive_reconstruction()) {
                     *s += (x as f64) * weight;
                 }
+            }
+        }
+        self.folded += 1;
+    }
+
+    /// Fold one device's *serialized* upload straight off its bytes —
+    /// [`AggregatorShard::fold_payload`] without ever materializing the
+    /// decoded payload. Elements stream through a borrowed
+    /// [`PayloadView`] in the same order the eager decode would produce
+    /// them, so the f64 additions (and therefore the canonical reduction
+    /// tree) are bit-identical; the per-device index/value vectors the
+    /// decode used to allocate simply never exist.
+    pub fn fold_encoded(&mut self, device: usize, enc: &EncodedPayload, weight: f64) {
+        self.advance(device, "device");
+        assert_eq!(enc.spec.n(), self.sum.len(), "payload length mismatch");
+        match enc.view() {
+            PayloadView::Dense(v) => v.for_each(|i, x| self.sum[i] += (x as f64) * weight),
+            PayloadView::TopK(v) => v.for_each(|i, x| self.sum[i] += (x as f64) * weight),
+            PayloadView::Quant(v) => v.for_each(|i, x| self.sum[i] += (x as f64) * weight),
+            // downloads-only codec; accepted for completeness — streams
+            // the same prior-free reconstruction fold_payload densifies
+            PayloadView::CaesarSplit(v) => {
+                let (avg_abs, _) = v.scalars();
+                v.for_each(|i, slot| {
+                    let x = match slot {
+                        CaesarSlot::Kept(val) => val,
+                        CaesarSlot::Sign(sign) => sign as f32 * avg_abs,
+                    };
+                    self.sum[i] += (x as f64) * weight;
+                });
             }
         }
         self.folded += 1;
@@ -273,7 +303,8 @@ mod tests {
             .collect();
         let expect: Vec<usize> = (0..6).collect();
         let mut dense_shard = AggregatorShard::new(0, n, expect.clone());
-        let mut payload_shard = AggregatorShard::new(0, n, expect);
+        let mut payload_shard = AggregatorShard::new(0, n, expect.clone());
+        let mut encoded_shard = AggregatorShard::new(0, n, expect);
         for (d, g) in grads.iter().enumerate() {
             // alternate codecs to cover every fold_payload arm
             let payload = match d % 3 {
@@ -287,13 +318,34 @@ mod tests {
                 }
             };
             // the wire really is traversed: encode → bytes → decode
-            let decoded = payload.encode().decode();
+            let enc = payload.encode();
+            let decoded = enc.decode();
             dense_shard.fold(d, &decoded.to_dense(), 0.7);
             payload_shard.fold_payload(d, &decoded, 0.7);
+            encoded_shard.fold_encoded(d, &enc, 0.7);
         }
-        assert!(dense_shard.complete() && payload_shard.complete());
-        for (a, b) in dense_shard.sum.iter().zip(&payload_shard.sum) {
+        assert!(dense_shard.complete() && payload_shard.complete() && encoded_shard.complete());
+        for ((a, b), c) in dense_shard.sum.iter().zip(&payload_shard.sum).zip(&encoded_shard.sum)
+        {
             assert_eq!(a.to_bits(), b.to_bits());
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+    }
+
+    #[test]
+    fn caesar_fold_encoded_matches_fold_payload() {
+        use crate::compress::caesar_compress;
+        use crate::util::rng::Rng;
+        let n = 257;
+        let mut rng = Rng::new(0xCAE);
+        let w: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let enc = Payload::CaesarSplit(caesar_compress(&w, 0.4)).encode();
+        let mut a = AggregatorShard::new(0, n, vec![0]);
+        let mut b = AggregatorShard::new(0, n, vec![0]);
+        a.fold_payload(0, &enc.decode(), 1.3);
+        b.fold_encoded(0, &enc, 1.3);
+        for (x, y) in a.sum.iter().zip(&b.sum) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
     }
 

@@ -1,0 +1,234 @@
+//! Per-round PS-side download-encode cache.
+//!
+//! The staleness-greedy of §4.1 clusters participants into a handful of
+//! discrete download ratios (`cfg.clusters`, default 4), and baselines
+//! like FedAvg serve the identical `Full` payload to everyone — yet the
+//! seed engine ran `CodecEngine::encode_download` once **per
+//! participant**, re-compressing and re-serializing the same global model
+//! for every device that shared a codec. This cache deduplicates by the
+//! *effective* codec (post [`effective_download`] resolution, so a
+//! CaesarSplit download degraded to `Full` for a local-less receiver
+//! shares `Full`'s entry): O(distinct codecs) encodes per round instead
+//! of O(participants), with the one `EncodedPayload` shared across
+//! devices via `Arc` — every receiver sees byte-identical wire bytes, so
+//! engine parity is untouched.
+//!
+//! **RNG discipline.** Only RNG-free codecs are cacheable (`Full`,
+//! `TopK`, `CaesarSplit` — pure functions of the global model). `Quant`
+//! draws its stochastic-rounding noise from the *device* stream
+//! (`compress::quant`'s contract), so its payload is device-specific: it
+//! bypasses the cache and encodes per device, exactly as before. For
+//! cacheable codecs the device stream is never touched — neither on a
+//! miss (the encode is fed a throwaway RNG; these codecs draw nothing)
+//! nor on a hit — so per-device draw sequences are identical to the
+//! uncached engine and bit-exact parity holds at every worker count.
+//!
+//! **Concurrency.** One cache is created per round and shared by all
+//! workers. Misses encode *while holding the lock*: the first device to
+//! need a codec pays the encode, racing devices block and then share the
+//! `Arc` — exactly one encode per distinct codec per round, which keeps
+//! the `encode_calls` metric deterministic across worker counts (a
+//! benched acceptance number, not just a nicety). Hits are a lock +
+//! `Arc::clone`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::coordinator::codec::effective_download;
+use crate::coordinator::CodecEngine;
+use crate::schemes::DownloadCodec;
+use crate::util::rng::Rng;
+use crate::wire::EncodedPayload;
+
+/// Hashable identity of a cacheable (RNG-free) download codec. Ratios are
+/// keyed by their exact f64 bit pattern — the staleness clustering emits
+/// identical f64s for devices in the same cluster, which is precisely the
+/// sharing this cache exploits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum CacheKey {
+    Full,
+    CaesarSplit(u64),
+    TopK(u64),
+}
+
+fn cache_key(codec: DownloadCodec) -> Option<CacheKey> {
+    match codec {
+        DownloadCodec::Full => Some(CacheKey::Full),
+        DownloadCodec::CaesarSplit { ratio } => Some(CacheKey::CaesarSplit(ratio.to_bits())),
+        DownloadCodec::TopK { ratio } => Some(CacheKey::TopK(ratio.to_bits())),
+        // device-specific stochastic noise: never shared
+        DownloadCodec::Quant { .. } => None,
+    }
+}
+
+/// Shares one encoded download per distinct codec per round.
+pub struct DownloadCache {
+    entries: Mutex<HashMap<CacheKey, Arc<EncodedPayload>>>,
+    requests: AtomicUsize,
+    encodes: AtomicUsize,
+}
+
+impl Default for DownloadCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DownloadCache {
+    pub fn new() -> DownloadCache {
+        DownloadCache {
+            entries: Mutex::new(HashMap::new()),
+            requests: AtomicUsize::new(0),
+            encodes: AtomicUsize::new(0),
+        }
+    }
+
+    /// The serialized download for `codec`, encoding at most once per
+    /// distinct cacheable codec. `codec` must already be the *effective*
+    /// codec ([`effective_download`]); a debug assertion guards the
+    /// `has_local` contract. `rng` is the device stream — consumed only
+    /// by uncacheable codecs (Quant), untouched otherwise.
+    pub fn get_or_encode(
+        &self,
+        engine: &CodecEngine,
+        codec: DownloadCodec,
+        w: &[f32],
+        has_local: bool,
+        rng: &mut Rng,
+    ) -> Result<Arc<EncodedPayload>> {
+        debug_assert_eq!(
+            effective_download(codec, has_local),
+            codec,
+            "get_or_encode requires the effective codec"
+        );
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let Some(key) = cache_key(codec) else {
+            self.encodes.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::new(engine.encode_download(codec, w, rng)?));
+        };
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(hit) = entries.get(&key) {
+            return Ok(Arc::clone(hit));
+        }
+        self.encodes.fetch_add(1, Ordering::Relaxed);
+        // cacheable codecs are RNG-free by the module contract: feed a
+        // throwaway stream so hit/miss can never diverge device draws
+        let enc = Arc::new(engine.encode_download(codec, w, &mut Rng::new(0))?);
+        entries.insert(key, Arc::clone(&enc));
+        Ok(enc)
+    }
+
+    /// Downloads served this round (cache hits + encodes).
+    pub fn requests(&self) -> usize {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Actual `encode_download` executions this round (misses +
+    /// uncacheable codecs).
+    pub fn encodes(&self) -> usize {
+        self.encodes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn shared_codec_encodes_once_and_shares_the_allocation() {
+        let w = randn(512, 1);
+        let e = CodecEngine::native();
+        let cache = DownloadCache::new();
+        let codec = DownloadCodec::CaesarSplit { ratio: 0.4 };
+        let mut rng = Rng::new(9);
+        let a = cache.get_or_encode(&e, codec, &w, true, &mut rng).unwrap();
+        let b = cache.get_or_encode(&e, codec, &w, true, &mut rng).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "devices sharing a codec must share bytes");
+        assert_eq!(cache.requests(), 2);
+        assert_eq!(cache.encodes(), 1);
+        // byte-identical by construction, still worth pinning
+        assert_eq!(a.bytes, b.bytes);
+    }
+
+    #[test]
+    fn distinct_ratios_are_distinct_entries() {
+        let w = randn(256, 2);
+        let e = CodecEngine::native();
+        let cache = DownloadCache::new();
+        let mut rng = Rng::new(3);
+        for &r in &[0.2, 0.4, 0.2] {
+            cache
+                .get_or_encode(&e, DownloadCodec::CaesarSplit { ratio: r }, &w, true, &mut rng)
+                .unwrap();
+        }
+        cache.get_or_encode(&e, DownloadCodec::Full, &w, false, &mut rng).unwrap();
+        assert_eq!(cache.requests(), 4);
+        assert_eq!(cache.encodes(), 3, "0.2 / 0.4 / Full");
+    }
+
+    #[test]
+    fn cacheable_codecs_never_touch_the_device_stream() {
+        let w = randn(128, 4);
+        let e = CodecEngine::native();
+        let cache = DownloadCache::new();
+        let mut rng = Rng::new(5);
+        let before = rng.clone();
+        for codec in [
+            DownloadCodec::Full,
+            DownloadCodec::TopK { ratio: 0.5 },
+            DownloadCodec::CaesarSplit { ratio: 0.5 },
+            DownloadCodec::Full, // hit
+        ] {
+            cache.get_or_encode(&e, codec, &w, true, &mut rng).unwrap();
+        }
+        let mut b = before;
+        assert_eq!(rng.next_u64(), b.next_u64(), "device stream advanced");
+    }
+
+    #[test]
+    fn quant_bypasses_the_cache_and_draws_per_device() {
+        let w = randn(64, 6);
+        let e = CodecEngine::native();
+        let cache = DownloadCache::new();
+        let codec = DownloadCodec::Quant { bits: 4 };
+        // two devices, two streams → two distinct noise draws
+        let a = cache
+            .get_or_encode(&e, codec, &w, true, &mut Rng::stream(7, 1, 0))
+            .unwrap();
+        let b = cache
+            .get_or_encode(&e, codec, &w, true, &mut Rng::stream(7, 1, 1))
+            .unwrap();
+        assert_eq!(cache.encodes(), 2, "quant must encode per device");
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_ne!(a.bytes, b.bytes, "independent noise must differ");
+        // and the payload matches a direct per-device encode
+        let direct = e.encode_download(codec, &w, &mut Rng::stream(7, 1, 0)).unwrap();
+        assert_eq!(a.bytes, direct.bytes);
+    }
+
+    #[test]
+    fn cached_bytes_match_a_direct_encode() {
+        let w = randn(777, 8);
+        let e = CodecEngine::native();
+        let cache = DownloadCache::new();
+        for codec in [
+            DownloadCodec::Full,
+            DownloadCodec::TopK { ratio: 0.3 },
+            DownloadCodec::CaesarSplit { ratio: 0.6 },
+        ] {
+            let cached =
+                cache.get_or_encode(&e, codec, &w, true, &mut Rng::new(1)).unwrap();
+            let direct = e.encode_download(codec, &w, &mut Rng::new(2)).unwrap();
+            assert_eq!(cached.bytes, direct.bytes, "{codec:?}");
+            assert_eq!(cached.bits, direct.bits, "{codec:?}");
+        }
+    }
+}

@@ -35,13 +35,25 @@
 //! * coordinator-side application (traffic, locals, tracker) happens in
 //!   sorted order after the round drains.
 //!
+//! The per-device hot path is reuse-dominated: one [`DownloadCache`] per
+//! round shares each distinct download encode across all receivers
+//! (`Arc`'d bytes, O(distinct codecs) encodes — RNG-drawing codecs bypass
+//! it), recovery and the gradient use pooled scratch
+//! ([`crate::util::pool`]) written in place, and uploads fold into shards
+//! straight off their serialized bytes. All three layers are
+//! bit-transparent: the cached bytes are what a per-device encode would
+//! have produced, and the in-place/streaming folds walk the exact same
+//! element order as the eager decode.
+//!
 //! `tests/engine_parity.rs` pins this contract end-to-end.
 
 pub mod aggregate;
+pub mod cache;
 pub mod message;
 pub mod registry;
 
 pub use aggregate::{AggregatorShard, ShardReducer};
+pub use cache::DownloadCache;
 pub use message::{DeviceMsg, DroppedDevice, Event, RoundUpdate, StartRound};
 pub use registry::{DeviceStatus, Registry};
 
@@ -53,6 +65,7 @@ use crate::coordinator::codec::effective_download;
 use crate::coordinator::{CodecEngine, Trainer};
 use crate::data::{Dataset, Partition};
 use crate::fleet::RoundCost;
+use crate::util::pool;
 use crate::util::rng::Rng;
 use crate::util::threadpool;
 
@@ -76,13 +89,18 @@ pub enum Phase {
 }
 
 /// Cumulative engine counters (diagnostics; surfaced by `caesar info`-style
-/// tooling and tests).
+/// tooling, tests and the benches' per-round metrics).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EngineStats {
     pub rounds: usize,
     pub messages: usize,
     pub heartbeats: usize,
     pub dropouts: usize,
+    /// Downloads served (one per StartRound that reached encoding).
+    pub download_requests: usize,
+    /// Actual `encode_download` executions — with the per-round
+    /// [`DownloadCache`], O(distinct codecs) of `download_requests`.
+    pub download_encodes: usize,
 }
 
 /// Read-only view of everything a device round needs from the server.
@@ -224,12 +242,18 @@ impl Engine {
         let mut dropped: Vec<DroppedDevice> = Vec::new();
         let mut worker_err: Option<anyhow::Error> = None;
 
+        // One download-encode cache per round, shared by every worker:
+        // devices assigned the same effective codec receive the same
+        // Arc'd bytes (O(distinct codecs) encodes per round).
+        let cache = DownloadCache::new();
+
         match provider {
             TrainerProvider::Inline(trainer) => {
                 let codec =
                     CodecEngine::new(env.cfg.compression, trainer.runtime(), &env.cfg.task)?;
                 for (g, members) in groups.iter().enumerate() {
-                    let events = execute_group(env, items, &ecfg, g, members, trainer, &codec)?;
+                    let events =
+                        execute_group(env, items, &ecfg, g, members, trainer, &codec, &cache)?;
                     for ev in events {
                         self.apply_event(ev, env.sim_now_s, &mut reducer, &mut updates, &mut dropped)?;
                     }
@@ -238,6 +262,7 @@ impl Engine {
             TrainerProvider::PerWorker(factory) => {
                 let n_workers = threadpool::workers(self.cfg.workers);
                 let groups = &groups;
+                let cache = &cache;
                 threadpool::scope_stream(
                     n_groups,
                     n_workers,
@@ -256,7 +281,8 @@ impl Engine {
                             Ok(c) => c,
                             Err(e) => return vec![Event::Error(format!("worker codec: {e:#}"))],
                         };
-                        match execute_group(env, items, &ecfg, g, groups[g], trainer, &codec) {
+                        match execute_group(env, items, &ecfg, g, groups[g], trainer, &codec, cache)
+                        {
                             Ok(events) => events,
                             Err(e) => vec![Event::Error(format!("group {g}: {e:#}"))],
                         }
@@ -286,6 +312,9 @@ impl Engine {
         // Canonical application order for the driver.
         updates.sort_by_key(|u| u.device);
         dropped.sort_by_key(|d| d.device);
+
+        self.stats.download_requests += cache.requests();
+        self.stats.download_encodes += cache.encodes();
 
         let (agg, folded) = reducer.finish()?;
         if folded != updates.len() {
@@ -336,6 +365,7 @@ impl Engine {
 /// Execute one aggregation group of devices in canonical (sorted) order,
 /// folding each update into the group's shard as soon as it is produced.
 /// Returns the group's event batch, ending with the finished shard.
+#[allow(clippy::too_many_arguments)]
 fn execute_group(
     env: &RoundEnv,
     items: &[StartRound],
@@ -344,12 +374,13 @@ fn execute_group(
     members: &[usize],
     trainer: &Trainer,
     codec: &CodecEngine,
+    cache: &DownloadCache,
 ) -> Result<Vec<Event>> {
     let expect: Vec<usize> = members.iter().map(|&i| items[i].plan.device).collect();
     let mut shard = AggregatorShard::new(group, env.global.len(), expect);
     let mut events = Vec::new();
     for &i in members {
-        run_device(env, &items[i], ecfg, trainer, codec, &mut events, &mut shard)?;
+        run_device(env, &items[i], ecfg, trainer, codec, cache, &mut events, &mut shard)?;
     }
     events.push(Event::Shard(shard));
     Ok(events)
@@ -357,15 +388,27 @@ fn execute_group(
 
 /// Simulate one device's round: serialize + transfer the download, (maybe)
 /// drop out, decode + recover, local SGD, serialize the upload and fold
-/// its decoded payload into `shard`. Every payload that "crosses the wire"
-/// here really is encoded to bytes and decoded back — traffic and transfer
-/// time derive from the measured encoded lengths.
+/// it into `shard`. Every payload that "crosses the wire" here really is
+/// encoded to bytes and read back off them — traffic and transfer time
+/// derive from the measured encoded lengths.
+///
+/// Hot-path reuse (three layers, all bit-transparent):
+/// * the download bytes come from the round's shared [`DownloadCache`]
+///   (one encode per distinct codec, `Arc`-shared);
+/// * recovery writes into a pooled model buffer
+///   (`recover_download_into` over a lazy `wire::PayloadView`) and the
+///   gradient reuses a pooled buffer too — the O(n) scratch of a device
+///   step is leased from `util::pool`, not allocated;
+/// * the upload folds into the shard straight off its serialized bytes
+///   (`fold_encoded`), so the decoded payload is never materialized.
+#[allow(clippy::too_many_arguments)]
 fn run_device(
     env: &RoundEnv,
     item: &StartRound,
     ecfg: &EngineConfig,
     trainer: &Trainer,
     codec: &CodecEngine,
+    cache: &DownloadCache,
     events: &mut Vec<Event>,
     shard: &mut AggregatorShard,
 ) -> Result<()> {
@@ -376,9 +419,10 @@ fn run_device(
     let local = env.locals[d].as_deref();
 
     // (1) PS-side download encode (§4.1): the serialized bytes are the
-    // wire truth
+    // wire truth, shared across every device with the same effective codec
     let down_codec = effective_download(plan.download, local.is_some());
-    let down_enc = codec.encode_download(down_codec, env.global, &mut dev_rng)?;
+    let down_enc =
+        cache.get_or_encode(codec, down_codec, env.global, local.is_some(), &mut dev_rng)?;
     let down_wire_bits = down_enc.bits;
     let down_bits = env.scale.scale_bits(down_wire_bits);
 
@@ -403,9 +447,10 @@ fn run_device(
         }
     }
 
-    // (2) device-side decode + recovery, then local training (Eq. 2) from
-    // the recovered initial model
-    let model = codec.recover_download(&down_enc, local)?;
+    // (2) device-side decode + recovery into a pooled model buffer, then
+    // local training (Eq. 2) from the recovered initial model
+    let mut model = pool::f32_buf();
+    codec.recover_download_into(&down_enc, local, &mut model)?;
     drop(down_enc);
     let data_shard = &env.partition.shards[d];
     let (w_final, loss) = trainer.train(
@@ -418,15 +463,20 @@ fn run_device(
         &mut dev_rng,
     )?;
 
-    // (3) g_i = w_i^{t,0} − w_i^{t,τ} = η·Σ∇ (paper §2.1)
-    let g: Vec<f32> = model.iter().zip(&w_final).map(|(a, b)| a - b).collect();
+    // (3) g_i = w_i^{t,0} − w_i^{t,τ} = η·Σ∇ (paper §2.1), in pooled
+    // scratch — it only lives until the upload is serialized
+    let mut g = pool::f32_buf();
+    g.extend(model.iter().zip(&w_final).map(|(a, b)| a - b));
+    drop(model);
     let grad_norm = g.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
 
     // (4) upload compression (§4.2): the device serializes, the
-    // coordinator-side shard folds the decoded payload — sparsely for
-    // Top-K (O(kept)), and the dense update never leaves this worker
+    // coordinator-side shard folds straight off the serialized bytes —
+    // sparsely for Top-K (O(kept)), with no decoded intermediate — and
+    // the dense update never leaves this worker
     let up_enc = codec.encode_upload(plan.upload, &g, &mut dev_rng)?;
-    shard.fold_payload(d, &up_enc.decode(), 1.0);
+    drop(g);
+    shard.fold_encoded(d, &up_enc, 1.0);
 
     // (5) simulated cost (Eq. 7) from the measured wire lengths +
     // liveness traffic

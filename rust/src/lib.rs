@@ -26,8 +26,14 @@
 //!   cross the simulated wire as bytes; traffic and transfer time derive
 //!   from the measured `EncodedPayload::bits`, with the legacy
 //!   `compress::traffic` formulas demoted to debug-assert cross-checks.
-//!   Top-K uploads aggregate sparsely straight from the payload
-//!   (`engine::AggregatorShard::fold_payload`, O(kept) per device).
+//!   The hot path never materializes a decoded payload: a borrowed
+//!   [`wire::PayloadView`] streams elements off the bytes — recovery
+//!   writes in place (`CodecEngine::recover_download_into` into pooled
+//!   [`util::pool`] buffers) and uploads fold sparsely straight from
+//!   their serialization (`engine::AggregatorShard::fold_encoded`,
+//!   O(kept) per device). PS-side download encodes are deduplicated per
+//!   round by [`engine::DownloadCache`] — O(distinct codecs), not
+//!   O(participants).
 //! * [`caesar`] — Eq. 3–9: staleness, importance, batch-size regulation.
 //! * [`fleet`], [`data`] — the simulated testbed and non-IID datasets.
 //! * [`runtime`] — PJRT CPU execution of the AOT artifacts.

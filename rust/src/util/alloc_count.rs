@@ -1,0 +1,115 @@
+//! Allocation-counting global allocator for the bench binaries.
+//!
+//! `bytes allocated per round` is a first-class perf metric alongside
+//! ms/round: the round hot path is supposed to be reuse-dominated (encode
+//! cache, pooled scratch, in-place recovery), and a regression that
+//! reintroduces per-device model-sized allocations shows up here long
+//! before it shows up in wall-clock noise.
+//!
+//! Usage (bench binaries only — a process has exactly one global
+//! allocator, so the library itself never installs it):
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: caesar_fl::util::alloc_count::CountingAlloc = CountingAlloc;
+//!
+//! let before = alloc_count::snapshot();
+//! // ... measured work ...
+//! let d = alloc_count::snapshot().since(&before);
+//! println!("{} bytes in {} allocations", d.bytes, d.count);
+//! ```
+//!
+//! Counters are process-wide relaxed atomics: cheap enough to leave on,
+//! exact for single-threaded sections, and a faithful total across
+//! threads (ordering between threads is irrelevant for sums). Only
+//! fresh requests are counted (`alloc`, `alloc_zeroed`, and the growth
+//! portion of `realloc`); frees are not tracked — the metric is traffic,
+//! not residency.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static BYTES: AtomicU64 = AtomicU64::new(0);
+static COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// A [`System`]-backed allocator that counts allocation traffic.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let grown = new_size.saturating_sub(layout.size());
+        if grown > 0 {
+            BYTES.fetch_add(grown as u64, Ordering::Relaxed);
+            COUNT.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Cumulative allocation counters at one instant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    pub bytes: u64,
+    pub count: u64,
+}
+
+impl AllocSnapshot {
+    /// Traffic between `earlier` and `self`.
+    pub fn since(&self, earlier: &AllocSnapshot) -> AllocSnapshot {
+        AllocSnapshot {
+            bytes: self.bytes.wrapping_sub(earlier.bytes),
+            count: self.count.wrapping_sub(earlier.count),
+        }
+    }
+}
+
+/// Read the current cumulative counters. Zeros (forever) unless the
+/// process installed [`CountingAlloc`] as its `#[global_allocator]`.
+pub fn snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        bytes: BYTES.load(Ordering::Relaxed),
+        count: COUNT.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The test binary does NOT install CountingAlloc (the lib must not
+    // claim the global allocator), so only the pure accounting is
+    // testable here; the bench binaries exercise the hot path.
+
+    #[test]
+    fn snapshot_delta_arithmetic() {
+        let a = AllocSnapshot { bytes: 100, count: 3 };
+        let b = AllocSnapshot { bytes: 175, count: 9 };
+        let d = b.since(&a);
+        assert_eq!(d.bytes, 75);
+        assert_eq!(d.count, 6);
+    }
+
+    #[test]
+    fn uninstalled_counters_are_stable() {
+        let a = snapshot();
+        let _v: Vec<u64> = (0..1000).collect();
+        let b = snapshot();
+        assert_eq!(a, b, "lib tests must not have the counting allocator installed");
+    }
+}

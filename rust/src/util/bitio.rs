@@ -84,6 +84,19 @@ impl<'a> BitReader<'a> {
         BitReader { buf, pos: 0 }
     }
 
+    /// A reader positioned at an absolute bit offset — how
+    /// `wire::PayloadView` opens several cursors into one byte stream
+    /// (e.g. Top-K positions and values as paired lazy streams).
+    pub fn at_bit(buf: &'a [u8], bit: usize) -> Self {
+        debug_assert!(bit <= buf.len() * 8, "offset {bit} past {} bits", buf.len() * 8);
+        BitReader { buf, pos: bit }
+    }
+
+    /// Current absolute bit position.
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+
     pub fn read_bit(&mut self) -> bool {
         let b = (self.buf[self.pos / 8] >> (self.pos % 8)) & 1 == 1;
         self.pos += 1;
@@ -122,6 +135,28 @@ impl<'a> BitReader<'a> {
 
     pub fn read_f32(&mut self) -> f32 {
         f32::from_bits(self.read_bits(32) as u32)
+    }
+
+    /// Append `count` f32s to `out` — the bulk decode path. When the
+    /// cursor is byte-aligned (every `Dense` payload, whose values start
+    /// at bit 0) this reads whole little-endian words straight off the
+    /// byte slice instead of shifting bit-by-bit; the unaligned fallback
+    /// is bit-identical ([`BitWriter::push_bits`] emits LSB-first, i.e.
+    /// little-endian byte order at aligned positions).
+    pub fn read_f32s_into(&mut self, out: &mut Vec<f32>, count: usize) {
+        out.reserve(count);
+        if self.pos % 8 == 0 {
+            let start = self.pos / 8;
+            let words = self.buf[start..start + 4 * count].chunks_exact(4);
+            out.extend(
+                words.map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+            );
+            self.pos += 32 * count;
+        } else {
+            for _ in 0..count {
+                out.push(self.read_f32());
+            }
+        }
     }
 
     pub fn remaining_bits(&self) -> usize {
@@ -207,6 +242,60 @@ mod tests {
                 assert_eq!(r.read_bits(3), 0b101, "prefix={prefix} width={width} tail");
             }
         }
+    }
+
+    #[test]
+    fn at_bit_matches_sequential_cursor() {
+        let mut w = BitWriter::new();
+        w.push_bits(0b1101, 4);
+        w.push_f32(-7.25);
+        w.push_bits(0x3F, 6);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::at_bit(&bytes, 4);
+        assert_eq!(r.bit_pos(), 4);
+        assert_eq!(r.read_f32(), -7.25);
+        assert_eq!(r.read_bits(6), 0x3F);
+        assert_eq!(r.bit_pos(), 4 + 32 + 6);
+    }
+
+    #[test]
+    fn bulk_f32_read_matches_scalar_at_every_alignment() {
+        let xs: Vec<f32> = (0..37).map(|i| (i as f32) * 1.7 - 11.0).collect();
+        for prefix in 0..8usize {
+            let mut w = BitWriter::new();
+            for i in 0..prefix {
+                w.push_bit(i % 2 == 1);
+            }
+            for &x in &xs {
+                w.push_f32(x);
+            }
+            let bytes = w.into_bytes();
+            // scalar reference
+            let mut r1 = BitReader::at_bit(&bytes, prefix);
+            let want: Vec<f32> = (0..xs.len()).map(|_| r1.read_f32()).collect();
+            // bulk path (aligned fast path iff prefix == 0)
+            let mut r2 = BitReader::at_bit(&bytes, prefix);
+            let mut got = Vec::new();
+            r2.read_f32s_into(&mut got, xs.len());
+            assert_eq!(r2.bit_pos(), prefix + 32 * xs.len(), "prefix={prefix}");
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "prefix={prefix} elem {i}");
+            }
+            for (a, b) in xs.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn bulk_f32_read_appends_without_clearing() {
+        let mut w = BitWriter::new();
+        w.push_f32(1.0);
+        w.push_f32(2.0);
+        let bytes = w.into_bytes();
+        let mut out = vec![9.0f32];
+        BitReader::new(&bytes).read_f32s_into(&mut out, 2);
+        assert_eq!(out, vec![9.0, 1.0, 2.0]);
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Self-built substrates (offline environment: no rand / serde / clap /
 //! criterion / proptest — see DESIGN.md §8).
 
+pub mod alloc_count;
 pub mod bitio;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,180 @@
+//! Thread-local scratch-buffer pool for the round hot path.
+//!
+//! The per-device codec work allocates several model-sized vectors per
+//! call (`keep_threshold`'s |g| key buffer, the quantizer's noise draws,
+//! the recovered download model, the local gradient). At fleet scale that
+//! is O(participants) short-lived n-word allocations per round. This pool
+//! recycles them: [`f32_buf`] / [`u32_buf`] lease a cleared `Vec` whose
+//! capacity survives from the previous lease on the same thread, and the
+//! RAII guard returns it on drop — so a worker thread allocates each
+//! scratch shape once per round instead of once per device.
+//!
+//! Design notes:
+//! * **Thread-local, lock-free.** Each thread owns its free lists; leases
+//!   never contend. Engine workers are scoped threads that live for one
+//!   round — reuse amortizes over the many devices a worker executes
+//!   within the round; the sequential (inline) path reuses across rounds.
+//! * **Bounded.** At most [`MAX_POOLED`] buffers are retained per type;
+//!   extra returns are simply dropped, so the pool can never hoard more
+//!   than a few model-sized vectors per thread.
+//! * **A lease is just a `Vec`.** The guards deref to `Vec<T>`, start
+//!   empty (`len == 0`, capacity recycled), and may be grown, shrunk or
+//!   `mem::take`n freely — a stolen (taken) buffer is replaced by an
+//!   empty one, which is what gets recycled.
+//!
+//! Buffers that *escape* into long-lived values (wire payloads, the
+//! updates a round returns) are intentionally NOT pooled — pooling only
+//! pays for scratch whose lifetime ends with the device step.
+
+use std::cell::RefCell;
+use std::ops::{Deref, DerefMut};
+
+/// Free-list depth per element type, per thread. The round loop needs at
+/// most a handful of simultaneous leases (model + gradient + codec
+/// scratch), so a small constant suffices.
+pub const MAX_POOLED: usize = 8;
+
+thread_local! {
+    static F32_POOL: RefCell<Vec<Vec<f32>>> = RefCell::new(Vec::new());
+    static U32_POOL: RefCell<Vec<Vec<u32>>> = RefCell::new(Vec::new());
+    /// (leases, reuses) — diagnostics for tests and benches.
+    static STATS: RefCell<(u64, u64)> = const { RefCell::new((0, 0)) };
+}
+
+/// Leased `Vec<f32>` scratch; returns to this thread's pool on drop.
+pub struct F32Buf {
+    buf: Vec<f32>,
+}
+
+/// Leased `Vec<u32>` scratch; returns to this thread's pool on drop.
+pub struct U32Buf {
+    buf: Vec<u32>,
+}
+
+macro_rules! impl_buf {
+    ($name:ident, $elem:ty, $pool:ident, $lease:ident) => {
+        /// Lease a cleared buffer from this thread's pool (empty, with
+        /// whatever capacity its previous life left behind).
+        pub fn $lease() -> $name {
+            let reused = $pool.with(|p| p.borrow_mut().pop());
+            STATS.with(|s| {
+                let mut s = s.borrow_mut();
+                s.0 += 1;
+                if reused.is_some() {
+                    s.1 += 1;
+                }
+            });
+            $name { buf: reused.unwrap_or_default() }
+        }
+
+        impl Deref for $name {
+            type Target = Vec<$elem>;
+            fn deref(&self) -> &Vec<$elem> {
+                &self.buf
+            }
+        }
+
+        impl DerefMut for $name {
+            fn deref_mut(&mut self) -> &mut Vec<$elem> {
+                &mut self.buf
+            }
+        }
+
+        impl Drop for $name {
+            fn drop(&mut self) {
+                let mut v = std::mem::take(&mut self.buf);
+                if v.capacity() == 0 {
+                    return; // nothing worth recycling (or it was stolen)
+                }
+                v.clear();
+                $pool.with(|p| {
+                    let mut p = p.borrow_mut();
+                    if p.len() < MAX_POOLED {
+                        p.push(v);
+                    }
+                });
+            }
+        }
+    };
+}
+
+impl_buf!(F32Buf, f32, F32_POOL, f32_buf);
+impl_buf!(U32Buf, u32, U32_POOL, u32_buf);
+
+/// (leases, reuses) served on this thread so far. A reuse is a lease that
+/// recycled capacity instead of starting from a fresh allocation.
+pub fn stats() -> (u64, u64) {
+    STATS.with(|s| *s.borrow())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_is_empty_and_capacity_survives() {
+        // drain whatever earlier tests on this thread left behind
+        let drained: Vec<F32Buf> = (0..MAX_POOLED).map(|_| f32_buf()).collect();
+        drop(drained);
+        {
+            let mut a = f32_buf();
+            a.resize(4096, 1.5);
+        } // drop returns it
+        let b = f32_buf();
+        assert!(b.is_empty(), "leases must start cleared");
+        assert!(b.capacity() >= 4096, "capacity must be recycled");
+    }
+
+    #[test]
+    fn reuse_is_counted() {
+        {
+            let mut w = u32_buf();
+            w.push(7);
+        }
+        let (l0, r0) = stats();
+        let x = u32_buf();
+        let (l1, r1) = stats();
+        assert_eq!(l1, l0 + 1);
+        assert_eq!(r1, r0 + 1, "second lease must be a reuse");
+        drop(x);
+    }
+
+    #[test]
+    fn pool_depth_is_bounded() {
+        let many: Vec<F32Buf> = (0..3 * MAX_POOLED)
+            .map(|_| {
+                let mut b = f32_buf();
+                b.reserve(16);
+                b
+            })
+            .collect();
+        drop(many); // only MAX_POOLED of these may be retained
+        let held = F32_POOL.with(|p| p.borrow().len());
+        assert!(held <= MAX_POOLED, "held={held}");
+    }
+
+    #[test]
+    fn stolen_buffer_is_replaced_not_recycled_twice() {
+        let mut b = f32_buf();
+        b.resize(64, 0.0);
+        let stolen = std::mem::take(&mut *b);
+        assert_eq!(stolen.len(), 64);
+        drop(b); // inner vec is now empty: nothing pushed back
+        // no panic / no double-free; the stolen vec is still intact
+        assert_eq!(stolen.len(), 64);
+    }
+
+    #[test]
+    fn separate_element_types_do_not_mix() {
+        {
+            let mut f = f32_buf();
+            f.resize(100, 0.0);
+            let mut u = u32_buf();
+            u.resize(200, 0);
+        }
+        let f = f32_buf();
+        let u = u32_buf();
+        assert!(f.capacity() >= 100);
+        assert!(u.capacity() >= 200);
+    }
+}

@@ -28,7 +28,17 @@
 //! a few header bytes on this; the legacy accounting never charged for it
 //! and the measured lengths stay pinned to those formulas, so the spec
 //! rides alongside the bytes in [`EncodedPayload`] instead.
+//!
+//! The hot path never materializes a decoded [`Payload`] at all: a
+//! borrowed [`PayloadView`] ([`EncodedPayload::view`]) streams elements
+//! lazily from the byte slice — download recovery writes into a reused
+//! model buffer (`CodecEngine::recover_download_into`) and upload
+//! aggregation folds straight off the bytes
+//! (`AggregatorShard::fold_encoded`), both pinned bit-identical to the
+//! eager decode path.
 
 pub mod payload;
+pub mod view;
 
 pub use payload::{legacy_bits, EncodedPayload, Payload, PayloadSpec};
+pub use view::{CaesarSlot, CaesarSplitView, DenseView, PayloadView, QuantView, TopKView};

@@ -67,12 +67,14 @@ impl EncodedPayload {
 
 /// Top-K position encoding: an index list costs `kept·⌈log₂n⌉` bits, a
 /// bitmap costs `n`; the encoder picks the cheaper (ties → index list) and
-/// the decoder re-derives the choice from the same `(n, kept)`.
-fn index_list_is_cheaper(n: usize, kept: usize) -> bool {
+/// the decoder (and `wire::view`) re-derive the choice from `(n, kept)`.
+pub(crate) fn index_list_is_cheaper(n: usize, kept: usize) -> bool {
     kept * bits_for(n) as usize <= n
 }
 
-fn position_bits(n: usize, kept: usize) -> usize {
+/// Bit length of the Top-K position section — where the value stream
+/// starts (`wire::view` opens its paired value cursor here).
+pub(crate) fn position_bits(n: usize, kept: usize) -> usize {
     (kept * bits_for(n) as usize).min(n)
 }
 

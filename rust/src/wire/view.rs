@@ -1,0 +1,341 @@
+//! Borrowed, lazily-decoded views over serialized payload bytes.
+//!
+//! [`Payload::decode_from`] materializes owned vectors (indices, values,
+//! a full `CompressedModel`) before anyone consumes them — fine for
+//! transcripts and tests, wasteful on the round hot path where the
+//! decoded elements are immediately folded into an existing buffer
+//! (download recovery writes into a reused per-worker model vector,
+//! upload aggregation adds into an f64 shard). A [`PayloadView`] borrows
+//! the `EncodedPayload`'s byte slice and streams elements straight out of
+//! it: no intermediate `Vec` is ever built.
+//!
+//! Laziness is possible because every variant's layout is
+//! cursor-computable from the out-of-band [`PayloadSpec`] plus the
+//! measured bit length: Top-K's value stream starts exactly
+//! `position_bits(n, kept)` bits in (so positions and values advance as
+//! two paired [`BitReader`]s), CaesarSplit's two trailing scalars sit at
+//! `bits − 64`, Dense and Quant are pure element streams. Dense reads use
+//! the byte-aligned bulk-f32 fast path in [`crate::util::bitio`].
+//!
+//! Every view method is pinned bit-identical to the eager
+//! `decode()`-then-densify path by `wire::view` unit tests and
+//! `tests/wire_format.rs`.
+
+use crate::compress::quant;
+use crate::util::bitio::{bits_for, BitReader};
+
+use super::payload::{index_list_is_cheaper, position_bits, EncodedPayload, PayloadSpec};
+
+/// A borrowed decode cursor over one serialized payload.
+pub enum PayloadView<'a> {
+    Dense(DenseView<'a>),
+    TopK(TopKView<'a>),
+    CaesarSplit(CaesarSplitView<'a>),
+    Quant(QuantView<'a>),
+}
+
+impl EncodedPayload {
+    /// Open a lazy view over this payload's bytes.
+    pub fn view(&self) -> PayloadView<'_> {
+        match self.spec {
+            PayloadSpec::Dense { n } => {
+                PayloadView::Dense(DenseView { bytes: &self.bytes, n })
+            }
+            PayloadSpec::TopK { n, kept } => {
+                PayloadView::TopK(TopKView { bytes: &self.bytes, n, kept })
+            }
+            PayloadSpec::CaesarSplit { n } => PayloadView::CaesarSplit(CaesarSplitView {
+                bytes: &self.bytes,
+                n,
+                total_bits: self.bits,
+            }),
+            PayloadSpec::Quant { n, bits, levels } => {
+                PayloadView::Quant(QuantView { bytes: &self.bytes, n, bits, levels })
+            }
+        }
+    }
+}
+
+/// `n` little-endian f32 words starting at bit 0.
+pub struct DenseView<'a> {
+    bytes: &'a [u8],
+    n: usize,
+}
+
+impl DenseView<'_> {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Replace `out` with the decoded vector (bulk aligned reads).
+    pub fn read_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        BitReader::new(self.bytes).read_f32s_into(out, self.n);
+    }
+
+    /// Stream `(index, value)` in order. Dense payloads start at bit 0,
+    /// so this walks whole bytes — no bit shifting.
+    pub fn for_each(&self, mut f: impl FnMut(usize, f32)) {
+        for (i, c) in self.bytes.chunks_exact(4).take(self.n).enumerate() {
+            f(i, f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+    }
+}
+
+/// Positions (bitmap or index list) then `kept` f32 values; streamed as
+/// two paired cursors so neither an index nor a value vector is built.
+pub struct TopKView<'a> {
+    bytes: &'a [u8],
+    n: usize,
+    kept: usize,
+}
+
+impl TopKView<'_> {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn kept(&self) -> usize {
+        self.kept
+    }
+
+    /// Stream `(index, value)` pairs in ascending-index order — the
+    /// decode context (`index_list_is_cheaper`) is re-derived from
+    /// `(n, kept)` exactly as [`super::Payload::decode_from`] does.
+    pub fn for_each(&self, mut f: impl FnMut(usize, f32)) {
+        let mut vals = BitReader::at_bit(self.bytes, position_bits(self.n, self.kept));
+        if index_list_is_cheaper(self.n, self.kept) {
+            let idx_bits = bits_for(self.n);
+            let mut idx = BitReader::new(self.bytes);
+            for _ in 0..self.kept {
+                f(idx.read_bits(idx_bits) as usize, vals.read_f32());
+            }
+        } else {
+            let mut bitmap = BitReader::new(self.bytes);
+            for pos in 0..self.n {
+                if bitmap.read_bit() {
+                    f(pos, vals.read_f32());
+                }
+            }
+        }
+    }
+}
+
+/// What one CaesarSplit position holds on the wire.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CaesarSlot {
+    /// Full-precision parameter (mask bit 0).
+    Kept(f32),
+    /// 1-bit quantized parameter: the transmitted sign (+1 / −1).
+    Sign(i8),
+}
+
+/// n-bit mask, interleaved sign-bit/f32 stream, then avg/max scalars at
+/// the tail (located via the payload's measured bit length).
+pub struct CaesarSplitView<'a> {
+    bytes: &'a [u8],
+    n: usize,
+    total_bits: usize,
+}
+
+impl CaesarSplitView<'_> {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The `(avg_abs, max_abs)` side info from the stream's tail.
+    pub fn scalars(&self) -> (f32, f32) {
+        let mut r = BitReader::at_bit(self.bytes, self.total_bits - 64);
+        (r.read_f32(), r.read_f32())
+    }
+
+    /// Stream every position's slot in order: the mask cursor and the
+    /// per-position payload cursor advance together.
+    pub fn for_each(&self, mut f: impl FnMut(usize, CaesarSlot)) {
+        let mut mask = BitReader::new(self.bytes);
+        let mut data = BitReader::at_bit(self.bytes, self.n);
+        for i in 0..self.n {
+            if mask.read_bit() {
+                f(i, CaesarSlot::Sign(if data.read_bit() { 1 } else { -1 }));
+            } else {
+                f(i, CaesarSlot::Kept(data.read_f32()));
+            }
+        }
+    }
+
+    /// §4.1 recovery straight into `out` — bit-identical to
+    /// [`crate::compress::caesar_recover`] over the decoded model, with
+    /// no intermediate `CompressedModel`.
+    pub fn recover_into(&self, local: &[f32], out: &mut Vec<f32>) {
+        assert_eq!(self.n, local.len(), "local model length mismatch");
+        let (avg_abs, max_abs) = self.scalars();
+        out.clear();
+        out.reserve(self.n);
+        self.for_each(|i, slot| match slot {
+            CaesarSlot::Kept(v) => out.push(v),
+            CaesarSlot::Sign(sign) => {
+                let l = local[i];
+                let local_sign: i8 = if l >= 0.0 { 1 } else { -1 };
+                let bad = local_sign != sign || l.abs() > max_abs;
+                out.push(if bad { sign as f32 * avg_abs } else { l });
+            }
+        });
+    }
+
+    /// Prior-free reconstruction (`sign·avg_abs` at quantized slots) into
+    /// `out` — bit-identical to `CompressedModel::naive_reconstruction`.
+    pub fn naive_into(&self, out: &mut Vec<f32>) {
+        let (avg_abs, _) = self.scalars();
+        out.clear();
+        out.reserve(self.n);
+        self.for_each(|_, slot| match slot {
+            CaesarSlot::Kept(v) => out.push(v),
+            CaesarSlot::Sign(sign) => out.push(sign as f32 * avg_abs),
+        });
+    }
+}
+
+/// f32 norm then `n` × (sign bit + `bits`-wide bucket code).
+pub struct QuantView<'a> {
+    bytes: &'a [u8],
+    n: usize,
+    bits: u32,
+    levels: u32,
+}
+
+impl QuantView<'_> {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn norm(&self) -> f32 {
+        BitReader::new(self.bytes).read_f32()
+    }
+
+    /// Stream `(index, dequantized value)` in order — the same
+    /// [`quant::dequantize_code`] expression as the dense reconstruction.
+    pub fn for_each(&self, mut f: impl FnMut(usize, f32)) {
+        let mut r = BitReader::new(self.bytes);
+        let norm = r.read_f32();
+        for i in 0..self.n {
+            let neg = r.read_bit() as u32;
+            let q = r.read_bits(self.bits) as u32;
+            f(i, quant::dequantize_code((q << 1) | neg, self.levels, norm));
+        }
+    }
+
+    /// Replace `out` with the dequantized vector.
+    pub fn read_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.n);
+        self.for_each(|_, v| out.push(v));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{caesar_compress, caesar_recover, topk};
+    use crate::util::rng::Rng;
+    use crate::wire::Payload;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn dense_view_matches_decode() {
+        let x = randn(777, 0);
+        let enc = Payload::Dense(x.clone()).encode();
+        let PayloadView::Dense(v) = enc.view() else { panic!("wrong view") };
+        assert_eq!(v.n(), 777);
+        let mut out = vec![f32::NAN; 3]; // dirty buffer: read_into must clear
+        v.read_into(&mut out);
+        assert_bits_eq(&out, &x, "dense read_into");
+        let mut streamed = Vec::new();
+        v.for_each(|i, val| {
+            assert_eq!(i, streamed.len());
+            streamed.push(val);
+        });
+        assert_bits_eq(&streamed, &x, "dense for_each");
+    }
+
+    #[test]
+    fn topk_view_matches_decode_both_position_encodings() {
+        let g = randn(4096, 1);
+        for ratio in [0.99, 0.2, 0.0, 1.0] {
+            let (p, _) = topk::topk_encode(&g, ratio);
+            let enc = p.encode();
+            let Payload::TopK { indices, values, .. } = enc.decode() else { panic!() };
+            let PayloadView::TopK(v) = enc.view() else { panic!("wrong view") };
+            assert_eq!(v.kept(), indices.len(), "ratio={ratio}");
+            let mut got_i = Vec::new();
+            let mut got_v = Vec::new();
+            v.for_each(|i, val| {
+                got_i.push(i as u32);
+                got_v.push(val);
+            });
+            assert_eq!(got_i, indices, "ratio={ratio}");
+            assert_bits_eq(&got_v, &values, &format!("ratio={ratio}"));
+        }
+    }
+
+    #[test]
+    fn caesar_view_recovers_bit_identically() {
+        let w = randn(1000, 2);
+        let local = randn(1000, 3);
+        for ratio in [0.0, 0.35, 0.6, 1.0] {
+            let cm = caesar_compress(&w, ratio);
+            let enc = Payload::CaesarSplit(cm.clone()).encode();
+            let PayloadView::CaesarSplit(v) = enc.view() else { panic!("wrong view") };
+            let (avg, max) = v.scalars();
+            assert_eq!(avg.to_bits(), cm.avg_abs.to_bits(), "ratio={ratio}");
+            assert_eq!(max.to_bits(), cm.max_abs.to_bits(), "ratio={ratio}");
+            let mut rec = vec![1.0f32]; // dirty
+            v.recover_into(&local, &mut rec);
+            assert_bits_eq(&rec, &caesar_recover(&cm, &local), &format!("ratio={ratio}"));
+            let mut naive = Vec::new();
+            v.naive_into(&mut naive);
+            assert_bits_eq(&naive, &cm.naive_reconstruction(), &format!("ratio={ratio}"));
+        }
+    }
+
+    #[test]
+    fn quant_view_matches_decoded_dense() {
+        let x = randn(2048, 4);
+        let noise: Vec<f32> = {
+            let mut rng = Rng::new(5);
+            (0..2048).map(|_| rng.f32()).collect()
+        };
+        for bits in [1u32, 4, 12, 28] {
+            let levels = quant::levels_for_bits(bits);
+            let (norm, codes) = quant::quantize_codes(&x, levels, Some(&noise));
+            let enc = Payload::Quant { bits, levels, norm, codes }.encode();
+            let PayloadView::Quant(v) = enc.view() else { panic!("wrong view") };
+            assert_eq!(v.norm().to_bits(), norm.to_bits(), "bits={bits}");
+            let mut out = Vec::new();
+            v.read_into(&mut out);
+            assert_bits_eq(&out, &enc.decode().to_dense(), &format!("bits={bits}"));
+        }
+    }
+
+    #[test]
+    fn zero_length_payloads_stream_nothing() {
+        let enc = Payload::TopK { n: 64, indices: vec![], values: vec![] }.encode();
+        let PayloadView::TopK(v) = enc.view() else { panic!() };
+        v.for_each(|_, _| panic!("empty top-k must stream nothing"));
+        let enc = Payload::Dense(Vec::new()).encode();
+        let PayloadView::Dense(v) = enc.view() else { panic!() };
+        let mut out = vec![5.0f32];
+        v.read_into(&mut out);
+        assert!(out.is_empty());
+    }
+}

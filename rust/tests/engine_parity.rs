@@ -40,11 +40,69 @@ fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
 
 #[test]
 fn parallel_engine_is_bit_identical_to_sequential() {
-    for scheme in ["fedavg", "caesar"] {
+    // prowd matters here: its Quant downloads draw device-stream noise,
+    // so they bypass the download-encode cache and must stay per-device
+    for scheme in ["fedavg", "caesar", "prowd"] {
         let seq = run_with_workers("har", scheme, 5, 1);
         let par = run_with_workers("har", scheme, 5, 4);
         assert_bits_eq(&seq.global, &par.global, scheme);
     }
+}
+
+#[test]
+fn download_encode_cache_shares_work_without_changing_results() {
+    // every device sharing a codec receives the SAME Arc'd bytes, so
+    // encode executions scale with distinct codecs — and the counts are
+    // deterministic across worker counts (misses encode under the lock)
+    let seq = run_with_workers("har", "caesar", 5, 1);
+    let par = run_with_workers("har", "caesar", 5, 6);
+    assert_bits_eq(&seq.global, &par.global, "cache parity");
+    let (s, p) = (seq.engine().stats(), par.engine().stats());
+    assert_eq!(s.download_requests, p.download_requests, "requests must match");
+    assert_eq!(s.download_encodes, p.download_encodes, "encodes must match");
+    assert!(s.download_requests > 0);
+    // caesar's staleness clustering (cfg.clusters = 4) plus Full for
+    // first-timers: at most 5 distinct download codecs per round
+    let rounds = 5;
+    assert!(
+        s.download_encodes <= 5 * rounds,
+        "encodes {} exceed distinct-codec bound {}",
+        s.download_encodes,
+        5 * rounds
+    );
+    assert!(
+        s.download_encodes < s.download_requests,
+        "cache never hit: {} encodes for {} requests",
+        s.download_encodes,
+        s.download_requests
+    );
+}
+
+#[test]
+fn fedavg_encodes_once_per_round_for_all_participants() {
+    // the degenerate sharing case: every participant downloads Full
+    let srv = run_with_workers("har", "fedavg", 4, 3);
+    let stats = srv.engine().stats();
+    assert_eq!(stats.download_encodes, 4, "one Full encode per round");
+    assert_eq!(
+        stats.download_requests % 4,
+        0,
+        "each round serves every participant"
+    );
+    assert!(stats.download_requests > stats.download_encodes);
+}
+
+#[test]
+fn quant_downloads_bypass_the_cache() {
+    // prowd's Quant download draws per-device noise: every request must
+    // be a real encode
+    let srv = run_with_workers("har", "prowd", 3, 2);
+    let stats = srv.engine().stats();
+    assert!(stats.download_requests > 0);
+    assert_eq!(
+        stats.download_encodes, stats.download_requests,
+        "quant payloads are device-specific and must never be shared"
+    );
 }
 
 #[test]

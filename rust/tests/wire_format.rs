@@ -156,6 +156,68 @@ fn codec_engine_reports_measured_lengths() {
 }
 
 #[test]
+fn recover_download_into_is_bit_identical_to_recover_download() {
+    let e = CodecEngine::native();
+    // one REUSED output buffer across every codec, shape and local-model
+    // state: proves recover_download_into clears/overwrites correctly
+    let mut out: Vec<f32> = vec![f32::NAN; 9];
+    for (si, &n) in SHAPES.iter().enumerate() {
+        let w = randn(n, 0x1A + si as u64);
+        let local = randn(n, 0x2B + si as u64);
+        for codec in [
+            DownloadCodec::Full,
+            DownloadCodec::CaesarSplit { ratio: 0.35 },
+            DownloadCodec::CaesarSplit { ratio: 1.0 },
+            DownloadCodec::TopK { ratio: 0.5 },
+            DownloadCodec::TopK { ratio: 1.0 },
+            DownloadCodec::Quant { bits: 8 },
+        ] {
+            for with_local in [true, false] {
+                let enc = e.encode_download(codec, &w, &mut Rng::new(si as u64)).unwrap();
+                let l = with_local.then_some(&local[..]);
+                let want = e.recover_download(&enc, l).unwrap();
+                e.recover_download_into(&enc, l, &mut out).unwrap();
+                assert_bits_eq(
+                    &out,
+                    &want,
+                    &format!("n={n} {codec:?} local={with_local}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fold_encoded_is_bit_identical_to_decoded_folds() {
+    let n = 1024;
+    let e = CodecEngine::native();
+    let devices: Vec<usize> = (0..9).collect();
+    let mut payload_shard = AggregatorShard::new(0, n, devices.clone());
+    let mut encoded_shard = AggregatorShard::new(0, n, devices.clone());
+    for &d in &devices {
+        let g = randn(n, 0xE0 + d as u64);
+        let codec = match d % 3 {
+            0 => UploadCodec::TopK { ratio: 0.9 },
+            1 => UploadCodec::Full,
+            _ => UploadCodec::Quant { bits: 6 },
+        };
+        let enc = e.encode_upload(codec, &g, &mut Rng::new(d as u64)).unwrap();
+        payload_shard.fold_payload(d, &enc.decode(), 0.31);
+        encoded_shard.fold_encoded(d, &enc, 0.31);
+    }
+    let total = |shard: AggregatorShard| -> Vec<f64> {
+        let mut r = ShardReducer::new(n, 1);
+        r.push(shard).unwrap();
+        r.finish().unwrap().0
+    };
+    let a = total(payload_shard);
+    let b = total(encoded_shard);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "elem {i}: {x} vs {y}");
+    }
+}
+
+#[test]
 fn sparse_and_dense_aggregation_agree_bit_exactly() {
     let n = 2048;
     let devices: Vec<usize> = (0..10).collect();
