@@ -36,7 +36,9 @@ require_keys BENCH_engine.json bench task trainer host_workers cases \
   devices participants seq_ms_per_round par_ms_per_round workers speedup \
   seq_alloc_bytes_per_round par_alloc_bytes_per_round \
   seq_encode_calls_per_round encode_cache encode_requests_per_round \
-  encode_calls_per_round encode_reduction
+  encode_calls_per_round encode_reduction \
+  pool trainer_builds builds_reduction \
+  cross_round_cache cache_cross_round_hits
 require_keys BENCH_wire.json bench n_params codec_cases recovery aggregation \
   recover_ms recover_into_ms recover_alloc_bytes_per_call \
   recover_into_alloc_bytes_per_call dense_ms sparse_ms speedup
@@ -65,6 +67,16 @@ trap 'rm -rf "$smoke_dir"' EXIT
   cd "$smoke_dir"
   CAESAR_BENCH_QUICK=1 cargo bench \
     --manifest-path "$OLDPWD/Cargo.toml" --bench bench_wire
+)
+
+echo "== bench_engine smoke =="
+# quick rounds at fleet scale; the bench ASSERTS the persistent-pool
+# acceptance target (trainer builds O(workers) per run, >= R x fewer
+# than the legacy per-round fan-out), so CI fails if the pool regresses
+(
+  cd "$smoke_dir"
+  CAESAR_BENCH_QUICK=1 cargo bench \
+    --manifest-path "$OLDPWD/Cargo.toml" --bench bench_engine
 )
 
 echo "CI OK"

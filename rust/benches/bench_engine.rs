@@ -19,6 +19,11 @@
 //!   dedicated `encode_cache` case pins the acceptance target (100
 //!   participants sharing ≤ 4 distinct codecs → ≥ 25× fewer encodes).
 //!
+//! Two persistent-pool cases ride along: `pool` asserts trainer builds
+//! are O(workers) per RUN (≥ R× fewer than the legacy per-round fan-out
+//! over R rounds), and `cross_round_cache` records the generation-keyed
+//! encode reuse across rounds whose model never moved.
+//!
 //! Results are written to BENCH_engine.json in the current directory.
 //! Quick mode: CAESAR_BENCH_QUICK=1 (fewer rounds, skips the 10k scale).
 
@@ -150,6 +155,49 @@ fn main() {
         m.encode_requests, m.encode_calls, reduction
     );
 
+    // --- persistent-pool acceptance case (ISSUE 4): trainer builds are
+    // O(workers) per RUN. The pre-pool engine built one trainer per worker
+    // per ROUND, so over R rounds at W workers the persistent pool must
+    // show >= R× fewer builds (builds <= W vs the legacy R·W).
+    let pool_rounds = if quick { 4 } else { 10 };
+    let pool_cfg = cfg_at(1_000, 4);
+    let mut pool_srv = Server::new(pool_cfg, schemes::by_name("caesar").unwrap()).unwrap();
+    for t in 1..=pool_rounds {
+        pool_srv.step(t).unwrap();
+    }
+    let pst = pool_srv.engine().stats();
+    let pool_workers_used = workers(4);
+    let trainer_builds = pst.trainer_builds;
+    assert!(trainer_builds >= 1, "stats must report the executor's trainer builds");
+    let legacy_builds = pool_rounds * pool_workers_used;
+    let builds_reduction = legacy_builds as f64 / trainer_builds as f64;
+    println!(
+        "\n== bench: persistent pool ({pool_rounds} rounds, {pool_workers_used} workers) ==\n\
+         {trainer_builds:>8} trainer builds  (legacy {legacy_builds})  {builds_reduction:>6.1}x fewer"
+    );
+    assert!(
+        builds_reduction >= pool_rounds as f64,
+        "persistent pool must amortize trainer builds: {trainer_builds} builds \
+         over {pool_rounds} rounds at {pool_workers_used} workers"
+    );
+
+    // --- cross-round cache case: rounds whose participants all drop out
+    // never move the model, so later rounds are served from carried
+    // encodes (generation key = model version).
+    let cross_rounds = 3usize;
+    let mut cross_cfg = cfg_at(1_000, 1);
+    cross_cfg.engine.dropout_rate = 1.0;
+    let mut cross_srv = Server::new(cross_cfg, schemes::by_name("fedavg").unwrap()).unwrap();
+    for t in 1..=cross_rounds {
+        cross_srv.step(t).unwrap();
+    }
+    let cst = cross_srv.engine().stats();
+    println!(
+        "\n== bench: cross-round cache ({cross_rounds} all-dropout rounds) ==\n\
+         {:>8} downloads  {:>4} encodes  {:>6} cross-round hits",
+        cst.download_requests, cst.download_encodes, cst.cache_cross_round_hits
+    );
+
     let mut out = Json::obj();
     out.set("bench", json::s("engine_round"))
         .set("task", json::s("har"))
@@ -188,6 +236,21 @@ fn main() {
         .set("encode_reduction", json::num(reduction))
         .set("alloc_bytes_per_round", json::num(m.alloc_bytes));
     out.set("encode_cache", cache_row);
+    let mut pool_row = Json::obj();
+    pool_row
+        .set("rounds", json::num(pool_rounds as f64))
+        .set("workers", json::num(pool_workers_used as f64))
+        .set("trainer_builds", json::num(trainer_builds as f64))
+        .set("builds_reduction", json::num(builds_reduction));
+    out.set("pool", pool_row);
+    let mut cross_row = Json::obj();
+    cross_row
+        .set("rounds", json::num(cross_rounds as f64))
+        .set("dropout", json::num(1.0))
+        .set("download_requests", json::num(cst.download_requests as f64))
+        .set("download_encodes", json::num(cst.download_encodes as f64))
+        .set("cache_cross_round_hits", json::num(cst.cache_cross_round_hits as f64));
+    out.set("cross_round_cache", cross_row);
     std::fs::write("BENCH_engine.json", out.to_string()).expect("write BENCH_engine.json");
     println!("wrote BENCH_engine.json");
 }

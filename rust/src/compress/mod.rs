@@ -28,3 +28,83 @@ pub mod traffic;
 pub use caesar_model::{caesar_compress, caesar_recover, CompressedModel};
 pub use quant::{quantize_floor, quantize_stochastic};
 pub use topk::{topk_encode, topk_sparsify};
+
+/// Branch-free |x| → sortable-u32 transform feeding the threshold
+/// selections ([`topk::keep_threshold`], [`caesar_model::quant_threshold`]).
+///
+/// For non-negative IEEE-754 floats the bit pattern orders exactly like
+/// the value, and clearing the sign bit IS |x| (for every input,
+/// including ±0 and NaN payloads) — so each lane is a single integer AND:
+/// no `abs` call, no float compare, no branches. The body is chunked
+/// 8-wide through a fixed-size array so the autovectorizer emits one
+/// SIMD load/and/store per chunk at million-parameter scale; a scalar
+/// tail covers `len % 8`. Keys land in `dst` (cleared first — pass pooled
+/// scratch). Property-pinned equal to the scalar `x.abs().to_bits()` path.
+pub fn abs_sort_keys(src: &[f32], dst: &mut Vec<u32>) {
+    const SIGN_OFF: u32 = 0x7fff_ffff;
+    dst.clear();
+    dst.reserve(src.len());
+    let mut chunks = src.chunks_exact(8);
+    for c in chunks.by_ref() {
+        let keys: [u32; 8] = std::array::from_fn(|j| c[j].to_bits() & SIGN_OFF);
+        dst.extend_from_slice(&keys);
+    }
+    for x in chunks.remainder() {
+        dst.push(x.to_bits() & SIGN_OFF);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen_vec_f32, Config};
+
+    #[test]
+    fn prop_abs_sort_keys_matches_the_scalar_abs_path() {
+        forall(
+            Config { cases: 64, seed: 0xAB5 },
+            |rng, size| {
+                // sizes straddling the 8-wide chunk boundary
+                let n = size * 4 + (rng.below(9));
+                gen_vec_f32(rng, n, 1.0)
+            },
+            |g| {
+                let mut keys = Vec::new();
+                abs_sort_keys(g, &mut keys);
+                let scalar: Vec<u32> = g.iter().map(|x| x.abs().to_bits()).collect();
+                if keys != scalar {
+                    return Err(format!("key transform diverged at n={}", g.len()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn abs_sort_keys_edge_values_and_tail() {
+        // > 8 elements so both the chunked body and the tail run; covers
+        // signed zeros, subnormals, infinities and NaN
+        let g = [
+            0.0f32,
+            -0.0,
+            1.5,
+            -1.5,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            -3.25e-40, // subnormal
+            7.0,
+        ];
+        let mut keys = Vec::new();
+        abs_sort_keys(&g, &mut keys);
+        assert_eq!(keys.len(), g.len());
+        for (i, x) in g.iter().enumerate() {
+            assert_eq!(keys[i], x.abs().to_bits(), "elem {i} ({x})");
+        }
+        // reuse clears previous contents and handles the empty slice
+        abs_sort_keys(&[], &mut keys);
+        assert!(keys.is_empty());
+    }
+}

@@ -37,10 +37,11 @@ pub fn keep_threshold(g: &[f32], ratio: f64) -> (f32, usize) {
         return (0.0, 0);
     }
     // non-negative f32 orders by bit pattern — integer selection is ~2x
-    // faster than the float comparator (EXPERIMENTS.md §Perf); the key
-    // buffer is pooled per-thread scratch, not a per-call allocation
+    // faster than the float comparator (EXPERIMENTS.md §Perf). Keys come
+    // from the branch-free 8-wide transform in `compress::abs_sort_keys`
+    // into pooled per-thread scratch, not a per-call allocation.
     let mut abs = pool::u32_buf();
-    abs.extend(g.iter().map(|x| x.abs().to_bits()));
+    super::abs_sort_keys(g, &mut abs);
     let idx = drop.min(n - 1);
     let (_, v, _) = abs.select_nth_unstable(idx);
     (f32::from_bits(*v), drop)

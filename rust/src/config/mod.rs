@@ -28,7 +28,9 @@ pub enum CompressionBackend {
 pub struct EngineConfig {
     /// Worker threads executing device rounds. 1 = sequential execution on
     /// the coordinator thread (the default, and the parity baseline);
-    /// values above the host's parallelism are clamped.
+    /// values above the host's parallelism are clamped. The persistent
+    /// worker pool is sized from this once, at `Server` construction —
+    /// changing it afterwards has no effect on an existing server.
     pub workers: usize,
     /// Devices per aggregation group — the fixed fan-in of the canonical
     /// f64 reduction tree. Results are bit-identical across worker counts

@@ -16,6 +16,13 @@
 //! `engine.workers = 1` the round executes sequentially on this thread,
 //! and any other worker count produces bit-identical results
 //! (`tests/engine_parity.rs`).
+//!
+//! Trainers are **run-lifetime** resources: the Server owns an
+//! [`engine::ExecutorHandle`] built once at construction — an inline
+//! trainer for `workers <= 1`, or a persistent worker pool whose threads
+//! each own a trainer (and PJRT runtime) for the whole run. Rounds no
+//! longer rebuild factories or closures; evaluation routes through the
+//! same executor.
 
 pub mod codec;
 pub mod metrics;
@@ -25,16 +32,15 @@ pub use codec::CodecEngine;
 pub use metrics::{RoundRecord, RunResult};
 pub use trainer::{EvalOutcome, Trainer};
 
-use std::path::PathBuf;
-
 use anyhow::{Context, Result};
 
 use crate::caesar::{ImportanceTable, ParticipationTracker};
 use crate::compress::traffic::{PayloadScale, TrafficMeter};
-use crate::config::{ExperimentConfig, TrainerBackend};
+use crate::config::ExperimentConfig;
 use crate::data::{self, Dataset, Partition, TaskSpec};
-use crate::engine::{self, Engine, StartRound, TrainerProvider};
+use crate::engine::{self, Engine, ExecutorHandle, StartRound};
 use crate::fleet::Fleet;
+use crate::nn::MlpSpec;
 use crate::schemes::{RoundCtx, Scheme};
 use crate::runtime::Runtime;
 use crate::util::rng::Rng;
@@ -52,10 +58,16 @@ pub struct Server {
     partition: Partition,
     importance: ImportanceTable,
     tracker: ParticipationTracker,
-    trainer: Trainer,
+    /// Run-lifetime trainer resource: an inline trainer or a persistent
+    /// worker pool, reused by every round AND by evaluation.
+    executor: ExecutorHandle,
     scale: PayloadScale,
     /// Current global model (flat parameter vector).
     pub global: Vec<f32>,
+    /// Monotone version of `global`: bumped whenever a round actually
+    /// moves the model. Keys the engine's cross-round download-encode
+    /// cache — consecutive rounds at the same version reuse encodes.
+    model_version: u64,
     /// Per-device stale local models (None until first participation).
     locals: Vec<Option<Vec<f32>>>,
     /// Last observed ||g_i|| per device (PyramidFL's ranking signal).
@@ -65,10 +77,8 @@ pub struct Server {
     rng: Rng,
     /// Base key of the pure per-(round, device) RNG streams.
     stream_base: u64,
-    /// The event-driven round engine (state machine + workers).
+    /// The event-driven round engine (state machine + encode cache).
     engine: Engine,
-    /// Where per-worker XLA trainers load artifacts from.
-    artifact_dir: PathBuf,
 }
 
 /// Everything measured in one executed round.
@@ -109,13 +119,14 @@ impl Server {
             .collect();
         let importance = ImportanceTable::build(&volumes, &kls, cfg.lambda);
 
-        let trainer = match cfg.trainer {
-            TrainerBackend::Native => Trainer::native(&cfg.task),
-            TrainerBackend::Xla => Trainer::xla(&cfg.task, artifact_dir)
-                .with_context(|| format!("open artifacts at {}", artifact_dir.display()))?,
-        };
-        let scale = PayloadScale { n_real: trainer.n_params(), n_paper: cfg.n_params_paper };
-        let global = trainer.init_model(&mut rng.fork(0x1417));
+        // Run-lifetime executor: the inline trainer, or a persistent pool
+        // whose workers each build their trainer once, on their own thread.
+        let executor = ExecutorHandle::build(&cfg, artifact_dir)
+            .with_context(|| format!("open artifacts at {}", artifact_dir.display()))?;
+        let scale = PayloadScale { n_real: executor.n_params()?, n_paper: cfg.n_params_paper };
+        // Init is spec-level (both trainer backends defer to MlpSpec), so
+        // the coordinator thread never needs a trainer of its own.
+        let global = MlpSpec::for_task(&cfg.task).init(&mut rng.fork(0x1417));
         let fleet = Fleet::new(cfg.fleet, cfg.seed);
         let stream_base = rng.fork(0x57EA).next_u64();
         let engine = Engine::new(cfg.engine, n);
@@ -126,18 +137,18 @@ impl Server {
             grad_norms: vec![0.0; n],
             traffic: TrafficMeter::default(),
             sim_time_s: 0.0,
+            model_version: 0,
             scheme,
             fleet,
             train_ds,
             test_ds,
             partition,
             importance,
-            trainer,
+            executor,
             scale,
             global,
             stream_base,
             engine,
-            artifact_dir: artifact_dir.to_path_buf(),
             cfg,
             rng,
         })
@@ -172,9 +183,10 @@ impl Server {
         &self.tracker
     }
 
-    /// Evaluate the current global model on the held-out test set.
+    /// Evaluate the current global model on the held-out test set (pool
+    /// mode runs this as a one-item batch on a worker's trainer).
     pub fn evaluate(&self) -> Result<EvalOutcome> {
-        self.trainer.eval(&self.global, &self.test_ds)
+        self.executor.eval(&self.global, &self.test_ds)
     }
 
     /// Execute rounds 1..=cfg.rounds, recording metrics every round and
@@ -292,6 +304,7 @@ impl Server {
             lr,
             cfg: &cfg,
             global: &self.global,
+            model_version: self.model_version,
             locals: &self.locals,
             train_ds: &self.train_ds,
             partition: &self.partition,
@@ -299,22 +312,10 @@ impl Server {
             stream_base: self.stream_base,
             sim_now_s: self.sim_time_s,
         };
-        let task = cfg.task.clone();
-        let backend = cfg.trainer;
-        let dir = self.artifact_dir.clone();
-        let factory = move || -> Result<Trainer> {
-            match backend {
-                TrainerBackend::Native => Ok(Trainer::native(&task)),
-                TrainerBackend::Xla => Trainer::xla(&task, &dir),
-            }
-        };
-        let provider = if cfg.engine.workers <= 1 {
-            TrainerProvider::Inline(&self.trainer)
-        } else {
-            TrainerProvider::PerWorker(&factory)
-        };
+        // the same run-lifetime executor every round: pool workers keep
+        // their trainers, runtimes and thread-local scratch warm
         let engine::RoundOutput { agg, updates, dropped } =
-            self.engine.execute_round(&env, &items, provider)?;
+            self.engine.execute_round(&env, &items, &self.executor)?;
 
         // --- apply the round output in canonical (device-id) order ---
         // traffic is derived from the measured wire lengths of the actual
@@ -343,6 +344,9 @@ impl Server {
             for (w, a) in self.global.iter_mut().zip(&agg) {
                 *w -= (a * inv) as f32;
             }
+            // the model moved: downloads encoded for the old version are
+            // stale, so the engine's cross-round cache must turn over
+            self.model_version += 1;
         }
 
         // --- synchronous barrier timing (dropouts hold the barrier until

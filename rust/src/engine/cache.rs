@@ -1,4 +1,4 @@
-//! Per-round PS-side download-encode cache.
+//! PS-side download-encode cache with a **cross-round generation key**.
 //!
 //! The staleness-greedy of §4.1 clusters participants into a handful of
 //! discrete download ratios (`cfg.clusters`, default 4), and baselines
@@ -13,6 +13,18 @@
 //! devices via `Arc` — every receiver sees byte-identical wire bytes, so
 //! engine parity is untouched.
 //!
+//! **Generation keying.** The cache now lives with the [`super::Engine`]
+//! for the whole run, not one round: the logical key is
+//! `(model_version, effective codec)`. [`DownloadCache::begin_round`]
+//! compares the incoming model version with the entries' generation — a
+//! new version invalidates everything (the bytes encode a model that no
+//! longer exists), while an unchanged version *carries* the entries over,
+//! so multi-round serving reuses encodes when the global model did not
+//! move (rounds whose participants all dropped out, evaluation-style
+//! re-serves, stragglers re-fetching). Hits on carried entries are
+//! counted separately (`cross_round_hits`) and surfaced through
+//! `EngineStats::cache_cross_round_hits`.
+//!
 //! **RNG discipline.** Only RNG-free codecs are cacheable (`Full`,
 //! `TopK`, `CaesarSplit` — pure functions of the global model). `Quant`
 //! draws its stochastic-rounding noise from the *device* stream
@@ -23,17 +35,18 @@
 //! nor on a hit — so per-device draw sequences are identical to the
 //! uncached engine and bit-exact parity holds at every worker count.
 //!
-//! **Concurrency.** One cache is created per round and shared by all
-//! workers. Misses encode *while holding the lock*: the first device to
-//! need a codec pays the encode, racing devices block and then share the
-//! `Arc` — exactly one encode per distinct codec per round, which keeps
-//! the `encode_calls` metric deterministic across worker counts (a
-//! benched acceptance number, not just a nicety). Hits are a lock +
-//! `Arc::clone`.
+//! **Concurrency.** One cache is shared by all workers. Misses encode
+//! *while holding the lock*: the first device to need a codec pays the
+//! encode, racing devices block and then share the `Arc` — exactly one
+//! encode per distinct codec per generation, which keeps the
+//! `encode_calls` metric deterministic across worker counts (a benched
+//! acceptance number, not just a nicety). Hits are a lock + `Arc::clone`.
+//! `begin_round` takes `&mut self`: generations only turn over between
+//! rounds, on the coordinator thread.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 use anyhow::Result;
 
@@ -64,11 +77,23 @@ fn cache_key(codec: DownloadCodec) -> Option<CacheKey> {
     }
 }
 
-/// Shares one encoded download per distinct codec per round.
+struct Entry {
+    enc: Arc<EncodedPayload>,
+    /// True once the entry has survived a round boundary within its
+    /// generation — hits on it are cross-round reuse.
+    carried: bool,
+}
+
+/// Shares one encoded download per distinct codec per model generation.
 pub struct DownloadCache {
-    entries: Mutex<HashMap<CacheKey, Arc<EncodedPayload>>>,
+    entries: Mutex<HashMap<CacheKey, Entry>>,
+    /// Model version the current entries encode (None before the first
+    /// `begin_round`; pre-round standalone use keys a single implicit
+    /// generation).
+    generation: Option<u64>,
     requests: AtomicUsize,
     encodes: AtomicUsize,
+    cross_round_hits: AtomicUsize,
 }
 
 impl Default for DownloadCache {
@@ -81,16 +106,39 @@ impl DownloadCache {
     pub fn new() -> DownloadCache {
         DownloadCache {
             entries: Mutex::new(HashMap::new()),
+            generation: None,
             requests: AtomicUsize::new(0),
             encodes: AtomicUsize::new(0),
+            cross_round_hits: AtomicUsize::new(0),
+        }
+    }
+
+    /// Turn the generation over for a round serving `model_version`: a
+    /// changed version invalidates every entry, an unchanged one carries
+    /// them across the round boundary (subsequent hits count as
+    /// cross-round reuse). Counters are cumulative and never reset.
+    pub fn begin_round(&mut self, model_version: u64) {
+        // The cache is run-lifetime now: a panic under the lock (an encode
+        // dying mid-miss on a worker) must not kill every later round. The
+        // map itself is coherent on that path — inserts happen only after
+        // a successful encode — but start the generation clean anyway.
+        let poisoned = self.entries.is_poisoned();
+        let entries = self.entries.get_mut().unwrap_or_else(PoisonError::into_inner);
+        if poisoned || self.generation != Some(model_version) {
+            entries.clear();
+            self.generation = Some(model_version);
+        } else {
+            for e in entries.values_mut() {
+                e.carried = true;
+            }
         }
     }
 
     /// The serialized download for `codec`, encoding at most once per
-    /// distinct cacheable codec. `codec` must already be the *effective*
-    /// codec ([`effective_download`]); a debug assertion guards the
-    /// `has_local` contract. `rng` is the device stream — consumed only
-    /// by uncacheable codecs (Quant), untouched otherwise.
+    /// distinct cacheable codec per generation. `codec` must already be
+    /// the *effective* codec ([`effective_download`]); a debug assertion
+    /// guards the `has_local` contract. `rng` is the device stream —
+    /// consumed only by uncacheable codecs (Quant), untouched otherwise.
     pub fn get_or_encode(
         &self,
         engine: &CodecEngine,
@@ -109,27 +157,39 @@ impl DownloadCache {
             self.encodes.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::new(engine.encode_download(codec, w, rng)?));
         };
-        let mut entries = self.entries.lock().unwrap();
+        // survive a poisoned lock (another worker's encode panicked): the
+        // entries present are all post-successful-encode, so keep serving
+        let mut entries = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
         if let Some(hit) = entries.get(&key) {
-            return Ok(Arc::clone(hit));
+            if hit.carried {
+                self.cross_round_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            return Ok(Arc::clone(&hit.enc));
         }
         self.encodes.fetch_add(1, Ordering::Relaxed);
         // cacheable codecs are RNG-free by the module contract: feed a
         // throwaway stream so hit/miss can never diverge device draws
         let enc = Arc::new(engine.encode_download(codec, w, &mut Rng::new(0))?);
-        entries.insert(key, Arc::clone(&enc));
+        entries.insert(key, Entry { enc: Arc::clone(&enc), carried: false });
         Ok(enc)
     }
 
-    /// Downloads served this round (cache hits + encodes).
+    /// Downloads served so far (cache hits + encodes), cumulative over
+    /// the cache's lifetime.
     pub fn requests(&self) -> usize {
         self.requests.load(Ordering::Relaxed)
     }
 
-    /// Actual `encode_download` executions this round (misses +
-    /// uncacheable codecs).
+    /// Actual `encode_download` executions (misses + uncacheable codecs),
+    /// cumulative over the cache's lifetime.
     pub fn encodes(&self) -> usize {
         self.encodes.load(Ordering::Relaxed)
+    }
+
+    /// Hits served from an entry carried across a round boundary
+    /// (unchanged model version), cumulative.
+    pub fn cross_round_hits(&self) -> usize {
+        self.cross_round_hits.load(Ordering::Relaxed)
     }
 }
 
@@ -154,6 +214,8 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b), "devices sharing a codec must share bytes");
         assert_eq!(cache.requests(), 2);
         assert_eq!(cache.encodes(), 1);
+        // same-round hits are NOT cross-round reuse
+        assert_eq!(cache.cross_round_hits(), 0);
         // byte-identical by construction, still worth pinning
         assert_eq!(a.bytes, b.bytes);
     }
@@ -172,6 +234,54 @@ mod tests {
         cache.get_or_encode(&e, DownloadCodec::Full, &w, false, &mut rng).unwrap();
         assert_eq!(cache.requests(), 4);
         assert_eq!(cache.encodes(), 3, "0.2 / 0.4 / Full");
+    }
+
+    #[test]
+    fn unchanged_model_version_carries_entries_across_rounds() {
+        let w = randn(300, 7);
+        let e = CodecEngine::native();
+        let mut cache = DownloadCache::new();
+        cache.begin_round(5);
+        let a = cache
+            .get_or_encode(&e, DownloadCodec::Full, &w, true, &mut Rng::new(1))
+            .unwrap();
+        // next round, same model version: the entry survives and the hit
+        // is a cross-round hit on the very same Arc
+        cache.begin_round(5);
+        let b = cache
+            .get_or_encode(&e, DownloadCodec::Full, &w, true, &mut Rng::new(2))
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "carried entry must be the same allocation");
+        assert_eq!(cache.encodes(), 1);
+        assert_eq!(cache.cross_round_hits(), 1);
+        // a second hit in the same later round also counts (the entry
+        // stays carried for the rest of the generation)
+        cache
+            .get_or_encode(&e, DownloadCodec::Full, &w, true, &mut Rng::new(3))
+            .unwrap();
+        assert_eq!(cache.cross_round_hits(), 2);
+    }
+
+    #[test]
+    fn model_version_change_invalidates_everything() {
+        let w0 = randn(300, 8);
+        let e = CodecEngine::native();
+        let mut cache = DownloadCache::new();
+        cache.begin_round(1);
+        cache
+            .get_or_encode(&e, DownloadCodec::Full, &w0, true, &mut Rng::new(1))
+            .unwrap();
+        // model moved: same codec must RE-encode the new model
+        let w1 = randn(300, 9);
+        cache.begin_round(2);
+        let b = cache
+            .get_or_encode(&e, DownloadCodec::Full, &w1, true, &mut Rng::new(2))
+            .unwrap();
+        assert_eq!(cache.encodes(), 2, "new generation re-encodes");
+        assert_eq!(cache.cross_round_hits(), 0);
+        // and the served bytes are the NEW model's
+        let direct = e.encode_download(DownloadCodec::Full, &w1, &mut Rng::new(0)).unwrap();
+        assert_eq!(b.bytes, direct.bytes);
     }
 
     #[test]

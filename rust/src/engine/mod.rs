@@ -1,8 +1,8 @@
 //! Event-driven round engine: the coordinator as a state machine
 //! (`Standby → Round(t) → Finished`) over typed device messages, with the
 //! per-device work of a round (decode download → local SGD → encode
-//! upload) executed in parallel across worker threads and aggregated
-//! through streaming, order-exact shards.
+//! upload) executed in parallel across a **persistent worker pool** and
+//! aggregated through streaming, order-exact shards.
 //!
 //! ```text
 //!                 Join/Heartbeat
@@ -17,11 +17,22 @@
 //!
 //! One `execute_round` call performs a full `Standby → Round(t) → Standby`
 //! cycle: participants join the [`Registry`], each receives a
-//! [`StartRound`] message, device work runs on up to `EngineConfig::
-//! workers` threads (each building its own trainer — one PJRT runtime per
-//! worker, never shared), and [`DeviceMsg`]s stream back to the
-//! coordinator loop which maintains liveness and reduces
-//! [`AggregatorShard`]s in canonical order.
+//! [`StartRound`] message, device work runs through the caller's
+//! [`ExecutorHandle`] — inline on this thread, or batched onto a
+//! [`WorkerPool`] of long-lived trainer threads — and [`DeviceMsg`]s
+//! stream back to the coordinator loop which maintains liveness and
+//! reduces [`AggregatorShard`]s in canonical order.
+//!
+//! **Run-lifetime resources.** The executor is built once per run and
+//! survives every round: each pool worker owns its [`WorkerCtx`] (trainer
+//! + PJRT runtime for the XLA backend) built by `WorkerPool::new`'s
+//! `setup(worker_idx)` on the thread that keeps it, and the thread-local
+//! `util::pool` scratch warms up once per worker instead of once per
+//! round. `EngineStats::trainer_builds` mirrors the executor's build
+//! count and stays O(workers) per run — the pre-pool engine paid
+//! O(workers·rounds). A worker that panics is retired and surfaces as an
+//! [`Event::Error`] (the round fails, the next one runs on the
+//! survivors); it never deadlocks the drain.
 //!
 //! **Determinism contract.** For a fixed seed the engine's output is
 //! bit-identical for ANY worker count, because every source of
@@ -35,10 +46,12 @@
 //! * coordinator-side application (traffic, locals, tracker) happens in
 //!   sorted order after the round drains.
 //!
-//! The per-device hot path is reuse-dominated: one [`DownloadCache`] per
-//! round shares each distinct download encode across all receivers
-//! (`Arc`'d bytes, O(distinct codecs) encodes — RNG-drawing codecs bypass
-//! it), recovery and the gradient use pooled scratch
+//! The per-device hot path is reuse-dominated: the engine-owned
+//! [`DownloadCache`] shares each distinct download encode across all
+//! receivers — and, keyed by `(model_version, effective codec)`, across
+//! *rounds* whenever the global model did not move (`Arc`'d bytes,
+//! O(distinct codecs) encodes per model generation — RNG-drawing codecs
+//! bypass it). Recovery and the gradient use pooled scratch
 //! ([`crate::util::pool`]) written in place, and uploads fold into shards
 //! straight off their serialized bytes. All three layers are
 //! bit-transparent: the cached bytes are what a per-device encode would
@@ -57,17 +70,19 @@ pub use cache::DownloadCache;
 pub use message::{DeviceMsg, DroppedDevice, Event, RoundUpdate, StartRound};
 pub use registry::{DeviceStatus, Registry};
 
+use std::path::Path;
+
 use anyhow::{anyhow, Result};
 
 use crate::compress::traffic::PayloadScale;
-use crate::config::{EngineConfig, ExperimentConfig};
+use crate::config::{EngineConfig, ExperimentConfig, TrainerBackend};
 use crate::coordinator::codec::effective_download;
-use crate::coordinator::{CodecEngine, Trainer};
+use crate::coordinator::{CodecEngine, EvalOutcome, Trainer};
 use crate::data::{Dataset, Partition};
 use crate::fleet::RoundCost;
 use crate::util::pool;
 use crate::util::rng::Rng;
-use crate::util::threadpool;
+use crate::util::threadpool::{self, WorkerPool};
 
 /// Stream-key salt separating device "fate" draws (dropout lottery) from
 /// device work draws, so enabling dropout never perturbs the randomness
@@ -98,9 +113,17 @@ pub struct EngineStats {
     pub dropouts: usize,
     /// Downloads served (one per StartRound that reached encoding).
     pub download_requests: usize,
-    /// Actual `encode_download` executions — with the per-round
-    /// [`DownloadCache`], O(distinct codecs) of `download_requests`.
+    /// Actual `encode_download` executions — with the generation-keyed
+    /// [`DownloadCache`], O(distinct codecs) of `download_requests` per
+    /// model version.
     pub download_encodes: usize,
+    /// Download requests served from an encode carried across a round
+    /// boundary (the global model did not change between rounds).
+    pub cache_cross_round_hits: usize,
+    /// Trainer constructions performed by the run's [`ExecutorHandle`] —
+    /// O(workers) per RUN (pool setup builds them once), where the
+    /// per-round scoped fan-out paid O(workers·rounds).
+    pub trainer_builds: usize,
 }
 
 /// Read-only view of everything a device round needs from the server.
@@ -112,6 +135,10 @@ pub struct RoundEnv<'a> {
     pub cfg: &'a ExperimentConfig,
     /// Current global model.
     pub global: &'a [f32],
+    /// Monotone version of `global` — bumped by the driver whenever the
+    /// model changes. Keys the cross-round [`DownloadCache`] generation:
+    /// consecutive rounds at the same version reuse download encodes.
+    pub model_version: u64,
     /// Per-device stale local models.
     pub locals: &'a [Option<Vec<f32>>],
     pub train_ds: &'a Dataset,
@@ -123,20 +150,93 @@ pub struct RoundEnv<'a> {
     pub sim_now_s: f64,
 }
 
-/// How worker threads obtain a trainer. PJRT runtimes are not `Sync`, so
-/// the parallel path constructs one trainer per worker *on that worker's
-/// thread*; the sequential path reuses the caller's trainer directly.
-pub enum TrainerProvider<'a> {
-    /// Run inline on the calling thread with this trainer (workers == 1).
-    Inline(&'a Trainer),
-    /// Build a fresh trainer inside each worker thread. Called once per
-    /// worker per round (trainers cannot be cached across rounds in the
-    /// engine: the XLA variant is not `Send`, so it must be born and die
-    /// on its worker's scoped thread). Negligible for the native trainer;
-    /// for the XLA backend this re-opens a PJRT runtime per worker per
-    /// round — prefer `trainer=native` for high worker counts until a
-    /// persistent worker pool exists.
-    PerWorker(&'a (dyn Fn() -> Result<Trainer> + Sync)),
+/// The long-lived state a pool worker owns across rounds: its trainer
+/// (and, for the XLA backend, the PJRT runtime inside it). Built once per
+/// worker by `WorkerPool::new`'s setup, on the thread that keeps it —
+/// PJRT runtimes are not `Send`, which is exactly why the pool constructs
+/// and drops them in place. The borrow-based [`CodecEngine`] is rebuilt
+/// per job from these owned parts (a few words, no allocation).
+pub struct WorkerCtx {
+    pub trainer: Trainer,
+}
+
+/// How rounds obtain trainers — the run-lifetime resource that replaced
+/// the per-round `TrainerProvider` closures. Owned by the driver
+/// (`coordinator::Server`) and reused across every round of a run.
+pub enum ExecutorHandle {
+    /// Execute rounds inline on the calling thread with this owned
+    /// trainer (`engine.workers <= 1`, the parity baseline — also the
+    /// pick when device counts are too small to amortize thread
+    /// hand-off).
+    Inline(Trainer),
+    /// Execute rounds as job batches on a persistent pool of trainer
+    /// threads; trainers, runtimes and thread-local scratch survive round
+    /// boundaries.
+    Pool(WorkerPool<WorkerCtx>),
+}
+
+impl ExecutorHandle {
+    /// Build the executor for `cfg`: inline for `engine.workers <= 1`,
+    /// otherwise a persistent pool of `threadpool::workers(engine.workers)`
+    /// trainer threads. Trainers (and PJRT runtimes) are built once per
+    /// worker for the whole run.
+    pub fn build(cfg: &ExperimentConfig, artifact_dir: &Path) -> Result<ExecutorHandle> {
+        let backend = cfg.trainer;
+        let task = cfg.task.clone();
+        let dir = artifact_dir.to_path_buf();
+        let make = move || -> Result<Trainer> {
+            match backend {
+                TrainerBackend::Native => Ok(Trainer::native(&task)),
+                TrainerBackend::Xla => Trainer::xla(&task, &dir),
+            }
+        };
+        if cfg.engine.workers <= 1 {
+            Ok(ExecutorHandle::Inline(make()?))
+        } else {
+            let n = threadpool::workers(cfg.engine.workers);
+            let pool = WorkerPool::new(n, move |_wi| -> Result<WorkerCtx> {
+                Ok(WorkerCtx { trainer: make()? })
+            })?;
+            Ok(ExecutorHandle::Pool(pool))
+        }
+    }
+
+    /// Trainer constructions this executor has performed — 1 inline, or
+    /// one per pool worker; flat in the number of rounds by construction
+    /// (pinned by `tests/engine_parity.rs`).
+    pub fn trainer_builds(&self) -> usize {
+        match self {
+            ExecutorHandle::Inline(_) => 1,
+            ExecutorHandle::Pool(p) => p.builds(),
+        }
+    }
+
+    /// Model size, from whichever trainer this executor owns (pool mode
+    /// probes a worker — the coordinator thread holds no runtime).
+    pub fn n_params(&self) -> Result<usize> {
+        match self {
+            ExecutorHandle::Inline(t) => Ok(t.n_params()),
+            ExecutorHandle::Pool(p) => {
+                let mut out = None;
+                p.run_batch(1, |ctx, _| ctx.trainer.n_params(), |r| out = r.ok());
+                out.ok_or_else(|| anyhow!("worker pool lost the n_params probe"))
+            }
+        }
+    }
+
+    /// Evaluate `w` on this executor's trainer. Pool mode runs the
+    /// evaluation as a one-item batch on a worker thread, against that
+    /// worker's long-lived trainer.
+    pub fn eval(&self, w: &[f32], test: &Dataset) -> Result<EvalOutcome> {
+        match self {
+            ExecutorHandle::Inline(t) => t.eval(w, test),
+            ExecutorHandle::Pool(p) => {
+                let mut out = None;
+                p.run_batch(1, |ctx, _| ctx.trainer.eval(w, test), |r| out = r.ok());
+                out.ok_or_else(|| anyhow!("worker pool lost the eval job"))?
+            }
+        }
+    }
 }
 
 /// What one executed round hands back to the driver.
@@ -155,6 +255,9 @@ pub struct Engine {
     phase: Phase,
     registry: Registry,
     stats: EngineStats,
+    /// Cross-round download-encode cache, generation-keyed by the model
+    /// version; shared by the inline and pool paths.
+    cache: DownloadCache,
 }
 
 impl Engine {
@@ -163,6 +266,7 @@ impl Engine {
             registry: Registry::new(n_devices, cfg.heartbeat_s),
             phase: Phase::Standby,
             stats: EngineStats::default(),
+            cache: DownloadCache::new(),
             cfg,
         }
     }
@@ -185,6 +289,15 @@ impl Engine {
 
     /// Transition to the terminal phase; later rounds are rejected.
     pub fn finish(&mut self) {
+        // accounting-drift tripwire: cache counters are read after the
+        // parallel section, and every encode serves exactly one request —
+        // requests trailing encodes would mean the snapshot points drifted
+        debug_assert!(
+            self.stats.download_requests >= self.stats.download_encodes,
+            "download accounting drift: {} requests < {} encodes",
+            self.stats.download_requests,
+            self.stats.download_encodes
+        );
         self.phase = Phase::Finished;
     }
 
@@ -192,11 +305,13 @@ impl Engine {
     ///
     /// `items` are the coordinator→device [`StartRound`] messages, one per
     /// participant (any order — execution is canonicalized internally).
+    /// `executor` is the run-lifetime trainer resource; pass the same
+    /// handle every round so pool workers keep their state.
     pub fn execute_round(
         &mut self,
         env: &RoundEnv,
         items: &[StartRound],
-        provider: TrainerProvider,
+        executor: &ExecutorHandle,
     ) -> Result<RoundOutput> {
         match self.phase {
             Phase::Standby => {}
@@ -204,7 +319,7 @@ impl Engine {
             Phase::Finished => return Err(anyhow!("engine is finished; no further rounds")),
         }
         self.phase = Phase::Round(env.t);
-        let out = self.round_inner(env, items, provider);
+        let out = self.round_inner(env, items, executor);
         self.phase = Phase::Standby;
         if out.is_ok() {
             self.stats.rounds += 1;
@@ -216,80 +331,111 @@ impl Engine {
         &mut self,
         env: &RoundEnv,
         items: &[StartRound],
-        provider: TrainerProvider,
+        executor: &ExecutorHandle,
     ) -> Result<RoundOutput> {
         let n_params = env.global.len();
+
+        // trainers are run-lifetime resources: mirror the executor's build
+        // count (flat across rounds by construction — the parity tests pin
+        // it at O(workers) per run)
+        self.stats.trainer_builds = executor.trainer_builds();
+        // turn the encode-cache generation over: a changed model version
+        // invalidates, an unchanged one carries entries across the round
+        self.cache.begin_round(env.model_version);
 
         // Canonical execution order: item indices sorted by device id.
         let mut order: Vec<usize> = (0..items.len()).collect();
         order.sort_by_key(|&i| items[i].plan.device);
 
+        // Split the engine into independent parts: the shared cache is
+        // read by worker closures while stats/registry mutate on the
+        // coordinator side of the drain.
+        let Engine { cfg, registry, stats, cache, .. } = self;
+        let cache: &DownloadCache = cache;
+
         // Rendezvous + kickoff bookkeeping (coordinator-side sends).
         for &i in &order {
             let d = items[i].plan.device;
-            self.registry.join(d, env.sim_now_s);
-            self.registry.start_round(d, env.sim_now_s);
-            self.stats.messages += 2; // Join ack + StartRound
+            registry.join(d, env.sim_now_s);
+            registry.start_round(d, env.sim_now_s);
+            stats.messages += 2; // Join ack + StartRound
         }
 
-        let group = self.cfg.agg_group.max(1);
+        let group = cfg.agg_group.max(1);
         let groups: Vec<&[usize]> = order.chunks(group).collect();
         let n_groups = groups.len();
-        let ecfg = self.cfg;
+        let ecfg = *cfg;
 
         let mut reducer = ShardReducer::new(n_params, n_groups);
         let mut updates: Vec<RoundUpdate> = Vec::with_capacity(order.len());
         let mut dropped: Vec<DroppedDevice> = Vec::new();
         let mut worker_err: Option<anyhow::Error> = None;
 
-        // One download-encode cache per round, shared by every worker:
-        // devices assigned the same effective codec receive the same
-        // Arc'd bytes (O(distinct codecs) encodes per round).
-        let cache = DownloadCache::new();
-
-        match provider {
-            TrainerProvider::Inline(trainer) => {
+        match executor {
+            ExecutorHandle::Inline(trainer) => {
                 let codec =
                     CodecEngine::new(env.cfg.compression, trainer.runtime(), &env.cfg.task)?;
                 for (g, members) in groups.iter().enumerate() {
                     let events =
-                        execute_group(env, items, &ecfg, g, members, trainer, &codec, &cache)?;
+                        execute_group(env, items, &ecfg, g, members, trainer, &codec, cache)?;
                     for ev in events {
-                        self.apply_event(ev, env.sim_now_s, &mut reducer, &mut updates, &mut dropped)?;
+                        apply_event(
+                            stats,
+                            registry,
+                            ev,
+                            env.sim_now_s,
+                            &mut reducer,
+                            &mut updates,
+                            &mut dropped,
+                        )?;
                     }
                 }
             }
-            TrainerProvider::PerWorker(factory) => {
-                let n_workers = threadpool::workers(self.cfg.workers);
+            ExecutorHandle::Pool(pool) => {
                 let groups = &groups;
-                let cache = &cache;
-                threadpool::scope_stream(
+                pool.run_batch(
                     n_groups,
-                    n_workers,
-                    // per-worker state: its own trainer (and PJRT runtime)
-                    |_wi| factory(),
-                    |trainer, g| -> Vec<Event> {
-                        let trainer = match trainer {
-                            Ok(t) => t,
-                            Err(e) => return vec![Event::Error(format!("worker trainer: {e:#}"))],
-                        };
+                    |ctx: &mut WorkerCtx, g: usize| -> Vec<Event> {
+                        // the codec engine is a borrow of the worker's
+                        // owned trainer/runtime — rebuilt per job for free
                         let codec = match CodecEngine::new(
                             env.cfg.compression,
-                            trainer.runtime(),
+                            ctx.trainer.runtime(),
                             &env.cfg.task,
                         ) {
                             Ok(c) => c,
                             Err(e) => return vec![Event::Error(format!("worker codec: {e:#}"))],
                         };
-                        match execute_group(env, items, &ecfg, g, groups[g], trainer, &codec, cache)
-                        {
+                        match execute_group(
+                            env,
+                            items,
+                            &ecfg,
+                            g,
+                            groups[g],
+                            &ctx.trainer,
+                            &codec,
+                            cache,
+                        ) {
                             Ok(events) => events,
                             Err(e) => vec![Event::Error(format!("group {g}: {e:#}"))],
                         }
                     },
-                    |events| {
+                    |res| {
+                        let events = match res {
+                            Ok(events) => events,
+                            // the worker running this group panicked (it
+                            // has been retired from the pool): surface as
+                            // an error event, exactly like a worker-side
+                            // failure — the drain itself never blocks
+                            Err(lost) => vec![Event::Error(format!(
+                                "worker died running group {}",
+                                lost.item
+                            ))],
+                        };
                         for ev in events {
-                            if let Err(e) = self.apply_event(
+                            if let Err(e) = apply_event(
+                                stats,
+                                registry,
                                 ev,
                                 env.sim_now_s,
                                 &mut reducer,
@@ -313,8 +459,11 @@ impl Engine {
         updates.sort_by_key(|u| u.device);
         dropped.sort_by_key(|d| d.device);
 
-        self.stats.download_requests += cache.requests();
-        self.stats.download_encodes += cache.encodes();
+        // Mirror the cache's cumulative counters (deterministic at any
+        // worker count: misses encode under the cache lock).
+        stats.download_requests = cache.requests();
+        stats.download_encodes = cache.encodes();
+        stats.cache_cross_round_hits = cache.cross_round_hits();
 
         let (agg, folded) = reducer.finish()?;
         if folded != updates.len() {
@@ -325,41 +474,42 @@ impl Engine {
         }
         Ok(RoundOutput { agg, updates, dropped })
     }
+}
 
-    /// Coordinator-side handler for one drained event. Must be
-    /// order-insensitive across devices: events from different worker
-    /// threads interleave nondeterministically.
-    fn apply_event(
-        &mut self,
-        ev: Event,
-        round_start_s: f64,
-        reducer: &mut ShardReducer,
-        updates: &mut Vec<RoundUpdate>,
-        dropped: &mut Vec<DroppedDevice>,
-    ) -> Result<()> {
-        self.stats.messages += 1;
-        match ev {
-            Event::Device(DeviceMsg::Join { device }) => {
-                self.registry.join(device, round_start_s);
-            }
-            Event::Device(DeviceMsg::Heartbeat { device, sim_t_s }) => {
-                self.stats.heartbeats += 1;
-                self.registry.heartbeat(device, sim_t_s);
-            }
-            Event::Device(DeviceMsg::EndRound(update)) => {
-                self.registry.end_round(update.device, round_start_s + update.cost.total());
-                updates.push(*update);
-            }
-            Event::Device(DeviceMsg::Dropout { device, after_s, down_wire_bits }) => {
-                self.stats.dropouts += 1;
-                self.registry.dropout(device, round_start_s + after_s);
-                dropped.push(DroppedDevice { device, after_s, down_wire_bits });
-            }
-            Event::Shard(shard) => reducer.push(shard)?,
-            Event::Error(msg) => return Err(anyhow!("engine worker failed: {msg}")),
+/// Coordinator-side handler for one drained event. Must be
+/// order-insensitive across devices: events from different worker
+/// threads interleave nondeterministically.
+fn apply_event(
+    stats: &mut EngineStats,
+    registry: &mut Registry,
+    ev: Event,
+    round_start_s: f64,
+    reducer: &mut ShardReducer,
+    updates: &mut Vec<RoundUpdate>,
+    dropped: &mut Vec<DroppedDevice>,
+) -> Result<()> {
+    stats.messages += 1;
+    match ev {
+        Event::Device(DeviceMsg::Join { device }) => {
+            registry.join(device, round_start_s);
         }
-        Ok(())
+        Event::Device(DeviceMsg::Heartbeat { device, sim_t_s }) => {
+            stats.heartbeats += 1;
+            registry.heartbeat(device, sim_t_s);
+        }
+        Event::Device(DeviceMsg::EndRound(update)) => {
+            registry.end_round(update.device, round_start_s + update.cost.total());
+            updates.push(*update);
+        }
+        Event::Device(DeviceMsg::Dropout { device, after_s, down_wire_bits }) => {
+            stats.dropouts += 1;
+            registry.dropout(device, round_start_s + after_s);
+            dropped.push(DroppedDevice { device, after_s, down_wire_bits });
+        }
+        Event::Shard(shard) => reducer.push(shard)?,
+        Event::Error(msg) => return Err(anyhow!("engine worker failed: {msg}")),
     }
+    Ok(())
 }
 
 /// Execute one aggregation group of devices in canonical (sorted) order,
@@ -393,8 +543,9 @@ fn execute_group(
 /// derive from the measured encoded lengths.
 ///
 /// Hot-path reuse (three layers, all bit-transparent):
-/// * the download bytes come from the round's shared [`DownloadCache`]
-///   (one encode per distinct codec, `Arc`-shared);
+/// * the download bytes come from the engine's shared [`DownloadCache`]
+///   (one encode per distinct codec per model generation, `Arc`-shared —
+///   including across rounds while the model is unchanged);
 /// * recovery writes into a pooled model buffer
 ///   (`recover_download_into` over a lazy `wire::PayloadView`) and the
 ///   gradient reuses a pooled buffer too — the O(n) scratch of a device
@@ -550,6 +701,7 @@ mod tests {
             lr: 0.1,
             cfg: &cfg,
             global: &global,
+            model_version: 0,
             locals: &locals,
             train_ds: &ds,
             partition: &part,
@@ -557,10 +709,8 @@ mod tests {
             stream_base: 7,
             sim_now_s: 0.0,
         };
-        let trainer = Trainer::native("har");
-        let err = e
-            .execute_round(&env, &[], TrainerProvider::Inline(&trainer))
-            .unwrap_err();
+        let exec = ExecutorHandle::Inline(Trainer::native("har"));
+        let err = e.execute_round(&env, &[], &exec).unwrap_err();
         assert!(format!("{err}").contains("finished"), "{err}");
     }
 
@@ -582,6 +732,7 @@ mod tests {
             lr: 0.1,
             cfg: &cfg,
             global: &global,
+            model_version: 0,
             locals: &locals,
             train_ds: &ds,
             partition: &part,
@@ -589,12 +740,14 @@ mod tests {
             stream_base: 7,
             sim_now_s: 0.0,
         };
-        let trainer = Trainer::native("har");
-        let out = e.execute_round(&env, &[], TrainerProvider::Inline(&trainer)).unwrap();
+        let exec = ExecutorHandle::Inline(Trainer::native("har"));
+        let out = e.execute_round(&env, &[], &exec).unwrap();
         assert!(out.updates.is_empty() && out.dropped.is_empty());
         assert_eq!(out.agg, vec![0.0f64; 4]);
         assert_eq!(e.phase(), Phase::Standby);
         assert_eq!(e.stats().rounds, 1);
+        // inline executor: exactly one trainer for the whole run
+        assert_eq!(e.stats().trainer_builds, 1);
     }
 
     #[test]

@@ -13,10 +13,14 @@
 //! * [`engine`] — the event-driven round engine underneath `Server`: a
 //!   coordinator state machine (`Standby → Round(t) → Finished`) exchanging
 //!   typed messages (`Join`/`Heartbeat`/`StartRound`/`EndRound`/`Dropout`)
-//!   with simulated devices, executing device work across worker threads
-//!   (one PJRT runtime per worker) and aggregating through streaming,
-//!   order-exact shards. `cfg.engine.workers` selects the parallelism;
-//!   every worker count is bit-identical for a fixed seed.
+//!   with simulated devices, executing device work through a run-lifetime
+//!   [`engine::ExecutorHandle`] — inline, or batched onto the persistent
+//!   [`util::threadpool::WorkerPool`] whose long-lived threads each own
+//!   their trainer (one PJRT runtime per worker, built once per RUN) —
+//!   and aggregating through streaming, order-exact shards.
+//!   `cfg.engine.workers` selects the parallelism; every worker count is
+//!   bit-identical for a fixed seed, and a panicking worker surfaces as
+//!   an error event, never a deadlock.
 //! * [`schemes`] — Caesar and the paper's baselines behind one trait; the
 //!   codec enums carry `encode_payload` constructors for the wire forms.
 //! * [`compress`] — the §4.1/§4.2 codecs (native; pinned to the L1 kernels).
@@ -31,9 +35,11 @@
 //!   writes in place (`CodecEngine::recover_download_into` into pooled
 //!   [`util::pool`] buffers) and uploads fold sparsely straight from
 //!   their serialization (`engine::AggregatorShard::fold_encoded`,
-//!   O(kept) per device). PS-side download encodes are deduplicated per
-//!   round by [`engine::DownloadCache`] — O(distinct codecs), not
-//!   O(participants).
+//!   O(kept) per device). PS-side download encodes are deduplicated by
+//!   [`engine::DownloadCache`], generation-keyed on `(model version,
+//!   effective codec)` — O(distinct codecs) per model generation, not
+//!   O(participants), with reuse across rounds whenever the global model
+//!   did not move.
 //! * [`caesar`] — Eq. 3–9: staleness, importance, batch-size regulation.
 //! * [`fleet`], [`data`] — the simulated testbed and non-IID datasets.
 //! * [`runtime`] — PJRT CPU execution of the AOT artifacts.

@@ -11,9 +11,11 @@
 //!
 //! Design notes:
 //! * **Thread-local, lock-free.** Each thread owns its free lists; leases
-//!   never contend. Engine workers are scoped threads that live for one
-//!   round — reuse amortizes over the many devices a worker executes
-//!   within the round; the sequential (inline) path reuses across rounds.
+//!   never contend. Engine workers are the *persistent* pool threads of
+//!   `util::threadpool::WorkerPool` — they live for the whole run, so a
+//!   worker's free lists (like its trainer) survive round boundaries and
+//!   reuse amortizes across every device it ever executes; the sequential
+//!   (inline) path reuses across rounds on the coordinator thread.
 //! * **Bounded.** At most [`MAX_POOLED`] buffers are retained per type;
 //!   extra returns are simply dropped, so the pool can never hoard more
 //!   than a few model-sized vectors per thread.

@@ -1,11 +1,43 @@
-//! Scoped worker pool for per-device round work (offline build: no tokio /
-//! rayon). `scope_map` fans a closure over items on N std threads and
-//! returns the results in input order.
+//! Worker threading for the round engine (offline build: no tokio /
+//! rayon). Two tools live here:
+//!
+//! * [`scope_map`] — fan a closure over items on N scoped std threads and
+//!   collect the results in input order (the experiments runner's tool);
+//! * [`WorkerPool`] — N **long-lived** worker threads, each owning
+//!   per-thread state built once via `setup(worker_idx)` *on the thread
+//!   that keeps it* (this is where non-`Send` resources — a PJRT runtime,
+//!   a trainer — live), fed per-round job batches over channels with
+//!   completion-order streaming back to the caller. This replaced the
+//!   per-round `scope_stream` scoped fan-out: worker state now survives
+//!   round boundaries, so per-round fixed costs (runtime opens, trainer
+//!   builds, thread-local `util::pool` scratch warm-up) are paid once per
+//!   run instead of once per round.
+//!
+//! **`WorkerPool` lifecycle.** `new` spawns the workers and blocks until
+//! every `setup` reports (any failure tears the pool down and returns the
+//! first error). Each [`WorkerPool::run_batch`] broadcasts one batch; the
+//! workers race down a shared item counter and stream outputs back.
+//! `shutdown` (also on drop) delivers a stop command and joins every
+//! thread — worker states drop on their own threads, as non-`Send` state
+//! must.
+//!
+//! **Panic isolation.** A job panic retires exactly the worker that ran
+//! it: the dying worker reports the item it was holding, hands its batch
+//! slot back, and later batches skip it. The caller always observes
+//! exactly `n_items` resolutions per batch — `Ok(output)` or
+//! [`WorkerLost`] — never a deadlock, even if every worker dies.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
-/// Number of worker threads to use: min(available_parallelism, cap).
+use anyhow::{anyhow, Result};
+
+/// Number of worker threads to use: `min(available_parallelism, cap)`,
+/// never less than one. The cap is clamped up via `cap.max(1)`, so
+/// callers may pass an unvalidated knob: `workers(0) == 1` by contract.
 pub fn workers(cap: usize) -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
@@ -47,67 +79,361 @@ where
         .collect()
 }
 
-/// Fan work items over `n_workers` scoped threads like [`scope_map`], with
-/// two differences the round engine needs:
-///
-/// 1. each worker builds per-thread state once via `setup(worker_idx)` —
-///    this is where non-`Sync` resources (a PJRT runtime, a trainer) are
-///    constructed on the thread that will own them;
-/// 2. outputs stream back to `sink` on the calling thread as they
-///    complete (completion order, NOT input order) instead of being
-///    collected, so at most ~`n_workers` outputs are in flight at once.
-///
-/// With `n_workers == 1` everything runs inline on the calling thread in
-/// input order — the degenerate case parallel callers compare against.
-pub fn scope_stream<T, W, S, F>(
+/// A batch item that produced no output: the worker running it panicked
+/// (and was retired from the pool), or no live worker remained to claim
+/// it. The item index identifies which job was lost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerLost {
+    pub item: usize,
+}
+
+/// Lifetime-erased per-batch callbacks. The `'static` is a lie told by a
+/// transmute in [`WorkerPool::run_batch`]: the references point into that
+/// call's stack frame, and the batch protocol guarantees every worker has
+/// left the batch (decremented `active`) before `run_batch` returns — so
+/// the referents outlive every call. `W` appears only in argument
+/// position; each worker invokes the hooks against its own state.
+struct BatchHooks<W: 'static> {
+    /// Run item `i` against the worker's state and deliver its output.
+    run: &'static (dyn Fn(&mut W, usize) + Sync),
+    /// Report that the worker holding item `i` is dying without output.
+    lost: &'static (dyn Fn(usize) + Sync),
+    /// Report that the last participant has left the batch.
+    done: &'static (dyn Fn() + Sync),
+}
+
+/// One broadcast unit of work: workers race down `next` claiming items.
+struct Batch<W: 'static> {
+    next: AtomicUsize,
     n_items: usize,
-    n_workers: usize,
-    setup: S,
-    f: F,
-    mut sink: impl FnMut(T),
-) where
-    T: Send,
-    S: Fn(usize) -> W + Sync,
-    F: Fn(&mut W, usize) -> T + Sync,
-{
-    if n_items == 0 {
-        return;
-    }
-    let n_workers = n_workers.clamp(1, n_items);
-    if n_workers == 1 {
-        let mut state = setup(0);
-        for i in 0..n_items {
-            sink(f(&mut state, i));
-        }
-        return;
-    }
-    let next = AtomicUsize::new(0);
-    // Bounded channel: a worker that races ahead of the sink blocks after
-    // n_workers undelivered outputs, enforcing the in-flight bound above
-    // (there is no reverse edge, so blocked senders cannot deadlock).
-    let (tx, rx) = std::sync::mpsc::sync_channel::<T>(n_workers);
-    std::thread::scope(|scope| {
+    /// Participants still inside the batch, plus one hold for the caller
+    /// while it broadcasts. Whoever decrements it to zero owes `done` —
+    /// if that is the caller's own release, no worker ever will.
+    active: AtomicUsize,
+    hooks: BatchHooks<W>,
+}
+
+enum Cmd<W: 'static> {
+    Batch(Arc<Batch<W>>),
+    Shutdown,
+}
+
+struct WorkerLink<W: 'static> {
+    tx: Sender<Cmd<W>>,
+    /// Cleared by the worker itself as it dies (panic or setup failure),
+    /// strictly before it leaves its final batch — so a caller that saw
+    /// that batch finish also sees the flag.
+    alive: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Persistent worker pool: N long-lived threads, each owning non-`Send`
+/// state `W` built once at construction and reused across every batch
+/// until shutdown. See the module docs for the lifecycle and the panic
+/// contract.
+pub struct WorkerPool<W: 'static> {
+    links: Vec<WorkerLink<W>>,
+    builds: usize,
+}
+
+impl<W: 'static> WorkerPool<W> {
+    /// Spawn `n_workers` (min 1) long-lived threads, each building its own
+    /// state once via `setup(worker_idx)` on the thread that will own it.
+    /// Blocks until every worker reports in; if any `setup` fails (or
+    /// panics) the started workers are shut down and the first error is
+    /// returned.
+    pub fn new<S>(n_workers: usize, setup: S) -> Result<WorkerPool<W>>
+    where
+        S: Fn(usize) -> Result<W> + Send + Sync + 'static,
+    {
+        let n_workers = n_workers.max(1);
+        let setup: Arc<dyn Fn(usize) -> Result<W> + Send + Sync> = Arc::new(setup);
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        let mut links = Vec::with_capacity(n_workers);
         for wi in 0..n_workers {
-            let tx = tx.clone();
-            let (next, setup, f) = (&next, &setup, &f);
-            scope.spawn(move || {
-                let mut state = setup(wi);
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n_items {
-                        break;
+            let (tx, rx) = std::sync::mpsc::channel::<Cmd<W>>();
+            let alive = Arc::new(AtomicBool::new(true));
+            let handle = {
+                let setup = Arc::clone(&setup);
+                let alive = Arc::clone(&alive);
+                let ready = ready_tx.clone();
+                std::thread::spawn(move || worker_main(wi, rx, setup, alive, ready))
+            };
+            links.push(WorkerLink { tx, alive, handle: Some(handle) });
+        }
+        drop(ready_tx);
+        let mut first_err = None;
+        for _ in 0..n_workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                // a worker panicked inside setup without reporting; its
+                // ready sender died with it
+                Err(_) => {
+                    first_err.get_or_insert_with(|| anyhow!("a worker panicked during setup"));
+                    break;
+                }
+            }
+        }
+        let mut pool = WorkerPool { links, builds: n_workers };
+        if let Some(e) = first_err {
+            pool.shutdown();
+            return Err(e.context("worker pool setup"));
+        }
+        Ok(pool)
+    }
+
+    /// Threads this pool was built with (live or retired).
+    pub fn workers(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Workers still accepting batches.
+    pub fn alive(&self) -> usize {
+        self.links.iter().filter(|l| l.alive.load(Ordering::Acquire)).count()
+    }
+
+    /// Worker states built over the pool's lifetime — exactly the worker
+    /// count: setup runs once per thread, never per batch.
+    pub fn builds(&self) -> usize {
+        self.builds
+    }
+
+    /// Fan `n_items` jobs over the live workers and stream every item's
+    /// outcome to `sink` in **completion order**. Blocks until all items
+    /// are resolved: `Ok(output)` for completed jobs, `Err(WorkerLost)`
+    /// for jobs whose worker panicked or that no live worker remained to
+    /// claim — exactly `n_items` sink calls either way, never a hang.
+    ///
+    /// `f` runs on worker threads against their long-lived state; `sink`
+    /// runs on the calling thread. At most ~`workers` outputs are in
+    /// flight at once (bounded channel back-pressure).
+    pub fn run_batch<T, F>(
+        &self,
+        n_items: usize,
+        f: F,
+        mut sink: impl FnMut(Result<T, WorkerLost>),
+    ) where
+        T: Send,
+        F: Fn(&mut W, usize) -> T + Sync,
+    {
+        if n_items == 0 {
+            return;
+        }
+        enum Msg<T> {
+            Out(usize, T),
+            Lost(usize),
+            Done,
+        }
+        /// Unwind guard: if `sink` panics mid-drain, keep receiving until
+        /// the batch's `Done` so no worker can still hold the stack hooks
+        /// when the caller's frame unwinds.
+        struct DrainToDone<'a, T> {
+            rx: &'a Receiver<Msg<T>>,
+            seen_done: Cell<bool>,
+        }
+        impl<T> Drop for DrainToDone<'_, T> {
+            fn drop(&mut self) {
+                while !self.seen_done.get() {
+                    match self.rx.recv() {
+                        Ok(Msg::Done) | Err(_) => self.seen_done.set(true),
+                        Ok(_) => {}
                     }
-                    if tx.send(f(&mut state, i)).is_err() {
+                }
+            }
+        }
+
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Msg<T>>(self.links.len() + 1);
+        let run = |state: &mut W, i: usize| {
+            let _ = tx.send(Msg::Out(i, f(state, i)));
+        };
+        let lost = |i: usize| {
+            let _ = tx.send(Msg::Lost(i));
+        };
+        let done = || {
+            let _ = tx.send(Msg::Done);
+        };
+        // SAFETY (lifetime erasure): the hooks point into this stack
+        // frame. They are invoked only by workers that are *inside* the
+        // batch (`active` slot held), and this function does not return —
+        // even on unwind, via `DrainToDone` — until every participant has
+        // left the batch, so the referents outlive every call.
+        #[allow(clippy::useless_transmute)]
+        let hooks = unsafe {
+            BatchHooks {
+                run: std::mem::transmute::<
+                    &(dyn Fn(&mut W, usize) + Sync),
+                    &'static (dyn Fn(&mut W, usize) + Sync),
+                >(&run),
+                lost: std::mem::transmute::<
+                    &(dyn Fn(usize) + Sync),
+                    &'static (dyn Fn(usize) + Sync),
+                >(&lost),
+                done: std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(
+                    &done,
+                ),
+            }
+        };
+        let batch = Arc::new(Batch {
+            next: AtomicUsize::new(0),
+            n_items,
+            active: AtomicUsize::new(1), // the caller's broadcast hold
+            hooks,
+        });
+        for link in &self.links {
+            if !link.alive.load(Ordering::Acquire) {
+                continue;
+            }
+            // take the slot BEFORE sending so a fast worker can never
+            // drive `active` to zero while the broadcast is in progress
+            batch.active.fetch_add(1, Ordering::AcqRel);
+            if link.tx.send(Cmd::Batch(Arc::clone(&batch))).is_err() {
+                // died between batches with a stale alive flag
+                batch.active.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+        // release the caller's hold; if it is the last one out, nothing
+        // was delivered (or every recipient already finished, with all
+        // its messages queued) and no `done` will ever arrive
+        let no_done = batch.active.fetch_sub(1, Ordering::AcqRel) == 1;
+
+        let mut resolved = vec![false; n_items];
+        if no_done {
+            while let Ok(msg) = rx.try_recv() {
+                match msg {
+                    Msg::Out(i, v) => {
+                        resolved[i] = true;
+                        sink(Ok(v));
+                    }
+                    Msg::Lost(i) => {
+                        resolved[i] = true;
+                        sink(Err(WorkerLost { item: i }));
+                    }
+                    Msg::Done => {}
+                }
+            }
+        } else {
+            let drain = DrainToDone { rx: &rx, seen_done: Cell::new(false) };
+            loop {
+                match drain.rx.recv() {
+                    Ok(Msg::Out(i, v)) => {
+                        resolved[i] = true;
+                        sink(Ok(v));
+                    }
+                    Ok(Msg::Lost(i)) => {
+                        resolved[i] = true;
+                        sink(Err(WorkerLost { item: i }));
+                    }
+                    Ok(Msg::Done) | Err(_) => {
+                        drain.seen_done.set(true);
                         break;
                     }
                 }
-            });
+            }
         }
-        drop(tx);
-        for t in rx.iter() {
-            sink(t);
+        // items no live worker ever claimed (mass worker death)
+        for (i, &r) in resolved.iter().enumerate() {
+            if !r {
+                sink(Err(WorkerLost { item: i }));
+            }
         }
-    });
+    }
+
+    /// Stop every worker and join its thread. Idempotent; also runs on
+    /// drop. Worker states are dropped on their own threads (they may be
+    /// non-`Send`).
+    pub fn shutdown(&mut self) {
+        for link in &self.links {
+            let _ = link.tx.send(Cmd::Shutdown);
+        }
+        for link in &mut self.links {
+            if let Some(h) = link.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl<W: 'static> Drop for WorkerPool<W> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_main<W: 'static>(
+    wi: usize,
+    rx: Receiver<Cmd<W>>,
+    setup: Arc<dyn Fn(usize) -> Result<W> + Send + Sync>,
+    alive: Arc<AtomicBool>,
+    ready: std::sync::mpsc::Sender<Result<()>>,
+) {
+    let mut state = match setup(wi) {
+        Ok(s) => {
+            let _ = ready.send(Ok(()));
+            s
+        }
+        Err(e) => {
+            alive.store(false, Ordering::Release);
+            let _ = ready.send(Err(e.context(format!("worker {wi} setup"))));
+            return;
+        }
+    };
+    drop(ready);
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Batch(batch) => run_worker_batch(&batch, &mut state, &alive),
+            Cmd::Shutdown => break,
+        }
+    }
+    alive.store(false, Ordering::Release);
+    // `state` drops here, on the thread that built it
+}
+
+/// Guard ensuring this worker's batch bookkeeping happens on every exit
+/// path, including unwinding out of a panicked job: clear the alive flag,
+/// report the held item as lost, hand back the batch slot (firing `done`
+/// if this was the last participant out).
+struct LeaveGuard<'a, W: 'static> {
+    batch: &'a Batch<W>,
+    alive: &'a AtomicBool,
+    claimed: Cell<Option<usize>>,
+}
+
+impl<W: 'static> Drop for LeaveGuard<'_, W> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            // dying: later batches must not count on this worker. The
+            // store precedes the `active` RMW below, so any thread that
+            // observes this batch finished also observes the flag.
+            self.alive.store(false, Ordering::Release);
+            if let Some(i) = self.claimed.take() {
+                // still inside the batch (slot not yet returned), so the
+                // erased hook is live per BatchHooks' contract
+                (self.batch.hooks.lost)(i);
+            }
+        }
+        if self.batch.active.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // last participant out: the final use of the hooks
+            (self.batch.hooks.done)();
+        }
+    }
+}
+
+fn run_worker_batch<W: 'static>(batch: &Batch<W>, state: &mut W, alive: &AtomicBool) {
+    let leave = LeaveGuard { batch, alive, claimed: Cell::new(None) };
+    loop {
+        let i = batch.next.fetch_add(1, Ordering::Relaxed);
+        if i >= batch.n_items {
+            break;
+        }
+        leave.claimed.set(Some(i));
+        // hooks are live while the LeaveGuard holds our batch slot
+        (batch.hooks.run)(state, i);
+        leave.claimed.set(None);
+    }
+    drop(leave);
 }
 
 #[cfg(test)]
@@ -139,39 +465,161 @@ mod tests {
     }
 
     #[test]
-    fn scope_stream_covers_every_item_with_worker_state() {
-        let setups = AtomicU64::new(0);
-        let mut got: Vec<usize> = Vec::new();
-        scope_stream(
-            200,
-            4,
-            |wi| {
-                setups.fetch_add(1, Ordering::Relaxed);
-                wi // worker state = worker index
-            },
-            |_state, i| i * 2,
-            |v| got.push(v),
-        );
-        // every item exactly once (order is completion order)
-        got.sort_unstable();
-        assert_eq!(got, (0..200).map(|i| i * 2).collect::<Vec<_>>());
-        // setup ran once per worker, not once per item
-        assert!(setups.load(Ordering::Relaxed) <= 4);
-    }
-
-    #[test]
-    fn scope_stream_single_worker_is_in_order() {
-        let mut got = Vec::new();
-        scope_stream(5, 1, |_| (), |_, i| i, |v| got.push(v));
-        assert_eq!(got, vec![0, 1, 2, 3, 4]);
-        let mut none = Vec::new();
-        scope_stream(0, 4, |_| (), |_, i| i, |v: usize| none.push(v));
-        assert!(none.is_empty());
-    }
-
-    #[test]
     fn workers_capped() {
         assert!(workers(4) >= 1 && workers(4) <= 4);
-        assert_eq!(workers(0), 1.min(workers(1)));
+        // the cap.max(1) contract: a zero cap clamps UP to exactly one
+        // worker regardless of host parallelism
+        assert_eq!(workers(0), 1);
+        assert_eq!(workers(1), 1);
+    }
+
+    #[test]
+    fn pool_covers_every_item_with_setup_once_per_worker() {
+        let setups = Arc::new(AtomicU64::new(0));
+        let s = Arc::clone(&setups);
+        let pool = WorkerPool::new(4, move |wi| {
+            s.fetch_add(1, Ordering::Relaxed);
+            Ok(wi)
+        })
+        .unwrap();
+        for _ in 0..3 {
+            let mut got: Vec<usize> = Vec::new();
+            pool.run_batch(200, |_state, i| i * 2, |r| got.push(r.unwrap()));
+            got.sort_unstable();
+            assert_eq!(got, (0..200).map(|i| i * 2).collect::<Vec<_>>());
+        }
+        // setup ran once per WORKER for the pool's whole life — three
+        // batches did not rebuild anything
+        assert_eq!(setups.load(Ordering::Relaxed), 4);
+        assert_eq!(pool.builds(), 4);
+        assert_eq!(pool.alive(), 4);
+    }
+
+    #[test]
+    fn worker_state_persists_across_batches() {
+        // single worker: its counter must carry over between batches
+        let pool = WorkerPool::new(1, |_| Ok(0usize)).unwrap();
+        let mut seen: Vec<usize> = Vec::new();
+        for _ in 0..2 {
+            pool.run_batch(
+                5,
+                |count, _i| {
+                    *count += 1;
+                    *count
+                },
+                |r| seen.push(r.unwrap()),
+            );
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_batch_returns_immediately() {
+        let pool = WorkerPool::new(2, |_| Ok(())).unwrap();
+        pool.run_batch(0, |_, i| i, |_r: Result<usize, WorkerLost>| panic!("no items"));
+    }
+
+    #[test]
+    fn setup_failure_tears_the_pool_down() {
+        let err = WorkerPool::new(3, |wi| {
+            if wi == 1 {
+                Err(anyhow!("no runtime"))
+            } else {
+                Ok(wi)
+            }
+        })
+        .map(|_| ())
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("no runtime"), "{err:#}");
+    }
+
+    #[test]
+    fn panicking_job_is_reported_lost_without_hanging() {
+        let pool = WorkerPool::new(3, |_| Ok(())).unwrap();
+        let (mut oks, mut lost) = (Vec::new(), Vec::new());
+        pool.run_batch(
+            50,
+            |_state, i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+                i
+            },
+            |r| match r {
+                Ok(v) => oks.push(v),
+                Err(l) => lost.push(l.item),
+            },
+        );
+        assert_eq!(lost, vec![7]);
+        oks.sort_unstable();
+        let expect: Vec<usize> = (0..50).filter(|&i| i != 7).collect();
+        assert_eq!(oks, expect);
+        // exactly the worker that ran item 7 was retired
+        assert_eq!(pool.alive(), 2);
+        // the pool still executes later batches on the survivors
+        let mut got = Vec::new();
+        pool.run_batch(20, |_s, i| i, |r| got.push(r.unwrap()));
+        got.sort_unstable();
+        assert_eq!(got, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_workers_dead_resolves_every_item_as_lost() {
+        let pool = WorkerPool::new(1, |_| Ok(())).unwrap();
+        let mut first = Vec::new();
+        pool.run_batch(
+            3,
+            |_s, _i| -> usize { panic!("die immediately") },
+            |r| first.push(r),
+        );
+        assert_eq!(first.len(), 3, "every item resolved");
+        assert!(first.iter().all(|r| r.is_err()));
+        assert_eq!(pool.alive(), 0);
+        // with nobody left, a batch still resolves (all lost) instead of
+        // hanging
+        let mut second = Vec::new();
+        pool.run_batch(4, |_s, i| i, |r| second.push(r));
+        assert_eq!(second.len(), 4);
+        assert!(second.iter().all(|r| r.is_err()));
+    }
+
+    #[test]
+    fn drop_joins_threads_and_drops_worker_state_on_them() {
+        struct Held(Arc<AtomicU64>);
+        impl Drop for Held {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let drops = Arc::new(AtomicU64::new(0));
+        let d = Arc::clone(&drops);
+        let pool = WorkerPool::new(3, move |_| Ok(Held(Arc::clone(&d)))).unwrap();
+        pool.run_batch(10, |_s, i| i, |_r| {});
+        assert_eq!(drops.load(Ordering::Relaxed), 0, "state lives between batches");
+        drop(pool); // shutdown: joins every thread
+        assert_eq!(drops.load(Ordering::Relaxed), 3, "every worker state dropped");
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let mut pool = WorkerPool::new(2, |_| Ok(())).unwrap();
+        pool.shutdown();
+        pool.shutdown();
+        // a shut-down pool resolves batches as lost rather than hanging
+        let mut got = Vec::new();
+        pool.run_batch(2, |_s, i| i, |r| got.push(r));
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().all(|r| r.is_err()));
+    }
+
+    #[test]
+    fn outputs_stream_in_completion_order_with_bounded_inflight() {
+        // one worker ⇒ completion order == input order, and the bounded
+        // result channel cannot reorder or drop anything
+        let pool = WorkerPool::new(1, |_| Ok(())).unwrap();
+        let mut got = Vec::new();
+        pool.run_batch(64, |_s, i| i, |r| got.push(r.unwrap()));
+        assert_eq!(got, (0..64).collect::<Vec<_>>());
     }
 }

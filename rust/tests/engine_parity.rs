@@ -222,6 +222,128 @@ fn dropout_rounds_are_deterministic_across_worker_counts() {
 }
 
 #[test]
+fn trainer_builds_stay_flat_across_rounds() {
+    // the persistent pool builds one trainer per WORKER per RUN — the
+    // pre-pool engine paid one per worker per ROUND (workers·rounds)
+    let srv = run_with_workers("har", "caesar", 5, 4);
+    let stats = srv.engine().stats();
+    assert_eq!(stats.rounds, 5);
+    assert!(
+        (1..=4).contains(&stats.trainer_builds),
+        "builds {} must stay <= workers (4), not workers*rounds (20)",
+        stats.trainer_builds
+    );
+    // inline executor: exactly one trainer for the whole run
+    let seq = run_with_workers("har", "caesar", 5, 1);
+    assert_eq!(seq.engine().stats().trainer_builds, 1);
+}
+
+#[test]
+fn unchanged_model_reuses_download_encodes_across_rounds() {
+    // all-dropout rounds never move the global model, so the engine's
+    // generation-keyed cache serves rounds 2..R from round 1's encode
+    let rounds = 3;
+    let mut cfg = tiny_cfg("har", rounds);
+    cfg.engine.workers = 2;
+    cfg.engine.dropout_rate = 1.0;
+    let k = cfg.participants_per_round();
+    let mut srv = Server::new(cfg, schemes::by_name("fedavg").unwrap()).unwrap();
+    srv.run().unwrap();
+    let stats = srv.engine().stats();
+    // every participant still pulled its download before vanishing
+    assert_eq!(stats.download_requests, rounds * k);
+    assert_eq!(stats.download_encodes, 1, "one Full encode for the whole run");
+    assert_eq!(
+        stats.cache_cross_round_hits,
+        (rounds - 1) * k,
+        "rounds after the first must be served from the carried entry"
+    );
+}
+
+#[test]
+fn worker_panic_surfaces_as_error_and_next_round_runs() {
+    use caesar_fl::compress::traffic::PayloadScale;
+    use caesar_fl::config::{CompressionBackend as CB, EngineConfig};
+    use caesar_fl::coordinator::Trainer;
+    use caesar_fl::data::{partition, Dataset, TaskSpec};
+    use caesar_fl::engine::{Engine, ExecutorHandle, Phase as P, RoundEnv, StartRound, WorkerCtx};
+    use caesar_fl::schemes::{DevicePlan, DownloadCodec, UploadCodec};
+    use caesar_fl::util::rng::Rng;
+    use caesar_fl::util::threadpool::WorkerPool;
+
+    let mut cfg = ExperimentConfig::preset("har");
+    cfg.trainer = TrainerBackend::Native;
+    cfg.compression = CB::Native;
+    let ds = Dataset::generate(&TaskSpec::by_name("har").unwrap(), 64, &mut Rng::new(0));
+    let mut part = partition(&ds, 4, 0.0, &mut Rng::new(1));
+    // device 0's shard is emptied: Trainer::train asserts on it, so the
+    // worker that picks device 0 up PANICS mid-round
+    part.shards[0].indices.clear();
+    let n_params = Trainer::native("har").n_params();
+    let global = vec![0.0f32; n_params];
+    let locals: Vec<Option<Vec<f32>>> = vec![None; 4];
+    let scale = PayloadScale::identity(n_params);
+    let item = |t: usize, d: usize| StartRound {
+        t,
+        plan: DevicePlan {
+            device: d,
+            download: DownloadCodec::Full,
+            upload: UploadCodec::Full,
+            batch: 4,
+            tau: 1,
+        },
+        beta_d: 1e6,
+        beta_u: 1e6,
+        mu: 1e-6,
+    };
+    let env = |t: usize| RoundEnv {
+        t,
+        lr: 0.1,
+        cfg: &cfg,
+        global: &global,
+        model_version: 0,
+        locals: &locals,
+        train_ds: &ds,
+        partition: &part,
+        scale: &scale,
+        stream_base: 42,
+        sim_now_s: 0.0,
+    };
+    // explicit 2-thread pool (not host-clamped) so a survivor remains
+    let pool = WorkerPool::new(2, |_wi| Ok(WorkerCtx { trainer: Trainer::native("har") }))
+        .unwrap();
+    let exec = ExecutorHandle::Pool(pool);
+    let ecfg = EngineConfig { workers: 2, agg_group: 1, dropout_rate: 0.0, heartbeat_s: 0.0 };
+    let mut engine = Engine::new(ecfg, 4);
+
+    // round 1 includes the poisoned device: the panic surfaces as an
+    // error event — no hang, no deadlock — and the round fails cleanly
+    let err = engine
+        .execute_round(&env(1), &[item(1, 0), item(1, 1)], &exec)
+        .unwrap_err();
+    assert!(
+        format!("{err}").contains("worker"),
+        "panic must surface as a worker error, got: {err}"
+    );
+    assert_eq!(engine.phase(), P::Standby, "a failed round still returns to Standby");
+
+    // round 2 on healthy devices executes on the surviving worker
+    let out = engine
+        .execute_round(&env(2), &[item(2, 1), item(2, 2), item(2, 3)], &exec)
+        .unwrap();
+    assert_eq!(out.updates.len(), 3);
+    assert!(out.dropped.is_empty());
+    // the pool never rebuilt anything: builds stay at the 2 setup ones
+    assert_eq!(exec.trainer_builds(), 2);
+    assert_eq!(engine.stats().trainer_builds, 2);
+    // finish() runs the accounting tripwire and joins nothing it
+    // shouldn't — dropping `exec` afterwards joins the pool threads
+    engine.finish();
+    assert_eq!(engine.phase(), P::Finished);
+    drop(exec);
+}
+
+#[test]
 fn heartbeats_flow_and_liveness_is_tracked() {
     let mut cfg = tiny_cfg("har", 2);
     cfg.engine.workers = 2;
