@@ -42,6 +42,10 @@ require_keys BENCH_engine.json bench task trainer host_workers cases \
 require_keys BENCH_wire.json bench n_params codec_cases recovery aggregation \
   recover_ms recover_into_ms recover_alloc_bytes_per_call \
   recover_into_alloc_bytes_per_call dense_ms sparse_ms speedup
+require_keys BENCH_transport.json bench codec_cases tcp_roundtrip \
+  n_params kind frame_bytes encode_ns encode_frames_per_s \
+  encode_allocs_per_frame decode_ns decode_frames_per_s \
+  decode_allocs_per_frame rtt_us
 
 echo "== cargo fmt --check =="
 cargo fmt --all -- --check
@@ -56,6 +60,14 @@ fi
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== transport smoke (two processes over an ephemeral localhost port) =="
+# the example runs an in-process baseline, then re-execs itself as a Tcp
+# coordinator + a device-fleet process and ASSERTS the model digests are
+# bit-identical — the transport parity invariant across real OS process
+# and socket boundaries (tests/transport_parity.rs pins the same
+# invariant in-process, including reconnect-with-rejoin)
+cargo run --release --example transport_localhost
 
 echo "== bench_wire smoke =="
 # run from a temp dir: the bench writes BENCH_wire.json to its cwd, and
@@ -77,6 +89,14 @@ echo "== bench_engine smoke =="
   cd "$smoke_dir"
   CAESAR_BENCH_QUICK=1 cargo bench \
     --manifest-path "$OLDPWD/Cargo.toml" --bench bench_engine
+)
+
+echo "== bench_transport smoke =="
+# frame codec throughput + a live localhost Tcp echo session
+(
+  cd "$smoke_dir"
+  CAESAR_BENCH_QUICK=1 cargo bench \
+    --manifest-path "$OLDPWD/Cargo.toml" --bench bench_transport
 )
 
 echo "CI OK"

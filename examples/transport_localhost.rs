@@ -1,0 +1,156 @@
+//! Two-process localhost transport demo + parity check.
+//!
+//! Run with:
+//!   cargo run --release --example transport_localhost
+//!
+//! The parent process first computes the in-process baseline
+//! (`Server::run`) for a small fixed-seed HAR run, then re-executes
+//! itself twice — once as the Tcp coordinator (`coordinator` role), once
+//! as the device fleet (`devices <addr>` role, one thread + connection
+//! per device) — and checks that the model digest printed by the
+//! networked coordinator is **bit-identical** to the baseline. This is
+//! the transport parity invariant demonstrated across real OS process
+//! and socket boundaries; `tests/transport_parity.rs` pins the same
+//! invariant in-process.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Command, Stdio};
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use caesar_fl::config::{CompressionBackend, ExperimentConfig, TrainerBackend};
+use caesar_fl::coordinator::Server;
+use caesar_fl::schemes;
+use caesar_fl::transport::{
+    model_digest, CoordinatorService, DeviceClient, SessionEnd, TcpConn, TcpTransport,
+};
+
+const N_DEVICES: usize = 6;
+
+/// The one config every role must agree on.
+fn demo_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("har");
+    cfg.trainer = TrainerBackend::Native;
+    cfg.compression = CompressionBackend::Native;
+    cfg.fleet = caesar_fl::fleet::FleetKind::JetsonScaled(N_DEVICES);
+    cfg.rounds = 2;
+    cfg.alpha = 0.5; // 3 participants per round
+    cfg.n_train = 600;
+    cfg.n_test = 200;
+    cfg.tau = 2;
+    cfg.batch = 8;
+    cfg.eval_every = 1;
+    cfg.seed = 7;
+    cfg
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let result = match args.get(1).map(String::as_str) {
+        None => orchestrate(),
+        Some("coordinator") => role_coordinator(),
+        Some("devices") => role_devices(args.get(2).cloned()),
+        Some(other) => Err(anyhow!("unknown role {other}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Child role: Tcp coordinator on an ephemeral port.
+fn role_coordinator() -> Result<()> {
+    let scheme = schemes::by_name("caesar").unwrap();
+    let server = Server::new(demo_cfg(), scheme)?;
+    let transport = TcpTransport::bind("127.0.0.1:0").map_err(|e| anyhow!("bind: {e}"))?;
+    let mut svc = CoordinatorService::new(server, transport);
+    println!("listening on {}", svc.local_addr());
+    svc.wait_for_devices(N_DEVICES, Duration::from_secs(30))?;
+    svc.run()?;
+    println!("model digest {:016x}", model_digest(svc.server().model()));
+    Ok(())
+}
+
+/// Child role: the whole device fleet, one thread + connection each.
+fn role_devices(addr: Option<String>) -> Result<()> {
+    let addr = addr.ok_or_else(|| anyhow!("devices role needs the coordinator address"))?;
+    let mut handles = Vec::new();
+    for d in 0..N_DEVICES {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut client = DeviceClient::new(demo_cfg(), d)?;
+            match client.run_reconnecting(|| TcpConn::connect(addr.as_str()), 5)? {
+                SessionEnd::Finished => Ok(()),
+                SessionEnd::Disconnected => Err(anyhow!("device {d} lost the coordinator")),
+            }
+        }));
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("device thread panicked"))??;
+    }
+    Ok(())
+}
+
+/// Parent: baseline run, then the two children, then the digest check.
+fn orchestrate() -> Result<()> {
+    println!("[1/3] in-process baseline...");
+    let scheme = schemes::by_name("caesar").unwrap();
+    let mut baseline = Server::new(demo_cfg(), scheme)?;
+    baseline.run()?;
+    let want = model_digest(baseline.model());
+    println!("      baseline digest {want:016x}");
+
+    println!("[2/3] spawning coordinator + {N_DEVICES} devices over Tcp...");
+    let me = std::env::current_exe().context("resolving current_exe")?;
+    let mut coord = Command::new(&me)
+        .arg("coordinator")
+        .stdout(Stdio::piped())
+        .spawn()
+        .context("spawning coordinator process")?;
+    let mut lines = BufReader::new(coord.stdout.take().unwrap()).lines();
+
+    // rendezvous: the coordinator prints its resolved ephemeral address
+    let mut addr = None;
+    let mut digest_line = None;
+    for line in &mut lines {
+        let line = line?;
+        println!("      [coordinator] {line}");
+        if let Some(a) = line.strip_prefix("listening on ") {
+            addr = Some(a.trim().to_string());
+            break;
+        }
+    }
+    let addr = addr.ok_or_else(|| anyhow!("coordinator never printed its address"))?;
+
+    let devices = Command::new(&me)
+        .arg("devices")
+        .arg(&addr)
+        .spawn()
+        .context("spawning device process")?;
+
+    // drain the rest of the coordinator's output, catching the digest
+    for line in &mut lines {
+        let line = line?;
+        println!("      [coordinator] {line}");
+        if let Some(d) = line.strip_prefix("model digest ") {
+            digest_line = Some(d.trim().to_string());
+        }
+    }
+    let coord_status = coord.wait()?;
+    let dev_status = devices.wait_with_output()?;
+    if !coord_status.success() || !dev_status.status.success() {
+        return Err(anyhow!("a child process failed"));
+    }
+    let got = u64::from_str_radix(
+        digest_line.as_deref().ok_or_else(|| anyhow!("coordinator never printed a digest"))?,
+        16,
+    )?;
+
+    println!("[3/3] digest over Tcp {got:016x}, in-process {want:016x}");
+    if got != want {
+        return Err(anyhow!("PARITY VIOLATION: Tcp run diverged from the in-process run"));
+    }
+    println!("parity holds: the transport moved bytes without touching the math");
+    Ok(())
+}

@@ -1,0 +1,164 @@
+//! Transport benchmark: frame codec throughput (encode/decode of the
+//! round-dominating StartRound and EndRound frames at 1k / 64k / 1M
+//! payload parameters, with allocation traffic per call) and localhost
+//! Tcp round-trip latency (small control frame and a 64k-parameter
+//! update echoed back).
+//!
+//! Results are written to BENCH_transport.json in the current directory
+//! with `"placeholder": false` (the flag marks hand-authored files
+//! committed from toolchain-less environments; this binary always
+//! measures). Quick mode: CAESAR_BENCH_QUICK=1 (skips the 1M size).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use caesar_fl::bench::Bench;
+use caesar_fl::coordinator::NetworkedStart;
+use caesar_fl::engine::{RoundUpdate, StartRound};
+use caesar_fl::fleet::RoundCost;
+use caesar_fl::schemes::{DevicePlan, DownloadCodec, UploadCodec};
+use caesar_fl::transport::{
+    decode_frame, encode_frame, Conn, TcpConn, TcpTransport, Transport, WireMsg,
+};
+use caesar_fl::util::alloc_count::{self, CountingAlloc};
+use caesar_fl::util::json::{self, Json};
+use caesar_fl::util::rng::Rng;
+use caesar_fl::wire::Payload;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// A kickoff frame with an `n`-parameter Dense download payload.
+fn start_msg(n: usize) -> WireMsg {
+    let download = Arc::new(Payload::Dense(randn(n, 11)).encode());
+    WireMsg::StartRound(Box::new(NetworkedStart {
+        item: StartRound {
+            t: 3,
+            plan: DevicePlan {
+                device: 1,
+                download: DownloadCodec::Full,
+                upload: UploadCodec::TopK { ratio: 0.9 },
+                batch: 16,
+                tau: 10,
+            },
+            beta_d: 5e6,
+            beta_u: 2e6,
+            mu: 3e-6,
+        },
+        lr: 0.05,
+        rng: Rng::stream(42, 3, 1).state(),
+        stream_base: 42,
+        dropout_rate: 0.1,
+        heartbeat_s: 10.0,
+        sim_now_s: 123.5,
+        download,
+    }))
+}
+
+/// A completion frame with an `n`-parameter model + Top-K upload.
+fn update_msg(n: usize) -> WireMsg {
+    let upload = UploadCodec::TopK { ratio: 0.9 }
+        .encode_payload(&randn(n, 13), &mut Rng::new(9))
+        .encode();
+    WireMsg::EndRound(Box::new(RoundUpdate {
+        device: 1,
+        w_final: randn(n, 12),
+        upload,
+        grad_norm: 1.25,
+        loss: 0.7,
+        down_wire_bits: n * 32,
+        cost: RoundCost { download_s: 1.0, compute_s: 2.0, upload_s: 0.5 },
+    }))
+}
+
+fn main() {
+    let quick = std::env::var("CAESAR_BENCH_QUICK").is_ok();
+    let sizes: &[usize] = if quick { &[1_000, 65_536] } else { &[1_000, 65_536, 1_048_576] };
+    let mut codec_rows: Vec<Json> = Vec::new();
+
+    for &n in sizes {
+        let b = Bench::new(&format!("frame codec (P={n})")).quick();
+        for (kind, msg) in [("start", start_msg(n)), ("update", update_msg(n))] {
+            let bytes = encode_frame(&msg);
+            let frame_bytes = bytes.len();
+
+            let a0 = alloc_count::snapshot();
+            let enc = b.case(&format!("{kind} encode"), n, || {
+                std::hint::black_box(encode_frame(std::hint::black_box(&msg)));
+            });
+            let enc_alloc = alloc_count::snapshot().since(&a0);
+
+            let a0 = alloc_count::snapshot();
+            let dec = b.case(&format!("{kind} decode"), n, || {
+                std::hint::black_box(decode_frame(std::hint::black_box(&bytes)).unwrap());
+            });
+            let dec_alloc = alloc_count::snapshot().since(&a0);
+
+            let mut o = Json::obj();
+            o.set("n_params", json::num(n as f64))
+                .set("kind", json::s(kind))
+                .set("frame_bytes", json::num(frame_bytes as f64))
+                .set("encode_ns", json::num(enc.mean_ns))
+                .set("encode_frames_per_s", json::num(1e9 / enc.mean_ns))
+                .set("encode_allocs_per_frame", json::num(enc_alloc.count as f64 / enc.iters as f64))
+                .set("decode_ns", json::num(dec.mean_ns))
+                .set("decode_frames_per_s", json::num(1e9 / dec.mean_ns))
+                .set("decode_allocs_per_frame", json::num(dec_alloc.count as f64 / dec.iters as f64));
+            codec_rows.push(o);
+        }
+    }
+
+    // --- localhost Tcp round-trip: echo server on an ephemeral port ---
+    println!("\n== bench: tcp localhost round-trip ==");
+    let mut lst = TcpTransport::bind("127.0.0.1:0").expect("bind");
+    let addr = lst.socket_addr();
+    let echo = std::thread::spawn(move || {
+        let mut conn = lst
+            .accept_timeout(Duration::from_secs(10))
+            .expect("accept")
+            .expect("client connects");
+        while let Ok(Some(msg)) = conn.recv_timeout(Duration::from_secs(2)) {
+            if conn.send(&msg).is_err() {
+                break;
+            }
+        }
+    });
+    let mut conn = TcpConn::connect(addr).expect("connect");
+    let mut rtt_rows: Vec<Json> = Vec::new();
+    let reps = if quick { 200 } else { 1_000 };
+    for (name, msg) in
+        [("heartbeat", WireMsg::Heartbeat { device: 3, sim_t_s: 1.5 }), ("update-64k", update_msg(65_536))]
+    {
+        // warm-up
+        for _ in 0..5 {
+            conn.send(&msg).unwrap();
+            conn.recv_timeout(Duration::from_secs(5)).unwrap().expect("echo");
+        }
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            conn.send(&msg).unwrap();
+            conn.recv_timeout(Duration::from_secs(5)).unwrap().expect("echo");
+        }
+        let us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+        println!("  {name:40} {reps:>7} it  mean rtt {us:>10.1} µs");
+        let mut o = Json::obj();
+        o.set("case", json::s(name)).set("rtt_us", json::num(us));
+        rtt_rows.push(o);
+    }
+    drop(conn);
+    echo.join().expect("echo thread");
+
+    let mut out = Json::obj();
+    out.set("bench", json::s("transport"))
+        .set("quick", Json::Bool(quick))
+        .set("placeholder", Json::Bool(false))
+        .set("codec_cases", Json::Arr(codec_rows))
+        .set("tcp_roundtrip", Json::Arr(rtt_rows));
+    std::fs::write("BENCH_transport.json", out.to_string()).expect("write BENCH_transport.json");
+    println!("wrote BENCH_transport.json");
+}

@@ -1,0 +1,91 @@
+//! `caesar-coordinator` — run the FL coordinator behind a Tcp listener.
+//!
+//! Usage:
+//!   caesar-coordinator [listen=127.0.0.1:0] [task=har] [scheme=caesar]
+//!                      [expect=<n>] [rendezvous-timeout=60]
+//!                      [round-timeout=120] [key=value overrides] [quiet]
+//!
+//! Binds `listen` (port 0 = OS-assigned; the resolved address is printed
+//! as `listening on <addr>` — the line `caesar-device` users and the
+//! two-process example wait for), waits for `expect` devices to Join
+//! (default: the per-round participant count), then drives the full run
+//! over the wire. Devices that die mid-round can reconnect and rejoin;
+//! stragglers past `round-timeout` seconds become dropouts.
+//!
+//! The networked path is native-only: trainer and compression backends
+//! are forced to `native` regardless of overrides (device processes own
+//! no accelerator runtime), so a run here is bit-identical to
+//! `caesar run trainer=native compression-backend=native` with the same
+//! seed and overrides — compare the printed `model digest`.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use caesar_fl::config::{CompressionBackend, ExperimentConfig, TrainerBackend};
+use caesar_fl::coordinator::Server;
+use caesar_fl::schemes;
+use caesar_fl::transport::{model_digest, CoordinatorService, TcpTransport};
+use caesar_fl::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let task = args.get_or("task", "har");
+    let scheme_name = args.get_or("scheme", "caesar");
+    let mut cfg = ExperimentConfig::preset(task).apply_overrides(args);
+    cfg.trainer = TrainerBackend::Native;
+    cfg.compression = CompressionBackend::Native;
+    let scheme = schemes::by_name(scheme_name)
+        .ok_or_else(|| anyhow!("unknown scheme {scheme_name} (try `caesar list`)"))?;
+    let quiet = args.has_flag("quiet");
+
+    let listen = args.get_or("listen", "127.0.0.1:0");
+    // every device can be sampled in any round, so by default wait for
+    // the whole fleet (a missing device would resolve as a dropout)
+    let expect = args.get_usize("expect").unwrap_or_else(|| cfg.n_devices());
+    let rendezvous = Duration::from_secs(args.get_u64("rendezvous-timeout").unwrap_or(60));
+    let round_timeout = Duration::from_secs(args.get_u64("round-timeout").unwrap_or(120));
+
+    let server = Server::new(cfg, scheme)?;
+    let transport =
+        TcpTransport::bind(listen).map_err(|e| anyhow!("binding {listen}: {e}"))?;
+    let mut svc = CoordinatorService::new(server, transport);
+    svc.round_timeout = round_timeout;
+
+    println!(
+        "coordinator: scheme={scheme_name} task={task} rounds={} devices={} expect={expect}",
+        svc.server().cfg.rounds,
+        svc.server().cfg.n_devices(),
+    );
+    // machine-readable rendezvous line (parsed by the two-process example)
+    println!("listening on {}", svc.local_addr());
+    svc.wait_for_devices(expect, rendezvous)?;
+    println!("{} devices joined; starting", svc.connected());
+
+    let use_auc = task == "oppo";
+    let result = svc.run_cb(|r| {
+        if !quiet && !r.accuracy.is_nan() {
+            println!(
+                "  round {:>4}  acc={:.4}  loss={:.4}  time={:>8.1}s  traffic={:.3}GB",
+                r.t, r.accuracy, r.mean_loss, r.sim_time_s, r.traffic_gb
+            );
+        }
+    })?;
+    let server = svc.into_server();
+    println!(
+        "final: metric={:.4}  time={:.1}s(sim)  traffic={:.3}GB",
+        result.final_metric(use_auc),
+        result.total_time_s(),
+        result.total_traffic_gb(),
+    );
+    // machine-readable parity line (compared across transports)
+    println!("model digest {:016x}", model_digest(server.model()));
+    Ok(())
+}

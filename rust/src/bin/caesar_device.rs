@@ -1,0 +1,106 @@
+//! `caesar-device` — run one or more FL device workers against a
+//! `caesar-coordinator` over Tcp.
+//!
+//! Usage:
+//!   caesar-device connect=127.0.0.1:PORT [devices=0-7 | device=3]
+//!                 [task=har] [max-redials=5] [key=value overrides] [quiet]
+//!
+//! Config overrides MUST match the coordinator's (both sides derive the
+//! datasets, shards and model shape from the shared config + seed; the
+//! JoinAck handshake cross-checks the fleet size, catching most skew).
+//! Each device id gets its own thread and its own Tcp connection; a
+//! dropped connection is redialed with a re-Join, and the coordinator
+//! re-sends the pending round kickoff.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use caesar_fl::config::{CompressionBackend, ExperimentConfig, TrainerBackend};
+use caesar_fl::transport::{DeviceClient, SessionEnd, TcpConn};
+use caesar_fl::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// `devices=a-b` (inclusive) or `device=n`; defaults to every device in
+/// the fleet.
+fn device_range(args: &Args, n: usize) -> Result<Vec<usize>> {
+    if let Some(d) = args.get_usize("device") {
+        return Ok(vec![d]);
+    }
+    match args.get("devices") {
+        None => Ok((0..n).collect()),
+        Some(spec) => {
+            let (a, b) = spec
+                .split_once('-')
+                .ok_or_else(|| anyhow!("devices= expects a-b, got {spec}"))?;
+            let a: usize = a.trim().parse().map_err(|_| anyhow!("bad range start {a}"))?;
+            let b: usize = b.trim().parse().map_err(|_| anyhow!("bad range end {b}"))?;
+            if a > b {
+                return Err(anyhow!("empty device range {spec}"));
+            }
+            Ok((a..=b).collect())
+        }
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow!("connect=HOST:PORT is required"))?
+        .to_string();
+    let task = args.get_or("task", "har");
+    let mut cfg = ExperimentConfig::preset(task).apply_overrides(args);
+    cfg.trainer = TrainerBackend::Native;
+    cfg.compression = CompressionBackend::Native;
+    let devices = device_range(args, cfg.n_devices())?;
+    let max_redials = args.get_usize("max-redials").unwrap_or(5);
+    let quiet = args.has_flag("quiet");
+
+    if !quiet {
+        println!("devices {:?} connecting to {addr}", devices);
+    }
+    let mut handles = Vec::new();
+    for d in devices {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> Result<(usize, SessionEnd)> {
+            let mut client = DeviceClient::new(cfg, d)?;
+            let end = client.run_reconnecting(
+                || TcpConn::connect(addr.as_str()),
+                max_redials,
+            )?;
+            Ok((d, end))
+        }));
+    }
+    let mut failed = false;
+    for h in handles {
+        match h.join().map_err(|_| anyhow!("device thread panicked"))? {
+            Ok((d, SessionEnd::Finished)) => {
+                if !quiet {
+                    println!("device {d}: finished");
+                }
+            }
+            Ok((d, SessionEnd::Disconnected)) => {
+                eprintln!("device {d}: gave up after repeated disconnects");
+                failed = true;
+            }
+            Err(e) => {
+                eprintln!("device error: {e:#}");
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        std::process::exit(2);
+    }
+    // give the coordinator a beat to log its side before we exit
+    std::thread::sleep(Duration::from_millis(50));
+    Ok(())
+}

@@ -32,21 +32,45 @@ pub use codec::CodecEngine;
 pub use metrics::{RoundRecord, RunResult};
 pub use trainer::{EvalOutcome, Trainer};
 
-use anyhow::{Context, Result};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
 
 use crate::caesar::{ImportanceTable, ParticipationTracker};
 use crate::compress::traffic::{PayloadScale, TrafficMeter};
-use crate::config::ExperimentConfig;
+use crate::config::{CompressionBackend, ExperimentConfig};
+use crate::coordinator::codec::effective_download;
 use crate::data::{self, Dataset, Partition, TaskSpec};
-use crate::engine::{self, Engine, ExecutorHandle, StartRound};
+use crate::engine::{self, Engine, ExecutorHandle, ExternalRound, StartRound};
 use crate::fleet::Fleet;
 use crate::nn::MlpSpec;
 use crate::schemes::{RoundCtx, Scheme};
 use crate::runtime::Runtime;
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, RngState};
+use crate::wire::EncodedPayload;
 
 /// Stream-key salt for per-(round, device) link-bandwidth draws.
 const LINK_SALT: u64 = 0x11C4;
+
+/// Regenerate the run's data artifacts from a config, replaying the exact
+/// server-side fork order (`0xDA7A` train → `0x7E57` test → `0xD1FF`
+/// partition). The single source of truth shared by
+/// [`Server::with_artifacts`] and `transport::client::DeviceClient` — a
+/// remote device rebuilds bit-identical datasets and shard assignment
+/// from nothing but the config, so payload frames never carry data. The
+/// returned [`Rng`] has consumed exactly those three forks; the server
+/// continues it for model init and stream keys.
+pub(crate) fn build_data(
+    cfg: &ExperimentConfig,
+) -> Result<(Dataset, Dataset, Partition, Rng)> {
+    let mut rng = Rng::new(cfg.seed);
+    let spec =
+        TaskSpec::by_name(&cfg.task).with_context(|| format!("unknown task {}", cfg.task))?;
+    let train_ds = Dataset::generate(&spec, cfg.n_train, &mut rng.fork(0xDA7A));
+    let test_ds = Dataset::generate(&spec, cfg.n_test, &mut rng.fork(0x7E57));
+    let partition = data::partition(&train_ds, cfg.n_devices(), cfg.het_p, &mut rng.fork(0xD1FF));
+    Ok((train_ds, test_ds, partition, rng))
+}
 
 /// The federated-learning server (PS) plus the simulated testbed.
 pub struct Server {
@@ -82,10 +106,37 @@ pub struct Server {
 }
 
 /// Everything measured in one executed round.
-struct RoundOutcome {
-    round_s: f64,
-    avg_wait_s: f64,
-    mean_loss: f64,
+pub(crate) struct RoundOutcome {
+    pub(crate) round_s: f64,
+    pub(crate) avg_wait_s: f64,
+    pub(crate) mean_loss: f64,
+}
+
+/// Everything a remote device needs to execute one round — the
+/// coordinator→device kickoff in networked mode, carried by a
+/// `transport::frame` StartRound frame. Bundles the in-process
+/// [`StartRound`] item with the run context the simulated path reads out
+/// of [`engine::RoundEnv`] (which a remote device cannot see): the
+/// learning rate, the dropout/heartbeat knobs, the simulated clock, the
+/// RNG stream key — and, crucially, the device stream's exact
+/// [`RngState`] *after* the PS-side download encode, so the remote draw
+/// sequence continues bit-identically to the loopback engine's.
+#[derive(Clone, Debug)]
+pub struct NetworkedStart {
+    pub item: StartRound,
+    pub lr: f32,
+    /// Device stream state after the PS-side download encode consumed its
+    /// draws (RNG-drawing download codecs); the device resumes from here.
+    pub rng: RngState,
+    /// Base key of the per-(round, device) streams (fate + link salts).
+    pub stream_base: u64,
+    pub dropout_rate: f64,
+    pub heartbeat_s: f64,
+    /// Simulated wall-clock at round start.
+    pub sim_now_s: f64,
+    /// The encoded download payload — the same `Arc`'d bytes every
+    /// co-participant with this effective codec receives.
+    pub download: Arc<EncodedPayload>,
 }
 
 impl Server {
@@ -101,13 +152,8 @@ impl Server {
         scheme: Box<dyn Scheme>,
         artifact_dir: &std::path::Path,
     ) -> Result<Server> {
-        let mut rng = Rng::new(cfg.seed);
-        let spec = TaskSpec::by_name(&cfg.task)
-            .with_context(|| format!("unknown task {}", cfg.task))?;
-        let train_ds = Dataset::generate(&spec, cfg.n_train, &mut rng.fork(0xDA7A));
-        let test_ds = Dataset::generate(&spec, cfg.n_test, &mut rng.fork(0x7E57));
+        let (train_ds, test_ds, partition, mut rng) = build_data(&cfg)?;
         let n = cfg.n_devices();
-        let partition = data::partition(&train_ds, n, cfg.het_p, &mut rng.fork(0xD1FF));
 
         // Static importance table (Eq. 4–5), computed once before training
         // exactly as §4.2 prescribes.
@@ -177,6 +223,33 @@ impl Server {
         &self.engine
     }
 
+    /// Mutable engine access for the networked driver
+    /// (`transport::server` feeds decoded frames into an external round).
+    pub(crate) fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    /// Cumulative traffic ledger (down/up bits, measured off the wire).
+    pub fn traffic(&self) -> &TrafficMeter {
+        &self.traffic
+    }
+
+    /// Simulated wall-clock, seconds since the run started.
+    pub fn sim_time_s(&self) -> f64 {
+        self.sim_time_s
+    }
+
+    /// Monotone global-model version (bumped when a round moves the model).
+    pub fn model_version(&self) -> u64 {
+        self.model_version
+    }
+
+    /// The current global model (what `transport::model_digest` should
+    /// fingerprint for cross-transport parity checks).
+    pub fn model(&self) -> &[f32] {
+        &self.global
+    }
+
     /// Participation tracker (staleness bookkeeping) — read access for
     /// diagnostics and tests.
     pub fn tracker(&self) -> &ParticipationTracker {
@@ -195,44 +268,64 @@ impl Server {
     pub fn run_cb(&mut self, mut cb: impl FnMut(&RoundRecord)) -> Result<RunResult> {
         let mut records = Vec::with_capacity(self.cfg.rounds);
         let mut reached: Option<(usize, f64, f64)> = None;
-        let use_auc = self.uses_auc();
         for t in 1..=self.cfg.rounds {
             let out = self.round(t)?;
-            let evaluated = t % self.cfg.eval_every == 0 || t == self.cfg.rounds;
-            let (acc, auc) = if evaluated {
-                let e = self.evaluate()?;
-                (e.accuracy, e.auc)
-            } else {
-                (f64::NAN, f64::NAN)
-            };
-            let rec = RoundRecord {
-                t,
-                sim_time_s: self.sim_time_s,
-                traffic_gb: self.traffic.total_gb(),
-                accuracy: acc,
-                auc,
-                mean_loss: out.mean_loss,
-                round_s: out.round_s,
-                avg_wait_s: out.avg_wait_s,
-                participants: self.cfg.participants_per_round(),
-            };
-            if reached.is_none() && evaluated {
-                let metric = if use_auc { auc } else { acc };
-                if metric >= self.cfg.target_acc {
-                    reached = Some((t, self.sim_time_s, self.traffic.total_gb()));
-                }
-            }
+            let rec = self.observe_round(t, &out, &mut reached)?;
             cb(&rec);
             records.push(rec);
         }
-        Ok(RunResult {
+        Ok(self.finish_run(records, reached))
+    }
+
+    /// Evaluate + record one applied round: the metrics block shared by
+    /// the in-process loop and `transport::server::CoordinatorService`.
+    pub(crate) fn observe_round(
+        &mut self,
+        t: usize,
+        out: &RoundOutcome,
+        reached: &mut Option<(usize, f64, f64)>,
+    ) -> Result<RoundRecord> {
+        let evaluated = t % self.cfg.eval_every == 0 || t == self.cfg.rounds;
+        let (acc, auc) = if evaluated {
+            let e = self.evaluate()?;
+            (e.accuracy, e.auc)
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        let rec = RoundRecord {
+            t,
+            sim_time_s: self.sim_time_s,
+            traffic_gb: self.traffic.total_gb(),
+            accuracy: acc,
+            auc,
+            mean_loss: out.mean_loss,
+            round_s: out.round_s,
+            avg_wait_s: out.avg_wait_s,
+            participants: self.cfg.participants_per_round(),
+        };
+        if reached.is_none() && evaluated {
+            let metric = if self.uses_auc() { auc } else { acc };
+            if metric >= self.cfg.target_acc {
+                *reached = Some((t, self.sim_time_s, self.traffic.total_gb()));
+            }
+        }
+        Ok(rec)
+    }
+
+    /// Assemble the final [`RunResult`] from per-round records.
+    pub(crate) fn finish_run(
+        &self,
+        records: Vec<RoundRecord>,
+        reached: Option<(usize, f64, f64)>,
+    ) -> RunResult {
+        RunResult {
             scheme: self.scheme.name().to_string(),
             task: self.cfg.task.clone(),
             seed: self.cfg.seed,
             records,
             reached_target: reached,
             target: self.cfg.target_acc,
-        })
+        }
     }
 
     /// [`run_cb`] without a progress observer.
@@ -247,6 +340,32 @@ impl Server {
     }
 
     fn round(&mut self, t: usize) -> Result<RoundOutcome> {
+        let (items, lr) = self.plan_round(t);
+        let env = engine::RoundEnv {
+            t,
+            lr,
+            cfg: &self.cfg,
+            global: &self.global,
+            model_version: self.model_version,
+            locals: &self.locals,
+            train_ds: &self.train_ds,
+            partition: &self.partition,
+            scale: &self.scale,
+            stream_base: self.stream_base,
+            sim_now_s: self.sim_time_s,
+        };
+        // the same run-lifetime executor every round: pool workers keep
+        // their trainers, runtimes and thread-local scratch warm
+        let out = self.engine.execute_round(&env, &items, &self.executor)?;
+        Ok(self.apply_round(t, out))
+    }
+
+    /// Rounds 1..t-1 planning side: participant selection, link draws and
+    /// the scheme's per-device plans, emitted as [`StartRound`] items.
+    /// Consumes this round's draws from the server RNG — call exactly
+    /// once per round, whichever loop (in-process or networked) executes
+    /// it.
+    pub(crate) fn plan_round(&mut self, t: usize) -> (Vec<StartRound>, f32) {
         assert!(t >= 1, "rounds are 1-based (Eq. 3 divides by t)");
         self.fleet.on_round_start(t);
         let cfg = self.cfg.clone();
@@ -299,23 +418,17 @@ impl Server {
             .enumerate()
             .map(|(i, &plan)| StartRound { t, plan, beta_d: beta_d[i], beta_u: beta_u[i], mu: mu[i] })
             .collect();
-        let env = engine::RoundEnv {
-            t,
-            lr,
-            cfg: &cfg,
-            global: &self.global,
-            model_version: self.model_version,
-            locals: &self.locals,
-            train_ds: &self.train_ds,
-            partition: &self.partition,
-            scale: &self.scale,
-            stream_base: self.stream_base,
-            sim_now_s: self.sim_time_s,
-        };
-        // the same run-lifetime executor every round: pool workers keep
-        // their trainers, runtimes and thread-local scratch warm
-        let engine::RoundOutput { agg, updates, dropped } =
-            self.engine.execute_round(&env, &items, &self.executor)?;
+        (items, lr)
+    }
+
+    /// Apply a drained round's output to the server state — traffic,
+    /// locals, tracker, global aggregation, simulated clock — in
+    /// canonical (device-id) order. The single application path shared by
+    /// the in-process loop and the networked coordinator: a
+    /// [`engine::RoundOutput`] is applied identically whether its updates
+    /// arrived from worker threads or off a socket.
+    pub(crate) fn apply_round(&mut self, t: usize, out: engine::RoundOutput) -> RoundOutcome {
+        let engine::RoundOutput { agg, updates, dropped } = out;
 
         // --- apply the round output in canonical (device-id) order ---
         // traffic is derived from the measured wire lengths of the actual
@@ -363,7 +476,71 @@ impl Server {
         };
         self.sim_time_s += round_s;
         let mean_loss = if completers > 0 { loss_sum / completers as f64 } else { f64::NAN };
-        Ok(RoundOutcome { round_s, avg_wait_s, mean_loss })
+        RoundOutcome { round_s, avg_wait_s, mean_loss }
+    }
+
+    /// Open round `t` for **networked** execution: plan exactly as the
+    /// in-process loop would, encode each participant's download through
+    /// the engine's shared cache, and return the engine's
+    /// [`ExternalRound`] plus one [`NetworkedStart`] per participant
+    /// (ascending device id — the canonical order the frames go out in).
+    ///
+    /// RNG alignment is the subtle part: the simulated path draws the
+    /// PS-side download encode from the *device's* stream before handing
+    /// the stream to training, so each kickoff captures the post-encode
+    /// [`RngState`] for the remote device to resume from. Everything else
+    /// a device needs is derivable from the shared config.
+    pub(crate) fn begin_networked_round(
+        &mut self,
+        t: usize,
+    ) -> Result<(ExternalRound, Vec<NetworkedStart>)> {
+        if self.cfg.compression != CompressionBackend::Native {
+            return Err(anyhow!(
+                "networked rounds require the native compression backend \
+                 (the coordinator thread owns no accelerator runtime)"
+            ));
+        }
+        let (mut items, lr) = self.plan_round(t);
+        // canonical (ascending device) order for kickoff + aggregation
+        items.sort_by_key(|it| it.plan.device);
+        let devices: Vec<usize> = items.iter().map(|it| it.plan.device).collect();
+        let n_params = self.global.len();
+        let round = self.engine.begin_external(
+            t,
+            self.model_version,
+            self.sim_time_s,
+            &devices,
+            n_params,
+        )?;
+        let codec = CodecEngine::native();
+        let ecfg = self.engine.config();
+        let mut starts = Vec::with_capacity(items.len());
+        for item in items {
+            let d = item.plan.device;
+            let has_local = self.locals[d].is_some();
+            let down_codec = effective_download(item.plan.download, has_local);
+            // same stream, same draw order as `engine::run_device`: the
+            // PS-side encode consumes the device stream's first draws
+            let mut dev_rng = Rng::stream(self.stream_base, t as u64, d as u64);
+            let download = self.engine.cache().get_or_encode(
+                &codec,
+                down_codec,
+                &self.global,
+                has_local,
+                &mut dev_rng,
+            )?;
+            starts.push(NetworkedStart {
+                item,
+                lr,
+                rng: dev_rng.state(),
+                stream_base: self.stream_base,
+                dropout_rate: ecfg.dropout_rate,
+                heartbeat_s: ecfg.heartbeat_s,
+                sim_now_s: self.sim_time_s,
+                download,
+            });
+        }
+        Ok((round, starts))
     }
 }
 

@@ -70,6 +70,7 @@ pub use cache::DownloadCache;
 pub use message::{DeviceMsg, DroppedDevice, Event, RoundUpdate, StartRound};
 pub use registry::{DeviceStatus, Registry};
 
+use std::collections::BTreeSet;
 use std::path::Path;
 
 use anyhow::{anyhow, Result};
@@ -86,8 +87,9 @@ use crate::util::threadpool::{self, WorkerPool};
 
 /// Stream-key salt separating device "fate" draws (dropout lottery) from
 /// device work draws, so enabling dropout never perturbs the randomness
-/// of devices that complete.
-const FATE_SALT: u64 = 0xD60_D60;
+/// of devices that complete. Shared with `transport::client`, which runs
+/// the same lottery on the remote device.
+pub(crate) const FATE_SALT: u64 = 0xD60_D60;
 
 /// Upper bound on simulated heartbeats emitted per device per round.
 const MAX_HEARTBEATS: usize = 1_000;
@@ -236,6 +238,46 @@ impl ExecutorHandle {
                 out.ok_or_else(|| anyhow!("worker pool lost the eval job"))?
             }
         }
+    }
+}
+
+/// In-flight state of an **externally driven** round: the engine's event
+/// loop generalized over a transport. Where [`Engine::execute_round`]
+/// simulates devices on worker threads, an external round receives its
+/// [`DeviceMsg`]s from the outside — decoded transport frames
+/// (`transport::server::CoordinatorService`) or a test script — and the
+/// engine replays the identical coordinator-side handling: registry
+/// bookkeeping per message, then one canonical aggregation pass at
+/// [`Engine::finish_external`] that walks the exact same sorted-group
+/// f64 reduction tree as the in-process path. Same seed + same messages
+/// ⇒ bit-identical [`RoundOutput`], whichever loop drove the round.
+pub struct ExternalRound {
+    /// 1-based round number (matches the engine's `Phase::Round`).
+    t: usize,
+    /// Simulated wall-clock at round start (registry timestamps).
+    start_s: f64,
+    n_params: usize,
+    /// Expected participant ids, ascending — the canonical fold order.
+    expected: Vec<usize>,
+    /// Participants that have not yet resolved (EndRound or Dropout).
+    pending: BTreeSet<usize>,
+    updates: Vec<RoundUpdate>,
+    dropped: Vec<DroppedDevice>,
+}
+
+impl ExternalRound {
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// True once every expected participant resolved.
+    pub fn drained(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Participants still unresolved, ascending.
+    pub fn pending(&self) -> Vec<usize> {
+        self.pending.iter().copied().collect()
     }
 }
 
@@ -474,6 +516,194 @@ impl Engine {
         }
         Ok(RoundOutput { agg, updates, dropped })
     }
+
+    /// Read access to the engine-owned download cache, so an external
+    /// driver (`transport::server`) can share encodes exactly like the
+    /// in-process round does.
+    pub fn cache(&self) -> &DownloadCache {
+        &self.cache
+    }
+
+    /// Evict silent devices between rounds (see
+    /// [`Registry::sweep_expired`]); evictions count as dropouts.
+    pub fn sweep_expired(&mut self, now_s: f64) -> Vec<usize> {
+        let evicted = self.registry.sweep_expired(now_s);
+        self.stats.dropouts += evicted.len();
+        evicted
+    }
+
+    /// Open round `t` for **external** driving: the transport-facing twin
+    /// of [`Engine::execute_round`]'s setup. Performs the same phase
+    /// transition, cache-generation turnover and per-participant registry
+    /// bookkeeping (Join + StartRound), then hands back an
+    /// [`ExternalRound`] that accumulates wire-delivered [`DeviceMsg`]s
+    /// via [`Engine::external_msg`] until every participant resolved.
+    ///
+    /// `devices` must be sorted ascending and unique — the caller sends
+    /// StartRound frames in this order, and it becomes the canonical
+    /// aggregation order at [`Engine::finish_external`].
+    pub fn begin_external(
+        &mut self,
+        t: usize,
+        model_version: u64,
+        sim_now_s: f64,
+        devices: &[usize],
+        n_params: usize,
+    ) -> Result<ExternalRound> {
+        match self.phase {
+            Phase::Standby => {}
+            Phase::Round(r) => return Err(anyhow!("engine re-entered while in round {r}")),
+            Phase::Finished => return Err(anyhow!("engine is finished; no further rounds")),
+        }
+        for pair in devices.windows(2) {
+            if pair[0] >= pair[1] {
+                return Err(anyhow!(
+                    "external round participants must be sorted and unique (saw {} then {})",
+                    pair[0],
+                    pair[1]
+                ));
+            }
+        }
+        if let Some(&d) = devices.iter().find(|&&d| !self.registry.contains(d)) {
+            return Err(anyhow!(
+                "participant id {d} out of range (registry holds {})",
+                self.registry.len()
+            ));
+        }
+        self.phase = Phase::Round(t);
+        self.cache.begin_round(model_version);
+        for &d in devices {
+            self.registry.join(d, sim_now_s);
+            self.registry.start_round(d, sim_now_s);
+            self.stats.messages += 2; // Join ack + StartRound
+        }
+        Ok(ExternalRound {
+            t,
+            start_s: sim_now_s,
+            n_params,
+            expected: devices.to_vec(),
+            pending: devices.iter().copied().collect(),
+            updates: Vec::with_capacity(devices.len()),
+            dropped: Vec::new(),
+        })
+    }
+
+    /// Feed one wire-delivered device message into an open external
+    /// round. Mirrors [`apply_event`]'s coordinator-side handling, with
+    /// the trust boundary moved here: a message from an unknown device,
+    /// a participant that already resolved, or an update whose shapes
+    /// disagree with the round's model is rejected with an error (the
+    /// service answers with a Reject frame) and leaves the round intact.
+    pub fn external_msg(&mut self, round: &mut ExternalRound, msg: DeviceMsg) -> Result<()> {
+        self.stats.messages += 1;
+        match msg {
+            DeviceMsg::Join { device } => {
+                if !self.registry.join(device, round.start_s) {
+                    return Err(anyhow!("join from out-of-range device {device}"));
+                }
+            }
+            DeviceMsg::Heartbeat { device, sim_t_s } => {
+                self.stats.heartbeats += 1;
+                if !self.registry.heartbeat(device, sim_t_s) {
+                    return Err(anyhow!("heartbeat from out-of-range device {device}"));
+                }
+            }
+            DeviceMsg::EndRound(update) => {
+                let d = update.device;
+                if !round.pending.contains(&d) {
+                    return Err(anyhow!("EndRound from device {d} not pending in round {}", round.t));
+                }
+                // shape checks run before the slot is consumed: a rejected
+                // update leaves the device pending, and the service decides
+                // whether to retry or synthesize a Dropout for it
+                if update.w_final.len() != round.n_params {
+                    return Err(anyhow!(
+                        "EndRound from device {d}: w_final has {} params, round expects {}",
+                        update.w_final.len(),
+                        round.n_params
+                    ));
+                }
+                if update.upload.spec.n() != round.n_params {
+                    return Err(anyhow!(
+                        "EndRound from device {d}: upload covers {} params, round expects {}",
+                        update.upload.spec.n(),
+                        round.n_params
+                    ));
+                }
+                round.pending.remove(&d);
+                self.registry.end_round(d, round.start_s + update.cost.total());
+                round.updates.push(*update);
+            }
+            DeviceMsg::Dropout { device, after_s, down_wire_bits } => {
+                if !round.pending.remove(&device) {
+                    return Err(anyhow!(
+                        "Dropout from device {device} not pending in round {}",
+                        round.t
+                    ));
+                }
+                self.stats.dropouts += 1;
+                self.registry.dropout(device, round.start_s + after_s);
+                round.dropped.push(DroppedDevice { device, after_s, down_wire_bits });
+            }
+        }
+        Ok(())
+    }
+
+    /// Close a drained external round: run the canonical aggregation pass
+    /// and return the same [`RoundOutput`] the in-process path produces.
+    /// The fold replays [`round_inner`]'s exact reduction tree — expected
+    /// ids chunked into `agg_group`-sized [`AggregatorShard`]s walked in
+    /// ascending order, shards reduced in group order — so a fixed seed
+    /// gives bit-identical `agg` regardless of message arrival order.
+    pub fn finish_external(&mut self, round: ExternalRound) -> Result<RoundOutput> {
+        if self.phase != Phase::Round(round.t) {
+            return Err(anyhow!("finish_external outside round {}", round.t));
+        }
+        if !round.drained() {
+            return Err(anyhow!(
+                "round {} still waiting on devices {:?}",
+                round.t,
+                round.pending()
+            ));
+        }
+        let ExternalRound { n_params, expected, mut updates, mut dropped, .. } = round;
+        updates.sort_by_key(|u| u.device);
+        dropped.sort_by_key(|d| d.device);
+
+        let group = self.cfg.agg_group.max(1);
+        let groups: Vec<&[usize]> = expected.chunks(group).collect();
+        let mut reducer = ShardReducer::new(n_params, groups.len());
+        let mut next_update = 0usize;
+        for (g, members) in groups.iter().enumerate() {
+            let mut shard = AggregatorShard::new(g, n_params, members.to_vec());
+            for &d in *members {
+                // updates/dropped are sorted by device and each expected id
+                // resolved exactly once, so a linear cursor matches the walk
+                if next_update < updates.len() && updates[next_update].device == d {
+                    shard.fold_encoded(d, &updates[next_update].upload, 1.0);
+                    next_update += 1;
+                } else {
+                    shard.mark_dropped(d);
+                }
+            }
+            reducer.push(shard)?;
+        }
+
+        self.stats.download_requests = self.cache.requests();
+        self.stats.download_encodes = self.cache.encodes();
+        self.stats.cache_cross_round_hits = self.cache.cross_round_hits();
+
+        let (agg, folded) = reducer.finish()?;
+        if folded != updates.len() {
+            return Err(anyhow!(
+                "aggregation folded {folded} updates but {} EndRound messages arrived",
+                updates.len()
+            ));
+        }
+        self.phase = Phase::Standby;
+        self.stats.rounds += 1;
+        Ok(RoundOutput { agg, updates, dropped })
+    }
 }
 
 /// Coordinator-side handler for one drained event. Must be
@@ -654,6 +884,24 @@ fn run_device(
     Ok(())
 }
 
+/// Simulated-time heartbeat schedule of a device round lasting
+/// `duration_s` seconds from `start_s`: one ping per `heartbeat_s`,
+/// capped at [`MAX_HEARTBEATS`]. The single source of truth shared by the
+/// in-process engine and the remote `transport::client` — both sides must
+/// emit identical liveness traffic for the transport parity invariant.
+pub(crate) fn heartbeat_schedule(
+    heartbeat_s: f64,
+    start_s: f64,
+    duration_s: f64,
+) -> impl Iterator<Item = f64> {
+    let n = if heartbeat_s <= 0.0 {
+        0
+    } else {
+        ((duration_s / heartbeat_s) as usize).min(MAX_HEARTBEATS)
+    };
+    (1..=n).map(move |k| start_s + k as f64 * heartbeat_s)
+}
+
 /// Emit the periodic liveness pings a device would send over a round
 /// lasting `duration_s` simulated seconds.
 fn emit_heartbeats(
@@ -663,15 +911,8 @@ fn emit_heartbeats(
     start_s: f64,
     duration_s: f64,
 ) {
-    if ecfg.heartbeat_s <= 0.0 {
-        return;
-    }
-    let n = ((duration_s / ecfg.heartbeat_s) as usize).min(MAX_HEARTBEATS);
-    for k in 1..=n {
-        events.push(Event::Device(DeviceMsg::Heartbeat {
-            device,
-            sim_t_s: start_s + k as f64 * ecfg.heartbeat_s,
-        }));
+    for sim_t_s in heartbeat_schedule(ecfg.heartbeat_s, start_s, duration_s) {
+        events.push(Event::Device(DeviceMsg::Heartbeat { device, sim_t_s }));
     }
 }
 
@@ -748,6 +989,89 @@ mod tests {
         assert_eq!(e.stats().rounds, 1);
         // inline executor: exactly one trainer for the whole run
         assert_eq!(e.stats().trainer_builds, 1);
+    }
+
+    fn end_round_msg(device: usize, g: &[f32]) -> DeviceMsg {
+        DeviceMsg::EndRound(Box::new(RoundUpdate {
+            device,
+            w_final: vec![0.5; g.len()],
+            upload: crate::wire::Payload::Dense(g.to_vec()).encode(),
+            grad_norm: 0.0,
+            loss: 0.0,
+            down_wire_bits: 64,
+            cost: RoundCost { download_s: 1.0, compute_s: 2.0, upload_s: 3.0 },
+        }))
+    }
+
+    #[test]
+    fn external_round_replays_the_canonical_fold() {
+        let ecfg = EngineConfig { agg_group: 2, ..EngineConfig::default() };
+        let mut e = Engine::new(ecfg, 4);
+        let mut round = e.begin_external(1, 0, 10.0, &[0, 1, 2], 3).unwrap();
+        assert_eq!(e.phase(), Phase::Round(1));
+        assert_eq!(e.registry().status(0), DeviceStatus::Training);
+        assert!(!round.drained());
+        assert_eq!(round.pending(), vec![0, 1, 2]);
+
+        // arrival order scrambled on purpose: 1 ends, 2 drops, 0 ends
+        e.external_msg(&mut round, end_round_msg(1, &[10.0, 20.0, 30.0])).unwrap();
+        e.external_msg(
+            &mut round,
+            DeviceMsg::Dropout { device: 2, after_s: 0.5, down_wire_bits: 64 },
+        )
+        .unwrap();
+        e.external_msg(&mut round, end_round_msg(0, &[1.0, 2.0, 3.0])).unwrap();
+        assert!(round.drained());
+
+        let out = e.finish_external(round).unwrap();
+        // canonical order restored regardless of arrival order
+        assert_eq!(out.updates.iter().map(|u| u.device).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(out.dropped.iter().map(|d| d.device).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(out.agg, vec![11.0, 22.0, 33.0]);
+        assert_eq!(e.phase(), Phase::Standby);
+        assert_eq!(e.stats().rounds, 1);
+        assert_eq!(e.stats().dropouts, 1);
+        assert_eq!(e.registry().status(1), DeviceStatus::Idle);
+        assert_eq!(e.registry().status(2), DeviceStatus::Dropped);
+    }
+
+    #[test]
+    fn external_round_rejects_bad_input_without_corrupting_state() {
+        let mut e = Engine::new(EngineConfig::default(), 4);
+        // participants must be sorted/unique and in range
+        assert!(e.begin_external(1, 0, 0.0, &[1, 0], 3).is_err());
+        assert!(e.begin_external(1, 0, 0.0, &[0, 0], 3).is_err());
+        assert!(e.begin_external(1, 0, 0.0, &[0, 9], 3).is_err());
+        assert_eq!(e.phase(), Phase::Standby);
+
+        let mut round = e.begin_external(1, 0, 0.0, &[0, 1], 3).unwrap();
+        // a second round cannot open while one is in flight
+        assert!(e.begin_external(2, 0, 0.0, &[0], 3).is_err());
+        // closing before the round drains is refused
+        let err = format!("{}", e.external_msg(&mut round, end_round_msg(2, &[0.0; 3])).unwrap_err());
+        assert!(err.contains("not pending"), "{err}");
+        // shape mismatches are rejections, not panics — and the device
+        // stays pending so the service can retry or synthesize a Dropout
+        assert!(e.external_msg(&mut round, end_round_msg(0, &[0.0; 5])).is_err());
+        assert_eq!(round.pending(), vec![0, 1]);
+        // a round that has not drained refuses to close
+        let undrained = ExternalRound {
+            t: 1,
+            start_s: 0.0,
+            n_params: 3,
+            expected: vec![0, 1],
+            pending: BTreeSet::from([1]),
+            updates: Vec::new(),
+            dropped: Vec::new(),
+        };
+        assert!(e.finish_external(undrained).is_err());
+        e.external_msg(&mut round, end_round_msg(0, &[1.0, 1.0, 1.0])).unwrap();
+        e.external_msg(&mut round, end_round_msg(1, &[1.0, 1.0, 1.0])).unwrap();
+        // duplicate resolution is a rejection
+        assert!(e.external_msg(&mut round, end_round_msg(1, &[1.0, 1.0, 1.0])).is_err());
+        assert!(round.drained());
+        let out = e.finish_external(round).unwrap();
+        assert_eq!(out.updates.len(), 2);
     }
 
     #[test]

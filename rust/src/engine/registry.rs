@@ -4,6 +4,14 @@
 //! status, last-seen simulated time, and cumulative participation /
 //! dropout counters. Mirrors the bookkeeping a networked FL coordinator
 //! keeps to decide who is schedulable and who timed out.
+//!
+//! Device ids may now arrive **off the wire** (`transport::server`), so
+//! every mutating entry point is total over `usize`: an out-of-range id
+//! is rejected with `false` (the networked coordinator logs it and sends
+//! a `Reject` frame) instead of indexing out of bounds. [`Registry::live`]
+//! reports a timed-out device, and [`Registry::sweep_expired`] actively
+//! transitions silent Idle/Training devices to Dropped — the eviction
+//! hook a networked coordinator runs between rounds.
 
 /// A device's status as seen by the coordinator.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -52,37 +60,72 @@ impl Registry {
         self.status.is_empty()
     }
 
-    pub fn status(&self, device: usize) -> DeviceStatus {
-        self.status[device]
+    /// Whether `device` is a valid id in this registry's space.
+    pub fn contains(&self, device: usize) -> bool {
+        device < self.status.len()
     }
 
-    /// Handle a rendezvous (idempotent; also how a dropped device returns).
-    pub fn join(&mut self, device: usize, now_s: f64) {
+    /// Status of `device` (Offline for out-of-range ids — unknown devices
+    /// have simply never been heard from).
+    pub fn status(&self, device: usize) -> DeviceStatus {
+        self.status.get(device).copied().unwrap_or_default()
+    }
+
+    /// Handle a rendezvous (idempotent; also how a dropped device
+    /// returns). Returns `false` — a rejection, not a crash — for an
+    /// out-of-range id, which a networked coordinator receives straight
+    /// off the wire.
+    pub fn join(&mut self, device: usize, now_s: f64) -> bool {
+        if !self.contains(device) {
+            return false;
+        }
         if self.status[device] != DeviceStatus::Training {
             self.status[device] = DeviceStatus::Idle;
         }
         self.touch(device, now_s);
+        true
     }
 
-    pub fn heartbeat(&mut self, device: usize, now_s: f64) {
+    /// Liveness ping; `false` rejects an out-of-range id.
+    pub fn heartbeat(&mut self, device: usize, now_s: f64) -> bool {
+        if !self.contains(device) {
+            return false;
+        }
         self.touch(device, now_s);
+        true
     }
 
-    pub fn start_round(&mut self, device: usize, now_s: f64) {
+    /// Mark a device as executing a round; `false` rejects an
+    /// out-of-range id.
+    pub fn start_round(&mut self, device: usize, now_s: f64) -> bool {
+        if !self.contains(device) {
+            return false;
+        }
         self.status[device] = DeviceStatus::Training;
         self.touch(device, now_s);
+        true
     }
 
-    pub fn end_round(&mut self, device: usize, now_s: f64) {
+    /// Record a completed round; `false` rejects an out-of-range id.
+    pub fn end_round(&mut self, device: usize, now_s: f64) -> bool {
+        if !self.contains(device) {
+            return false;
+        }
         self.status[device] = DeviceStatus::Idle;
         self.completions[device] = self.completions[device].saturating_add(1);
         self.touch(device, now_s);
+        true
     }
 
-    pub fn dropout(&mut self, device: usize, now_s: f64) {
+    /// Record a mid-round dropout; `false` rejects an out-of-range id.
+    pub fn dropout(&mut self, device: usize, now_s: f64) -> bool {
+        if !self.contains(device) {
+            return false;
+        }
         self.status[device] = DeviceStatus::Dropped;
         self.dropouts[device] = self.dropouts[device].saturating_add(1);
         self.touch(device, now_s);
+        true
     }
 
     fn touch(&mut self, device: usize, now_s: f64) {
@@ -93,15 +136,39 @@ impl Registry {
     /// A device is live at `now_s` if it has been heard from within two
     /// heartbeat intervals (and is not dropped/offline). With heartbeats
     /// disabled (`heartbeat_s <= 0`) there is no timeout: any joined,
-    /// non-dropped device counts as live.
+    /// non-dropped device counts as live. Out-of-range ids are never live.
     pub fn live(&self, device: usize, now_s: f64) -> bool {
-        match self.status[device] {
+        match self.status(device) {
             DeviceStatus::Offline | DeviceStatus::Dropped => false,
             DeviceStatus::Idle | DeviceStatus::Training => {
                 self.heartbeat_s <= 0.0
                     || now_s - self.last_seen_s[device] <= 2.0 * self.heartbeat_s
             }
         }
+    }
+
+    /// Evict every device that has gone silent: Idle/Training devices not
+    /// heard from within two heartbeat intervals transition to Dropped
+    /// (counted as a dropout) and their ids are returned, ascending. The
+    /// boundary matches [`Registry::live`] exactly — a device last seen
+    /// precisely `2·heartbeat_s` ago is still live and is NOT swept. With
+    /// heartbeats disabled there is no timeout and nothing is ever swept.
+    pub fn sweep_expired(&mut self, now_s: f64) -> Vec<usize> {
+        let mut evicted = Vec::new();
+        if self.heartbeat_s <= 0.0 {
+            return evicted;
+        }
+        for d in 0..self.status.len() {
+            let silent = now_s - self.last_seen_s[d] > 2.0 * self.heartbeat_s;
+            if silent
+                && matches!(self.status[d], DeviceStatus::Idle | DeviceStatus::Training)
+            {
+                self.status[d] = DeviceStatus::Dropped;
+                self.dropouts[d] = self.dropouts[d].saturating_add(1);
+                evicted.push(d);
+            }
+        }
+        evicted
     }
 
     pub fn completions(&self, device: usize) -> u32 {
@@ -179,6 +246,67 @@ mod tests {
         r.join(1, 60.0);
         assert_eq!(r.status(1), DeviceStatus::Idle);
         assert!(r.live(1, 60.0));
+    }
+
+    #[test]
+    fn out_of_range_ids_are_rejected_not_panics() {
+        // wire-originated ids: every entry point must reject, not index
+        let mut r = Registry::new(3, 10.0);
+        for bogus in [3usize, 100, usize::MAX] {
+            assert!(!r.contains(bogus));
+            assert!(!r.join(bogus, 0.0));
+            assert!(!r.heartbeat(bogus, 0.0));
+            assert!(!r.start_round(bogus, 0.0));
+            assert!(!r.end_round(bogus, 0.0));
+            assert!(!r.dropout(bogus, 0.0));
+            assert_eq!(r.status(bogus), DeviceStatus::Offline);
+            assert!(!r.live(bogus, 0.0));
+        }
+        // the rejections left the registry untouched
+        assert_eq!(r.census(), (3, 0, 0, 0));
+        // in-range ids still work and report acceptance
+        assert!(r.join(2, 1.0));
+        assert_eq!(r.census(), (2, 1, 0, 0));
+    }
+
+    #[test]
+    fn sweep_expired_pins_the_two_heartbeat_boundary() {
+        let mut r = Registry::new(3, 10.0);
+        r.join(0, 100.0);
+        r.join(1, 100.0);
+        r.start_round(1, 100.0);
+        // device 2 never joined: Offline devices are not sweepable
+        // at exactly 2 heartbeats of silence the devices are still live
+        assert!(r.sweep_expired(120.0).is_empty());
+        assert!(r.live(0, 120.0) && r.live(1, 120.0));
+        // just past the boundary both Idle and Training are evicted
+        let evicted = r.sweep_expired(120.1);
+        assert_eq!(evicted, vec![0, 1]);
+        assert_eq!(r.status(0), DeviceStatus::Dropped);
+        assert_eq!(r.status(1), DeviceStatus::Dropped);
+        assert_eq!((r.dropouts(0), r.dropouts(1)), (1, 1));
+        assert_eq!(r.status(2), DeviceStatus::Offline);
+        // idempotent: already-dropped devices are not re-evicted
+        assert!(r.sweep_expired(500.0).is_empty());
+        // a swept device can rejoin and is schedulable again
+        assert!(r.join(0, 130.0));
+        assert_eq!(r.status(0), DeviceStatus::Idle);
+    }
+
+    #[test]
+    fn sweep_respects_fresh_heartbeats_and_disabled_liveness() {
+        let mut r = Registry::new(2, 10.0);
+        r.join(0, 0.0);
+        r.join(1, 0.0);
+        r.heartbeat(1, 15.0); // device 1 kept beating
+        let evicted = r.sweep_expired(21.0); // 0 silent 21s, 1 silent 6s
+        assert_eq!(evicted, vec![0]);
+        assert_eq!(r.status(1), DeviceStatus::Idle);
+        // disabled heartbeats: nothing ever expires
+        let mut off = Registry::new(2, 0.0);
+        off.join(0, 0.0);
+        assert!(off.sweep_expired(1e12).is_empty());
+        assert_eq!(off.status(0), DeviceStatus::Idle);
     }
 
     #[test]

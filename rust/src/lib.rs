@@ -40,6 +40,18 @@
 //!   effective codec)` — O(distinct codecs) per model generation, not
 //!   O(participants), with reuse across rounds whenever the global model
 //!   did not move.
+//! * [`transport`] — the networked coordinator: a std-only binary frame
+//!   codec ([`transport::frame`], magic + version + tag + length-prefixed
+//!   body, total on untrusted input) under a [`transport::Transport`] /
+//!   [`transport::Conn`] pair with two implementations — in-process
+//!   [`transport::LoopbackHub`] (the default and parity baseline) and
+//!   [`transport::TcpTransport`] (framed `std::net::TcpStream`,
+//!   connection-per-device, reconnect-with-rejoin).
+//!   [`transport::CoordinatorService`] drives the `Server`+`Engine` pair
+//!   from decoded frames; [`transport::DeviceClient`] runs the worker
+//!   side of a round remotely. Invariant: a fixed-seed Tcp localhost run
+//!   is bit-identical (final model, traffic ledger, round records) to
+//!   the Loopback and in-process runs.
 //! * [`caesar`] — Eq. 3–9: staleness, importance, batch-size regulation.
 //! * [`fleet`], [`data`] — the simulated testbed and non-IID datasets.
 //! * [`runtime`] — PJRT CPU execution of the AOT artifacts.
@@ -64,6 +76,7 @@ pub mod fleet;
 pub mod nn;
 pub mod runtime;
 pub mod schemes;
+pub mod transport;
 pub mod util;
 pub mod wire;
 

@@ -1,0 +1,358 @@
+//! Device client: the worker side of a round, run remotely.
+//!
+//! A [`DeviceClient`] owns one device's view of the experiment — the
+//! shared config, its data shard (rebuilt locally from the seed via
+//! `coordinator::build_data`, so training examples never cross the
+//! wire) and its retained local model — and executes kickoff frames
+//! exactly as `engine::run_device` would in-process:
+//!
+//! 1. resume the device RNG stream from the kickoff's [`RngState`]
+//!    (the PS-side download encode already consumed its draws),
+//! 2. run the dropout lottery on the independent fate stream,
+//! 3. recover the download against the retained local model, train τ
+//!    local steps, encode the upload,
+//! 4. send heartbeats on the shared simulated-time schedule, then the
+//!    EndRound (or Dropout) frame.
+//!
+//! Every input to the math arrives bit-exact over the wire, so the
+//! update frames are bit-identical to the in-process path — the
+//! transport parity invariant.
+//!
+//! Redelivery: the client caches its last resolution frame. A duplicate
+//! StartRound for an already-completed round (the coordinator re-sends
+//! kickoffs on rejoin — it cannot know whether the EndRound made it out
+//! before the connection died) is answered by resending that cached
+//! frame, never by re-training: the local model has already advanced,
+//! so a second training pass would diverge.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::compress::traffic::PayloadScale;
+use crate::config::{CompressionBackend, ExperimentConfig, TrainerBackend};
+use crate::coordinator::{self, CodecEngine, NetworkedStart, Trainer};
+use crate::data::{Dataset, Partition};
+use crate::engine::{self, RoundUpdate};
+use crate::fleet::RoundCost;
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+use super::frame::WireMsg;
+use super::{Conn, TransportError};
+
+/// Receive slice while waiting for the next frame.
+const RECV_SLICE: Duration = Duration::from_millis(100);
+
+/// Counters for one client session (diagnostics; not part of parity).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClientStats {
+    /// Rounds completed with an EndRound.
+    pub rounds: usize,
+    /// Rounds resolved by losing the dropout lottery.
+    pub dropouts: usize,
+    /// Heartbeat frames sent.
+    pub heartbeats: usize,
+    /// Duplicate kickoffs answered from the redelivery cache.
+    pub redeliveries: usize,
+}
+
+/// How a client session over one connection ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionEnd {
+    /// The coordinator broadcast Finish: the run is over.
+    Finished,
+    /// The connection died or went silent past the idle budget; the
+    /// device state is intact and [`DeviceClient::run_reconnecting`]
+    /// may dial again and re-Join.
+    Disconnected,
+}
+
+/// One device's stateful worker loop.
+pub struct DeviceClient {
+    cfg: ExperimentConfig,
+    device: usize,
+    trainer: Trainer,
+    train_ds: Dataset,
+    partition: Partition,
+    /// Retained post-training model — the reference for CaesarSplit
+    /// download recovery. Advances only when a round completes; the
+    /// coordinator mirrors this exactly (its `locals[d]` advances only
+    /// on EndRound), so both sides always agree on the effective
+    /// download codec.
+    local: Option<Vec<f32>>,
+    /// Redelivery cache: the round number and resolution frame of the
+    /// last round this device resolved.
+    last_round: usize,
+    last_resolution: Option<WireMsg>,
+    pub stats: ClientStats,
+    /// Silence budget before a session reports [`SessionEnd::Disconnected`].
+    /// Idle is normal (non-participants wait out whole rounds), so this
+    /// defaults generously; transport-level errors disconnect immediately.
+    pub idle_timeout: Duration,
+}
+
+impl DeviceClient {
+    /// Build the device's local world from the shared config. Data and
+    /// model-shape are derived from `cfg.seed` exactly as the
+    /// coordinator derives them, which is what keeps the wire free of
+    /// training data.
+    pub fn new(cfg: ExperimentConfig, device: usize) -> Result<DeviceClient> {
+        ensure!(
+            device < cfg.n_devices(),
+            "device id {device} out of range for a {} device fleet",
+            cfg.n_devices()
+        );
+        ensure!(
+            cfg.trainer == TrainerBackend::Native && cfg.compression == CompressionBackend::Native,
+            "the device client is native-only (no accelerator runtime on the worker side)"
+        );
+        let (train_ds, _test_ds, partition, _rng) =
+            coordinator::build_data(&cfg).context("building the device-side data world")?;
+        let trainer = Trainer::native(&cfg.task);
+        Ok(DeviceClient {
+            cfg,
+            device,
+            trainer,
+            train_ds,
+            partition,
+            local: None,
+            last_round: 0,
+            last_resolution: None,
+            stats: ClientStats::default(),
+            idle_timeout: Duration::from_secs(600),
+        })
+    }
+
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
+    /// The retained local model, if any round has completed.
+    pub fn local(&self) -> Option<&[f32]> {
+        self.local.as_deref()
+    }
+
+    /// Run one session over `conn`: Join, then serve kickoffs until the
+    /// coordinator finishes or the connection dies. Transport failures
+    /// return `Ok(Disconnected)` (retryable — state is intact); protocol
+    /// rejections and engine-level errors are `Err` (fatal).
+    pub fn run<C: Conn>(&mut self, conn: &mut C) -> Result<SessionEnd> {
+        if conn.send(&WireMsg::Join { device: self.device }).is_err() {
+            return Ok(SessionEnd::Disconnected);
+        }
+        let mut last_activity = Instant::now();
+        loop {
+            let msg = match conn.recv_timeout(RECV_SLICE) {
+                Ok(Some(m)) => {
+                    last_activity = Instant::now();
+                    m
+                }
+                Ok(None) => {
+                    if last_activity.elapsed() >= self.idle_timeout {
+                        return Ok(SessionEnd::Disconnected);
+                    }
+                    continue;
+                }
+                Err(TransportError::Closed) | Err(TransportError::Io(_)) => {
+                    return Ok(SessionEnd::Disconnected)
+                }
+                Err(e @ TransportError::Frame(_)) => {
+                    return Err(anyhow!("device {}: {e}", self.device))
+                }
+            };
+            match msg {
+                WireMsg::JoinAck { device, n_devices } => {
+                    ensure!(
+                        device == self.device,
+                        "joined as device {} but was acked as {device}",
+                        self.device
+                    );
+                    ensure!(
+                        n_devices == self.cfg.n_devices(),
+                        "config skew: coordinator runs {n_devices} devices, this client \
+                         was configured for {}",
+                        self.cfg.n_devices()
+                    );
+                }
+                WireMsg::StartRound(start) => {
+                    let t = start.item.t;
+                    if t == self.last_round {
+                        // duplicate kickoff after a rejoin: answer from
+                        // the cache, never re-train (see module docs)
+                        if let Some(cached) = self.last_resolution.clone() {
+                            self.stats.redeliveries += 1;
+                            if conn.send(&cached).is_err() {
+                                return Ok(SessionEnd::Disconnected);
+                            }
+                        }
+                    } else if t < self.last_round {
+                        // stale straggler frame: the coordinator has long
+                        // since closed that round
+                    } else if self.handle_start(conn, *start)?.is_none() {
+                        return Ok(SessionEnd::Disconnected);
+                    }
+                }
+                WireMsg::Finish => return Ok(SessionEnd::Finished),
+                WireMsg::Reject { code, .. } => {
+                    return Err(anyhow!(
+                        "coordinator rejected device {} (code {code})",
+                        self.device
+                    ));
+                }
+                other => {
+                    return Err(anyhow!(
+                        "device {}: unexpected frame from coordinator: {other:?}",
+                        self.device
+                    ));
+                }
+            }
+        }
+    }
+
+    /// [`run`] with reconnect-with-rejoin: when a session disconnects,
+    /// dial a fresh connection and Join again (the coordinator replaces
+    /// the dead connection and re-sends any pending kickoff). Gives up
+    /// after `max_redials` consecutive failed/disconnected attempts.
+    pub fn run_reconnecting<C: Conn>(
+        &mut self,
+        mut dial: impl FnMut() -> Result<C, TransportError>,
+        max_redials: usize,
+    ) -> Result<SessionEnd> {
+        let mut redials = 0;
+        loop {
+            match dial() {
+                Ok(mut conn) => match self.run(&mut conn)? {
+                    SessionEnd::Finished => return Ok(SessionEnd::Finished),
+                    SessionEnd::Disconnected => {}
+                },
+                Err(_) => {}
+            }
+            redials += 1;
+            if redials > max_redials {
+                return Ok(SessionEnd::Disconnected);
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Execute one kickoff: the remote mirror of `engine::run_device`
+    /// from the post-download-encode point. Returns `Ok(None)` if the
+    /// connection died mid-send (retryable), `Ok(Some(()))` on success.
+    fn handle_start<C: Conn>(
+        &mut self,
+        conn: &mut C,
+        start: NetworkedStart,
+    ) -> Result<Option<()>> {
+        let item = &start.item;
+        let t = item.t;
+        let d = self.device;
+        ensure!(
+            item.plan.device == d,
+            "kickoff for device {} delivered to device {d}",
+            item.plan.device
+        );
+        let scale =
+            PayloadScale { n_real: self.trainer.n_params(), n_paper: self.cfg.n_params_paper };
+        let down_wire_bits = start.download.bits;
+        let down_bits = scale.scale_bits(down_wire_bits);
+
+        // dropout lottery on the independent fate stream — same draw,
+        // same outcome, as the in-process simulation of this device
+        if start.dropout_rate > 0.0 {
+            let mut fate =
+                Rng::stream(start.stream_base ^ engine::FATE_SALT, t as u64, d as u64);
+            if fate.f64() < start.dropout_rate {
+                let download_s = down_bits / item.beta_d;
+                let compute_s = (item.plan.tau * item.plan.batch) as f64 * item.mu;
+                let after_s = download_s + fate.f64() * compute_s;
+                if self.heartbeats(conn, start.heartbeat_s, start.sim_now_s, after_s).is_none() {
+                    return Ok(None);
+                }
+                let resolution = WireMsg::Dropout { device: d, after_s, down_wire_bits };
+                if conn.send(&resolution).is_err() {
+                    return Ok(None);
+                }
+                // the local model does NOT advance on a dropout
+                self.last_round = t;
+                self.last_resolution = Some(resolution);
+                self.stats.dropouts += 1;
+                return Ok(Some(()));
+            }
+        }
+
+        // resume the device stream where the PS-side encode left it
+        let mut dev_rng = Rng::from_state(start.rng);
+        let codec = CodecEngine::native();
+        let mut model = pool::f32_buf();
+        codec.recover_download_into(&start.download, self.local.as_deref(), &mut model)?;
+        let shard = &self.partition.shards[d];
+        let (w_final, loss) = self.trainer.train(
+            &model,
+            &self.train_ds,
+            shard,
+            item.plan.tau,
+            item.plan.batch,
+            start.lr,
+            &mut dev_rng,
+        )?;
+
+        let mut g = pool::f32_buf();
+        g.extend(model.iter().zip(&w_final).map(|(a, b)| a - b));
+        drop(model);
+        let grad_norm = g.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        let up_enc = codec.encode_upload(item.plan.upload, &g, &mut dev_rng)?;
+        drop(g);
+
+        let cost = RoundCost::from_wire(
+            down_wire_bits,
+            up_enc.bits,
+            &scale,
+            item.beta_d,
+            item.beta_u,
+            item.plan.tau,
+            item.plan.batch,
+            item.mu,
+        );
+        if self.heartbeats(conn, start.heartbeat_s, start.sim_now_s, cost.total()).is_none() {
+            return Ok(None);
+        }
+        let resolution = WireMsg::EndRound(Box::new(RoundUpdate {
+            device: d,
+            w_final: w_final.clone(),
+            upload: up_enc,
+            grad_norm,
+            loss,
+            down_wire_bits,
+            cost,
+        }));
+        if conn.send(&resolution).is_err() {
+            return Ok(None);
+        }
+        self.local = Some(w_final);
+        self.last_round = t;
+        self.last_resolution = Some(resolution);
+        self.stats.rounds += 1;
+        Ok(Some(()))
+    }
+
+    /// Send the simulated-time heartbeat schedule (shared with the
+    /// in-process engine via `engine::heartbeat_schedule`). `None` if
+    /// the connection died mid-stream.
+    fn heartbeats<C: Conn>(
+        &mut self,
+        conn: &mut C,
+        heartbeat_s: f64,
+        start_s: f64,
+        duration_s: f64,
+    ) -> Option<()> {
+        let d = self.device;
+        for sim_t_s in engine::heartbeat_schedule(heartbeat_s, start_s, duration_s) {
+            if conn.send(&WireMsg::Heartbeat { device: d, sim_t_s }).is_err() {
+                return None;
+            }
+            self.stats.heartbeats += 1;
+        }
+        Some(())
+    }
+}

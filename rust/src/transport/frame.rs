@@ -1,0 +1,975 @@
+//! Binary frame codec for the networked coordinator protocol.
+//!
+//! Every message that crosses a transport (Tcp socket or in-process
+//! Loopback channel) is one **frame**:
+//!
+//! ```text
+//!  offset  size  field
+//!  ──────  ────  ─────────────────────────────────────────────
+//!       0     4  magic  "CAES"
+//!       4     2  protocol version, u16 LE   (currently 1)
+//!       6     1  message tag                (Join=1 … Reject=8)
+//!       7     1  flags                      (0; reserved)
+//!       8     4  body length, u32 LE        (≤ 64 MiB)
+//!      12     n  body (tag-specific layout, every field byte-aligned)
+//! ```
+//!
+//! Encoding goes through the same [`BitWriter`] as the wire payload
+//! format — every frame field is a whole number of bytes, so an embedded
+//! [`EncodedPayload`] splices in as a straight byte copy
+//! ([`BitWriter::push_bytes`]) and the payload bytes on the socket are
+//! *identical* to the bytes the simulated path accounts for.
+//!
+//! Decoding is the trust boundary: frames arrive from the network, so
+//! [`decode_frame`] is total — truncated, malformed, oversized or
+//! version-skewed input returns a typed [`FrameError`], never panics,
+//! and never allocates more than the received byte count. Embedded
+//! payloads are deep-validated (exact bit-length per codec, ascending
+//! Top-K indices, bitmap popcounts, zero tail padding) so a decoded
+//! frame is safe to hand to the engine's unchecked hot paths.
+//!
+//! Version rules: the `u16` version is bumped on ANY layout change; a
+//! decoder rejects every version but its own ([`FrameError::Version`])
+//! and the peer is expected to disconnect — there is no negotiation.
+
+use std::sync::Arc;
+
+use crate::coordinator::NetworkedStart;
+use crate::engine::message::{RoundUpdate, StartRound};
+use crate::fleet::RoundCost;
+use crate::schemes::{DevicePlan, DownloadCodec, UploadCodec};
+use crate::util::bitio::{bits_for, BitReader, BitWriter};
+use crate::util::rng::RngState;
+use crate::wire::payload::{index_list_is_cheaper, position_bits};
+use crate::wire::{EncodedPayload, PayloadSpec};
+
+/// Frame magic: ASCII "CAES".
+pub const MAGIC: [u8; 4] = *b"CAES";
+/// Protocol version this build speaks (see module docs for the rules).
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 12;
+/// Upper bound on a frame body — 64 MiB comfortably fits a full fp32
+/// model at the stand-in scales this repo trains, while bounding what a
+/// malicious length field can make the reader buffer.
+pub const MAX_BODY: usize = 64 * 1024 * 1024;
+
+/// Reject reason codes carried by [`WireMsg::Reject`].
+pub mod reject {
+    /// Device id outside the registry's space.
+    pub const UNKNOWN_DEVICE: u16 = 1;
+    /// Message arrived in a phase that cannot accept it.
+    pub const BAD_STATE: u16 = 2;
+    /// Frame decoded but its contents failed engine-side validation.
+    pub const BAD_UPDATE: u16 = 3;
+}
+
+/// Every message of the coordinator protocol, as carried by one frame.
+#[derive(Clone, Debug)]
+pub enum WireMsg {
+    /// Device → coordinator rendezvous.
+    Join { device: usize },
+    /// Coordinator → device: join accepted; echoes the registry size so
+    /// the device can sanity-check its config matches the server's.
+    JoinAck { device: usize, n_devices: usize },
+    /// Device → coordinator liveness ping at simulated time `sim_t_s`.
+    Heartbeat { device: usize, sim_t_s: f64 },
+    /// Coordinator → device round kickoff (plan + context + download).
+    StartRound(Box<NetworkedStart>),
+    /// Device → coordinator completed round.
+    EndRound(Box<RoundUpdate>),
+    /// Device → coordinator mid-round dropout notice.
+    Dropout { device: usize, after_s: f64, down_wire_bits: usize },
+    /// Coordinator → device: the run is over, disconnect.
+    Finish,
+    /// Coordinator → device: message refused (see [`reject`] codes).
+    Reject { device: usize, code: u16 },
+}
+
+impl WireMsg {
+    fn tag(&self) -> u8 {
+        match self {
+            WireMsg::Join { .. } => 1,
+            WireMsg::JoinAck { .. } => 2,
+            WireMsg::Heartbeat { .. } => 3,
+            WireMsg::StartRound(_) => 4,
+            WireMsg::EndRound(_) => 5,
+            WireMsg::Dropout { .. } => 6,
+            WireMsg::Finish => 7,
+            WireMsg::Reject { .. } => 8,
+        }
+    }
+}
+
+/// Typed decode failure. `Truncated` is retryable (more bytes may
+/// arrive); everything else is a protocol violation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// Not enough bytes yet: `need` more than the `have` available.
+    Truncated { need: usize, have: usize },
+    BadMagic([u8; 4]),
+    Version { got: u16, want: u16 },
+    UnknownTag(u8),
+    Oversized { len: usize, max: usize },
+    Malformed(&'static str),
+    /// The body decoded cleanly but `extra` bytes were left over.
+    TrailingBytes { extra: usize },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} more bytes, have {have}")
+            }
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            FrameError::Version { got, want } => {
+                write!(f, "protocol version {got} (this build speaks {want})")
+            }
+            FrameError::UnknownTag(t) => write!(f, "unknown message tag {t}"),
+            FrameError::Oversized { len, max } => {
+                write!(f, "frame body of {len} bytes exceeds the {max}-byte cap")
+            }
+            FrameError::Malformed(what) => write!(f, "malformed frame: {what}"),
+            FrameError::TrailingBytes { extra } => {
+                write!(f, "frame body has {extra} undecoded trailing bytes")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Whether a decode failure means "wait for more bytes" rather than
+/// "protocol violation" — the framing loop in `transport::tcp` keeps
+/// reading on the former and drops the connection on the latter.
+impl FrameError {
+    pub fn is_incomplete(&self) -> bool {
+        matches!(self, FrameError::Truncated { .. })
+    }
+}
+
+// ---------------------------------------------------------------------
+// encoding
+// ---------------------------------------------------------------------
+
+/// Serialize one message to a complete frame (header + body).
+pub fn encode_frame(msg: &WireMsg) -> Vec<u8> {
+    let mut body = BitWriter::new();
+    encode_body(msg, &mut body);
+    debug_assert_eq!(body.len_bits() % 8, 0, "frame fields must stay byte-aligned");
+    let body = body.into_bytes();
+    assert!(body.len() <= MAX_BODY, "outgoing frame body of {} bytes", body.len());
+
+    let mut w = BitWriter::new();
+    w.push_bytes(&MAGIC);
+    w.push_bits(VERSION as u64, 16);
+    w.push_bits(msg.tag() as u64, 8);
+    w.push_bits(0, 8); // flags
+    w.push_bits(body.len() as u64, 32);
+    w.push_bytes(&body);
+    w.into_bytes()
+}
+
+fn encode_body(msg: &WireMsg, w: &mut BitWriter) {
+    match msg {
+        WireMsg::Join { device } => put_u64(w, *device as u64),
+        WireMsg::JoinAck { device, n_devices } => {
+            put_u64(w, *device as u64);
+            put_u64(w, *n_devices as u64);
+        }
+        WireMsg::Heartbeat { device, sim_t_s } => {
+            put_u64(w, *device as u64);
+            put_f64(w, *sim_t_s);
+        }
+        WireMsg::StartRound(s) => encode_start(s, w),
+        WireMsg::EndRound(u) => encode_update(u, w),
+        WireMsg::Dropout { device, after_s, down_wire_bits } => {
+            put_u64(w, *device as u64);
+            put_f64(w, *after_s);
+            put_u64(w, *down_wire_bits as u64);
+        }
+        WireMsg::Finish => {}
+        WireMsg::Reject { device, code } => {
+            put_u64(w, *device as u64);
+            w.push_bits(*code as u64, 16);
+        }
+    }
+}
+
+fn encode_start(s: &NetworkedStart, w: &mut BitWriter) {
+    put_u64(w, s.item.t as u64);
+    encode_plan(&s.item.plan, w);
+    put_f64(w, s.item.beta_d);
+    put_f64(w, s.item.beta_u);
+    put_f64(w, s.item.mu);
+    w.push_f32(s.lr);
+    encode_rng_state(&s.rng, w);
+    put_u64(w, s.stream_base);
+    put_f64(w, s.dropout_rate);
+    put_f64(w, s.heartbeat_s);
+    put_f64(w, s.sim_now_s);
+    encode_payload(&s.download, w);
+}
+
+fn encode_update(u: &RoundUpdate, w: &mut BitWriter) {
+    put_u64(w, u.device as u64);
+    put_u64(w, u.w_final.len() as u64);
+    for &x in &u.w_final {
+        w.push_f32(x);
+    }
+    encode_payload(&u.upload, w);
+    put_f64(w, u.grad_norm);
+    put_f64(w, u.loss);
+    put_u64(w, u.down_wire_bits as u64);
+    put_f64(w, u.cost.download_s);
+    put_f64(w, u.cost.compute_s);
+    put_f64(w, u.cost.upload_s);
+}
+
+fn encode_plan(p: &DevicePlan, w: &mut BitWriter) {
+    put_u64(w, p.device as u64);
+    match p.download {
+        DownloadCodec::Full => w.push_bits(0, 8),
+        DownloadCodec::CaesarSplit { ratio } => {
+            w.push_bits(1, 8);
+            put_f64(w, ratio);
+        }
+        DownloadCodec::TopK { ratio } => {
+            w.push_bits(2, 8);
+            put_f64(w, ratio);
+        }
+        DownloadCodec::Quant { bits } => {
+            w.push_bits(3, 8);
+            w.push_bits(bits as u64, 32);
+        }
+    }
+    match p.upload {
+        UploadCodec::Full => w.push_bits(0, 8),
+        UploadCodec::TopK { ratio } => {
+            w.push_bits(1, 8);
+            put_f64(w, ratio);
+        }
+        UploadCodec::Quant { bits } => {
+            w.push_bits(2, 8);
+            w.push_bits(bits as u64, 32);
+        }
+    }
+    put_u64(w, p.batch as u64);
+    put_u64(w, p.tau as u64);
+}
+
+fn encode_rng_state(st: &RngState, w: &mut BitWriter) {
+    for &word in &st.s {
+        put_u64(w, word);
+    }
+    match st.spare_normal {
+        None => w.push_bits(0, 8),
+        Some(x) => {
+            w.push_bits(1, 8);
+            put_f64(w, x);
+        }
+    }
+}
+
+fn encode_payload(p: &EncodedPayload, w: &mut BitWriter) {
+    match p.spec {
+        PayloadSpec::Dense { n } => {
+            w.push_bits(0, 8);
+            put_u64(w, n as u64);
+        }
+        PayloadSpec::TopK { n, kept } => {
+            w.push_bits(1, 8);
+            put_u64(w, n as u64);
+            put_u64(w, kept as u64);
+        }
+        PayloadSpec::CaesarSplit { n } => {
+            w.push_bits(2, 8);
+            put_u64(w, n as u64);
+        }
+        PayloadSpec::Quant { n, bits, levels } => {
+            w.push_bits(3, 8);
+            put_u64(w, n as u64);
+            w.push_bits(bits as u64, 32);
+            w.push_bits(levels as u64, 32);
+        }
+    }
+    put_u64(w, p.bits as u64);
+    put_u64(w, p.bytes.len() as u64);
+    w.push_bytes(&p.bytes);
+}
+
+fn put_u64(w: &mut BitWriter, v: u64) {
+    w.push_bits(v, 64);
+}
+
+fn put_f64(w: &mut BitWriter, v: f64) {
+    w.push_bits(v.to_bits(), 64);
+}
+
+// ---------------------------------------------------------------------
+// decoding
+// ---------------------------------------------------------------------
+
+/// Decode one frame from the front of `buf`. On success returns the
+/// message and the total bytes consumed (header + body). A
+/// [`FrameError::Truncated`] means the caller should read more bytes and
+/// retry; every other error is a protocol violation.
+pub fn decode_frame(buf: &[u8]) -> Result<(WireMsg, usize), FrameError> {
+    if buf.len() < HEADER_LEN {
+        return Err(FrameError::Truncated { need: HEADER_LEN - buf.len(), have: buf.len() });
+    }
+    if buf[0..4] != MAGIC {
+        return Err(FrameError::BadMagic([buf[0], buf[1], buf[2], buf[3]]));
+    }
+    let version = u16::from_le_bytes([buf[4], buf[5]]);
+    if version != VERSION {
+        return Err(FrameError::Version { got: version, want: VERSION });
+    }
+    let tag = buf[6];
+    if buf[7] != 0 {
+        return Err(FrameError::Malformed("nonzero flags"));
+    }
+    let body_len = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
+    if body_len > MAX_BODY {
+        return Err(FrameError::Oversized { len: body_len, max: MAX_BODY });
+    }
+    let total = HEADER_LEN + body_len;
+    if buf.len() < total {
+        return Err(FrameError::Truncated { need: total - buf.len(), have: buf.len() });
+    }
+    let mut r = BodyReader { buf: &buf[HEADER_LEN..total], pos: 0 };
+    let msg = decode_body(tag, &mut r)?;
+    if r.pos != r.buf.len() {
+        return Err(FrameError::TrailingBytes { extra: r.buf.len() - r.pos });
+    }
+    Ok((msg, total))
+}
+
+/// Exact size of the frame starting at `buf`, if the header is complete —
+/// lets a stream reader size its buffer before the body arrives.
+pub fn frame_len(buf: &[u8]) -> Result<usize, FrameError> {
+    if buf.len() < HEADER_LEN {
+        return Err(FrameError::Truncated { need: HEADER_LEN - buf.len(), have: buf.len() });
+    }
+    let body_len = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
+    if body_len > MAX_BODY {
+        return Err(FrameError::Oversized { len: body_len, max: MAX_BODY });
+    }
+    Ok(HEADER_LEN + body_len)
+}
+
+fn decode_body(tag: u8, r: &mut BodyReader) -> Result<WireMsg, FrameError> {
+    match tag {
+        1 => Ok(WireMsg::Join { device: r.usize64()? }),
+        2 => Ok(WireMsg::JoinAck { device: r.usize64()?, n_devices: r.usize64()? }),
+        3 => Ok(WireMsg::Heartbeat { device: r.usize64()?, sim_t_s: r.finite_f64()? }),
+        4 => Ok(WireMsg::StartRound(Box::new(decode_start(r)?))),
+        5 => Ok(WireMsg::EndRound(Box::new(decode_update(r)?))),
+        6 => Ok(WireMsg::Dropout {
+            device: r.usize64()?,
+            after_s: r.finite_f64()?,
+            down_wire_bits: r.usize64()?,
+        }),
+        7 => Ok(WireMsg::Finish),
+        8 => Ok(WireMsg::Reject { device: r.usize64()?, code: r.u16()? }),
+        other => Err(FrameError::UnknownTag(other)),
+    }
+}
+
+fn decode_start(r: &mut BodyReader) -> Result<NetworkedStart, FrameError> {
+    let t = r.usize64()?;
+    if t == 0 {
+        return Err(FrameError::Malformed("round numbers are 1-based"));
+    }
+    let plan = decode_plan(r)?;
+    let beta_d = r.finite_f64()?;
+    let beta_u = r.finite_f64()?;
+    let mu = r.finite_f64()?;
+    if beta_d <= 0.0 || beta_u <= 0.0 || mu < 0.0 {
+        return Err(FrameError::Malformed("non-positive link bandwidth"));
+    }
+    let lr = r.f32()?;
+    let rng = decode_rng_state(r)?;
+    let stream_base = r.u64()?;
+    let dropout_rate = r.finite_f64()?;
+    if !(0.0..=1.0).contains(&dropout_rate) {
+        return Err(FrameError::Malformed("dropout rate outside [0, 1]"));
+    }
+    let heartbeat_s = r.finite_f64()?;
+    if heartbeat_s < 0.0 {
+        return Err(FrameError::Malformed("negative heartbeat interval"));
+    }
+    let sim_now_s = r.finite_f64()?;
+    let download = Arc::new(decode_payload(r)?);
+    Ok(NetworkedStart {
+        item: StartRound { t, plan, beta_d, beta_u, mu },
+        lr,
+        rng,
+        stream_base,
+        dropout_rate,
+        heartbeat_s,
+        sim_now_s,
+        download,
+    })
+}
+
+fn decode_update(r: &mut BodyReader) -> Result<RoundUpdate, FrameError> {
+    let device = r.usize64()?;
+    let n = r.usize64()?;
+    // length-check before allocating: the params must actually be present
+    r.need(n.checked_mul(4).ok_or(FrameError::Malformed("w_final length overflow"))?)?;
+    let mut w_final = Vec::with_capacity(n);
+    for _ in 0..n {
+        w_final.push(r.f32()?);
+    }
+    let upload = decode_payload(r)?;
+    if upload.spec.n() != n {
+        return Err(FrameError::Malformed("upload payload disagrees with w_final length"));
+    }
+    let grad_norm = r.finite_f64()?;
+    let loss = r.finite_f64()?;
+    let down_wire_bits = r.usize64()?;
+    let cost = RoundCost {
+        download_s: r.finite_f64()?,
+        compute_s: r.finite_f64()?,
+        upload_s: r.finite_f64()?,
+    };
+    if cost.download_s < 0.0 || cost.compute_s < 0.0 || cost.upload_s < 0.0 {
+        return Err(FrameError::Malformed("negative round cost"));
+    }
+    Ok(RoundUpdate { device, w_final, upload, grad_norm, loss, down_wire_bits, cost })
+}
+
+fn decode_plan(r: &mut BodyReader) -> Result<DevicePlan, FrameError> {
+    let device = r.usize64()?;
+    let download = match r.u8()? {
+        0 => DownloadCodec::Full,
+        1 => DownloadCodec::CaesarSplit { ratio: r.unit_f64()? },
+        2 => DownloadCodec::TopK { ratio: r.unit_f64()? },
+        3 => DownloadCodec::Quant { bits: r.quant_bits()? },
+        _ => return Err(FrameError::Malformed("unknown download codec")),
+    };
+    let upload = match r.u8()? {
+        0 => UploadCodec::Full,
+        1 => UploadCodec::TopK { ratio: r.unit_f64()? },
+        2 => UploadCodec::Quant { bits: r.quant_bits()? },
+        _ => return Err(FrameError::Malformed("unknown upload codec")),
+    };
+    let batch = r.usize64()?;
+    let tau = r.usize64()?;
+    if batch == 0 || tau == 0 {
+        return Err(FrameError::Malformed("zero batch or tau"));
+    }
+    Ok(DevicePlan { device, download, upload, batch, tau })
+}
+
+fn decode_rng_state(r: &mut BodyReader) -> Result<RngState, FrameError> {
+    let s = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+    let spare_normal = match r.u8()? {
+        0 => None,
+        1 => Some(r.finite_f64()?),
+        _ => return Err(FrameError::Malformed("rng spare-normal flag")),
+    };
+    Ok(RngState { s, spare_normal })
+}
+
+/// Decode + deep-validate an embedded payload. Everything downstream
+/// (shard folds, lazy `PayloadView` cursors, recovery) indexes these
+/// bytes unchecked, so this is where wire-originated payloads earn
+/// trust: the bit length must match the codec's exact closed form, the
+/// structural sections (Top-K positions, split bitmaps, quant buckets)
+/// must be internally consistent, and the padding bits of the final
+/// byte must be zero (canonical encoding — also what byte-level parity
+/// with the loopback path requires).
+fn decode_payload(r: &mut BodyReader) -> Result<EncodedPayload, FrameError> {
+    let spec = match r.u8()? {
+        0 => PayloadSpec::Dense { n: r.usize64()? },
+        1 => PayloadSpec::TopK { n: r.usize64()?, kept: r.usize64()? },
+        2 => PayloadSpec::CaesarSplit { n: r.usize64()? },
+        3 => {
+            let n = r.usize64()?;
+            let bits = r.quant_bits()?;
+            let levels = r.u32()?;
+            if (levels as u64) >= (1u64 << bits) {
+                return Err(FrameError::Malformed("quant levels exceed the bit width"));
+            }
+            PayloadSpec::Quant { n, bits, levels }
+        }
+        _ => return Err(FrameError::Malformed("unknown payload spec")),
+    };
+    let bits = r.usize64()?;
+    let n_bytes = r.usize64()?;
+    if n_bytes != bits.div_ceil(8) {
+        return Err(FrameError::Malformed("payload byte count disagrees with bit length"));
+    }
+    let bytes = r.bytes(n_bytes)?.to_vec();
+    // canonical padding: a BitWriter leaves unused high bits of the tail
+    // byte zero, and every honest encoder goes through one
+    if bits % 8 != 0 {
+        let tail = bytes[n_bytes - 1];
+        if tail >> (bits % 8) != 0 {
+            return Err(FrameError::Malformed("nonzero payload padding bits"));
+        }
+    }
+    validate_payload(&spec, bits, &bytes)?;
+    Ok(EncodedPayload { spec, bits, bytes })
+}
+
+/// Structural validation of payload bytes against their spec (see
+/// [`decode_payload`]). Reads at most `bits` bits, which the caller has
+/// verified fit in `bytes`.
+fn validate_payload(spec: &PayloadSpec, bits: usize, bytes: &[u8]) -> Result<(), FrameError> {
+    match *spec {
+        PayloadSpec::Dense { n } => {
+            if bits != n.checked_mul(32).ok_or(FrameError::Malformed("payload size overflow"))? {
+                return Err(FrameError::Malformed("dense payload bit length"));
+            }
+        }
+        PayloadSpec::TopK { n, kept } => {
+            if kept > n {
+                return Err(FrameError::Malformed("top-k kept exceeds n"));
+            }
+            let expect = kept
+                .checked_mul(32)
+                .and_then(|v| v.checked_add(position_bits(n, kept)))
+                .ok_or(FrameError::Malformed("payload size overflow"))?;
+            if bits != expect {
+                return Err(FrameError::Malformed("top-k payload bit length"));
+            }
+            let mut rd = BitReader::new(bytes);
+            if index_list_is_cheaper(n, kept) {
+                let idx_bits = bits_for(n);
+                let mut prev: Option<u64> = None;
+                for _ in 0..kept {
+                    let i = rd.read_bits(idx_bits);
+                    if i as usize >= n || prev.is_some_and(|p| p >= i) {
+                        return Err(FrameError::Malformed("top-k indices not ascending"));
+                    }
+                    prev = Some(i);
+                }
+            } else {
+                let mut ones = 0usize;
+                for _ in 0..n {
+                    ones += rd.read_bit() as usize;
+                }
+                if ones != kept {
+                    return Err(FrameError::Malformed("top-k bitmap popcount"));
+                }
+            }
+        }
+        PayloadSpec::CaesarSplit { n } => {
+            // layout: n-bit mask, then per-position sign bit (quantized)
+            // or f32 (kept), then 2 scalars — so for popcount q,
+            // bits = n + q + (n−q)·32 + 64. Solve for q and verify.
+            let full = n
+                .checked_mul(33)
+                .and_then(|v| v.checked_add(64))
+                .ok_or(FrameError::Malformed("payload size overflow"))?;
+            if bits > full || bits < full.saturating_sub(n * 31) {
+                return Err(FrameError::Malformed("split payload bit length"));
+            }
+            if (full - bits) % 31 != 0 {
+                return Err(FrameError::Malformed("split payload bit length"));
+            }
+            let q = (full - bits) / 31;
+            let mut rd = BitReader::new(bytes);
+            let mut ones = 0usize;
+            for _ in 0..n {
+                ones += rd.read_bit() as usize;
+            }
+            if ones != q {
+                return Err(FrameError::Malformed("split bitmap popcount"));
+            }
+        }
+        PayloadSpec::Quant { n, bits: qbits, levels } => {
+            let expect = n
+                .checked_mul(1 + qbits as usize)
+                .and_then(|v| v.checked_add(32))
+                .ok_or(FrameError::Malformed("payload size overflow"))?;
+            if bits != expect {
+                return Err(FrameError::Malformed("quant payload bit length"));
+            }
+            let mut rd = BitReader::new(bytes);
+            let _norm = rd.read_bits(32);
+            for _ in 0..n {
+                let _sign = rd.read_bit();
+                if rd.read_bits(qbits) > levels as u64 {
+                    return Err(FrameError::Malformed("quant bucket exceeds levels"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Bounds-checked byte cursor over an untrusted frame body. The bit-level
+/// [`BitReader`] indexes unchecked (it is a hot-path tool for bytes that
+/// already earned trust); this reader is its total counterpart for the
+/// trust boundary.
+struct BodyReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BodyReader<'a> {
+    fn need(&self, n: usize) -> Result<(), FrameError> {
+        let have = self.buf.len() - self.pos;
+        if n > have {
+            return Err(FrameError::Truncated { need: n - have, have });
+        }
+        Ok(())
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        self.need(n)?;
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, FrameError> {
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Result<f32, FrameError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// A u64 that must fit this platform's `usize`.
+    fn usize64(&mut self) -> Result<usize, FrameError> {
+        usize::try_from(self.u64()?).map_err(|_| FrameError::Malformed("length overflows usize"))
+    }
+
+    /// An f64 that must be finite (NaN/∞ would poison simulated time,
+    /// costs and rates downstream).
+    fn finite_f64(&mut self) -> Result<f64, FrameError> {
+        let v = f64::from_bits(self.u64()?);
+        if !v.is_finite() {
+            return Err(FrameError::Malformed("non-finite f64"));
+        }
+        Ok(v)
+    }
+
+    /// A finite f64 in `[0, 1]` (codec ratios).
+    fn unit_f64(&mut self) -> Result<f64, FrameError> {
+        let v = self.finite_f64()?;
+        if !(0.0..=1.0).contains(&v) {
+            return Err(FrameError::Malformed("ratio outside [0, 1]"));
+        }
+        Ok(v)
+    }
+
+    /// A quantizer bit width in `1..=32`.
+    fn quant_bits(&mut self) -> Result<u32, FrameError> {
+        let b = self.u32()?;
+        if !(1..=32).contains(&b) {
+            return Err(FrameError::Malformed("quant bits outside 1..=32"));
+        }
+        Ok(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Config};
+    use crate::util::rng::Rng;
+    use crate::wire::Payload;
+
+    fn sample_update(rng: &mut Rng, n: usize) -> RoundUpdate {
+        let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let upload = match rng.below(3) {
+            0 => Payload::Dense(g.clone()).encode(),
+            1 => crate::compress::topk::topk_encode(&g, 0.5).0.encode(),
+            _ => crate::compress::quant::quant_payload(&g, 4, rng).0.encode(),
+        };
+        RoundUpdate {
+            device: rng.below(64),
+            w_final: (0..n).map(|_| rng.normal() as f32).collect(),
+            upload,
+            grad_norm: rng.f64(),
+            loss: rng.f64(),
+            down_wire_bits: rng.below(1 << 20),
+            cost: RoundCost {
+                download_s: rng.f64(),
+                compute_s: rng.f64(),
+                upload_s: rng.f64(),
+            },
+        }
+    }
+
+    fn sample_start(rng: &mut Rng, n: usize) -> NetworkedStart {
+        let w: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let download = Arc::new(Payload::Dense(w).encode());
+        NetworkedStart {
+            item: StartRound {
+                t: 1 + rng.below(100),
+                plan: DevicePlan {
+                    device: rng.below(64),
+                    download: DownloadCodec::CaesarSplit { ratio: rng.f64() },
+                    upload: UploadCodec::TopK { ratio: rng.f64() },
+                    batch: 1 + rng.below(64),
+                    tau: 1 + rng.below(16),
+                },
+                beta_d: 1.0 + rng.f64() * 1e6,
+                beta_u: 1.0 + rng.f64() * 1e6,
+                mu: rng.f64(),
+            },
+            lr: rng.f64() as f32,
+            rng: Rng::new(rng.next_u64()).state(),
+            stream_base: rng.next_u64(),
+            dropout_rate: rng.f64() * 0.5,
+            heartbeat_s: rng.f64() * 30.0,
+            sim_now_s: rng.f64() * 1e4,
+            download,
+        }
+    }
+
+    fn sample_msg(rng: &mut Rng, size: usize) -> WireMsg {
+        let n = 1 + rng.below(size.max(1));
+        match rng.below(8) {
+            0 => WireMsg::Join { device: rng.below(1000) },
+            1 => WireMsg::JoinAck { device: rng.below(1000), n_devices: 1 + rng.below(1000) },
+            2 => WireMsg::Heartbeat { device: rng.below(1000), sim_t_s: rng.f64() * 1e5 },
+            3 => WireMsg::StartRound(Box::new(sample_start(rng, n))),
+            4 => WireMsg::EndRound(Box::new(sample_update(rng, n))),
+            5 => WireMsg::Dropout {
+                device: rng.below(1000),
+                after_s: rng.f64() * 100.0,
+                down_wire_bits: rng.below(1 << 24),
+            },
+            6 => WireMsg::Finish,
+            _ => WireMsg::Reject { device: rng.below(1000), code: rng.below(4) as u16 },
+        }
+    }
+
+    /// Structural equality for round-trip checks (floats by bit pattern —
+    /// the transport must be bit-transparent, not approximately equal).
+    fn assert_same(a: &WireMsg, b: &WireMsg) {
+        match (a, b) {
+            (WireMsg::Join { device: x }, WireMsg::Join { device: y }) => assert_eq!(x, y),
+            (
+                WireMsg::JoinAck { device: x, n_devices: nx },
+                WireMsg::JoinAck { device: y, n_devices: ny },
+            ) => assert_eq!((x, nx), (y, ny)),
+            (
+                WireMsg::Heartbeat { device: x, sim_t_s: tx },
+                WireMsg::Heartbeat { device: y, sim_t_s: ty },
+            ) => {
+                assert_eq!(x, y);
+                assert_eq!(tx.to_bits(), ty.to_bits());
+            }
+            (WireMsg::StartRound(x), WireMsg::StartRound(y)) => {
+                assert_eq!(format!("{x:?}"), format!("{y:?}"));
+                assert_eq!(x.download.bytes, y.download.bytes);
+                assert_eq!(x.rng, y.rng);
+            }
+            (WireMsg::EndRound(x), WireMsg::EndRound(y)) => {
+                assert_eq!(x.device, y.device);
+                let xb: Vec<u32> = x.w_final.iter().map(|v| v.to_bits()).collect();
+                let yb: Vec<u32> = y.w_final.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(xb, yb);
+                assert_eq!(x.upload.bytes, y.upload.bytes);
+                assert_eq!(x.upload.bits, y.upload.bits);
+                assert_eq!(x.grad_norm.to_bits(), y.grad_norm.to_bits());
+                assert_eq!(x.down_wire_bits, y.down_wire_bits);
+                assert_eq!(x.cost.total().to_bits(), y.cost.total().to_bits());
+            }
+            (
+                WireMsg::Dropout { device: x, after_s: ax, down_wire_bits: bx },
+                WireMsg::Dropout { device: y, after_s: ay, down_wire_bits: by },
+            ) => {
+                assert_eq!((x, bx), (y, by));
+                assert_eq!(ax.to_bits(), ay.to_bits());
+            }
+            (WireMsg::Finish, WireMsg::Finish) => {}
+            (
+                WireMsg::Reject { device: x, code: cx },
+                WireMsg::Reject { device: y, code: cy },
+            ) => assert_eq!((x, cx), (y, cy)),
+            (a, b) => panic!("variant mismatch: {a:?} vs {b:?}"),
+        }
+    }
+
+    #[test]
+    fn every_variant_round_trips() {
+        forall(
+            Config { cases: 96, seed: 0xF4A3E },
+            |rng, size| sample_msg(rng, size),
+            |msg| {
+                let frame = encode_frame(msg);
+                let (back, used) = decode_frame(&frame).map_err(|e| format!("{e}"))?;
+                if used != frame.len() {
+                    return Err(format!("consumed {used} of {}", frame.len()));
+                }
+                assert_same(msg, &back);
+                // a second frame appended: the first decode stops exactly
+                // at the boundary
+                let mut two = frame.clone();
+                two.extend_from_slice(&encode_frame(&WireMsg::Finish));
+                let (_, used2) = decode_frame(&two).map_err(|e| format!("{e}"))?;
+                if used2 != frame.len() {
+                    return Err("decode overran the frame boundary".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn every_truncation_errs_and_never_panics() {
+        forall(
+            Config { cases: 48, seed: 0x7A11 },
+            |rng, size| {
+                let frame = encode_frame(&sample_msg(rng, size));
+                let cut = rng.below(frame.len());
+                (frame, cut)
+            },
+            |(frame, cut)| match decode_frame(&frame[..*cut]) {
+                Ok(_) => Err(format!("decoded from {cut} of {} bytes", frame.len())),
+                Err(e) if e.is_incomplete() => Ok(()),
+                // a truncation can also surface as a structural error
+                // (e.g. the cut lands inside a length field); it must
+                // still be an Err, never a panic
+                Err(_) => Ok(()),
+            },
+        );
+    }
+
+    #[test]
+    fn every_single_byte_mutation_errs_or_decodes_without_panic() {
+        forall(
+            Config { cases: 48, seed: 0xBADF00D },
+            |rng, size| {
+                let frame = encode_frame(&sample_msg(rng, size));
+                let at = rng.below(frame.len());
+                let flip = 1u8 << rng.below(8);
+                (frame, at, flip)
+            },
+            |(frame, at, flip)| {
+                let mut bad = frame.clone();
+                bad[*at] ^= flip;
+                // decoding must be total: Ok (the flip hit a benign float
+                // payload byte) or a typed Err — the panic is the bug
+                let _ = decode_frame(&bad);
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn version_mismatch_is_a_typed_error() {
+        let mut frame = encode_frame(&WireMsg::Finish);
+        frame[4] = 2; // future version, LE low byte
+        match decode_frame(&frame) {
+            Err(FrameError::Version { got: 2, want: VERSION }) => {}
+            other => panic!("expected version error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_oversize_and_trailing_are_typed_errors() {
+        let good = encode_frame(&WireMsg::Join { device: 3 });
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(decode_frame(&bad), Err(FrameError::BadMagic(_))));
+
+        let mut oversized = good.clone();
+        oversized[8..12].copy_from_slice(&(MAX_BODY as u32 + 1).to_le_bytes());
+        assert!(matches!(decode_frame(&oversized), Err(FrameError::Oversized { .. })));
+
+        // grow the declared body without growing the content the decoder
+        // consumes: trailing bytes must be flagged
+        let mut padded = good.clone();
+        let body_len = u32::from_le_bytes([good[8], good[9], good[10], good[11]]);
+        padded[8..12].copy_from_slice(&(body_len + 3).to_le_bytes());
+        padded.extend_from_slice(&[0, 0, 0]);
+        assert!(matches!(decode_frame(&padded), Err(FrameError::TrailingBytes { extra: 3 })));
+
+        assert!(matches!(decode_frame(&[]), Err(FrameError::Truncated { .. })));
+    }
+
+    #[test]
+    fn payload_validation_rejects_structural_lies() {
+        let g = [1.0f32, -2.0, 3.0, -4.0, 5.0, -6.0, 7.0, -8.0];
+        let honest = crate::compress::topk::topk_encode(&g, 0.5).0.encode();
+        let mut upd = RoundUpdate {
+            device: 0,
+            w_final: vec![0.0; honest.spec.n()],
+            upload: honest,
+            grad_norm: 1.0,
+            loss: 1.0,
+            down_wire_bits: 10,
+            cost: RoundCost { download_s: 1.0, compute_s: 1.0, upload_s: 1.0 },
+        };
+        // lie about the bit length: byte/bit disagreement is caught
+        upd.upload.bits += 8;
+        upd.upload.bytes.push(0);
+        let frame = encode_frame(&WireMsg::EndRound(Box::new(upd)));
+        match decode_frame(&frame) {
+            Err(FrameError::Malformed(_)) => {}
+            other => panic!("expected malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn quant_and_split_payloads_round_trip_through_frames() {
+        let mut rng = Rng::new(42);
+        let w: Vec<f32> = (0..257).map(|_| rng.normal() as f32).collect();
+        for payload in [
+            crate::compress::quant::quant_payload(&w, 3, &mut rng).0,
+            crate::schemes::DownloadCodec::CaesarSplit { ratio: 0.7 }
+                .encode_payload(&w, &mut rng),
+        ] {
+            let enc = payload.encode();
+            let start = NetworkedStart {
+                item: StartRound {
+                    t: 1,
+                    plan: DevicePlan {
+                        device: 0,
+                        download: DownloadCodec::Full,
+                        upload: UploadCodec::Full,
+                        batch: 8,
+                        tau: 2,
+                    },
+                    beta_d: 1e6,
+                    beta_u: 1e6,
+                    mu: 1e-4,
+                },
+                lr: 0.1,
+                rng: Rng::new(7).state(),
+                stream_base: 99,
+                dropout_rate: 0.0,
+                heartbeat_s: 10.0,
+                sim_now_s: 0.0,
+                download: Arc::new(enc.clone()),
+            };
+            let frame = encode_frame(&WireMsg::StartRound(Box::new(start)));
+            let (msg, _) = decode_frame(&frame).unwrap();
+            match msg {
+                WireMsg::StartRound(s) => {
+                    assert_eq!(s.download.bytes, enc.bytes);
+                    assert_eq!(s.download.bits, enc.bits);
+                    assert_eq!(s.download.spec, enc.spec);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+}

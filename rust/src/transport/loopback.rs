@@ -1,0 +1,162 @@
+//! In-process transport: mpsc channels carrying **encoded frames**.
+//!
+//! The default transport, and the parity baseline. Each direction of a
+//! connection is a channel of `Vec<u8>` frame buffers: `send` runs the
+//! real [`frame::encode_frame`] and `recv_timeout` the real
+//! [`frame::decode_frame`], so every byte-level invariant of the codec
+//! is exercised on every message — the only thing Loopback skips is the
+//! socket. A Tcp run that diverges from a Loopback run therefore
+//! isolates the fault to stream handling, not message encoding.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use super::frame::{self, WireMsg};
+use super::{Conn, Transport, TransportError};
+
+/// Coordinator-side listener: a queue of freshly dialed connections.
+pub struct LoopbackHub {
+    accept_rx: Receiver<LoopbackConn>,
+    /// Kept so [`LoopbackHub::dialer`] can mint connectors after
+    /// construction; also keeps the accept channel open for the hub's
+    /// lifetime (accept reports timeout, not closure, while devices may
+    /// still dial).
+    accept_tx: Sender<LoopbackConn>,
+}
+
+impl LoopbackHub {
+    pub fn new() -> LoopbackHub {
+        let (accept_tx, accept_rx) = mpsc::channel();
+        LoopbackHub { accept_rx, accept_tx }
+    }
+
+    /// A cloneable, `Send` handle devices use to dial this hub.
+    pub fn dialer(&self) -> LoopbackDialer {
+        LoopbackDialer { accept_tx: self.accept_tx.clone() }
+    }
+}
+
+impl Default for LoopbackHub {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transport for LoopbackHub {
+    type Conn = LoopbackConn;
+
+    fn accept_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> Result<Option<LoopbackConn>, TransportError> {
+        match self.accept_rx.recv_timeout(timeout) {
+            Ok(conn) => Ok(Some(conn)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            // unreachable while we hold accept_tx, but total anyway
+            Err(RecvTimeoutError::Disconnected) => Err(TransportError::Closed),
+        }
+    }
+
+    fn local_addr(&self) -> String {
+        "loopback".into()
+    }
+}
+
+/// Device-side connector to a [`LoopbackHub`].
+#[derive(Clone)]
+pub struct LoopbackDialer {
+    accept_tx: Sender<LoopbackConn>,
+}
+
+impl LoopbackDialer {
+    /// Open a connection pair and hand the server half to the hub's
+    /// accept queue.
+    pub fn connect(&self) -> Result<LoopbackConn, TransportError> {
+        let (c2s_tx, c2s_rx) = mpsc::channel::<Vec<u8>>();
+        let (s2c_tx, s2c_rx) = mpsc::channel::<Vec<u8>>();
+        let server_half =
+            LoopbackConn { tx: s2c_tx, rx: c2s_rx, peer: "loopback-device".into() };
+        let client_half =
+            LoopbackConn { tx: c2s_tx, rx: s2c_rx, peer: "loopback-coordinator".into() };
+        self.accept_tx.send(server_half).map_err(|_| TransportError::Closed)?;
+        Ok(client_half)
+    }
+}
+
+/// One half of an in-process connection.
+pub struct LoopbackConn {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    peer: String,
+}
+
+impl Conn for LoopbackConn {
+    fn send(&mut self, msg: &WireMsg) -> Result<(), TransportError> {
+        self.tx.send(frame::encode_frame(msg)).map_err(|_| TransportError::Closed)
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<WireMsg>, TransportError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(buf) => {
+                let (msg, used) = frame::decode_frame(&buf)?;
+                if used != buf.len() {
+                    return Err(TransportError::Frame(frame::FrameError::TrailingBytes {
+                        extra: buf.len() - used,
+                    }));
+                }
+                Ok(Some(msg))
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(TransportError::Closed),
+        }
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dial_accept_and_exchange_frames() {
+        let mut hub = LoopbackHub::new();
+        let dialer = hub.dialer();
+        let mut client = dialer.connect().unwrap();
+        let mut server = hub
+            .accept_timeout(Duration::from_millis(100))
+            .unwrap()
+            .expect("dialed connection must be acceptable");
+
+        client.send(&WireMsg::Join { device: 7 }).unwrap();
+        match server.recv_timeout(Duration::from_millis(100)).unwrap() {
+            Some(WireMsg::Join { device: 7 }) => {}
+            other => panic!("{other:?}"),
+        }
+        server.send(&WireMsg::JoinAck { device: 7, n_devices: 8 }).unwrap();
+        match client.recv_timeout(Duration::from_millis(100)).unwrap() {
+            Some(WireMsg::JoinAck { device: 7, n_devices: 8 }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn timeout_and_hangup_are_distinguished() {
+        let mut hub = LoopbackHub::new();
+        assert!(hub.accept_timeout(Duration::from_millis(5)).unwrap().is_none());
+
+        let dialer = hub.dialer();
+        let client = dialer.connect().unwrap();
+        let mut server = hub.accept_timeout(Duration::from_millis(100)).unwrap().unwrap();
+        // no traffic yet: timeout, not error
+        assert!(server.recv_timeout(Duration::from_millis(5)).unwrap().is_none());
+        // peer drops: Closed
+        drop(client);
+        match server.recv_timeout(Duration::from_millis(5)) {
+            Err(TransportError::Closed) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+}

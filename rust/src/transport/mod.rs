@@ -1,0 +1,141 @@
+//! Networked coordinator: the engine behind a real transport.
+//!
+//! The simulator's coordinator protocol (`engine::message`) was always
+//! message-shaped; this subsystem moves those messages across an actual
+//! byte boundary. It is std-only — no async runtime, no serde — and
+//! splits into:
+//!
+//! * [`frame`] — the binary frame codec (magic + version + tag +
+//!   length-prefixed body), total on untrusted input;
+//! * the [`Transport`]/[`Conn`] traits with two implementations:
+//!   [`loopback::LoopbackHub`] (in-process mpsc channels of *encoded
+//!   frames* — the codec is genuinely exercised without a socket) and
+//!   [`tcp::TcpTransport`] (framed `std::net::TcpStream`, timeouts,
+//!   connection-per-device accept loop, reconnect-with-rejoin);
+//! * [`server::CoordinatorService`] — drives `coordinator::Server` +
+//!   `engine::Engine` from decoded frames; [`client::DeviceClient`] —
+//!   the worker-side round (recover download → train → encode upload)
+//!   run remotely.
+//!
+//! The headline invariant, pinned by `tests/transport_parity.rs`: a
+//! fixed-seed run over Tcp on localhost produces **bit-identical** final
+//! models and traffic ledgers to the same run over Loopback and to the
+//! in-process `Server::run` path. Transport moves bytes; it never
+//! touches math.
+
+pub mod client;
+pub mod frame;
+pub mod loopback;
+pub mod server;
+pub mod tcp;
+
+pub use client::{ClientStats, DeviceClient, SessionEnd};
+pub use frame::{decode_frame, encode_frame, FrameError, WireMsg};
+pub use loopback::{LoopbackConn, LoopbackDialer, LoopbackHub};
+pub use server::CoordinatorService;
+pub use tcp::{TcpConn, TcpTransport};
+
+use std::time::Duration;
+
+/// Transport-layer failure.
+#[derive(Debug)]
+pub enum TransportError {
+    /// Socket-level I/O failure.
+    Io(std::io::Error),
+    /// The peer sent bytes that are not a valid frame.
+    Frame(FrameError),
+    /// The peer hung up (clean close or channel disconnect).
+    Closed,
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Io(e) => write!(f, "transport i/o: {e}"),
+            TransportError::Frame(e) => write!(f, "transport framing: {e}"),
+            TransportError::Closed => write!(f, "peer closed the connection"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TransportError::Io(e) => Some(e),
+            TransportError::Frame(e) => Some(e),
+            TransportError::Closed => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> Self {
+        TransportError::Io(e)
+    }
+}
+
+impl From<FrameError> for TransportError {
+    fn from(e: FrameError) -> Self {
+        TransportError::Frame(e)
+    }
+}
+
+/// One framed, bidirectional connection to a peer.
+pub trait Conn: Send {
+    /// Serialize and send one message (blocking, with the transport's
+    /// write timeout).
+    fn send(&mut self, msg: &WireMsg) -> Result<(), TransportError>;
+
+    /// Receive the next complete frame, waiting at most `timeout`.
+    /// `Ok(None)` means the timeout elapsed with no complete frame (any
+    /// partial bytes stay buffered for the next call).
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<WireMsg>, TransportError>;
+
+    /// Human-readable peer address (diagnostics).
+    fn peer(&self) -> String;
+}
+
+/// A listener producing [`Conn`]s — how the coordinator accepts devices.
+pub trait Transport {
+    type Conn: Conn;
+
+    /// Accept one pending connection, waiting at most `timeout`;
+    /// `Ok(None)` on timeout.
+    fn accept_timeout(&mut self, timeout: Duration)
+        -> Result<Option<Self::Conn>, TransportError>;
+
+    /// The address devices should dial (diagnostics / test plumbing).
+    fn local_addr(&self) -> String;
+}
+
+/// Order-sensitive FNV-1a digest over a model's exact f32 bit patterns —
+/// the fingerprint the parity tests and the two-process example compare
+/// across transports. Bit-identical models ⇔ equal digests.
+pub fn model_digest(w: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &x in w {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_digest_separates_bit_patterns() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let mut b = a.clone();
+        assert_eq!(model_digest(&a), model_digest(&b));
+        b[2] = 3.0000002; // one ulp-ish nudge
+        assert_ne!(model_digest(&a), model_digest(&b));
+        // 0.0 and -0.0 differ in bits, so they must differ in digest
+        assert_ne!(model_digest(&[0.0]), model_digest(&[-0.0]));
+        // order matters
+        assert_ne!(model_digest(&[1.0, 2.0]), model_digest(&[2.0, 1.0]));
+    }
+}

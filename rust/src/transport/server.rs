@@ -1,0 +1,290 @@
+//! Coordinator service: `coordinator::Server` + `engine::Engine` driven
+//! by decoded transport frames.
+//!
+//! Generic over [`Transport`], so the same service runs the Loopback
+//! parity baseline and real Tcp sessions. Per round it asks the server
+//! for a networked kickoff (`begin_networked_round` — plans, encoded
+//! downloads and per-device RNG resume states), sends one StartRound
+//! frame per participant, then polls the per-device connections feeding
+//! every arriving frame into the engine's external round until all
+//! participants resolve. The canonical aggregation in
+//! `Engine::finish_external` and the shared `Server::apply_round` make
+//! the result bit-identical to the in-process `Server::run` path — the
+//! invariant `tests/transport_parity.rs` pins across Loopback and Tcp.
+//!
+//! Fault handling: a connection that drops mid-round keeps its device
+//! pending — the device may reconnect and re-Join (the service re-sends
+//! its StartRound, *reconnect-with-rejoin*). Devices still pending at
+//! the wall-clock round deadline are converted to protocol `Dropout`s
+//! (their download traffic is already spent) so one dead device cannot
+//! wedge the run. Between rounds the registry's liveness sweep runs; a
+//! round participant re-Joins on its next kickoff, so eviction is
+//! self-healing for healthy devices.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{RoundOutcome, RoundRecord, RunResult, Server};
+use crate::engine::DeviceMsg;
+
+use super::frame::{reject, WireMsg};
+use super::{Conn, Transport};
+
+/// Per-connection receive poll during a round.
+const POLL: Duration = Duration::from_millis(2);
+/// Accept-queue poll during a round (rejoins) and device wait.
+const ACCEPT_SLICE: Duration = Duration::from_millis(2);
+/// How long a freshly accepted connection gets to identify itself with
+/// a Join frame before being dropped.
+const IDENTIFY_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// A networked FL coordinator session over one [`Transport`].
+pub struct CoordinatorService<T: Transport> {
+    server: Server,
+    transport: T,
+    /// Connection-per-device: the latest identified connection wins
+    /// (a re-Join from a reconnecting device replaces the dead one).
+    conns: BTreeMap<usize, T::Conn>,
+    /// Wall-clock budget per round before stragglers become Dropouts.
+    pub round_timeout: Duration,
+}
+
+impl<T: Transport> CoordinatorService<T> {
+    pub fn new(server: Server, transport: T) -> CoordinatorService<T> {
+        CoordinatorService {
+            server,
+            transport,
+            conns: BTreeMap::new(),
+            round_timeout: Duration::from_secs(120),
+        }
+    }
+
+    pub fn server(&self) -> &Server {
+        &self.server
+    }
+
+    /// Hand the server back (post-run inspection: model, traffic, stats).
+    pub fn into_server(self) -> Server {
+        self.server
+    }
+
+    /// The transport's listen address (resolves ephemeral Tcp ports).
+    pub fn local_addr(&self) -> String {
+        self.transport.local_addr()
+    }
+
+    /// Number of identified device connections.
+    pub fn connected(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Accept + identify connections until `expect` devices are
+    /// connected or `timeout` elapses (error). Call before [`run`]: the
+    /// first round kicks off immediately.
+    pub fn wait_for_devices(&mut self, expect: usize, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        while self.conns.len() < expect {
+            if Instant::now() >= deadline {
+                return Err(anyhow!(
+                    "{} of {expect} devices connected before the rendezvous timeout",
+                    self.conns.len()
+                ));
+            }
+            self.accept_and_identify()?;
+        }
+        Ok(())
+    }
+
+    /// Accept at most one pending connection and run the Join handshake.
+    /// Returns the identified device id, if any. Unknown device ids get
+    /// a Reject frame and are dropped; a known id replaces any previous
+    /// connection for that device (rejoin).
+    fn accept_and_identify(&mut self) -> Result<Option<usize>> {
+        let Some(mut conn) = self.transport.accept_timeout(ACCEPT_SLICE).map_err(|e| anyhow!("{e}"))?
+        else {
+            return Ok(None);
+        };
+        // the first frame on a connection must be Join
+        let deadline = Instant::now() + IDENTIFY_TIMEOUT;
+        loop {
+            match conn.recv_timeout(POLL) {
+                Ok(Some(WireMsg::Join { device })) => {
+                    let n = self.server.cfg.n_devices();
+                    if !self.server.engine().registry().contains(device) {
+                        let _ = conn.send(&WireMsg::Reject {
+                            device,
+                            code: reject::UNKNOWN_DEVICE,
+                        });
+                        return Ok(None);
+                    }
+                    conn.send(&WireMsg::JoinAck { device, n_devices: n })
+                        .map_err(|e| anyhow!("join ack to device {device}: {e}"))?;
+                    self.conns.insert(device, conn);
+                    return Ok(Some(device));
+                }
+                Ok(Some(_)) | Err(_) => return Ok(None), // not our protocol: drop
+                Ok(None) => {
+                    if Instant::now() >= deadline {
+                        return Ok(None); // never identified: drop
+                    }
+                }
+            }
+        }
+    }
+
+    /// Execute the full run: rounds 1..=cfg.rounds over the transport,
+    /// evaluation/records identical to `Server::run_cb`, then a Finish
+    /// broadcast so devices disconnect cleanly.
+    pub fn run_cb(&mut self, mut cb: impl FnMut(&RoundRecord)) -> Result<RunResult> {
+        let rounds = self.server.cfg.rounds;
+        let mut records = Vec::with_capacity(rounds);
+        let mut reached: Option<(usize, f64, f64)> = None;
+        for t in 1..=rounds {
+            let outcome = self.round_networked(t)?;
+            // liveness sweep between rounds: silent Idle/Training devices
+            // transition to Dropped (self-healing — a healthy participant
+            // re-Joins at its next kickoff)
+            self.server.engine_mut().sweep_expired(self.server.sim_time_s());
+            let rec = self.server.observe_round(t, &outcome, &mut reached)?;
+            cb(&rec);
+            records.push(rec);
+        }
+        for conn in self.conns.values_mut() {
+            let _ = conn.send(&WireMsg::Finish);
+        }
+        Ok(self.server.finish_run(records, reached))
+    }
+
+    /// [`run_cb`] without a progress observer.
+    pub fn run(&mut self) -> Result<RunResult> {
+        self.run_cb(|_| {})
+    }
+
+    /// One networked round: kickoff frames out, device frames in until
+    /// the external round drains, canonical aggregation, application.
+    fn round_networked(&mut self, t: usize) -> Result<RoundOutcome> {
+        let (mut round, starts) = self.server.begin_networked_round(t)?;
+        let mut down_bits: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut outbox: BTreeMap<usize, WireMsg> = BTreeMap::new();
+        for s in starts {
+            let d = s.item.plan.device;
+            down_bits.insert(d, s.download.bits);
+            outbox.insert(d, WireMsg::StartRound(Box::new(s)));
+        }
+        for (d, msg) in &outbox {
+            match self.conns.get_mut(d) {
+                Some(conn) => {
+                    if conn.send(msg).is_err() {
+                        // dead connection: drop it, the device may rejoin
+                        self.conns.remove(d);
+                    }
+                }
+                None => {} // never connected / currently gone: deadline handles it
+            }
+        }
+
+        let deadline = Instant::now() + self.round_timeout;
+        while !round.drained() {
+            // rejoins and late arrivals: a reconnecting pending device
+            // gets its kickoff frame again
+            if let Some(d) = self.accept_and_identify()? {
+                if round.pending().contains(&d) {
+                    if let (Some(msg), Some(conn)) = (outbox.get(&d), self.conns.get_mut(&d)) {
+                        let _ = conn.send(msg);
+                    }
+                }
+            }
+
+            for d in round.pending() {
+                let msg = match self.conns.get_mut(&d) {
+                    None => continue,
+                    Some(conn) => match conn.recv_timeout(POLL) {
+                        Ok(None) => continue,
+                        Ok(Some(m)) => m,
+                        Err(_) => {
+                            self.conns.remove(&d);
+                            continue;
+                        }
+                    },
+                };
+                match msg {
+                    WireMsg::Heartbeat { device, sim_t_s } if device == d => {
+                        let _ = self
+                            .server
+                            .engine_mut()
+                            .external_msg(&mut round, DeviceMsg::Heartbeat { device, sim_t_s });
+                    }
+                    WireMsg::Join { device } if device == d => {
+                        // in-band rejoin on a surviving connection
+                        let _ = self
+                            .server
+                            .engine_mut()
+                            .external_msg(&mut round, DeviceMsg::Join { device });
+                        if let (Some(m), Some(conn)) = (outbox.get(&d), self.conns.get_mut(&d)) {
+                            let _ = conn.send(m);
+                        }
+                    }
+                    WireMsg::EndRound(update) if update.device == d => {
+                        if self
+                            .server
+                            .engine_mut()
+                            .external_msg(&mut round, DeviceMsg::EndRound(update))
+                            .is_err()
+                        {
+                            // decoded fine but failed engine validation:
+                            // refuse it and count the device out (its
+                            // download traffic is already spent)
+                            if let Some(conn) = self.conns.get_mut(&d) {
+                                let _ = conn
+                                    .send(&WireMsg::Reject { device: d, code: reject::BAD_UPDATE });
+                            }
+                            self.server.engine_mut().external_msg(
+                                &mut round,
+                                DeviceMsg::Dropout {
+                                    device: d,
+                                    after_s: 0.0,
+                                    down_wire_bits: down_bits.get(&d).copied().unwrap_or(0),
+                                },
+                            )?;
+                        }
+                    }
+                    WireMsg::Dropout { device, after_s, down_wire_bits } if device == d => {
+                        self.server.engine_mut().external_msg(
+                            &mut round,
+                            DeviceMsg::Dropout { device, after_s, down_wire_bits },
+                        )?;
+                    }
+                    _other => {
+                        // a frame this side of the protocol never expects:
+                        // refuse and cut the connection
+                        if let Some(conn) = self.conns.get_mut(&d) {
+                            let _ =
+                                conn.send(&WireMsg::Reject { device: d, code: reject::BAD_STATE });
+                        }
+                        self.conns.remove(&d);
+                    }
+                }
+            }
+
+            if !round.drained() && Instant::now() >= deadline {
+                // stragglers become dropouts so the round can close; the
+                // engine books their already-spent download traffic
+                for d in round.pending() {
+                    self.server.engine_mut().external_msg(
+                        &mut round,
+                        DeviceMsg::Dropout {
+                            device: d,
+                            after_s: 0.0,
+                            down_wire_bits: down_bits.get(&d).copied().unwrap_or(0),
+                        },
+                    )?;
+                }
+            }
+        }
+
+        let out = self.server.engine_mut().finish_external(round)?;
+        Ok(self.server.apply_round(t, out))
+    }
+}

@@ -1,0 +1,226 @@
+//! Tcp transport: framed `std::net::TcpStream`, std-only.
+//!
+//! The coordinator binds a non-blocking listener and polls it between
+//! protocol work ([`TcpTransport::accept_timeout`]); each device holds
+//! one connection for its whole session (connection-per-device).
+//! Streams run with `TCP_NODELAY` (frames are latency-sensitive and
+//! already batched) and bounded read/write timeouts, and the receive
+//! path keeps an incremental buffer: a frame may arrive split across
+//! arbitrarily many reads, and partial bytes survive timeouts intact —
+//! [`frame::decode_frame`]'s `Truncated` error is the "keep reading"
+//! signal, any other decode error poisons the connection.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use super::frame::{self, WireMsg};
+use super::{Conn, Transport, TransportError};
+
+/// Granularity of the non-blocking accept poll.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+/// Cap on a single blocking read's timeout, so `recv_timeout` can honor
+/// deadlines shorter or longer than any one socket wait.
+const READ_SLICE: Duration = Duration::from_millis(100);
+/// Write timeout: a peer that cannot drain a frame in this long is dead.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Coordinator-side listener.
+pub struct TcpTransport {
+    listener: TcpListener,
+    addr: SocketAddr,
+}
+
+impl TcpTransport {
+    /// Bind and start listening. `addr` may be `"127.0.0.1:0"` to let
+    /// the OS pick an ephemeral port (see [`TcpTransport::local_addr`]).
+    pub fn bind<A: ToSocketAddrs>(addr: A) -> Result<TcpTransport, TransportError> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        Ok(TcpTransport { listener, addr })
+    }
+
+    /// The bound socket address (resolves ephemeral ports).
+    pub fn socket_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Transport for TcpTransport {
+    type Conn = TcpConn;
+
+    fn accept_timeout(&mut self, timeout: Duration) -> Result<Option<TcpConn>, TransportError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => return Ok(Some(TcpConn::from_stream(stream, peer)?)),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Ok(None);
+                    }
+                    std::thread::sleep(ACCEPT_POLL.min(timeout));
+                }
+                Err(e) => return Err(TransportError::Io(e)),
+            }
+        }
+    }
+
+    fn local_addr(&self) -> String {
+        self.addr.to_string()
+    }
+}
+
+/// One framed Tcp connection (either side).
+pub struct TcpConn {
+    stream: TcpStream,
+    /// Bytes received but not yet decoded — a frame boundary rarely
+    /// coincides with a read boundary.
+    rbuf: Vec<u8>,
+    peer: String,
+}
+
+impl TcpConn {
+    /// Dial a coordinator.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<TcpConn, TransportError> {
+        let stream = TcpStream::connect(addr)?;
+        let peer = stream.peer_addr()?;
+        Self::from_stream(stream, peer)
+    }
+
+    fn from_stream(stream: TcpStream, peer: SocketAddr) -> Result<TcpConn, TransportError> {
+        stream.set_nodelay(true)?;
+        stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+        Ok(TcpConn { stream, rbuf: Vec::new(), peer: peer.to_string() })
+    }
+}
+
+impl Conn for TcpConn {
+    fn send(&mut self, msg: &WireMsg) -> Result<(), TransportError> {
+        let bytes = frame::encode_frame(msg);
+        self.stream.write_all(&bytes)?;
+        Ok(())
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<WireMsg>, TransportError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            // a complete frame may already be buffered
+            match frame::decode_frame(&self.rbuf) {
+                Ok((msg, used)) => {
+                    self.rbuf.drain(..used);
+                    return Ok(Some(msg));
+                }
+                Err(e) if e.is_incomplete() => {} // need more bytes
+                Err(e) => return Err(TransportError::Frame(e)),
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None); // partial bytes stay in rbuf
+            }
+            let slice = (deadline - now).min(READ_SLICE).max(Duration::from_millis(1));
+            self.stream.set_read_timeout(Some(slice))?;
+            let mut tmp = [0u8; 64 * 1024];
+            match self.stream.read(&mut tmp) {
+                Ok(0) => return Err(TransportError::Closed),
+                Ok(k) => self.rbuf.extend_from_slice(&tmp[..k]),
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock
+                        || e.kind() == ErrorKind::TimedOut
+                        || e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(TransportError::Io(e)),
+            }
+        }
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ephemeral_bind_dial_and_roundtrip() {
+        let mut lst = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = lst.socket_addr();
+        let handle = std::thread::spawn(move || {
+            let mut c = TcpConn::connect(addr).unwrap();
+            c.send(&WireMsg::Join { device: 5 }).unwrap();
+            match c.recv_timeout(Duration::from_secs(5)).unwrap() {
+                Some(WireMsg::JoinAck { device: 5, n_devices: 9 }) => {}
+                other => panic!("{other:?}"),
+            }
+        });
+        let mut sconn = lst
+            .accept_timeout(Duration::from_secs(5))
+            .unwrap()
+            .expect("client should connect");
+        match sconn.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Some(WireMsg::Join { device: 5 }) => {}
+            other => panic!("{other:?}"),
+        }
+        sconn.send(&WireMsg::JoinAck { device: 5, n_devices: 9 }).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn split_writes_reassemble_into_one_frame() {
+        let mut lst = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = lst.socket_addr();
+        let frame_bytes = frame::encode_frame(&WireMsg::Heartbeat { device: 2, sim_t_s: 4.5 });
+        let handle = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // dribble the frame a few bytes at a time across the socket
+            for chunk in frame_bytes.chunks(3) {
+                s.write_all(chunk).unwrap();
+                s.flush().unwrap();
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
+        let mut sconn = lst.accept_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        // short timeouts in between must preserve the partial bytes
+        let mut got = None;
+        for _ in 0..500 {
+            if let Some(m) = sconn.recv_timeout(Duration::from_millis(10)).unwrap() {
+                got = Some(m);
+                break;
+            }
+        }
+        match got {
+            Some(WireMsg::Heartbeat { device: 2, sim_t_s }) => assert_eq!(sim_t_s, 4.5),
+            other => panic!("{other:?}"),
+        }
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn garbage_bytes_poison_the_connection_without_panic() {
+        let mut lst = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = lst.socket_addr();
+        let handle = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"GETS / HTTP/1.1\r\n\r\n").unwrap();
+        });
+        let mut sconn = lst.accept_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        let mut saw_err = false;
+        for _ in 0..200 {
+            match sconn.recv_timeout(Duration::from_millis(10)) {
+                Ok(Some(m)) => panic!("decoded {m:?} from garbage"),
+                Ok(None) => {}
+                Err(TransportError::Frame(_)) => {
+                    saw_err = true;
+                    break;
+                }
+                Err(_) => {
+                    saw_err = true;
+                    break;
+                }
+            }
+        }
+        assert!(saw_err, "garbage should surface as a framing error");
+        handle.join().unwrap();
+    }
+}

@@ -64,6 +64,15 @@ impl BitWriter {
         self.push_bits(x.to_bits() as u64, 32);
     }
 
+    /// Append a raw byte slice. Requires the writer to be byte-aligned
+    /// (the transport frame codec keeps every field a multiple of 8 bits
+    /// precisely so payload bytes splice in as a straight copy).
+    pub fn push_bytes(&mut self, bytes: &[u8]) {
+        assert_eq!(self.nbits % 8, 0, "push_bytes on an unaligned writer");
+        self.buf.extend_from_slice(bytes);
+        self.nbits += bytes.len() * 8;
+    }
+
     pub fn len_bits(&self) -> usize {
         self.nbits
     }
@@ -242,6 +251,30 @@ mod tests {
                 assert_eq!(r.read_bits(3), 0b101, "prefix={prefix} width={width} tail");
             }
         }
+    }
+
+    #[test]
+    fn push_bytes_splices_aligned_runs() {
+        let mut w = BitWriter::new();
+        w.push_bits(0xAB, 8);
+        w.push_bytes(&[1, 2, 3]);
+        w.push_f32(2.5);
+        assert_eq!(w.len_bits(), 8 + 24 + 32);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(8), 0xAB);
+        assert_eq!(r.read_bits(8), 1);
+        assert_eq!(r.read_bits(8), 2);
+        assert_eq!(r.read_bits(8), 3);
+        assert_eq!(r.read_f32(), 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "unaligned")]
+    fn push_bytes_rejects_unaligned_writer() {
+        let mut w = BitWriter::new();
+        w.push_bit(true);
+        w.push_bytes(&[0]);
     }
 
     #[test]

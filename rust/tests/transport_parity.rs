@@ -1,0 +1,262 @@
+//! The transport subsystem's headline invariant: for a fixed seed, a run
+//! driven over a real transport — Loopback channels or Tcp on localhost,
+//! with devices arriving in any scripted order, disconnecting and
+//! rejoining — produces BIT-IDENTICAL final models, traffic ledgers and
+//! round records to the in-process `Server::run` path. The transport
+//! moves bytes; it never touches the math.
+
+use std::time::Duration;
+
+use caesar_fl::config::{CompressionBackend, ExperimentConfig, TrainerBackend};
+use caesar_fl::coordinator::{RunResult, Server};
+use caesar_fl::fleet::FleetKind;
+use caesar_fl::schemes;
+use caesar_fl::transport::frame::reject;
+use caesar_fl::transport::{
+    model_digest, Conn, CoordinatorService, DeviceClient, LoopbackHub, SessionEnd, TcpConn,
+    TcpTransport, TransportError, WireMsg,
+};
+
+const N_DEVICES: usize = 6;
+
+fn tiny_cfg(rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("har");
+    cfg.trainer = TrainerBackend::Native;
+    cfg.compression = CompressionBackend::Native;
+    cfg.fleet = FleetKind::JetsonScaled(N_DEVICES);
+    cfg.rounds = rounds;
+    cfg.alpha = 0.5; // 3 participants per round
+    cfg.n_train = 600;
+    cfg.n_test = 200;
+    cfg.tau = 2;
+    cfg.batch = 8;
+    cfg.eval_every = 1;
+    cfg.seed = 7;
+    cfg
+}
+
+fn baseline(cfg: &ExperimentConfig, scheme: &str) -> (Server, RunResult) {
+    let mut srv = Server::new(cfg.clone(), schemes::by_name(scheme).unwrap()).unwrap();
+    let result = srv.run().unwrap();
+    (srv, result)
+}
+
+/// Bit-exact comparison of everything the parity invariant covers.
+/// Engine *stats* are deliberately excluded: the networked service runs
+/// liveness sweeps and counts frames, not simulated events.
+fn assert_parity(what: &str, a: (&Server, &RunResult), b: (&Server, &RunResult)) {
+    let ((sa, ra), (sb, rb)) = (a, b);
+    assert_eq!(
+        model_digest(&sa.global),
+        model_digest(&sb.global),
+        "{what}: final model diverged"
+    );
+    for (i, (x, y)) in sa.global.iter().zip(&sb.global).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: model elem {i}");
+    }
+    assert_eq!(
+        sa.traffic().down_bits.to_bits(),
+        sb.traffic().down_bits.to_bits(),
+        "{what}: download traffic"
+    );
+    assert_eq!(
+        sa.traffic().up_bits.to_bits(),
+        sb.traffic().up_bits.to_bits(),
+        "{what}: upload traffic"
+    );
+    assert_eq!(sa.sim_time_s().to_bits(), sb.sim_time_s().to_bits(), "{what}: clock");
+    assert_eq!(sa.model_version(), sb.model_version(), "{what}: model version");
+    assert_eq!(ra.records.len(), rb.records.len(), "{what}: record count");
+    for (x, y) in ra.records.iter().zip(&rb.records) {
+        assert_eq!(x.t, y.t, "{what}: round ids");
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{what}: round {}", x.t);
+        assert_eq!(x.traffic_gb.to_bits(), y.traffic_gb.to_bits(), "{what}: round {}", x.t);
+        assert_eq!(x.mean_loss.to_bits(), y.mean_loss.to_bits(), "{what}: round {}", x.t);
+        assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits(), "{what}: round {}", x.t);
+    }
+}
+
+/// Run the service over Loopback with device threads arriving in the
+/// scripted `arrival` order.
+fn run_loopback(cfg: &ExperimentConfig, scheme: &str, arrival: &[usize]) -> (Server, RunResult) {
+    let server = Server::new(cfg.clone(), schemes::by_name(scheme).unwrap()).unwrap();
+    let hub = LoopbackHub::new();
+    let dialer = hub.dialer();
+    let mut svc = CoordinatorService::new(server, hub);
+    let mut handles = Vec::new();
+    for &d in arrival {
+        let dialer = dialer.clone();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = DeviceClient::new(cfg, d).unwrap();
+            let mut conn = dialer.connect().unwrap();
+            client.run(&mut conn).unwrap()
+        }));
+        // stagger so the hub really sees this arrival order
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    svc.wait_for_devices(arrival.len(), Duration::from_secs(30)).unwrap();
+    let result = svc.run().unwrap();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), SessionEnd::Finished);
+    }
+    (svc.into_server(), result)
+}
+
+/// Run the service over Tcp on an ephemeral localhost port.
+fn run_tcp(cfg: &ExperimentConfig, scheme: &str, arrival: &[usize]) -> (Server, RunResult) {
+    let server = Server::new(cfg.clone(), schemes::by_name(scheme).unwrap()).unwrap();
+    let transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr = transport.socket_addr();
+    let mut svc = CoordinatorService::new(server, transport);
+    let mut handles = Vec::new();
+    for &d in arrival {
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = DeviceClient::new(cfg, d).unwrap();
+            let mut conn = TcpConn::connect(addr).unwrap();
+            client.run(&mut conn).unwrap()
+        }));
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    svc.wait_for_devices(arrival.len(), Duration::from_secs(30)).unwrap();
+    let result = svc.run().unwrap();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), SessionEnd::Finished);
+    }
+    (svc.into_server(), result)
+}
+
+#[test]
+fn loopback_and_tcp_match_the_in_process_run_bit_for_bit() {
+    let cfg = tiny_cfg(3);
+    // caesar exercises the full codec surface: CaesarSplit + Full
+    // downloads, TopK uploads, cross-round cache reuse
+    let base = baseline(&cfg, "caesar");
+    // scripted arrival orders, both far from ascending
+    let lb = run_loopback(&cfg, "caesar", &[4, 1, 5, 0, 3, 2]);
+    assert_parity("loopback vs in-process", (&lb.0, &lb.1), (&base.0, &base.1));
+    let tcp = run_tcp(&cfg, "caesar", &[2, 5, 0, 3, 1, 4]);
+    assert_parity("tcp vs in-process", (&tcp.0, &tcp.1), (&base.0, &base.1));
+}
+
+#[test]
+fn quant_noise_and_fedavg_survive_the_wire_too() {
+    // prowd's Quant download draws device-stream noise — the RNG
+    // resume-state handoff in the kickoff frame is what keeps this exact
+    for scheme in ["prowd", "fedavg"] {
+        let cfg = tiny_cfg(2);
+        let base = baseline(&cfg, scheme);
+        let lb = run_loopback(&cfg, scheme, &[5, 4, 3, 2, 1, 0]);
+        assert_parity(scheme, (&lb.0, &lb.1), (&base.0, &base.1));
+    }
+}
+
+#[test]
+fn dropout_lottery_and_heartbeats_are_identical_across_transports() {
+    let mut cfg = tiny_cfg(3);
+    cfg.engine.dropout_rate = 0.4;
+    cfg.engine.heartbeat_s = 5.0;
+    let base = baseline(&cfg, "caesar");
+    let lb = run_loopback(&cfg, "caesar", &[3, 0, 5, 2, 4, 1]);
+    assert_parity("dropout loopback", (&lb.0, &lb.1), (&base.0, &base.1));
+    let tcp = run_tcp(&cfg, "caesar", &[1, 3, 5, 0, 2, 4]);
+    assert_parity("dropout tcp", (&tcp.0, &tcp.1), (&base.0, &base.1));
+}
+
+/// A [`Conn`] that kills itself after a budgeted number of sends — the
+/// deterministic stand-in for a mid-round connection loss.
+struct FlakyConn {
+    inner: TcpConn,
+    sends_left: usize,
+}
+
+impl Conn for FlakyConn {
+    fn send(&mut self, msg: &WireMsg) -> Result<(), TransportError> {
+        if self.sends_left == 0 {
+            return Err(TransportError::Closed);
+        }
+        self.sends_left -= 1;
+        self.inner.send(msg)
+    }
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<WireMsg>, TransportError> {
+        if self.sends_left == 0 {
+            return Err(TransportError::Closed);
+        }
+        self.inner.recv_timeout(timeout)
+    }
+    fn peer(&self) -> String {
+        self.inner.peer()
+    }
+}
+
+#[test]
+fn a_device_that_dies_mid_session_rejoins_and_parity_holds() {
+    let cfg = tiny_cfg(3);
+    let base = baseline(&cfg, "caesar");
+
+    let server = Server::new(cfg.clone(), schemes::by_name("caesar").unwrap()).unwrap();
+    let transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr = transport.socket_addr();
+    let mut svc = CoordinatorService::new(server, transport);
+    let mut handles = Vec::new();
+    for d in 0..N_DEVICES {
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = DeviceClient::new(cfg, d).unwrap();
+            if d == 2 {
+                // device 2's first connection dies after 2 frames (Join +
+                // one more), forcing a reconnect-with-rejoin; later dials
+                // get an unlimited budget
+                let mut dials = 0usize;
+                client
+                    .run_reconnecting(
+                        move || {
+                            dials += 1;
+                            Ok(FlakyConn {
+                                inner: TcpConn::connect(addr)?,
+                                sends_left: if dials == 1 { 2 } else { usize::MAX },
+                            })
+                        },
+                        10,
+                    )
+                    .unwrap()
+            } else {
+                let mut conn = TcpConn::connect(addr).unwrap();
+                client.run(&mut conn).unwrap()
+            }
+        }));
+    }
+    svc.wait_for_devices(N_DEVICES, Duration::from_secs(30)).unwrap();
+    let result = svc.run().unwrap();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), SessionEnd::Finished);
+    }
+    let srv = svc.into_server();
+    assert_parity("flaky device", (&srv, &result), (&base.0, &base.1));
+}
+
+#[test]
+fn out_of_range_wire_ids_are_rejected_with_a_typed_frame() {
+    let cfg = tiny_cfg(1);
+    let server = Server::new(cfg, schemes::by_name("fedavg").unwrap()).unwrap();
+    let transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr = transport.socket_addr();
+    let mut svc = CoordinatorService::new(server, transport);
+
+    let rogue = std::thread::spawn(move || {
+        let mut conn = TcpConn::connect(addr).unwrap();
+        conn.send(&WireMsg::Join { device: 999 }).unwrap();
+        conn.recv_timeout(Duration::from_secs(5)).unwrap()
+    });
+    // the rogue join must not count toward the rendezvous
+    let err = svc.wait_for_devices(1, Duration::from_millis(800)).unwrap_err();
+    assert!(format!("{err}").contains("0 of 1"), "{err}");
+    assert_eq!(svc.connected(), 0);
+    match rogue.join().unwrap() {
+        Some(WireMsg::Reject { device: 999, code }) => {
+            assert_eq!(code, reject::UNKNOWN_DEVICE)
+        }
+        other => panic!("expected a Reject frame, got {other:?}"),
+    }
+}
