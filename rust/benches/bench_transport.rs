@@ -56,6 +56,7 @@ fn start_msg(n: usize) -> WireMsg {
         dropout_rate: 0.1,
         heartbeat_s: 10.0,
         sim_now_s: 123.5,
+        prior_digest: Some(0x1234_5678_9ABC_DEF0),
         download,
     }))
 }
@@ -65,15 +66,18 @@ fn update_msg(n: usize) -> WireMsg {
     let upload = UploadCodec::TopK { ratio: 0.9 }
         .encode_payload(&randn(n, 13), &mut Rng::new(9))
         .encode();
-    WireMsg::EndRound(Box::new(RoundUpdate {
-        device: 1,
-        w_final: randn(n, 12),
-        upload,
-        grad_norm: 1.25,
-        loss: 0.7,
-        down_wire_bits: n * 32,
-        cost: RoundCost { download_s: 1.0, compute_s: 2.0, upload_s: 0.5 },
-    }))
+    WireMsg::EndRound {
+        t: 3,
+        update: Box::new(RoundUpdate {
+            device: 1,
+            w_final: randn(n, 12),
+            upload,
+            grad_norm: 1.25,
+            loss: 0.7,
+            down_wire_bits: n * 32,
+            cost: RoundCost { download_s: 1.0, compute_s: 2.0, upload_s: 0.5 },
+        }),
+    }
 }
 
 fn main() {

@@ -134,6 +134,14 @@ pub struct NetworkedStart {
     pub heartbeat_s: f64,
     /// Simulated wall-clock at round start.
     pub sim_now_s: f64,
+    /// `transport::model_digest` of the coordinator's retained local
+    /// model for this device (`None` if it has none). The recovery prior
+    /// the PS *encoded against* — the device must recover against the
+    /// model with this exact digest (or none), otherwise the sides have
+    /// diverged (e.g. the coordinator synthesized a Dropout after the
+    /// device advanced) and the device must resync instead of silently
+    /// training from a mismatched prior.
+    pub prior_digest: Option<u64>,
     /// The encoded download payload — the same `Arc`'d bytes every
     /// co-participant with this effective codec receives.
     pub download: Arc<EncodedPayload>,
@@ -537,6 +545,7 @@ impl Server {
                 dropout_rate: ecfg.dropout_rate,
                 heartbeat_s: ecfg.heartbeat_s,
                 sim_now_s: self.sim_time_s,
+                prior_digest: self.locals[d].as_deref().map(crate::transport::model_digest),
                 download,
             });
         }

@@ -9,8 +9,10 @@
 //! 1. resume the device RNG stream from the kickoff's [`RngState`]
 //!    (the PS-side download encode already consumed its draws),
 //! 2. run the dropout lottery on the independent fate stream,
-//! 3. recover the download against the retained local model, train τ
-//!    local steps, encode the upload,
+//! 3. recover the download against the retained local model the kickoff's
+//!    prior digest selects (see `pick_prior` — the coordinator can lag
+//!    one round behind when it refused an EndRound), train τ local
+//!    steps, encode the upload,
 //! 4. send heartbeats on the shared simulated-time schedule, then the
 //!    EndRound (or Dropout) frame.
 //!
@@ -38,8 +40,8 @@ use crate::fleet::RoundCost;
 use crate::util::pool;
 use crate::util::rng::Rng;
 
-use super::frame::WireMsg;
-use super::{Conn, TransportError};
+use super::frame::{reject, WireMsg};
+use super::{model_digest, Conn, TransportError};
 
 /// Receive slice while waiting for the next frame.
 const RECV_SLICE: Duration = Duration::from_millis(100);
@@ -55,6 +57,23 @@ pub struct ClientStats {
     pub heartbeats: usize,
     /// Duplicate kickoffs answered from the redelivery cache.
     pub redeliveries: usize,
+    /// Resolutions the coordinator refused as stale (a buffered frame
+    /// from a round whose deadline had already converted this device to
+    /// a Dropout). Harmless — the refusal is informational.
+    pub stale_rejects: usize,
+}
+
+/// Which retained model matches the coordinator's declared recovery
+/// prior for a kickoff (see `DeviceClient::pick_prior`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PriorPick {
+    /// The coordinator holds no local for this device: recover priorless.
+    None,
+    /// The digest matches `local` — the normal case.
+    Current,
+    /// The digest matches `prev_local`: the coordinator refused or never
+    /// received the last EndRound, so it is one round behind.
+    Previous,
 }
 
 /// How a client session over one connection ended.
@@ -76,11 +95,20 @@ pub struct DeviceClient {
     train_ds: Dataset,
     partition: Partition,
     /// Retained post-training model — the reference for CaesarSplit
-    /// download recovery. Advances only when a round completes; the
-    /// coordinator mirrors this exactly (its `locals[d]` advances only
-    /// on EndRound), so both sides always agree on the effective
-    /// download codec.
+    /// download recovery. Advances when a round's EndRound goes out; the
+    /// coordinator's `locals[d]` advances only when that EndRound is
+    /// *accepted*, so the sides can disagree by exactly one round (e.g.
+    /// the round deadline converted this device to a Dropout while its
+    /// EndRound was in flight). Each kickoff therefore declares the
+    /// digest of the prior the PS encoded against, and the client picks
+    /// whichever of `local`/`prev_local` matches (see `pick_prior`).
     local: Option<Vec<f32>>,
+    /// The prior `local` actually used in the last executed round —
+    /// exactly what the coordinator still holds if it refused that
+    /// round's EndRound. One round of history suffices: the coordinator
+    /// only ever advances `locals[d]` to an accepted `w_final`, which
+    /// this client produced from one of these two models.
+    prev_local: Option<Vec<f32>>,
     /// Redelivery cache: the round number and resolution frame of the
     /// last round this device resolved.
     last_round: usize,
@@ -117,6 +145,7 @@ impl DeviceClient {
             train_ds,
             partition,
             local: None,
+            prev_local: None,
             last_round: 0,
             last_resolution: None,
             stats: ClientStats::default(),
@@ -194,6 +223,11 @@ impl DeviceClient {
                     }
                 }
                 WireMsg::Finish => return Ok(SessionEnd::Finished),
+                WireMsg::Reject { code: reject::STALE_ROUND, .. } => {
+                    // a resolution of ours was buffered past its round's
+                    // close and refused — informational, keep serving
+                    self.stats.stale_rejects += 1;
+                }
                 WireMsg::Reject { code, .. } => {
                     return Err(anyhow!(
                         "coordinator rejected device {} (code {code})",
@@ -213,7 +247,10 @@ impl DeviceClient {
     /// [`run`] with reconnect-with-rejoin: when a session disconnects,
     /// dial a fresh connection and Join again (the coordinator replaces
     /// the dead connection and re-sends any pending kickoff). Gives up
-    /// after `max_redials` consecutive failed/disconnected attempts.
+    /// after `max_redials` **consecutive** fruitless attempts — any
+    /// session that makes protocol progress (a completed round, a
+    /// dropout resolution, a redelivery) resets the budget, so a long
+    /// run survives occasional transient disconnects indefinitely.
     pub fn run_reconnecting<C: Conn>(
         &mut self,
         mut dial: impl FnMut() -> Result<C, TransportError>,
@@ -221,14 +258,16 @@ impl DeviceClient {
     ) -> Result<SessionEnd> {
         let mut redials = 0;
         loop {
-            match dial() {
-                Ok(mut conn) => match self.run(&mut conn)? {
-                    SessionEnd::Finished => return Ok(SessionEnd::Finished),
-                    SessionEnd::Disconnected => {}
-                },
-                Err(_) => {}
+            let before = self.stats;
+            if let Ok(mut conn) = dial() {
+                if self.run(&mut conn)? == SessionEnd::Finished {
+                    return Ok(SessionEnd::Finished);
+                }
             }
-            redials += 1;
+            let progressed = self.stats.rounds > before.rounds
+                || self.stats.dropouts > before.dropouts
+                || self.stats.redeliveries > before.redeliveries;
+            redials = if progressed { 0 } else { redials + 1 };
             if redials > max_redials {
                 return Ok(SessionEnd::Disconnected);
             }
@@ -269,7 +308,7 @@ impl DeviceClient {
                 if self.heartbeats(conn, start.heartbeat_s, start.sim_now_s, after_s).is_none() {
                     return Ok(None);
                 }
-                let resolution = WireMsg::Dropout { device: d, after_s, down_wire_bits };
+                let resolution = WireMsg::Dropout { t, device: d, after_s, down_wire_bits };
                 if conn.send(&resolution).is_err() {
                     return Ok(None);
                 }
@@ -281,11 +320,19 @@ impl DeviceClient {
             }
         }
 
+        // recover against the prior the PS actually encoded for — the
+        // kickoff's digest tells us which of our retained models that is
+        let pick = self.pick_prior(start.prior_digest)?;
         // resume the device stream where the PS-side encode left it
         let mut dev_rng = Rng::from_state(start.rng);
         let codec = CodecEngine::native();
         let mut model = pool::f32_buf();
-        codec.recover_download_into(&start.download, self.local.as_deref(), &mut model)?;
+        let prior = match pick {
+            PriorPick::None => None,
+            PriorPick::Current => self.local.as_deref(),
+            PriorPick::Previous => self.prev_local.as_deref(),
+        };
+        codec.recover_download_into(&start.download, prior, &mut model)?;
         let shard = &self.partition.shards[d];
         let (w_final, loss) = self.trainer.train(
             &model,
@@ -317,23 +364,56 @@ impl DeviceClient {
         if self.heartbeats(conn, start.heartbeat_s, start.sim_now_s, cost.total()).is_none() {
             return Ok(None);
         }
-        let resolution = WireMsg::EndRound(Box::new(RoundUpdate {
-            device: d,
-            w_final: w_final.clone(),
-            upload: up_enc,
-            grad_norm,
-            loss,
-            down_wire_bits,
-            cost,
-        }));
+        let resolution = WireMsg::EndRound {
+            t,
+            update: Box::new(RoundUpdate {
+                device: d,
+                w_final: w_final.clone(),
+                upload: up_enc,
+                grad_norm,
+                loss,
+                down_wire_bits,
+                cost,
+            }),
+        };
         if conn.send(&resolution).is_err() {
             return Ok(None);
         }
+        // keep the prior this round trained from: it is exactly what the
+        // coordinator still holds if it refuses this EndRound
+        self.prev_local = match pick {
+            PriorPick::None => None,
+            PriorPick::Current => self.local.take(),
+            PriorPick::Previous => self.prev_local.take(),
+        };
         self.local = Some(w_final);
         self.last_round = t;
         self.last_resolution = Some(resolution);
         self.stats.rounds += 1;
         Ok(Some(()))
+    }
+
+    /// Match a kickoff's declared prior digest against the retained
+    /// models. The coordinator encodes downloads against its `locals[d]`
+    /// — normally this client's `local`, but one round behind it
+    /// (`prev_local`) when the coordinator refused or never received the
+    /// last EndRound. Anything else is genuine divergence (say, a client
+    /// restart losing the retained model) and fails loudly here: training
+    /// from a mismatched prior would break bit parity silently.
+    fn pick_prior(&self, declared: Option<u64>) -> Result<PriorPick> {
+        let Some(dig) = declared else { return Ok(PriorPick::None) };
+        if self.local.as_deref().is_some_and(|l| model_digest(l) == dig) {
+            return Ok(PriorPick::Current);
+        }
+        if self.prev_local.as_deref().is_some_and(|l| model_digest(l) == dig) {
+            return Ok(PriorPick::Previous);
+        }
+        Err(anyhow!(
+            "device {}: the coordinator's recovery prior (digest {dig:#018x}) matches \
+             neither the retained local model nor its predecessor — the sides have \
+             diverged (was this client restarted mid-run?)",
+            self.device
+        ))
     }
 
     /// Send the simulated-time heartbeat schedule (shared with the
@@ -354,5 +434,151 @@ impl DeviceClient {
             self.stats.heartbeats += 1;
         }
         Some(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::message::StartRound;
+    use crate::fleet::FleetKind;
+    use crate::schemes::{DevicePlan, DownloadCodec, UploadCodec};
+    use crate::wire::Payload;
+    use std::collections::VecDeque;
+    use std::sync::Arc;
+
+    fn tiny_client() -> DeviceClient {
+        let mut cfg = ExperimentConfig::preset("har");
+        cfg.trainer = TrainerBackend::Native;
+        cfg.compression = CompressionBackend::Native;
+        cfg.fleet = FleetKind::JetsonScaled(4);
+        cfg.n_train = 240;
+        cfg.n_test = 80;
+        DeviceClient::new(cfg, 0).unwrap()
+    }
+
+    #[test]
+    fn pick_prior_matches_current_previous_none_and_fails_on_divergence() {
+        let mut client = tiny_client();
+        let cur = vec![1.0f32, 2.0, 3.0];
+        let prev = vec![4.0f32, 5.0, 6.0];
+        client.local = Some(cur.clone());
+        client.prev_local = Some(prev.clone());
+
+        assert_eq!(client.pick_prior(None).unwrap(), PriorPick::None);
+        assert_eq!(client.pick_prior(Some(model_digest(&cur))).unwrap(), PriorPick::Current);
+        assert_eq!(client.pick_prior(Some(model_digest(&prev))).unwrap(), PriorPick::Previous);
+        let err = client.pick_prior(Some(0xBAD)).unwrap_err();
+        assert!(format!("{err}").contains("diverged"), "{err}");
+
+        // a fresh client (no retained models) must refuse any Some digest
+        client.local = None;
+        client.prev_local = None;
+        assert!(client.pick_prior(Some(model_digest(&cur))).is_err());
+        assert_eq!(client.pick_prior(None).unwrap(), PriorPick::None);
+    }
+
+    /// A [`Conn`] that replays a scripted receive sequence and accepts
+    /// every send; once the script runs dry it reports Closed.
+    struct ScriptedConn {
+        script: VecDeque<Result<Option<WireMsg>, TransportError>>,
+    }
+
+    impl Conn for ScriptedConn {
+        fn send(&mut self, _msg: &WireMsg) -> Result<(), TransportError> {
+            Ok(())
+        }
+        fn recv_timeout(
+            &mut self,
+            _timeout: Duration,
+        ) -> Result<Option<WireMsg>, TransportError> {
+            match self.script.pop_front() {
+                Some(r) => r,
+                None => Err(TransportError::Closed),
+            }
+        }
+        fn peer(&self) -> String {
+            "scripted".into()
+        }
+    }
+
+    fn duplicate_kickoff(t: usize) -> WireMsg {
+        WireMsg::StartRound(Box::new(NetworkedStart {
+            item: StartRound {
+                t,
+                plan: DevicePlan {
+                    device: 0,
+                    download: DownloadCodec::Full,
+                    upload: UploadCodec::Full,
+                    batch: 8,
+                    tau: 1,
+                },
+                beta_d: 1e6,
+                beta_u: 1e6,
+                mu: 1e-4,
+            },
+            lr: 0.1,
+            rng: Rng::new(1).state(),
+            stream_base: 0,
+            dropout_rate: 0.0,
+            heartbeat_s: 0.0,
+            sim_now_s: 0.0,
+            prior_digest: None,
+            download: Arc::new(Payload::Dense(vec![0.0f32; 4]).encode()),
+        }))
+    }
+
+    #[test]
+    fn redial_budget_bounds_consecutive_fruitless_attempts() {
+        let mut client = tiny_client();
+        let mut dials = 0usize;
+        let end = client
+            .run_reconnecting(
+                || {
+                    dials += 1;
+                    Ok(ScriptedConn { script: VecDeque::new() })
+                },
+                3,
+            )
+            .unwrap();
+        assert_eq!(end, SessionEnd::Disconnected);
+        // the initial attempt plus max_redials fruitless redials
+        assert_eq!(dials, 4);
+    }
+
+    #[test]
+    fn sessions_that_progress_reset_the_redial_budget() {
+        let mut client = tiny_client();
+        // pretend round 1 already resolved so a duplicate kickoff is
+        // answered from the redelivery cache (= protocol progress)
+        client.last_round = 1;
+        client.last_resolution =
+            Some(WireMsg::Dropout { t: 1, device: 0, after_s: 0.5, down_wire_bits: 64 });
+        let n = client.cfg.n_devices();
+
+        let mut dials = 0usize;
+        let end = client
+            .run_reconnecting(
+                || {
+                    dials += 1;
+                    let mut script: VecDeque<Result<Option<WireMsg>, TransportError>> =
+                        VecDeque::new();
+                    script.push_back(Ok(Some(WireMsg::JoinAck { device: 0, n_devices: n })));
+                    if dials <= 6 {
+                        // a redelivery, then the connection dies: with a
+                        // budget of 1 consecutive failure, only the
+                        // progress reset keeps 6 of these alive
+                        script.push_back(Ok(Some(duplicate_kickoff(1))));
+                    } else {
+                        script.push_back(Ok(Some(WireMsg::Finish)));
+                    }
+                    Ok(ScriptedConn { script })
+                },
+                1,
+            )
+            .unwrap();
+        assert_eq!(end, SessionEnd::Finished);
+        assert_eq!(dials, 7);
+        assert_eq!(client.stats.redeliveries, 6);
     }
 }

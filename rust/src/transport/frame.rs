@@ -7,7 +7,7 @@
 //!  offset  size  field
 //!  ──────  ────  ─────────────────────────────────────────────
 //!       0     4  magic  "CAES"
-//!       4     2  protocol version, u16 LE   (currently 1)
+//!       4     2  protocol version, u16 LE   (currently 2)
 //!       6     1  message tag                (Join=1 … Reject=8)
 //!       7     1  flags                      (0; reserved)
 //!       8     4  body length, u32 LE        (≤ 64 MiB)
@@ -46,7 +46,9 @@ use crate::wire::{EncodedPayload, PayloadSpec};
 /// Frame magic: ASCII "CAES".
 pub const MAGIC: [u8; 4] = *b"CAES";
 /// Protocol version this build speaks (see module docs for the rules).
-pub const VERSION: u16 = 1;
+/// v2: EndRound/Dropout carry their round number; StartRound carries the
+/// coordinator's retained-local digest for recovery-prior agreement.
+pub const VERSION: u16 = 2;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 12;
 /// Upper bound on a frame body — 64 MiB comfortably fits a full fp32
@@ -62,6 +64,11 @@ pub mod reject {
     pub const BAD_STATE: u16 = 2;
     /// Frame decoded but its contents failed engine-side validation.
     pub const BAD_UPDATE: u16 = 3;
+    /// A resolution (EndRound/Dropout) for a round that is no longer
+    /// open — e.g. a buffered straggler frame from a round whose deadline
+    /// already converted the device to a Dropout. Informational: the
+    /// coordinator keeps the connection and the client keeps serving.
+    pub const STALE_ROUND: u16 = 4;
 }
 
 /// Every message of the coordinator protocol, as carried by one frame.
@@ -76,10 +83,12 @@ pub enum WireMsg {
     Heartbeat { device: usize, sim_t_s: f64 },
     /// Coordinator → device round kickoff (plan + context + download).
     StartRound(Box<NetworkedStart>),
-    /// Device → coordinator completed round.
-    EndRound(Box<RoundUpdate>),
-    /// Device → coordinator mid-round dropout notice.
-    Dropout { device: usize, after_s: f64, down_wire_bits: usize },
+    /// Device → coordinator completed round `t`. The round number lets
+    /// the coordinator refuse resolutions that were buffered past their
+    /// round's close instead of folding them into the wrong aggregate.
+    EndRound { t: usize, update: Box<RoundUpdate> },
+    /// Device → coordinator mid-round dropout notice for round `t`.
+    Dropout { t: usize, device: usize, after_s: f64, down_wire_bits: usize },
     /// Coordinator → device: the run is over, disconnect.
     Finish,
     /// Coordinator → device: message refused (see [`reject`] codes).
@@ -93,7 +102,7 @@ impl WireMsg {
             WireMsg::JoinAck { .. } => 2,
             WireMsg::Heartbeat { .. } => 3,
             WireMsg::StartRound(_) => 4,
-            WireMsg::EndRound(_) => 5,
+            WireMsg::EndRound { .. } => 5,
             WireMsg::Dropout { .. } => 6,
             WireMsg::Finish => 7,
             WireMsg::Reject { .. } => 8,
@@ -183,8 +192,12 @@ fn encode_body(msg: &WireMsg, w: &mut BitWriter) {
             put_f64(w, *sim_t_s);
         }
         WireMsg::StartRound(s) => encode_start(s, w),
-        WireMsg::EndRound(u) => encode_update(u, w),
-        WireMsg::Dropout { device, after_s, down_wire_bits } => {
+        WireMsg::EndRound { t, update } => {
+            put_u64(w, *t as u64);
+            encode_update(update, w);
+        }
+        WireMsg::Dropout { t, device, after_s, down_wire_bits } => {
+            put_u64(w, *t as u64);
             put_u64(w, *device as u64);
             put_f64(w, *after_s);
             put_u64(w, *down_wire_bits as u64);
@@ -209,6 +222,13 @@ fn encode_start(s: &NetworkedStart, w: &mut BitWriter) {
     put_f64(w, s.dropout_rate);
     put_f64(w, s.heartbeat_s);
     put_f64(w, s.sim_now_s);
+    match s.prior_digest {
+        None => w.push_bits(0, 8),
+        Some(dig) => {
+            w.push_bits(1, 8);
+            put_u64(w, dig);
+        }
+    }
     encode_payload(&s.download, w);
 }
 
@@ -365,8 +385,9 @@ fn decode_body(tag: u8, r: &mut BodyReader) -> Result<WireMsg, FrameError> {
         2 => Ok(WireMsg::JoinAck { device: r.usize64()?, n_devices: r.usize64()? }),
         3 => Ok(WireMsg::Heartbeat { device: r.usize64()?, sim_t_s: r.finite_f64()? }),
         4 => Ok(WireMsg::StartRound(Box::new(decode_start(r)?))),
-        5 => Ok(WireMsg::EndRound(Box::new(decode_update(r)?))),
+        5 => Ok(WireMsg::EndRound { t: round_no(r)?, update: Box::new(decode_update(r)?) }),
         6 => Ok(WireMsg::Dropout {
+            t: round_no(r)?,
             device: r.usize64()?,
             after_s: r.finite_f64()?,
             down_wire_bits: r.usize64()?,
@@ -377,11 +398,17 @@ fn decode_body(tag: u8, r: &mut BodyReader) -> Result<WireMsg, FrameError> {
     }
 }
 
-fn decode_start(r: &mut BodyReader) -> Result<NetworkedStart, FrameError> {
+/// A 1-based round number.
+fn round_no(r: &mut BodyReader) -> Result<usize, FrameError> {
     let t = r.usize64()?;
     if t == 0 {
         return Err(FrameError::Malformed("round numbers are 1-based"));
     }
+    Ok(t)
+}
+
+fn decode_start(r: &mut BodyReader) -> Result<NetworkedStart, FrameError> {
+    let t = round_no(r)?;
     let plan = decode_plan(r)?;
     let beta_d = r.finite_f64()?;
     let beta_u = r.finite_f64()?;
@@ -401,6 +428,11 @@ fn decode_start(r: &mut BodyReader) -> Result<NetworkedStart, FrameError> {
         return Err(FrameError::Malformed("negative heartbeat interval"));
     }
     let sim_now_s = r.finite_f64()?;
+    let prior_digest = match r.u8()? {
+        0 => None,
+        1 => Some(r.u64()?),
+        _ => return Err(FrameError::Malformed("prior-digest flag")),
+    };
     let download = Arc::new(decode_payload(r)?);
     Ok(NetworkedStart {
         item: StartRound { t, plan, beta_d, beta_u, mu },
@@ -410,6 +442,7 @@ fn decode_start(r: &mut BodyReader) -> Result<NetworkedStart, FrameError> {
         dropout_rate,
         heartbeat_s,
         sim_now_s,
+        prior_digest,
         download,
     })
 }
@@ -491,6 +524,11 @@ fn decode_payload(r: &mut BodyReader) -> Result<EncodedPayload, FrameError> {
             let n = r.usize64()?;
             let bits = r.quant_bits()?;
             let levels = r.u32()?;
+            // levels = 0 would make dequantization divide by zero and
+            // fold NaN into the global model
+            if levels == 0 {
+                return Err(FrameError::Malformed("quant levels must be at least 1"));
+            }
             if (levels as u64) >= (1u64 << bits) {
                 return Err(FrameError::Malformed("quant levels exceed the bit width"));
             }
@@ -525,6 +563,10 @@ fn validate_payload(spec: &PayloadSpec, bits: usize, bytes: &[u8]) -> Result<(),
             if bits != n.checked_mul(32).ok_or(FrameError::Malformed("payload size overflow"))? {
                 return Err(FrameError::Malformed("dense payload bit length"));
             }
+            let mut rd = BitReader::new(bytes);
+            for _ in 0..n {
+                finite_f32(rd.read_bits(32), "non-finite dense value")?;
+            }
         }
         PayloadSpec::TopK { n, kept } => {
             if kept > n {
@@ -557,6 +599,9 @@ fn validate_payload(spec: &PayloadSpec, bits: usize, bytes: &[u8]) -> Result<(),
                     return Err(FrameError::Malformed("top-k bitmap popcount"));
                 }
             }
+            for _ in 0..kept {
+                finite_f32(rd.read_bits(32), "non-finite top-k value")?;
+            }
         }
         PayloadSpec::CaesarSplit { n } => {
             // layout: n-bit mask, then per-position sign bit (quantized)
@@ -581,6 +626,18 @@ fn validate_payload(spec: &PayloadSpec, bits: usize, bytes: &[u8]) -> Result<(),
             if ones != q {
                 return Err(FrameError::Malformed("split bitmap popcount"));
             }
+            // `rd` now sits at the mixed sign/value section; a second
+            // cursor re-walks the mask in lockstep to tell them apart
+            let mut mask_rd = BitReader::new(bytes);
+            for _ in 0..n {
+                if mask_rd.read_bit() {
+                    let _sign = rd.read_bit();
+                } else {
+                    finite_f32(rd.read_bits(32), "non-finite split value")?;
+                }
+            }
+            finite_f32(rd.read_bits(32), "non-finite split avg_abs")?;
+            finite_f32(rd.read_bits(32), "non-finite split max_abs")?;
         }
         PayloadSpec::Quant { n, bits: qbits, levels } => {
             let expect = n
@@ -591,7 +648,7 @@ fn validate_payload(spec: &PayloadSpec, bits: usize, bytes: &[u8]) -> Result<(),
                 return Err(FrameError::Malformed("quant payload bit length"));
             }
             let mut rd = BitReader::new(bytes);
-            let _norm = rd.read_bits(32);
+            finite_f32(rd.read_bits(32), "non-finite quant norm")?;
             for _ in 0..n {
                 let _sign = rd.read_bit();
                 if rd.read_bits(qbits) > levels as u64 {
@@ -599,6 +656,16 @@ fn validate_payload(spec: &PayloadSpec, bits: usize, bytes: &[u8]) -> Result<(),
                 }
             }
         }
+    }
+    Ok(())
+}
+
+/// Embedded payload f32 finiteness: wire-originated values feed straight
+/// into recovery and aggregation arithmetic, where a NaN/∞ would poison
+/// the global model as silently as a non-finite f64 poisons the clock.
+fn finite_f32(raw: u64, what: &'static str) -> Result<(), FrameError> {
+    if !f32::from_bits(raw as u32).is_finite() {
+        return Err(FrameError::Malformed(what));
     }
     Ok(())
 }
@@ -737,6 +804,7 @@ mod tests {
             dropout_rate: rng.f64() * 0.5,
             heartbeat_s: rng.f64() * 30.0,
             sim_now_s: rng.f64() * 1e4,
+            prior_digest: if rng.below(2) == 0 { None } else { Some(rng.next_u64()) },
             download,
         }
     }
@@ -748,8 +816,12 @@ mod tests {
             1 => WireMsg::JoinAck { device: rng.below(1000), n_devices: 1 + rng.below(1000) },
             2 => WireMsg::Heartbeat { device: rng.below(1000), sim_t_s: rng.f64() * 1e5 },
             3 => WireMsg::StartRound(Box::new(sample_start(rng, n))),
-            4 => WireMsg::EndRound(Box::new(sample_update(rng, n))),
+            4 => WireMsg::EndRound {
+                t: 1 + rng.below(100),
+                update: Box::new(sample_update(rng, n)),
+            },
             5 => WireMsg::Dropout {
+                t: 1 + rng.below(100),
                 device: rng.below(1000),
                 after_s: rng.f64() * 100.0,
                 down_wire_bits: rng.below(1 << 24),
@@ -780,7 +852,11 @@ mod tests {
                 assert_eq!(x.download.bytes, y.download.bytes);
                 assert_eq!(x.rng, y.rng);
             }
-            (WireMsg::EndRound(x), WireMsg::EndRound(y)) => {
+            (
+                WireMsg::EndRound { t: tx, update: x },
+                WireMsg::EndRound { t: ty, update: y },
+            ) => {
+                assert_eq!(tx, ty);
                 assert_eq!(x.device, y.device);
                 let xb: Vec<u32> = x.w_final.iter().map(|v| v.to_bits()).collect();
                 let yb: Vec<u32> = y.w_final.iter().map(|v| v.to_bits()).collect();
@@ -792,10 +868,10 @@ mod tests {
                 assert_eq!(x.cost.total().to_bits(), y.cost.total().to_bits());
             }
             (
-                WireMsg::Dropout { device: x, after_s: ax, down_wire_bits: bx },
-                WireMsg::Dropout { device: y, after_s: ay, down_wire_bits: by },
+                WireMsg::Dropout { t: tx, device: x, after_s: ax, down_wire_bits: bx },
+                WireMsg::Dropout { t: ty, device: y, after_s: ay, down_wire_bits: by },
             ) => {
-                assert_eq!((x, bx), (y, by));
+                assert_eq!((tx, x, bx), (ty, y, by));
                 assert_eq!(ax.to_bits(), ay.to_bits());
             }
             (WireMsg::Finish, WireMsg::Finish) => {}
@@ -876,9 +952,9 @@ mod tests {
     #[test]
     fn version_mismatch_is_a_typed_error() {
         let mut frame = encode_frame(&WireMsg::Finish);
-        frame[4] = 2; // future version, LE low byte
+        frame[4] = VERSION as u8 + 1; // future version, LE low byte
         match decode_frame(&frame) {
-            Err(FrameError::Version { got: 2, want: VERSION }) => {}
+            Err(FrameError::Version { got, want: VERSION }) if got == VERSION + 1 => {}
             other => panic!("expected version error, got {other:?}"),
         }
     }
@@ -921,9 +997,72 @@ mod tests {
         // lie about the bit length: byte/bit disagreement is caught
         upd.upload.bits += 8;
         upd.upload.bytes.push(0);
-        let frame = encode_frame(&WireMsg::EndRound(Box::new(upd)));
+        let frame = encode_frame(&WireMsg::EndRound { t: 1, update: Box::new(upd) });
         match decode_frame(&frame) {
             Err(FrameError::Malformed(_)) => {}
+            other => panic!("expected malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn quant_levels_zero_and_non_finite_values_are_rejected() {
+        // a hostile Quant spec with levels=0 would dequantize to 0/0=NaN
+        let honest = crate::compress::quant::quant_payload(
+            &[1.0f32, -2.0, 3.0, -4.0],
+            3,
+            &mut Rng::new(5),
+        )
+        .0
+        .encode();
+        let mut upd = RoundUpdate {
+            device: 0,
+            w_final: vec![0.0; honest.spec.n()],
+            upload: honest,
+            grad_norm: 1.0,
+            loss: 1.0,
+            down_wire_bits: 10,
+            cost: RoundCost { download_s: 1.0, compute_s: 1.0, upload_s: 1.0 },
+        };
+        if let PayloadSpec::Quant { levels, .. } = &mut upd.upload.spec {
+            *levels = 0;
+        } else {
+            panic!("expected a quant payload");
+        }
+        let frame = encode_frame(&WireMsg::EndRound { t: 1, update: Box::new(upd) });
+        match decode_frame(&frame) {
+            Err(FrameError::Malformed("quant levels must be at least 1")) => {}
+            other => panic!("expected malformed, got {other:?}"),
+        }
+
+        // a dense payload smuggling a NaN value is refused at the frame
+        // boundary instead of poisoning downstream arithmetic
+        let poisoned = Payload::Dense(vec![1.0f32, f32::NAN, 3.0]).encode();
+        let upd = RoundUpdate {
+            device: 0,
+            w_final: vec![0.0; 3],
+            upload: poisoned,
+            grad_norm: 1.0,
+            loss: 1.0,
+            down_wire_bits: 10,
+            cost: RoundCost { download_s: 1.0, compute_s: 1.0, upload_s: 1.0 },
+        };
+        let frame = encode_frame(&WireMsg::EndRound { t: 1, update: Box::new(upd) });
+        match decode_frame(&frame) {
+            Err(FrameError::Malformed("non-finite dense value")) => {}
+            other => panic!("expected malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_round_resolutions_are_rejected() {
+        let frame = encode_frame(&WireMsg::Dropout {
+            t: 0,
+            device: 1,
+            after_s: 0.5,
+            down_wire_bits: 64,
+        });
+        match decode_frame(&frame) {
+            Err(FrameError::Malformed("round numbers are 1-based")) => {}
             other => panic!("expected malformed, got {other:?}"),
         }
     }
@@ -958,6 +1097,7 @@ mod tests {
                 dropout_rate: 0.0,
                 heartbeat_s: 10.0,
                 sim_now_s: 0.0,
+                prior_digest: Some(0xDEAD_BEEF),
                 download: Arc::new(enc.clone()),
             };
             let frame = encode_frame(&WireMsg::StartRound(Box::new(start)));

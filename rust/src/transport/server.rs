@@ -17,9 +17,19 @@
 //! its StartRound, *reconnect-with-rejoin*). Devices still pending at
 //! the wall-clock round deadline are converted to protocol `Dropout`s
 //! (their download traffic is already spent) so one dead device cannot
-//! wedge the run. Between rounds the registry's liveness sweep runs; a
-//! round participant re-Joins on its next kickoff, so eviction is
-//! self-healing for healthy devices.
+//! wedge the run. A resolution frame whose round number is not the open
+//! round (a straggler's EndRound buffered past the deadline conversion)
+//! is refused with [`reject::STALE_ROUND`] and never reaches the engine.
+//!
+//! The registry's liveness sweep (`Engine::sweep_expired`) is exposed as
+//! [`CoordinatorService::sweep_expired`] but NOT run automatically:
+//! under the synchronous barrier, devices only heartbeat while executing
+//! a kickoff, so simulated-time silence is the *normal* state of a
+//! healthy connected non-participant — a blanket sweep would mark such
+//! devices Dropped and inflate dropout diagnostics. In-round stragglers
+//! are already evicted by the deadline conversion above; the explicit
+//! hook is for future asynchronous drivers whose devices heartbeat
+//! continuously.
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -143,10 +153,6 @@ impl<T: Transport> CoordinatorService<T> {
         let mut reached: Option<(usize, f64, f64)> = None;
         for t in 1..=rounds {
             let outcome = self.round_networked(t)?;
-            // liveness sweep between rounds: silent Idle/Training devices
-            // transition to Dropped (self-healing — a healthy participant
-            // re-Joins at its next kickoff)
-            self.server.engine_mut().sweep_expired(self.server.sim_time_s());
             let rec = self.server.observe_round(t, &outcome, &mut reached)?;
             cb(&rec);
             records.push(rec);
@@ -160,6 +166,16 @@ impl<T: Transport> CoordinatorService<T> {
     /// [`run_cb`] without a progress observer.
     pub fn run(&mut self) -> Result<RunResult> {
         self.run_cb(|_| {})
+    }
+
+    /// Evict devices whose last simulated-time heartbeat is stale (see
+    /// the module docs for why this is NOT called automatically: under
+    /// the synchronous barrier only kickoff-executing devices heartbeat,
+    /// so a blanket sweep would misclassify healthy idle devices).
+    /// Returns the evicted device ids.
+    pub fn sweep_expired(&mut self) -> Vec<usize> {
+        let now_s = self.server.sim_time_s();
+        self.server.engine_mut().sweep_expired(now_s)
     }
 
     /// One networked round: kickoff frames out, device frames in until
@@ -226,8 +242,17 @@ impl<T: Transport> CoordinatorService<T> {
                             let _ = conn.send(m);
                         }
                     }
-                    WireMsg::EndRound(update) if update.device == d => {
-                        if self
+                    WireMsg::EndRound { t: ft, update } if update.device == d => {
+                        if ft != t {
+                            // a resolution for a round that already closed
+                            // (e.g. buffered past the deadline conversion):
+                            // refuse it, keep the connection — the device's
+                            // *current*-round resolution may still arrive
+                            if let Some(conn) = self.conns.get_mut(&d) {
+                                let _ = conn
+                                    .send(&WireMsg::Reject { device: d, code: reject::STALE_ROUND });
+                            }
+                        } else if self
                             .server
                             .engine_mut()
                             .external_msg(&mut round, DeviceMsg::EndRound(update))
@@ -250,11 +275,20 @@ impl<T: Transport> CoordinatorService<T> {
                             )?;
                         }
                     }
-                    WireMsg::Dropout { device, after_s, down_wire_bits } if device == d => {
-                        self.server.engine_mut().external_msg(
-                            &mut round,
-                            DeviceMsg::Dropout { device, after_s, down_wire_bits },
-                        )?;
+                    WireMsg::Dropout { t: ft, device, after_s, down_wire_bits }
+                        if device == d =>
+                    {
+                        if ft != t {
+                            if let Some(conn) = self.conns.get_mut(&d) {
+                                let _ = conn
+                                    .send(&WireMsg::Reject { device: d, code: reject::STALE_ROUND });
+                            }
+                        } else {
+                            self.server.engine_mut().external_msg(
+                                &mut round,
+                                DeviceMsg::Dropout { device, after_s, down_wire_bits },
+                            )?;
+                        }
                     }
                     _other => {
                         // a frame this side of the protocol never expects:

@@ -5,7 +5,7 @@
 //! round records to the in-process `Server::run` path. The transport
 //! moves bytes; it never touches the math.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use caesar_fl::config::{CompressionBackend, ExperimentConfig, TrainerBackend};
 use caesar_fl::coordinator::{RunResult, Server};
@@ -162,6 +162,104 @@ fn dropout_lottery_and_heartbeats_are_identical_across_transports() {
     assert_parity("dropout loopback", (&lb.0, &lb.1), (&base.0, &base.1));
     let tcp = run_tcp(&cfg, "caesar", &[1, 3, 5, 0, 2, 4]);
     assert_parity("dropout tcp", (&tcp.0, &tcp.1), (&base.0, &base.1));
+}
+
+#[test]
+fn idle_unselected_devices_are_never_marked_dropped() {
+    // heartbeats well shorter than a round's simulated duration: only
+    // kickoff-executing devices ever heartbeat, so a blanket liveness
+    // sweep between rounds would evict every healthy unselected device
+    // and inflate the dropout diagnostics (the bug this test pins)
+    let mut cfg = tiny_cfg(3);
+    cfg.engine.heartbeat_s = 0.5;
+    let (srv, _result) = run_loopback(&cfg, "caesar", &[0, 1, 2, 3, 4, 5]);
+    assert_eq!(srv.engine().stats().dropouts, 0, "no device dropped out");
+    // the registry only hears from selected participants, so a device the
+    // lottery never picked legitimately stays Offline — but nobody may
+    // end the run Training or Dropped
+    let (offline, idle, training, dropped) = srv.engine().registry().census();
+    assert_eq!((training, dropped), (0, 0), "healthy devices must not end Dropped");
+    assert_eq!(offline + idle, N_DEVICES);
+}
+
+/// A [`Conn`] whose receive side stays silent until a wall-clock gate
+/// passes — the deterministic stand-in for a device whose kickoff sits
+/// in a delivery queue past the round deadline.
+struct GatedConn {
+    inner: caesar_fl::transport::LoopbackConn,
+    gate: Instant,
+}
+
+impl Conn for GatedConn {
+    fn send(&mut self, msg: &WireMsg) -> Result<(), TransportError> {
+        self.inner.send(msg)
+    }
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<WireMsg>, TransportError> {
+        if Instant::now() < self.gate {
+            std::thread::sleep(timeout.min(Duration::from_millis(10)));
+            return Ok(None);
+        }
+        self.inner.recv_timeout(timeout)
+    }
+    fn peer(&self) -> String {
+        self.inner.peer()
+    }
+}
+
+/// The high-severity stale-round scenario: a straggler sleeps through
+/// round 1's deadline (the coordinator converts it to a synthesized
+/// Dropout), then wakes and executes BOTH buffered kickoffs. Its late
+/// round-1 EndRound must be refused as stale — not folded into round 2 —
+/// and its round-2 EndRound must be accepted, with the prior-digest
+/// handshake resyncing the recovery prior (the coordinator holds no
+/// local for it; the client retains one from its late round-1 run).
+#[test]
+fn a_straggler_past_the_deadline_is_refused_stale_and_recovers_next_round() {
+    let mut cfg = tiny_cfg(2);
+    cfg.alpha = 1.0; // every device participates in both rounds
+    let server = Server::new(cfg.clone(), schemes::by_name("caesar").unwrap()).unwrap();
+    let hub = LoopbackHub::new();
+    let dialer = hub.dialer();
+    let mut svc = CoordinatorService::new(server, hub);
+    svc.round_timeout = Duration::from_secs(2);
+    let gate = Instant::now() + Duration::from_secs(3);
+    let mut handles = Vec::new();
+    for d in 0..N_DEVICES {
+        let dialer = dialer.clone();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = DeviceClient::new(cfg, d).unwrap();
+            let end = if d == 3 {
+                let mut conn = GatedConn { inner: dialer.connect().unwrap(), gate };
+                client.run(&mut conn).unwrap()
+            } else {
+                let mut conn = dialer.connect().unwrap();
+                client.run(&mut conn).unwrap()
+            };
+            (d, end, client.stats)
+        }));
+    }
+    svc.wait_for_devices(N_DEVICES, Duration::from_secs(30)).unwrap();
+    let result = svc.run().unwrap();
+    assert_eq!(result.records.len(), 2);
+    for h in handles {
+        let (d, end, stats) = h.join().unwrap();
+        assert_eq!(end, SessionEnd::Finished, "device {d}");
+        if d == 3 {
+            // it executed both kickoffs late; exactly the round-1
+            // resolution was refused as stale
+            assert_eq!(stats.rounds, 2, "straggler executed both rounds");
+            assert_eq!(stats.stale_rejects, 1, "late round-1 EndRound refused");
+        } else {
+            assert_eq!(stats.rounds, 2, "device {d}");
+            assert_eq!(stats.stale_rejects, 0, "device {d}");
+        }
+    }
+    let srv = svc.into_server();
+    // round 1 dropped the straggler (once) and round 2 accepted it
+    assert_eq!(srv.engine().stats().dropouts, 1);
+    assert_eq!(srv.engine().registry().dropouts(3), 1);
+    assert_eq!(srv.engine().registry().completions(3), 1);
 }
 
 /// A [`Conn`] that kills itself after a budgeted number of sends — the
