@@ -38,7 +38,12 @@ require_keys BENCH_engine.json bench task trainer host_workers cases \
   seq_encode_calls_per_round encode_cache encode_requests_per_round \
   encode_calls_per_round encode_reduction \
   pool trainer_builds builds_reduction \
-  cross_round_cache cache_cross_round_hits
+  cross_round_cache cache_cross_round_hits \
+  selection_scale keys rank sort_ms_per_call radix_ms_per_call \
+  select_speedup radix_warm_alloc_bytes_per_call knee_keys \
+  tree_agg groups chunk fold_baseline_ms stream_ms tree_ms \
+  stream_reduce_alloc_bytes tree_reduce_alloc_bytes \
+  stream_peak_delta_bytes tree_peak_delta_bytes max_chunk_len
 require_keys BENCH_wire.json bench n_params codec_cases recovery aggregation \
   recover_ms recover_into_ms recover_alloc_bytes_per_call \
   recover_into_alloc_bytes_per_call dense_ms sparse_ms speedup
@@ -89,6 +94,15 @@ echo "== bench_engine smoke =="
   cd "$smoke_dir"
   CAESAR_BENCH_QUICK=1 cargo bench \
     --manifest-path "$OLDPWD/Cargo.toml" --bench bench_engine
+)
+
+echo "== bench_compress smoke =="
+# codec micro-benches, including the radix-vs-sort threshold-select case
+# (writes nothing, but stay in the temp dir like the other smokes)
+(
+  cd "$smoke_dir"
+  CAESAR_BENCH_QUICK=1 cargo bench \
+    --manifest-path "$OLDPWD/Cargo.toml" --bench bench_compress
 )
 
 echo "== bench_transport smoke =="

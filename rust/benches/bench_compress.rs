@@ -3,7 +3,10 @@
 //! the L3 per-participant work on every round's critical path.
 
 use caesar_fl::bench::Bench;
-use caesar_fl::compress::{caesar_compress, caesar_recover, quantize_stochastic, topk_sparsify};
+use caesar_fl::compress::{
+    abs_sort_keys, caesar_compress, caesar_recover, quantize_stochastic, select_threshold,
+    topk_sparsify,
+};
 use caesar_fl::util::rng::Rng;
 
 fn randn(n: usize, seed: u64) -> Vec<f32> {
@@ -40,6 +43,23 @@ fn main() {
                 std::hint::black_box(topk_sparsify(std::hint::black_box(&g), ratio));
             });
         }
+    }
+
+    // threshold selection underneath topk/caesar: O(n) radix select vs
+    // the old sort-order select_nth_unstable, on identical u32 keys
+    let b = Bench::new("threshold select (rank = 0.99·n)").quick();
+    for &n in &sizes {
+        let g = randn(n, 8);
+        let rank = ((n as f64 * 0.99) as usize).min(n - 1);
+        b.case(&format!("radix n={n}"), n, || {
+            std::hint::black_box(select_threshold(std::hint::black_box(&g), rank));
+        });
+        let mut keys: Vec<u32> = Vec::new();
+        b.case(&format!("sort n={n}"), n, || {
+            abs_sort_keys(std::hint::black_box(&g), &mut keys);
+            let (_, kth, _) = keys.select_nth_unstable(rank);
+            std::hint::black_box(*kth);
+        });
     }
 
     let b = Bench::new("quantize_stochastic (4 bits)").quick();

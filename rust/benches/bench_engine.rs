@@ -24,17 +24,30 @@
 //! over R rounds), and `cross_round_cache` records the generation-keyed
 //! encode reuse across rounds whose model never moved.
 //!
+//! Two hot-path cases cover the million-scale selection/aggregation work:
+//! `selection_scale` races the O(n) radix threshold select against the
+//! old sort-order `select_nth_unstable` across key counts (asserting
+//! bit-identical thresholds and a zero-allocation warm path, recording
+//! the knee where radix overtakes), and `tree_agg` times the fixed-shape
+//! tree reduction (streaming vs parallel pairwise — asserted
+//! bit-identical) against a flat left-fold reference, reporting
+//! reduce-phase allocation and live-bytes peak via the counting
+//! allocator and asserting chunk-sharded buffers stay below chunk size.
+//!
 //! Results are written to BENCH_engine.json in the current directory.
 //! Quick mode: CAESAR_BENCH_QUICK=1 (fewer rounds, skips the 10k scale).
 
 use std::time::Instant;
 
+use caesar_fl::compress::{abs_sort_keys, select_threshold};
 use caesar_fl::config::{CompressionBackend, ExperimentConfig, TrainerBackend};
 use caesar_fl::coordinator::Server;
+use caesar_fl::engine::{reduce_shards_parallel, AggregatorShard, ShardReducer};
 use caesar_fl::fleet::FleetKind;
 use caesar_fl::schemes;
 use caesar_fl::util::alloc_count::{self, CountingAlloc};
 use caesar_fl::util::json::{self, Json};
+use caesar_fl::util::rng::Rng;
 use caesar_fl::util::threadpool::workers;
 
 #[global_allocator]
@@ -198,6 +211,164 @@ fn main() {
         cst.download_requests, cst.download_encodes, cst.cache_cross_round_hits
     );
 
+    // --- radix selection case (ISSUE 7): the per-participant Top-K /
+    // quantile threshold comes from an O(n) MSB-first radix select over
+    // the u32 abs-sort keys instead of a sort-order select_nth_unstable.
+    // Both paths see identical keys: the thresholds must be bit-identical,
+    // and the warm radix path must allocate nothing (pooled key buffer).
+    let sel_sizes: &[usize] =
+        if quick { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000, 1_000_000] };
+    println!("\n== bench: threshold selection (radix vs select_nth_unstable) ==");
+    println!("{:>10}  {:>14}  {:>14}  {:>8}", "keys", "sort ms/call", "radix ms/call", "speedup");
+    let mut sel_rows: Vec<Json> = Vec::new();
+    let mut knee: Option<usize> = None;
+    let mut sel_rng = Rng::new(0x5E1E);
+    for &n in sel_sizes {
+        let g: Vec<f32> = (0..n).map(|_| sel_rng.normal() as f32).collect();
+        let rank = ((n as f64 * 0.99) as usize).min(n - 1);
+        let iters = (4_000_000 / n).clamp(4, 400);
+
+        // sort-order baseline on the same keys, buffer reused like the
+        // pre-radix hot path did
+        let mut keys: Vec<u32> = Vec::new();
+        abs_sort_keys(&g, &mut keys);
+        let (_, kth, _) = keys.select_nth_unstable(rank);
+        let sort_thr = f32::from_bits(*kth);
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            abs_sort_keys(&g, &mut keys);
+            let (_, kth, _) = keys.select_nth_unstable(rank);
+            std::hint::black_box(*kth);
+        }
+        let sort_ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+
+        // radix path: one warm-up call sizes the pooled buffer, then the
+        // warm path must be allocation-free
+        let radix_thr = select_threshold(&g, rank);
+        assert_eq!(
+            radix_thr.to_bits(),
+            sort_thr.to_bits(),
+            "radix select must match select_nth_unstable bit-for-bit at n={n}"
+        );
+        let a0 = alloc_count::snapshot();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(select_threshold(std::hint::black_box(&g), rank));
+        }
+        let radix_ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+        let warm = alloc_count::snapshot().since(&a0);
+        assert_eq!(
+            warm.bytes, 0,
+            "warm radix select must reuse the pooled key buffer \
+             ({} bytes over {iters} calls at n={n})",
+            warm.bytes
+        );
+
+        if knee.is_none() && radix_ms <= sort_ms {
+            knee = Some(n);
+        }
+        println!("{n:>10}  {sort_ms:>14.4}  {radix_ms:>14.4}  {:>7.2}x", sort_ms / radix_ms);
+        let mut row = Json::obj();
+        row.set("keys", json::num(n as f64))
+            .set("rank", json::num(rank as f64))
+            .set("sort_ms_per_call", json::num(sort_ms))
+            .set("radix_ms_per_call", json::num(radix_ms))
+            .set("select_speedup", json::num(sort_ms / radix_ms))
+            .set(
+                "radix_warm_alloc_bytes_per_call",
+                json::num(warm.bytes as f64 / iters as f64),
+            );
+        sel_rows.push(row);
+    }
+    match knee {
+        Some(n) => println!("knee: radix overtakes the sort path at {n} keys"),
+        None => println!("knee: not reached on these sizes (sort path still ahead)"),
+    }
+
+    // --- tree aggregation case (ISSUE 7): group partial sums combine up
+    // a fixed-shape binary tree. The streaming reducer and the pairwise
+    // parallel executor walk the SAME tree, so their sums must be
+    // bit-identical; with chunk-sharding on, no reduction buffer reaches
+    // model size (asserted via max_chunk_len). The flat left fold is a
+    // timing reference only — the tree owns the canonical bit pattern.
+    let agg_n = if quick { 20_000 } else { 200_000 };
+    let agg_groups = 64usize;
+    let agg_chunk = 4_096usize;
+    let mut agg_rng = Rng::new(0xA66);
+    let group_updates: Vec<Vec<f32>> = (0..agg_groups)
+        .map(|_| (0..agg_n).map(|_| agg_rng.normal() as f32).collect())
+        .collect();
+    let build_shards = || -> Vec<AggregatorShard> {
+        group_updates
+            .iter()
+            .enumerate()
+            .map(|(g, u)| {
+                let mut s = AggregatorShard::with_chunk(g, agg_n, agg_chunk, vec![g]);
+                s.fold(g, u, 1.0);
+                s
+            })
+            .collect()
+    };
+
+    let t0 = Instant::now();
+    let mut flat = vec![0.0f64; agg_n];
+    for u in &group_updates {
+        for (a, &x) in flat.iter_mut().zip(u) {
+            *a += x as f64;
+        }
+    }
+    std::hint::black_box(&flat);
+    let fold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    drop(flat);
+
+    // streaming reducer (what round_inner drives): reduce phase only —
+    // shards are prebuilt, so alloc/peak deltas isolate the combine work
+    let shards = build_shards();
+    let a0 = alloc_count::snapshot();
+    alloc_count::reset_peak();
+    let live0 = alloc_count::live_bytes();
+    let t0 = Instant::now();
+    let mut red = ShardReducer::with_chunk(agg_n, agg_groups, agg_chunk);
+    for s in shards {
+        red.push(s).unwrap();
+    }
+    let (stream_sum, stream_folded) = red.finish().unwrap();
+    let stream_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let stream_alloc = alloc_count::snapshot().since(&a0);
+    let stream_peak_delta = alloc_count::peak_bytes().saturating_sub(live0);
+
+    // parallel pairwise execution of the same tree
+    let shards = build_shards();
+    let a0 = alloc_count::snapshot();
+    alloc_count::reset_peak();
+    let live0 = alloc_count::live_bytes();
+    let t0 = Instant::now();
+    let (tree_sum, tree_folded) =
+        reduce_shards_parallel(agg_n, agg_groups, agg_chunk, shards, par_workers).unwrap();
+    let tree_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let tree_alloc = alloc_count::snapshot().since(&a0);
+    let tree_peak_delta = alloc_count::peak_bytes().saturating_sub(live0);
+
+    assert_eq!(stream_folded, tree_folded);
+    assert!(
+        stream_sum.iter().zip(tree_sum.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "parallel tree execution must be bit-identical to the streaming reducer"
+    );
+    assert!(
+        stream_sum.max_chunk_len() <= agg_chunk,
+        "chunk-sharded reduction must not hold a model-sized buffer \
+         (chunk {} > {agg_chunk})",
+        stream_sum.max_chunk_len()
+    );
+    println!(
+        "\n== bench: tree aggregation ({agg_groups} groups x {agg_n} params, chunk {agg_chunk}) ==\n\
+         {fold_ms:>10.2} ms flat fold (reference)  {stream_ms:>8.2} ms streaming  \
+         {tree_ms:>8.2} ms tree x{par_workers}\n\
+         reduce-phase alloc: {:.0} B streaming / {:.0} B tree; \
+         peak delta: {stream_peak_delta} B streaming / {tree_peak_delta} B tree",
+        stream_alloc.bytes as f64, tree_alloc.bytes as f64
+    );
+
     let mut out = Json::obj();
     out.set("bench", json::s("engine_round"))
         .set("task", json::s("har"))
@@ -251,6 +422,27 @@ fn main() {
         .set("download_encodes", json::num(cst.download_encodes as f64))
         .set("cache_cross_round_hits", json::num(cst.cache_cross_round_hits as f64));
     out.set("cross_round_cache", cross_row);
+    let mut sel = Json::obj();
+    sel.set("cases", Json::Arr(sel_rows)).set(
+        "knee_keys",
+        knee.map(|n| json::num(n as f64)).unwrap_or(Json::Null),
+    );
+    out.set("selection_scale", sel);
+    let mut agg_row = Json::obj();
+    agg_row
+        .set("n_params", json::num(agg_n as f64))
+        .set("groups", json::num(agg_groups as f64))
+        .set("chunk", json::num(agg_chunk as f64))
+        .set("workers", json::num(par_workers as f64))
+        .set("fold_baseline_ms", json::num(fold_ms))
+        .set("stream_ms", json::num(stream_ms))
+        .set("tree_ms", json::num(tree_ms))
+        .set("stream_reduce_alloc_bytes", json::num(stream_alloc.bytes as f64))
+        .set("tree_reduce_alloc_bytes", json::num(tree_alloc.bytes as f64))
+        .set("stream_peak_delta_bytes", json::num(stream_peak_delta as f64))
+        .set("tree_peak_delta_bytes", json::num(tree_peak_delta as f64))
+        .set("max_chunk_len", json::num(stream_sum.max_chunk_len() as f64));
+    out.set("tree_agg", agg_row);
     std::fs::write("BENCH_engine.json", out.to_string()).expect("write BENCH_engine.json");
     println!("wrote BENCH_engine.json");
 }

@@ -15,7 +15,6 @@
 //! exactly; the parity integration test pins all three implementations.
 
 use crate::util::bitio::{BitReader, BitWriter};
-use crate::util::pool;
 
 /// A compressed global model as produced by the PS for one device.
 #[derive(Clone, Debug, PartialEq)]
@@ -122,16 +121,9 @@ pub fn quant_threshold(w: &[f32], ratio: f64) -> f32 {
     if k == 0 || n == 0 {
         return -1.0;
     }
-    // |w| is non-negative, so the IEEE-754 bit pattern orders exactly like
-    // the float value — integer-keyed selection avoids the branchy float
-    // comparator (≈2x faster at 1M elements; see EXPERIMENTS.md §Perf).
-    // Keys come from the branch-free 8-wide `compress::abs_sort_keys`
-    // transform into pooled per-thread scratch, not a per-call allocation.
-    let mut abs = pool::u32_buf();
-    super::abs_sort_keys(w, &mut abs);
-    let idx = k.min(n) - 1;
-    let (_, kth, _) = abs.select_nth_unstable(idx);
-    f32::from_bits(*kth)
+    // rank lookup via the O(n) radix select that owns the tie contract:
+    // the k-th smallest |w| is the value at ascending rank k - 1
+    super::select_threshold(w, k.min(n) - 1)
 }
 
 /// Compress `w` with quantized-fraction `ratio` (mirrors the L1 kernel).

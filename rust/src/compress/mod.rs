@@ -22,15 +22,18 @@
 
 pub mod caesar_model;
 pub mod quant;
+pub mod select;
 pub mod topk;
 pub mod traffic;
 
 pub use caesar_model::{caesar_compress, caesar_recover, CompressedModel};
 pub use quant::{quantize_floor, quantize_stochastic};
+pub use select::{radix_select_kth, select_threshold};
 pub use topk::{topk_encode, topk_sparsify};
 
-/// Branch-free |x| → sortable-u32 transform feeding the threshold
-/// selections ([`topk::keep_threshold`], [`caesar_model::quant_threshold`]).
+/// Branch-free |x| → sortable-u32 transform feeding the radix threshold
+/// selection ([`select::select_threshold`], behind both
+/// [`topk::keep_threshold`] and [`caesar_model::quant_threshold`]).
 ///
 /// For non-negative IEEE-754 floats the bit pattern orders exactly like
 /// the value, and clearing the sign bit IS |x| (for every input,

@@ -1,0 +1,259 @@
+//! O(n) threshold selection: MSB-first radix select over |x| sort keys.
+//!
+//! Both threshold selections in the codebase — `topk::keep_threshold`
+//! (upload sparsification, §4.2) and `caesar_model::quant_threshold`
+//! (download split, §4.1) — reduce to the same primitive: *the |x| value
+//! at a given ascending rank*. This module is that primitive's single
+//! owner; the callers only differ in how they map `ratio` to a rank and
+//! in which side of the threshold they act on.
+//!
+//! **The tie contract, stated once.** [`select_threshold`] returns the
+//! value a full ascending sort of the `abs_sort_keys` u32 keys would
+//! place at index `rank` — exactly what `select_nth_unstable` returned
+//! before (property-pinned below, including NaN payloads, ±0 and
+//! subnormals, which the sign-mask key transform orders totally). Equal
+//! |x| values have identical keys, so *which* of several tied elements
+//! lands on the rank is unobservable: the threshold is a value, and the
+//! inclusive/exclusive handling of elements AT the threshold belongs to
+//! the callers (`topk_encode` keeps `|g| >= thr`; `caesar_compress`
+//! quantizes `|w| <= thr`).
+//!
+//! **Why radix.** `select_nth_unstable` is expected O(n) but
+//! partition-based: data-dependent branches, O(n) writes per recursion
+//! level, and adversarial inputs degrade it. The selector here is a
+//! counting select over 8-bit digits, most-significant first:
+//!
+//! ```text
+//!   pass 1: histogram the top byte (256 counters on the stack),
+//!           walk the counters to find the bucket holding rank k,
+//!           compact that bucket's keys to the front of the buffer;
+//!   pass 2..4: recurse on the next byte within the shrunken bucket.
+//! ```
+//!
+//! Each pass is a branch-free sequential sweep (one shift/mask and one
+//! counter bump per key), at most 4 passes total, and passes 2..4 run
+//! over ever-smaller survivor sets — for gradient-like data the top
+//! byte (sign-cleared exponent + leading mantissa bit) already splits
+//! ~256 ways, so the expected work is ~1.1 sweeps of n. Two early
+//! exits: a bucket holding exactly one candidate IS the answer (fetched
+//! with one filtered scan, no further passes), and the final byte pass
+//! needs no compaction at all. No allocation: the histogram lives on
+//! the stack and compaction is in place in the caller's (pooled) key
+//! buffer.
+
+use crate::util::pool;
+
+/// The key at ascending rank `idx` among `keys[..]`, as a full sort
+/// would place it. O(n) counting select, MSB-first over 8-bit digits;
+/// the prefix of `keys` is permuted (it is scratch, like
+/// `select_nth_unstable`'s reordering). Panics if `idx >= keys.len()`.
+pub fn radix_select_kth(keys: &mut [u32], idx: usize) -> u32 {
+    assert!(idx < keys.len(), "rank {idx} out of range ({} keys)", keys.len());
+    let mut len = keys.len();
+    let mut rank = idx;
+    let mut prefix: u32 = 0;
+    for shift in [24u32, 16, 8, 0] {
+        let mut hist = [0usize; 256];
+        for &k in &keys[..len] {
+            hist[((k >> shift) & 0xff) as usize] += 1;
+        }
+        // find the digit bucket containing the rank
+        let mut digit = 0usize;
+        let mut below = 0usize;
+        loop {
+            let c = hist[digit];
+            if below + c > rank {
+                break;
+            }
+            below += c;
+            digit += 1;
+        }
+        rank -= below;
+        let digit = digit as u32;
+        prefix |= digit << shift;
+        if shift == 0 {
+            // all 32 bits resolved: the key is the digit path itself
+            return prefix;
+        }
+        if hist[digit as usize] == 1 {
+            // the bucket holds exactly one candidate — it IS the rank-th
+            // key; fetch it and skip the remaining passes
+            return keys[..len]
+                .iter()
+                .copied()
+                .find(|k| (k >> shift) & 0xff == digit)
+                .expect("histogram counted a key the scan cannot find");
+        }
+        // compact the surviving bucket to the front, preserving order
+        // (order within the bucket is irrelevant to the result; the
+        // stable sweep just keeps the pass branch-predictable)
+        let mut w = 0usize;
+        for r in 0..len {
+            let k = keys[r];
+            if (k >> shift) & 0xff == digit {
+                keys[w] = k;
+                w += 1;
+            }
+        }
+        len = w;
+        debug_assert!(rank < len, "rank escaped its bucket");
+    }
+    unreachable!("the shift-0 pass always returns")
+}
+
+/// The |·| threshold at ascending rank `rank` of `g` — the single entry
+/// point behind `topk::keep_threshold` and
+/// `caesar_model::quant_threshold`. Builds sort keys with the 8-wide
+/// branch-free [`super::abs_sort_keys`] transform into pooled per-thread
+/// scratch (zero model-sized allocation on the warm path) and radix
+/// selects in place. Panics if `rank >= g.len()`; callers own their
+/// `ratio → rank` clamping.
+pub fn select_threshold(g: &[f32], rank: usize) -> f32 {
+    let mut keys = pool::u32_buf();
+    super::abs_sort_keys(g, &mut keys);
+    f32::from_bits(radix_select_kth(&mut keys, rank))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen_vec_f32, Config};
+    use crate::util::rng::Rng;
+
+    /// The reference the radix path must match bit-for-bit.
+    fn sort_select(keys: &[u32], idx: usize) -> u32 {
+        let mut v = keys.to_vec();
+        let (_, &mut k, _) = v.select_nth_unstable(idx);
+        k
+    }
+
+    fn check_all_ranks(keys: &[u32]) {
+        for idx in 0..keys.len() {
+            let mut scratch = keys.to_vec();
+            assert_eq!(
+                radix_select_kth(&mut scratch, idx),
+                sort_select(keys, idx),
+                "rank {idx} of {keys:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn small_tails_every_rank() {
+        // n < 8 exercises sub-chunk sizes end to end
+        check_all_ranks(&[7]);
+        check_all_ranks(&[3, 3]);
+        check_all_ranks(&[5, 1, 4, 1, 5, 9, 2]);
+        check_all_ranks(&[u32::MAX, 0, u32::MAX, 0, 1]);
+    }
+
+    #[test]
+    fn all_equal_keys() {
+        check_all_ranks(&[0x3f80_0000; 17]);
+        check_all_ranks(&[0; 9]);
+    }
+
+    #[test]
+    fn duplicates_straddling_the_rank() {
+        // runs of duplicates positioned so the k-th element sits inside,
+        // at the start of, and at the end of a tie run
+        let mut keys = Vec::new();
+        for v in [10u32, 10, 10, 20, 20, 20, 20, 30, 30] {
+            keys.push(v << 20); // ties decided in the FIRST digit pass
+            keys.push(v); // ties that survive to the LAST digit pass
+        }
+        check_all_ranks(&keys);
+    }
+
+    #[test]
+    fn extreme_ranks_and_early_exit_buckets() {
+        let mut rng = Rng::new(0x5E1E);
+        // spread keys across distinct top bytes so hist[digit] == 1
+        // triggers the unique-candidate early exit, plus a dense cluster
+        // that forces full 4-pass resolution
+        let mut keys: Vec<u32> = (0..64).map(|i| (i as u32) << 24 | rng.below(4096) as u32).collect();
+        keys.extend([0x00AB_CD00u32; 40]);
+        keys.push(0x00AB_CD01);
+        check_all_ranks(&keys);
+        // k = 0 and k = n-1 explicitly
+        let mut s = keys.clone();
+        assert_eq!(radix_select_kth(&mut s, 0), *keys.iter().min().unwrap());
+        let mut s = keys.clone();
+        assert_eq!(radix_select_kth(&mut s, keys.len() - 1), *keys.iter().max().unwrap());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rank_n_is_rejected() {
+        radix_select_kth(&mut [1, 2, 3], 3);
+    }
+
+    #[test]
+    fn adversarial_floats_through_the_key_transform() {
+        // NaN (largest keys), infinities, ±0 (equal keys), subnormals —
+        // the sign-mask transform totally orders all of them, and radix
+        // must agree with sort-select on every rank
+        let g = [
+            0.0f32,
+            -0.0,
+            f32::NAN,
+            -f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            1.0e-40, // subnormal
+            -1.0e-44,
+            1.5,
+            -1.5,
+            f32::MAX,
+        ];
+        let mut keys = Vec::new();
+        super::super::abs_sort_keys(&g, &mut keys);
+        check_all_ranks(&keys);
+        // and the f32-facing entry agrees bit-for-bit
+        for rank in 0..g.len() {
+            let thr = select_threshold(&g, rank);
+            assert_eq!(thr.to_bits(), sort_select(&keys, rank), "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn prop_radix_matches_select_nth_unstable() {
+        forall(
+            Config { cases: 96, seed: 0x5E1EC7 },
+            |rng, size| {
+                // sizes straddling the 8-wide key-transform chunks; a mix
+                // of smooth gradients and quantized (tie-heavy) values
+                // gen_vec_f32 picks a length in 1..=bound, so sizes
+                // straddle the 8-wide key-transform chunks on their own
+                let bound = (size * 3 + rng.below(9)).max(1);
+                let mut g = gen_vec_f32(rng, bound, 1.0);
+                if rng.below(2) == 0 {
+                    for x in &mut g {
+                        *x = (*x * 4.0).round() / 4.0; // heavy ties
+                    }
+                }
+                let rank = rng.below(g.len());
+                (g, rank)
+            },
+            |(g, rank)| {
+                let mut keys = Vec::new();
+                super::super::abs_sort_keys(g, &mut keys);
+                let want = sort_select(&keys, *rank);
+                let got = radix_select_kth(&mut keys.clone(), *rank);
+                if got != want {
+                    return Err(format!(
+                        "rank {} of n={}: radix {got:#010x} != sort {want:#010x}",
+                        rank,
+                        g.len()
+                    ));
+                }
+                if select_threshold(g, *rank).to_bits() != want {
+                    return Err("select_threshold disagrees with raw radix".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -9,7 +9,6 @@
 //! is its densified view kept for the kernel-parity pins and callers that
 //! want an aggregation-ready dense vector.
 
-use crate::util::pool;
 use crate::wire::Payload;
 
 /// Sparse result of a Top-K pass.
@@ -30,21 +29,19 @@ impl SparseGrad {
 
 /// The |g| threshold at-or-above which elements are kept.
 /// Returns (threshold, drop_count).
+///
+/// Delegates the rank lookup to [`super::select_threshold`] — the O(n)
+/// radix select that owns the tie contract — at ascending rank
+/// `drop.min(n - 1)`: the smallest surviving |g| when `drop < n`, the
+/// global max when everything drops (then nothing can exceed it anyway,
+/// and `topk_encode` short-circuits on `drop >= n`).
 pub fn keep_threshold(g: &[f32], ratio: f64) -> (f32, usize) {
     let n = g.len();
     let drop = (ratio * n as f64).floor() as usize;
     if n == 0 {
         return (0.0, 0);
     }
-    // non-negative f32 orders by bit pattern — integer selection is ~2x
-    // faster than the float comparator (EXPERIMENTS.md §Perf). Keys come
-    // from the branch-free 8-wide transform in `compress::abs_sort_keys`
-    // into pooled per-thread scratch, not a per-call allocation.
-    let mut abs = pool::u32_buf();
-    super::abs_sort_keys(g, &mut abs);
-    let idx = drop.min(n - 1);
-    let (_, v, _) = abs.select_nth_unstable(idx);
-    (f32::from_bits(*v), drop)
+    (super::select_threshold(g, drop.min(n - 1)), drop)
 }
 
 /// One-pass Top-K encode: runs the threshold selection once and emits the

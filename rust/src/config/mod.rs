@@ -37,6 +37,14 @@ pub struct EngineConfig {
     /// precisely because this does NOT depend on `workers`; changing it
     /// changes last-bit rounding (like changing batch order would).
     pub agg_group: usize,
+    /// Elements per aggregation *chunk* — partial sums are stored as
+    /// runs of this many f64s (rounded up to a power of two) so no
+    /// single reduction buffer is model-sized and chunk storage recycles
+    /// through the pool. `0` disables chunk-sharding (one flat buffer
+    /// per partial sum). Bit-transparent, unlike `agg_group`: chunking
+    /// only splits storage, never the element order or arithmetic, so
+    /// any value produces identical model bits.
+    pub agg_chunk: usize,
     /// Per-device probability of vanishing mid-round (0 disables).
     pub dropout_rate: f64,
     /// Simulated device heartbeat interval in seconds (<= 0 disables
@@ -46,7 +54,13 @@ pub struct EngineConfig {
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { workers: 1, agg_group: 8, dropout_rate: 0.0, heartbeat_s: 10.0 }
+        EngineConfig {
+            workers: 1,
+            agg_group: 8,
+            agg_chunk: 65_536,
+            dropout_rate: 0.0,
+            heartbeat_s: 10.0,
+        }
     }
 }
 
@@ -225,6 +239,9 @@ impl ExperimentConfig {
         if let Some(v) = args.get_usize("agg-group") {
             self.engine.agg_group = v.max(1);
         }
+        if let Some(v) = args.get_usize("agg-chunk") {
+            self.engine.agg_chunk = v;
+        }
         if let Some(v) = args.get_f64("dropout") {
             self.engine.dropout_rate = v.clamp(0.0, 1.0);
         }
@@ -316,15 +333,19 @@ mod tests {
     #[test]
     fn engine_overrides_apply_and_clamp() {
         let args = Args::parse(
-            "x engine-workers=4 agg-group=16 dropout=1.5 heartbeat=2.5"
+            "x engine-workers=4 agg-group=16 agg-chunk=1024 dropout=1.5 heartbeat=2.5"
                 .split_whitespace()
                 .map(String::from),
         );
         let c = ExperimentConfig::preset("har").apply_overrides(&args);
         assert_eq!(c.engine.workers, 4);
         assert_eq!(c.engine.agg_group, 16);
+        assert_eq!(c.engine.agg_chunk, 1024);
         assert_eq!(c.engine.dropout_rate, 1.0); // clamped to a probability
         assert_eq!(c.engine.heartbeat_s, 2.5);
+        // agg-chunk=0 is a valid setting: chunk-sharding off
+        let off = Args::parse("x agg-chunk=0".split_whitespace().map(String::from));
+        assert_eq!(ExperimentConfig::preset("har").apply_overrides(&off).engine.agg_chunk, 0);
         // zero workers clamps up to 1
         let z = Args::parse("x engine-workers=0".split_whitespace().map(String::from));
         assert_eq!(ExperimentConfig::preset("har").apply_overrides(&z).engine.workers, 1);

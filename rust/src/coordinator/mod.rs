@@ -462,7 +462,9 @@ impl Server {
         // --- global aggregation: w ← w − mean(ḡ) over completers (§2.1) ---
         if completers > 0 {
             let inv = 1.0 / completers as f64;
-            for (w, a) in self.global.iter_mut().zip(&agg) {
+            // agg is chunk-sharded; iteration yields ascending elements,
+            // bit-identical to the flat vector it replaced
+            for (w, a) in self.global.iter_mut().zip(agg.iter()) {
                 *w -= (a * inv) as f32;
             }
             // the model moved: downloads encoded for the old version are

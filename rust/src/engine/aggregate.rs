@@ -1,9 +1,10 @@
-//! Streaming, sharded, *order-exact* aggregation.
+//! Streaming, sharded, *order-exact* hierarchical aggregation.
 //!
 //! Floating-point addition is not associative, so a parallel sum is only
 //! bit-identical to a sequential one if both evaluate the SAME reduction
-//! tree. The engine therefore fixes a canonical tree up front, independent
-//! of how many workers execute it:
+//! tree. The engine therefore fixes a canonical tree up front, whose
+//! shape depends on nothing but the group count — never on worker count
+//! or arrival order:
 //!
 //! 1. participants are sorted by device id and chunked into groups of
 //!    `agg_group` (a config constant — never derived from worker count);
@@ -11,26 +12,150 @@
 //!    in sorted order, folding each device's update the moment it is
 //!    produced (the update vector is then dropped — at most one update
 //!    per worker is ever alive);
-//! 3. the [`ShardReducer`] folds finished shards into the global sum in
-//!    ascending group order, buffering the occasional shard that finishes
-//!    early.
+//! 3. group partial sums combine pairwise up a **fixed-shape binary
+//!    tree**: level 0 is the groups in ascending order, and each level
+//!    pairs positions `(2i, 2i+1)` — the lower position is always the
+//!    LEFT addend — with a lone trailing node promoted unchanged. The
+//!    shape (and therefore every node's value) is a pure function of
+//!    `n_groups`, so *any* execution of the tree produces the same bits:
+//!    the [`ShardReducer`] executes it streaming (combining the moment
+//!    both children of a node exist, buffering at most O(log G) partial
+//!    nodes), and [`reduce_shards_parallel`] executes it level-by-level
+//!    with pairwise combines fanned over scoped threads. Bit-identical
+//!    by construction — pinned in tests here and in `engine_parity`.
 //!
-//! Any worker count — including 1, the sequential driver — walks this
-//! exact tree, which is what the `engine_parity` integration test pins.
+//! Partial sums are [`ChunkedSum`]s: the model vector chunk-sharded into
+//! fixed power-of-two runs (`EngineConfig::agg_chunk`), so no single
+//! reduction buffer is model-sized and chunk storage recycles through
+//! `util::pool`'s chunk free list. Chunking is bit-transparent — element
+//! order and per-element arithmetic are untouched; only the backing
+//! storage is split.
+//!
+//! NOTE (history): through PR 6 the canonical order was a left fold over
+//! groups. The fixed tree replaces it as THE canonical order — for
+//! `n_groups <= 3` the two are the same association, beyond that this is
+//! a last-bit rounding change of exactly the kind the `agg_group` config
+//! docs already reserve. Every engine path shares this one reducer, so
+//! all cross-path parity pins (worker counts, transports, external
+//! rounds) are unchanged.
 
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 use anyhow::{anyhow, Result};
 
 use crate::compress::quant;
+use crate::util::{pool, threadpool};
 use crate::wire::{CaesarSlot, EncodedPayload, Payload, PayloadView};
+
+/// An f64 accumulator over `n` elements, stored as fixed-size chunks so
+/// no single allocation is model-sized. Logical element `i` lives at
+/// `chunks[i >> shift][i & mask]` — the chunk length is a power of two,
+/// so sparse folds stay one shift + one mask away from a flat vector.
+///
+/// Bit-transparent by construction: every operation touches the same
+/// elements with the same f64 ops in the same order as its flat-vector
+/// equivalent. Chunk storage is leased from `util::pool`'s chunk free
+/// list and recycled on drop.
+#[derive(Debug)]
+pub struct ChunkedSum {
+    chunks: Vec<Vec<f64>>,
+    /// log2 of the chunk length.
+    shift: u32,
+    n: usize,
+}
+
+impl ChunkedSum {
+    /// A zeroed sum over `n` elements in chunks of `chunk_len` (rounded
+    /// up to a power of two; `0` means unchunked — one buffer, the
+    /// pre-chunking layout).
+    pub fn new(n: usize, chunk_len: usize) -> ChunkedSum {
+        let chunk = if n == 0 || chunk_len == 0 || chunk_len >= n {
+            n.next_power_of_two().max(1)
+        } else {
+            chunk_len.next_power_of_two()
+        };
+        let mut chunks = Vec::with_capacity(n.div_ceil(chunk));
+        let mut remaining = n;
+        while remaining > 0 {
+            let len = remaining.min(chunk);
+            chunks.push(pool::f64_chunk(len));
+            remaining -= len;
+        }
+        ChunkedSum { chunks, shift: chunk.trailing_zeros(), n }
+    }
+
+    /// Logical element count.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Largest backing allocation, in elements — the bound the
+    /// chunk-sharding acceptance criterion asserts on.
+    pub fn max_chunk_len(&self) -> usize {
+        self.chunks.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Sparse accumulate: `self[i] += v`.
+    #[inline]
+    pub fn add(&mut self, i: usize, v: f64) {
+        let mask = (1usize << self.shift) - 1;
+        self.chunks[i >> self.shift][i & mask] += v;
+    }
+
+    /// Dense accumulate: `self[i] += xs[i]` for all `i`, in ascending
+    /// element order — the exact per-element op sequence of the flat
+    /// `zip` fold it replaces.
+    pub fn zip_add(&mut self, mut xs: impl Iterator<Item = f64>) {
+        for c in &mut self.chunks {
+            for s in c.iter_mut() {
+                *s += xs.next().expect("zip_add iterator shorter than the sum");
+            }
+        }
+        debug_assert!(xs.next().is_none(), "zip_add iterator longer than the sum");
+    }
+
+    /// Pairwise tree combine: `self[i] += other[i]`. Consumes `other`,
+    /// whose chunks recycle to the pool. Both sides must share the chunk
+    /// layout (the engine derives it from one config knob).
+    pub fn merge(&mut self, other: ChunkedSum) {
+        assert_eq!(self.n, other.n, "merge length mismatch");
+        assert_eq!(self.shift, other.shift, "merge chunk-layout mismatch");
+        for (a, b) in self.chunks.iter_mut().zip(&other.chunks) {
+            for (x, &y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+    }
+
+    /// Elements in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = f64> + '_ {
+        self.chunks.iter().flat_map(|c| c.iter().copied())
+    }
+
+    pub fn to_vec(&self) -> Vec<f64> {
+        self.iter().collect()
+    }
+}
+
+impl Drop for ChunkedSum {
+    fn drop(&mut self) {
+        for c in self.chunks.drain(..) {
+            pool::recycle_f64_chunk(c);
+        }
+    }
+}
 
 /// Weighted f64 partial sum over one group of devices. Devices must be
 /// folded in the (sorted) order fixed at construction.
 #[derive(Debug)]
 pub struct AggregatorShard {
     group: usize,
-    sum: Vec<f64>,
+    sum: ChunkedSum,
     /// Device ids this shard expects, ascending.
     expect: Vec<usize>,
     /// Position of the next expected device.
@@ -40,9 +165,29 @@ pub struct AggregatorShard {
 }
 
 impl AggregatorShard {
+    /// Unchunked shard (one model-sized buffer) — see
+    /// [`AggregatorShard::with_chunk`] for the sharded layout.
     pub fn new(group: usize, n_params: usize, expect: Vec<usize>) -> AggregatorShard {
+        Self::with_chunk(group, n_params, 0, expect)
+    }
+
+    /// Shard whose partial sum is chunk-sharded into `chunk_len`-element
+    /// runs (`0` = unchunked). Chunking is bit-transparent; every shard
+    /// and reducer of a round must share one `chunk_len`.
+    pub fn with_chunk(
+        group: usize,
+        n_params: usize,
+        chunk_len: usize,
+        expect: Vec<usize>,
+    ) -> AggregatorShard {
         debug_assert!(expect.windows(2).all(|w| w[0] < w[1]), "expect must be sorted");
-        AggregatorShard { group, sum: vec![0.0; n_params], expect, cursor: 0, folded: 0 }
+        AggregatorShard {
+            group,
+            sum: ChunkedSum::new(n_params, chunk_len),
+            expect,
+            cursor: 0,
+            folded: 0,
+        }
     }
 
     pub fn group(&self) -> usize {
@@ -70,9 +215,7 @@ impl AggregatorShard {
     pub fn fold(&mut self, device: usize, update: &[f32], weight: f64) {
         self.advance(device, "device");
         assert_eq!(update.len(), self.sum.len(), "update length mismatch");
-        for (s, &x) in self.sum.iter_mut().zip(update) {
-            *s += (x as f64) * weight;
-        }
+        self.sum.zip_add(update.iter().map(|&x| (x as f64) * weight));
         self.folded += 1;
     }
 
@@ -89,26 +232,25 @@ impl AggregatorShard {
         assert_eq!(payload.n(), self.sum.len(), "payload length mismatch");
         match payload {
             Payload::Dense(values) => {
-                for (s, &x) in self.sum.iter_mut().zip(values) {
-                    *s += (x as f64) * weight;
-                }
+                self.sum.zip_add(values.iter().map(|&x| (x as f64) * weight));
             }
             Payload::TopK { indices, values, .. } => {
                 for (&i, &v) in indices.iter().zip(values) {
-                    self.sum[i as usize] += (v as f64) * weight;
+                    self.sum.add(i as usize, (v as f64) * weight);
                 }
             }
             Payload::Quant { levels, norm, codes, .. } => {
-                for (s, &c) in self.sum.iter_mut().zip(codes) {
-                    *s += (quant::dequantize_code(c, *levels, *norm) as f64) * weight;
-                }
+                self.sum.zip_add(
+                    codes
+                        .iter()
+                        .map(|&c| (quant::dequantize_code(c, *levels, *norm) as f64) * weight),
+                );
             }
             // downloads-only codec; accepted for completeness via the
             // prior-free densification
             Payload::CaesarSplit(cm) => {
-                for (s, &x) in self.sum.iter_mut().zip(&cm.naive_reconstruction()) {
-                    *s += (x as f64) * weight;
-                }
+                self.sum
+                    .zip_add(cm.naive_reconstruction().iter().map(|&x| (x as f64) * weight));
             }
         }
         self.folded += 1;
@@ -124,10 +266,11 @@ impl AggregatorShard {
     pub fn fold_encoded(&mut self, device: usize, enc: &EncodedPayload, weight: f64) {
         self.advance(device, "device");
         assert_eq!(enc.spec.n(), self.sum.len(), "payload length mismatch");
+        let sum = &mut self.sum;
         match enc.view() {
-            PayloadView::Dense(v) => v.for_each(|i, x| self.sum[i] += (x as f64) * weight),
-            PayloadView::TopK(v) => v.for_each(|i, x| self.sum[i] += (x as f64) * weight),
-            PayloadView::Quant(v) => v.for_each(|i, x| self.sum[i] += (x as f64) * weight),
+            PayloadView::Dense(v) => v.for_each(|i, x| sum.add(i, (x as f64) * weight)),
+            PayloadView::TopK(v) => v.for_each(|i, x| sum.add(i, (x as f64) * weight)),
+            PayloadView::Quant(v) => v.for_each(|i, x| sum.add(i, (x as f64) * weight)),
             // downloads-only codec; accepted for completeness — streams
             // the same prior-free reconstruction fold_payload densifies
             PayloadView::CaesarSplit(v) => {
@@ -137,7 +280,7 @@ impl AggregatorShard {
                         CaesarSlot::Kept(val) => val,
                         CaesarSlot::Sign(sign) => sign as f32 * avg_abs,
                     };
-                    self.sum[i] += (x as f64) * weight;
+                    sum.add(i, (x as f64) * weight);
                 });
             }
         }
@@ -155,31 +298,67 @@ impl AggregatorShard {
     }
 }
 
-/// Folds [`AggregatorShard`]s into the global sum in ascending group
-/// order, regardless of the (nondeterministic) order they finish in.
+/// Width of tree level `level` (level 0 = the `n_groups` leaves).
+fn level_width(n_groups: usize, level: u32) -> usize {
+    // ceil(n_groups / 2^level); level never exceeds ~log2(n_groups) + 1
+    // because the walk stops at width 1
+    (n_groups + ((1usize << level) - 1)) >> level
+}
+
+/// Executes the canonical fixed-shape reduction tree *streaming*: shards
+/// arrive in any order, each combine fires the moment both children of a
+/// node exist, and at most O(log n_groups) partial nodes are buffered.
+/// The tree shape — and therefore the output bits — depends only on
+/// `n_groups`; [`reduce_shards_parallel`] executes the identical tree
+/// with its pairwise combines fanned over threads.
 #[derive(Debug)]
 pub struct ShardReducer {
-    total: Vec<f64>,
-    next_group: usize,
+    n_params: usize,
     n_groups: usize,
-    pending: BTreeMap<usize, AggregatorShard>,
+    chunk_len: usize,
+    /// Leaf groups accepted so far (duplicate/range detection).
+    seen: Vec<bool>,
+    n_seen: usize,
+    /// Partial tree nodes waiting for their sibling, keyed by
+    /// `(level, position)`.
+    pending: BTreeMap<(u32, usize), ChunkedSum>,
     folded_devices: usize,
+    /// High-water mark of simultaneously buffered nodes (diagnostics;
+    /// O(log n_groups) by the streaming invariant).
+    peak_pending: usize,
 }
 
 impl ShardReducer {
+    /// Unchunked reducer — see [`ShardReducer::with_chunk`].
     pub fn new(n_params: usize, n_groups: usize) -> ShardReducer {
+        Self::with_chunk(n_params, n_groups, 0)
+    }
+
+    /// Reducer over chunk-sharded partial sums; `chunk_len` must match
+    /// the shards' (`0` = unchunked).
+    pub fn with_chunk(n_params: usize, n_groups: usize, chunk_len: usize) -> ShardReducer {
         ShardReducer {
-            total: vec![0.0; n_params],
-            next_group: 0,
+            n_params,
             n_groups,
+            chunk_len,
+            seen: vec![false; n_groups],
+            n_seen: 0,
             pending: BTreeMap::new(),
             folded_devices: 0,
+            peak_pending: 0,
         }
     }
 
-    /// Accept a finished shard; folds immediately if it is the next group
-    /// in canonical order, otherwise buffers it (bounded by the number of
-    /// in-flight workers in practice).
+    /// High-water mark of buffered partial nodes so far.
+    pub fn peak_pending(&self) -> usize {
+        self.peak_pending
+    }
+
+    /// Accept a finished shard: validate it, then bubble it up the fixed
+    /// tree, combining with every sibling already present. Invariant:
+    /// `pending` never holds two nodes that could combine — the arriving
+    /// node's bubble path performs every combine its arrival enables —
+    /// so once all leaves arrived, `pending` is exactly the root.
     pub fn push(&mut self, shard: AggregatorShard) -> Result<()> {
         if !shard.complete() {
             return Err(anyhow!("group {} shard pushed incomplete", shard.group()));
@@ -187,32 +366,136 @@ impl ShardReducer {
         if shard.group() >= self.n_groups {
             return Err(anyhow!("group {} out of range ({})", shard.group(), self.n_groups));
         }
-        if shard.group() < self.next_group || self.pending.contains_key(&shard.group()) {
+        if self.seen[shard.group()] {
             return Err(anyhow!("group {} reduced twice", shard.group()));
         }
-        self.pending.insert(shard.group(), shard);
-        while let Some(s) = self.pending.remove(&self.next_group) {
-            for (t, x) in self.total.iter_mut().zip(&s.sum) {
-                *t += x;
+        self.seen[shard.group()] = true;
+        self.n_seen += 1;
+        self.folded_devices += shard.folded;
+        let AggregatorShard { group, sum, .. } = shard;
+
+        let mut level = 0u32;
+        let mut pos = group;
+        let mut node = sum;
+        loop {
+            let width = level_width(self.n_groups, level);
+            if width <= 1 {
+                // node contains every leaf: it is the root
+                debug_assert_eq!(pos, 0);
+                self.pending.insert((level, 0), node);
+                break;
             }
-            self.folded_devices += s.folded;
-            self.next_group += 1;
+            let sib = pos ^ 1;
+            if sib >= width {
+                // lone trailing node: promote unchanged
+                level += 1;
+                pos >>= 1;
+                continue;
+            }
+            match self.pending.remove(&(level, sib)) {
+                Some(other) => {
+                    // the LOWER position is always the left addend
+                    let (mut left, right) =
+                        if pos < sib { (node, other) } else { (other, node) };
+                    left.merge(right);
+                    node = left;
+                    level += 1;
+                    pos >>= 1;
+                }
+                None => {
+                    self.pending.insert((level, pos), node);
+                    break;
+                }
+            }
         }
+        self.peak_pending = self.peak_pending.max(self.pending.len());
         Ok(())
     }
 
     /// Finish: every group must have reduced. Returns the canonical sum
     /// and the number of device updates inside it.
-    pub fn finish(self) -> Result<(Vec<f64>, usize)> {
-        if self.next_group != self.n_groups {
+    pub fn finish(mut self) -> Result<(ChunkedSum, usize)> {
+        if self.n_seen != self.n_groups {
             return Err(anyhow!(
                 "aggregation incomplete: {}/{} groups reduced",
-                self.next_group,
+                self.n_seen,
                 self.n_groups
             ));
         }
-        Ok((self.total, self.folded_devices))
+        if self.n_groups == 0 {
+            return Ok((ChunkedSum::new(self.n_params, self.chunk_len), 0));
+        }
+        debug_assert_eq!(self.pending.len(), 1, "streaming tree left extra partial nodes");
+        let (_, root) = self
+            .pending
+            .pop_first()
+            .ok_or_else(|| anyhow!("reduction tree lost its root"))?;
+        Ok((root, self.folded_devices))
     }
+}
+
+/// Execute the canonical reduction tree level-synchronously, pairwise
+/// combines fanned over `n_workers` scoped threads. Exactly the tree
+/// [`ShardReducer`] evaluates streaming — level `l` pairs positions
+/// `(2i, 2i+1)`, lower position on the left, lone trailing node promoted
+/// — so the result is bit-identical to a streaming reduction of the same
+/// shards at ANY worker count (`n_workers <= 1` runs the pairing loop
+/// inline). Validation matches [`ShardReducer::push`]/`finish`: shards
+/// must be complete and cover every group exactly once.
+pub fn reduce_shards_parallel(
+    n_params: usize,
+    n_groups: usize,
+    chunk_len: usize,
+    mut shards: Vec<AggregatorShard>,
+    n_workers: usize,
+) -> Result<(ChunkedSum, usize)> {
+    if shards.len() != n_groups {
+        return Err(anyhow!(
+            "aggregation incomplete: {}/{} groups reduced",
+            shards.len(),
+            n_groups
+        ));
+    }
+    if n_groups == 0 {
+        return Ok((ChunkedSum::new(n_params, chunk_len), 0));
+    }
+    shards.sort_by_key(AggregatorShard::group);
+    let mut folded_devices = 0usize;
+    let mut nodes: Vec<ChunkedSum> = Vec::with_capacity(n_groups);
+    for (g, shard) in shards.into_iter().enumerate() {
+        if !shard.complete() {
+            return Err(anyhow!("group {} shard pushed incomplete", shard.group()));
+        }
+        if shard.group() >= n_groups {
+            return Err(anyhow!("group {} out of range ({n_groups})", shard.group()));
+        }
+        if shard.group() != g {
+            return Err(anyhow!("group {} reduced twice", shard.group()));
+        }
+        folded_devices += shard.folded;
+        let AggregatorShard { sum, .. } = shard;
+        nodes.push(sum);
+    }
+    while nodes.len() > 1 {
+        // hand each (left, right) pair to exactly one worker via a
+        // take-once slot; order is restored by scope_map's indexed output
+        let mut pairs: Vec<Mutex<Option<(ChunkedSum, Option<ChunkedSum>)>>> =
+            Vec::with_capacity(nodes.len().div_ceil(2));
+        let mut it = nodes.into_iter();
+        while let Some(left) = it.next() {
+            pairs.push(Mutex::new(Some((left, it.next()))));
+        }
+        nodes = threadpool::scope_map(pairs.len(), n_workers, |i| {
+            let (mut left, right) =
+                pairs[i].lock().unwrap().take().expect("tree pair executed twice");
+            if let Some(right) = right {
+                left.merge(right);
+            }
+            left
+        });
+    }
+    let root = nodes.pop().ok_or_else(|| anyhow!("reduction tree lost its root"))?;
+    Ok((root, folded_devices))
 }
 
 #[cfg(test)]
@@ -220,12 +503,66 @@ mod tests {
     use super::*;
 
     fn shard_of(group: usize, devices: &[usize], vals: &[f32]) -> AggregatorShard {
-        let mut s = AggregatorShard::new(group, vals.len(), devices.to_vec());
+        shard_of_chunked(group, devices, vals, 0)
+    }
+
+    fn shard_of_chunked(
+        group: usize,
+        devices: &[usize],
+        vals: &[f32],
+        chunk: usize,
+    ) -> AggregatorShard {
+        let mut s = AggregatorShard::with_chunk(group, vals.len(), chunk, devices.to_vec());
         for &d in devices {
             let update: Vec<f32> = vals.iter().map(|&v| v + d as f32).collect();
             s.fold(d, &update, 1.0);
         }
         s
+    }
+
+    #[test]
+    fn chunked_sum_is_bit_transparent() {
+        use crate::util::rng::Rng;
+        let n = 137; // prime: chunks never line up with the length
+        let mut rng = Rng::new(0xC4 + 7);
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let ys: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut flat = vec![0.0f64; n];
+        for (i, (&x, &y)) in xs.iter().zip(&ys).enumerate() {
+            flat[i] += x;
+            flat[i] += y * 0.37;
+        }
+        for chunk in [0, 1, 4, 16, 64, 200] {
+            let mut cs = ChunkedSum::new(n, chunk);
+            assert_eq!(cs.len(), n);
+            for (i, &x) in xs.iter().enumerate() {
+                cs.add(i, x);
+            }
+            cs.zip_add(ys.iter().map(|&y| y * 0.37));
+            let got = cs.to_vec();
+            for (a, b) in got.iter().zip(&flat) {
+                assert_eq!(a.to_bits(), b.to_bits(), "chunk={chunk}");
+            }
+            if chunk != 0 && chunk < n {
+                assert!(
+                    cs.max_chunk_len() <= chunk.next_power_of_two(),
+                    "chunk={chunk} max={}",
+                    cs.max_chunk_len()
+                );
+            }
+        }
+        // merge is the same elementwise add
+        let mut a = ChunkedSum::new(n, 16);
+        a.zip_add(xs.iter().copied());
+        let mut b = ChunkedSum::new(n, 16);
+        b.zip_add(ys.iter().map(|&y| y * 0.37));
+        a.merge(b);
+        for (g, w) in a.iter().zip(&flat) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        // empty sums are fine
+        let e = ChunkedSum::new(0, 8);
+        assert!(e.is_empty() && e.to_vec().is_empty());
     }
 
     #[test]
@@ -236,7 +573,8 @@ mod tests {
                 let devices = [g * 2, g * 2 + 1];
                 r.push(shard_of(g, &devices, &[0.5, -1.25, 3.0])).unwrap();
             }
-            r.finish().unwrap()
+            let (total, n) = r.finish().unwrap();
+            (total.to_vec(), n)
         };
         let (a, na) = mk(&[0, 1, 2]);
         let (b, nb) = mk(&[2, 0, 1]);
@@ -247,13 +585,113 @@ mod tests {
     }
 
     #[test]
+    fn tree_bits_are_pinned_by_group_count_alone() {
+        // every arrival order, every chunking, and the parallel executor
+        // at several worker counts must agree bit-for-bit
+        let vals = [0.1f32, -2.7, 3.14159, 1e-6, -4.2e3];
+        for n_groups in [1usize, 2, 3, 4, 5, 7, 8] {
+            let build = |chunk: usize| -> Vec<AggregatorShard> {
+                (0..n_groups)
+                    .map(|g| shard_of_chunked(g, &[g * 3, g * 3 + 2], &vals, chunk))
+                    .collect()
+            };
+            let stream = |order: &[usize], chunk: usize| {
+                let mut shards: Vec<Option<AggregatorShard>> =
+                    build(chunk).into_iter().map(Some).collect();
+                let mut r = ShardReducer::with_chunk(vals.len(), n_groups, chunk);
+                for &g in order {
+                    r.push(shards[g].take().unwrap()).unwrap();
+                }
+                r.finish().unwrap().0.to_vec()
+            };
+            let asc: Vec<usize> = (0..n_groups).collect();
+            let desc: Vec<usize> = (0..n_groups).rev().collect();
+            let scrambled: Vec<usize> =
+                (0..n_groups).map(|i| (i * 5 + 3) % n_groups).collect();
+            let want = stream(&asc, 0);
+            assert_eq!(stream(&desc, 0), want, "G={n_groups} desc");
+            if scrambled.iter().collect::<std::collections::BTreeSet<_>>().len() == n_groups {
+                assert_eq!(stream(&scrambled, 0), want, "G={n_groups} scrambled");
+            }
+            // chunking must not move a single bit
+            let chunked = stream(&asc, 2);
+            assert_eq!(
+                chunked.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "G={n_groups} chunked"
+            );
+            // parallel pairwise execution of the same tree
+            for workers in [1usize, 2, 3, 8] {
+                for chunk in [0usize, 2] {
+                    let (root, folded) = reduce_shards_parallel(
+                        vals.len(),
+                        n_groups,
+                        chunk,
+                        build(chunk),
+                        workers,
+                    )
+                    .unwrap();
+                    assert_eq!(folded, n_groups * 2);
+                    assert_eq!(
+                        root.to_vec(),
+                        want,
+                        "G={n_groups} workers={workers} chunk={chunk}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_trees_match_the_historical_left_fold() {
+        // for n_groups <= 3 the fixed tree IS the old left fold:
+        // ((g0+g1)+g2) — pin that the restructure kept those bits
+        for n_groups in [1usize, 2, 3] {
+            let shards: Vec<AggregatorShard> = (0..n_groups)
+                .map(|g| shard_of(g, &[g], &[0.3f32, -7.25, 1e-3]))
+                .collect();
+            let mut fold = vec![0.0f64; 3];
+            for s in &shards {
+                for (t, x) in fold.iter_mut().zip(s.sum.iter()) {
+                    *t += x;
+                }
+            }
+            let mut r = ShardReducer::new(3, n_groups);
+            for s in shards {
+                r.push(s).unwrap();
+            }
+            let got = r.finish().unwrap().0.to_vec();
+            assert_eq!(
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                fold.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_buffers_at_most_log_groups() {
+        let n_groups = 64;
+        // worst friendly case: ascending arrival — pending tracks the
+        // binary-carry pattern, peaking at popcount(63) = 6
+        let mut r = ShardReducer::new(1, n_groups);
+        for g in 0..n_groups {
+            r.push(shard_of(g, &[g], &[1.0])).unwrap();
+        }
+        assert!(r.peak_pending() <= 7, "peak {}", r.peak_pending());
+        let (total, folded) = r.finish().unwrap();
+        assert_eq!(folded, n_groups);
+        // 64 shards of (1.0 + g): sum = 64 + sum(0..64)
+        assert_eq!(total.to_vec(), vec![64.0 + (63.0 * 64.0) / 2.0]);
+    }
+
+    #[test]
     fn shard_enforces_fold_order() {
         let mut s = AggregatorShard::new(0, 2, vec![3, 9]);
         s.fold(3, &[1.0, 1.0], 1.0);
         s.fold(9, &[1.0, 1.0], 2.0);
         assert!(s.complete());
         assert_eq!(s.folded(), 2);
-        assert_eq!(s.sum, vec![3.0, 3.0]);
+        assert_eq!(s.sum.to_vec(), vec![3.0, 3.0]);
     }
 
     #[test]
@@ -271,7 +709,7 @@ mod tests {
         s.fold(5, &[10.0, 20.0], 1.0);
         assert!(s.complete());
         assert_eq!(s.folded(), 2);
-        assert_eq!(s.sum, vec![11.0, 22.0]);
+        assert_eq!(s.sum.to_vec(), vec![11.0, 22.0]);
     }
 
     #[test]
@@ -283,13 +721,32 @@ mod tests {
         assert!(r.push(shard_of(0, &[0], &[1.0])).is_err()); // duplicate
         let r2 = ShardReducer::new(1, 2);
         assert!(r2.finish().is_err()); // nothing reduced
+
+        // the parallel executor enforces the same contract
+        assert!(reduce_shards_parallel(1, 2, 0, vec![shard_of(0, &[0], &[1.0])], 2).is_err());
+        assert!(reduce_shards_parallel(
+            1,
+            2,
+            0,
+            vec![shard_of(0, &[0], &[1.0]), shard_of(0, &[0], &[1.0])],
+            2
+        )
+        .is_err());
+        assert!(reduce_shards_parallel(
+            1,
+            1,
+            0,
+            vec![AggregatorShard::new(0, 1, vec![0, 1])],
+            2
+        )
+        .is_err());
     }
 
     #[test]
     fn weight_scales_contributions() {
         let mut s = AggregatorShard::new(0, 1, vec![0]);
         s.fold(0, &[2.0], 0.25);
-        assert_eq!(s.sum, vec![0.5]);
+        assert_eq!(s.sum.to_vec(), vec![0.5]);
     }
 
     #[test]
@@ -303,8 +760,9 @@ mod tests {
             .collect();
         let expect: Vec<usize> = (0..6).collect();
         let mut dense_shard = AggregatorShard::new(0, n, expect.clone());
-        let mut payload_shard = AggregatorShard::new(0, n, expect.clone());
-        let mut encoded_shard = AggregatorShard::new(0, n, expect);
+        // the chunked payload/encoded folds must match the flat dense fold
+        let mut payload_shard = AggregatorShard::with_chunk(0, n, 64, expect.clone());
+        let mut encoded_shard = AggregatorShard::with_chunk(0, n, 64, expect);
         for (d, g) in grads.iter().enumerate() {
             // alternate codecs to cover every fold_payload arm
             let payload = match d % 3 {
@@ -325,7 +783,8 @@ mod tests {
             encoded_shard.fold_encoded(d, &enc, 0.7);
         }
         assert!(dense_shard.complete() && payload_shard.complete() && encoded_shard.complete());
-        for ((a, b), c) in dense_shard.sum.iter().zip(&payload_shard.sum).zip(&encoded_shard.sum)
+        for ((a, b), c) in
+            dense_shard.sum.iter().zip(payload_shard.sum.iter()).zip(encoded_shard.sum.iter())
         {
             assert_eq!(a.to_bits(), b.to_bits());
             assert_eq!(a.to_bits(), c.to_bits());
@@ -341,10 +800,10 @@ mod tests {
         let w: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
         let enc = Payload::CaesarSplit(caesar_compress(&w, 0.4)).encode();
         let mut a = AggregatorShard::new(0, n, vec![0]);
-        let mut b = AggregatorShard::new(0, n, vec![0]);
+        let mut b = AggregatorShard::with_chunk(0, n, 32, vec![0]);
         a.fold_payload(0, &enc.decode(), 1.3);
         b.fold_encoded(0, &enc, 1.3);
-        for (x, y) in a.sum.iter().zip(&b.sum) {
+        for (x, y) in a.sum.iter().zip(b.sum.iter()) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
     }

@@ -40,9 +40,10 @@
 //! * per-device randomness comes from pure [`Rng::stream`] keys
 //!   `(base, t, device)` — no shared generator is advanced;
 //! * devices execute in sorted-device-id order within fixed-size groups
-//!   (`EngineConfig::agg_group`), and group partial sums reduce in group
-//!   order ([`aggregate`]) — the same f64 reduction tree regardless of
-//!   which thread runs what, when;
+//!   (`EngineConfig::agg_group`), and group partial sums combine up a
+//!   fixed-shape binary tree whose shape is a function of the group
+//!   count alone ([`aggregate`]) — the same f64 reduction tree
+//!   regardless of which thread runs what, when;
 //! * coordinator-side application (traffic, locals, tracker) happens in
 //!   sorted order after the round drains.
 //!
@@ -65,7 +66,7 @@ pub mod cache;
 pub mod message;
 pub mod registry;
 
-pub use aggregate::{AggregatorShard, ShardReducer};
+pub use aggregate::{reduce_shards_parallel, AggregatorShard, ChunkedSum, ShardReducer};
 pub use cache::DownloadCache;
 pub use message::{DeviceMsg, DroppedDevice, Event, RoundUpdate, StartRound};
 pub use registry::{DeviceStatus, Registry};
@@ -283,8 +284,10 @@ impl ExternalRound {
 
 /// What one executed round hands back to the driver.
 pub struct RoundOutput {
-    /// Canonical f64 sum of the (weighted) device updates.
-    pub agg: Vec<f64>,
+    /// Canonical f64 sum of the (weighted) device updates, chunk-sharded
+    /// per `EngineConfig::agg_chunk` (iterate or `to_vec` it; chunking
+    /// never changes the bits).
+    pub agg: ChunkedSum,
     /// Completed device rounds, sorted by device id.
     pub updates: Vec<RoundUpdate>,
     /// Devices that vanished mid-round, sorted by device id.
@@ -408,7 +411,7 @@ impl Engine {
         let n_groups = groups.len();
         let ecfg = *cfg;
 
-        let mut reducer = ShardReducer::new(n_params, n_groups);
+        let mut reducer = ShardReducer::with_chunk(n_params, n_groups, cfg.agg_chunk);
         let mut updates: Vec<RoundUpdate> = Vec::with_capacity(order.len());
         let mut dropped: Vec<DroppedDevice> = Vec::new();
         let mut worker_err: Option<anyhow::Error> = None;
@@ -653,8 +656,13 @@ impl Engine {
     /// and return the same [`RoundOutput`] the in-process path produces.
     /// The fold replays [`round_inner`]'s exact reduction tree — expected
     /// ids chunked into `agg_group`-sized [`AggregatorShard`]s walked in
-    /// ascending order, shards reduced in group order — so a fixed seed
-    /// gives bit-identical `agg` regardless of message arrival order.
+    /// ascending order, shard sums combined up the fixed-shape binary
+    /// tree — so a fixed seed gives bit-identical `agg` regardless of
+    /// message arrival order. With `workers > 1` both the shard builds
+    /// (stream-folding each group's serialized uploads) and the pairwise
+    /// tree combines fan out over scoped threads; the tree shape is a
+    /// function of the group count alone, so the bits match the serial
+    /// walk at any worker count.
     pub fn finish_external(&mut self, round: ExternalRound) -> Result<RoundOutput> {
         if self.phase != Phase::Round(round.t) {
             return Err(anyhow!("finish_external outside round {}", round.t));
@@ -671,29 +679,35 @@ impl Engine {
         dropped.sort_by_key(|d| d.device);
 
         let group = self.cfg.agg_group.max(1);
+        let chunk = self.cfg.agg_chunk;
         let groups: Vec<&[usize]> = expected.chunks(group).collect();
-        let mut reducer = ShardReducer::new(n_params, groups.len());
-        let mut next_update = 0usize;
-        for (g, members) in groups.iter().enumerate() {
-            let mut shard = AggregatorShard::new(g, n_params, members.to_vec());
-            for &d in *members {
-                // updates/dropped are sorted by device and each expected id
-                // resolved exactly once, so a linear cursor matches the walk
-                if next_update < updates.len() && updates[next_update].device == d {
-                    shard.fold_encoded(d, &updates[next_update].upload, 1.0);
-                    next_update += 1;
+        let workers = threadpool::workers(self.cfg.workers.max(1));
+        // updates are sorted by device and each expected id resolved
+        // exactly once, so every group locates its updates independently
+        // — the builds are embarrassingly parallel and deterministic
+        let updates_ref: &[RoundUpdate] = &updates;
+        let groups_ref: &[&[usize]] = &groups;
+        let shards = threadpool::scope_map(groups.len(), workers, |g| {
+            let members = groups_ref[g];
+            let mut shard = AggregatorShard::with_chunk(g, n_params, chunk, members.to_vec());
+            let mut next = updates_ref.partition_point(|u| u.device < members[0]);
+            for &d in members {
+                if next < updates_ref.len() && updates_ref[next].device == d {
+                    shard.fold_encoded(d, &updates_ref[next].upload, 1.0);
+                    next += 1;
                 } else {
                     shard.mark_dropped(d);
                 }
             }
-            reducer.push(shard)?;
-        }
+            shard
+        });
 
         self.stats.download_requests = self.cache.requests();
         self.stats.download_encodes = self.cache.encodes();
         self.stats.cache_cross_round_hits = self.cache.cross_round_hits();
 
-        let (agg, folded) = reducer.finish()?;
+        let (agg, folded) =
+            aggregate::reduce_shards_parallel(n_params, groups.len(), chunk, shards, workers)?;
         if folded != updates.len() {
             return Err(anyhow!(
                 "aggregation folded {folded} updates but {} EndRound messages arrived",
@@ -757,7 +771,8 @@ fn execute_group(
     cache: &DownloadCache,
 ) -> Result<Vec<Event>> {
     let expect: Vec<usize> = members.iter().map(|&i| items[i].plan.device).collect();
-    let mut shard = AggregatorShard::new(group, env.global.len(), expect);
+    let mut shard =
+        AggregatorShard::with_chunk(group, env.global.len(), ecfg.agg_chunk, expect);
     let mut events = Vec::new();
     for &i in members {
         run_device(env, &items[i], ecfg, trainer, codec, cache, &mut events, &mut shard)?;
@@ -984,7 +999,7 @@ mod tests {
         let exec = ExecutorHandle::Inline(Trainer::native("har"));
         let out = e.execute_round(&env, &[], &exec).unwrap();
         assert!(out.updates.is_empty() && out.dropped.is_empty());
-        assert_eq!(out.agg, vec![0.0f64; 4]);
+        assert_eq!(out.agg.to_vec(), vec![0.0f64; 4]);
         assert_eq!(e.phase(), Phase::Standby);
         assert_eq!(e.stats().rounds, 1);
         // inline executor: exactly one trainer for the whole run
@@ -1027,7 +1042,7 @@ mod tests {
         // canonical order restored regardless of arrival order
         assert_eq!(out.updates.iter().map(|u| u.device).collect::<Vec<_>>(), vec![0, 1]);
         assert_eq!(out.dropped.iter().map(|d| d.device).collect::<Vec<_>>(), vec![2]);
-        assert_eq!(out.agg, vec![11.0, 22.0, 33.0]);
+        assert_eq!(out.agg.to_vec(), vec![11.0, 22.0, 33.0]);
         assert_eq!(e.phase(), Phase::Standby);
         assert_eq!(e.stats().rounds, 1);
         assert_eq!(e.stats().dropouts, 1);

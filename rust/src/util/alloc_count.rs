@@ -21,34 +21,53 @@
 //!
 //! Counters are process-wide relaxed atomics: cheap enough to leave on,
 //! exact for single-threaded sections, and a faithful total across
-//! threads (ordering between threads is irrelevant for sums). Only
-//! fresh requests are counted (`alloc`, `alloc_zeroed`, and the growth
-//! portion of `realloc`); frees are not tracked — the metric is traffic,
-//! not residency.
+//! threads (ordering between threads is irrelevant for sums). Two
+//! metrics are kept:
+//!
+//! * **traffic** — fresh requests only (`alloc`, `alloc_zeroed`, and the
+//!   growth portion of `realloc`); frees are not subtracted. Read via
+//!   [`snapshot`]/[`AllocSnapshot::since`].
+//! * **residency** — [`live_bytes`] tracks outstanding bytes
+//!   (allocations minus frees) and [`peak_bytes`] its high-water mark
+//!   since the last [`reset_peak`]. This is what the `tree_agg` bench
+//!   uses to assert that a chunk-sharded reduction never holds a
+//!   model-sized buffer. The watermark is exact for single-threaded
+//!   sections; concurrent sections make it a faithful upper bound on
+//!   any instant's total.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 static BYTES: AtomicU64 = AtomicU64::new(0);
 static COUNT: AtomicU64 = AtomicU64::new(0);
+static LIVE: AtomicU64 = AtomicU64::new(0);
+static PEAK: AtomicU64 = AtomicU64::new(0);
 
-/// A [`System`]-backed allocator that counts allocation traffic.
+#[inline]
+fn on_alloc(size: usize) {
+    BYTES.fetch_add(size as u64, Ordering::Relaxed);
+    COUNT.fetch_add(1, Ordering::Relaxed);
+    let live = LIVE.fetch_add(size as u64, Ordering::Relaxed) + size as u64;
+    PEAK.fetch_max(live, Ordering::Relaxed);
+}
+
+/// A [`System`]-backed allocator that counts allocation traffic and
+/// tracks the live-bytes watermark.
 pub struct CountingAlloc;
 
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        COUNT.fetch_add(1, Ordering::Relaxed);
+        on_alloc(layout.size());
         System.alloc(layout)
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        COUNT.fetch_add(1, Ordering::Relaxed);
+        on_alloc(layout.size());
         System.alloc_zeroed(layout)
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE.fetch_sub(layout.size() as u64, Ordering::Relaxed);
         System.dealloc(ptr, layout)
     }
 
@@ -57,6 +76,10 @@ unsafe impl GlobalAlloc for CountingAlloc {
         if grown > 0 {
             BYTES.fetch_add(grown as u64, Ordering::Relaxed);
             COUNT.fetch_add(1, Ordering::Relaxed);
+            let live = LIVE.fetch_add(grown as u64, Ordering::Relaxed) + grown as u64;
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        } else {
+            LIVE.fetch_sub((layout.size() - new_size) as u64, Ordering::Relaxed);
         }
         System.realloc(ptr, layout, new_size)
     }
@@ -88,6 +111,26 @@ pub fn snapshot() -> AllocSnapshot {
     }
 }
 
+/// Outstanding heap bytes right now (allocations minus frees). Zero
+/// unless [`CountingAlloc`] is installed.
+pub fn live_bytes() -> u64 {
+    LIVE.load(Ordering::Relaxed)
+}
+
+/// High-water mark of [`live_bytes`] since the last [`reset_peak`].
+pub fn peak_bytes() -> u64 {
+    PEAK.load(Ordering::Relaxed)
+}
+
+/// Re-arm the watermark at the current live level, so the next
+/// [`peak_bytes`] read reports the peak of the section that follows.
+/// Call from a quiescent point (benches bracket single-threaded
+/// sections); a racing allocation merely lands in one section or the
+/// other.
+pub fn reset_peak() {
+    PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,6 +146,13 @@ mod tests {
         let d = b.since(&a);
         assert_eq!(d.bytes, 75);
         assert_eq!(d.count, 6);
+    }
+
+    #[test]
+    fn uninstalled_residency_is_zero() {
+        assert_eq!(live_bytes(), 0);
+        reset_peak();
+        assert_eq!(peak_bytes(), 0);
     }
 
     #[test]

@@ -103,6 +103,46 @@ macro_rules! impl_buf {
 impl_buf!(F32Buf, f32, F32_POOL, f32_buf);
 impl_buf!(U32Buf, u32, U32_POOL, u32_buf);
 
+/// Free-list depth for f64 aggregation chunks — its own (deeper) cap:
+/// where scratch buffers come a handful per thread, a chunk-sharded
+/// reduction holds O(model / chunk) chunks per live partial sum, and
+/// recycling across rounds only pays if a round's worth of chunks fits.
+pub const MAX_POOLED_CHUNKS: usize = 256;
+
+thread_local! {
+    static F64_CHUNK_POOL: RefCell<Vec<Vec<f64>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Take a zeroed f64 chunk of exactly `len` elements, recycling capacity
+/// from this thread's chunk pool when available. Unlike the RAII buffer
+/// leases above, chunks are plain `Vec`s handed back explicitly via
+/// [`recycle_f64_chunk`] (the aggregation types do it in their `Drop`):
+/// a chunk lives inside long-lived sums that cross thread boundaries, so
+/// a thread-pinned guard would recycle into the wrong pool. A chunk
+/// dropped on a different thread than it was taken from simply lands in
+/// *that* thread's free list — still bounded, still reused by whatever
+/// reduction that thread runs next.
+pub fn f64_chunk(len: usize) -> Vec<f64> {
+    let mut v = F64_CHUNK_POOL.with(|p| p.borrow_mut().pop()).unwrap_or_default();
+    v.clear();
+    v.resize(len, 0.0);
+    v
+}
+
+/// Return a chunk's capacity to this thread's pool (bounded by
+/// [`MAX_POOLED_CHUNKS`]; zero-capacity vectors are not worth keeping).
+pub fn recycle_f64_chunk(v: Vec<f64>) {
+    if v.capacity() == 0 {
+        return;
+    }
+    F64_CHUNK_POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        if p.len() < MAX_POOLED_CHUNKS {
+            p.push(v);
+        }
+    });
+}
+
 /// (leases, reuses) served on this thread so far. A reuse is a lease that
 /// recycled capacity instead of starting from a fresh allocation.
 pub fn stats() -> (u64, u64) {
@@ -164,6 +204,28 @@ mod tests {
         drop(b); // inner vec is now empty: nothing pushed back
         // no panic / no double-free; the stolen vec is still intact
         assert_eq!(stolen.len(), 64);
+    }
+
+    #[test]
+    fn f64_chunks_recycle_zeroed_with_capacity() {
+        let mut c = f64_chunk(128);
+        assert_eq!(c.len(), 128);
+        c[5] = 3.0;
+        recycle_f64_chunk(c);
+        // one test = one thread = one deterministic LIFO free list
+        let c2 = f64_chunk(64);
+        assert_eq!(c2.len(), 64);
+        assert!(c2.capacity() >= 128, "capacity must be recycled");
+        assert!(c2.iter().all(|&x| x == 0.0), "chunks must come back zeroed");
+    }
+
+    #[test]
+    fn chunk_pool_depth_is_bounded() {
+        for _ in 0..MAX_POOLED_CHUNKS + 16 {
+            recycle_f64_chunk(vec![0.0; 4]);
+        }
+        let held = F64_CHUNK_POOL.with(|p| p.borrow().len());
+        assert!(held <= MAX_POOLED_CHUNKS, "held={held}");
     }
 
     #[test]

@@ -149,6 +149,64 @@ fn agg_group_is_part_of_the_contract_not_the_worker_count() {
 }
 
 #[test]
+fn tree_reduction_matches_single_pass_at_any_worker_count() {
+    // the fixed-shape reduction tree and chunk-sharding must be
+    // invisible: workers = 1 executes the tree streaming on the
+    // coordinator thread (the single-pass reducer), workers > 1 fans the
+    // pairwise combines over the pool — same shape, same bits. Dropouts
+    // are live and the schemes cover every upload codec family (caesar
+    // = Top-K, prowd = Quant, fedavg = Dense), at agg_group = 3 so the
+    // tree has uneven levels with promoted lone nodes.
+    for scheme in ["caesar", "prowd", "fedavg"] {
+        let run = |workers: usize, chunk: usize| {
+            let mut cfg = tiny_cfg("har", 4);
+            cfg.engine.workers = workers;
+            cfg.engine.agg_group = 3;
+            cfg.engine.agg_chunk = chunk;
+            cfg.engine.dropout_rate = 0.25;
+            let mut srv = Server::new(cfg, schemes::by_name(scheme).unwrap()).unwrap();
+            let res = srv.run().unwrap();
+            (srv, res)
+        };
+        // single-pass baseline: serial streaming walk, unchunked buffers
+        let (base, base_res) = run(1, 0);
+        for (workers, chunk) in [(1usize, 64usize), (3, 0), (3, 64), (8, 1024)] {
+            let (srv, res) = run(workers, chunk);
+            let what = format!("{scheme} workers={workers} chunk={chunk}");
+            // final model bits
+            assert_bits_eq(&base.global, &srv.global, &what);
+            // traffic ledger and per-round records
+            assert_eq!(base_res.records.len(), res.records.len(), "{what}");
+            for (ra, rb) in base_res.records.iter().zip(&res.records) {
+                assert_eq!(
+                    ra.traffic_gb.to_bits(),
+                    rb.traffic_gb.to_bits(),
+                    "{what} round {}",
+                    ra.t
+                );
+                assert_eq!(
+                    ra.sim_time_s.to_bits(),
+                    rb.sim_time_s.to_bits(),
+                    "{what} round {}",
+                    ra.t
+                );
+                assert_eq!(
+                    ra.mean_loss.to_bits(),
+                    rb.mean_loss.to_bits(),
+                    "{what} round {}",
+                    ra.t
+                );
+            }
+            assert_eq!(
+                base.engine().stats().dropouts,
+                srv.engine().stats().dropouts,
+                "{what}"
+            );
+        }
+    }
+}
+
+#[test]
 fn engine_runs_all_schemes_in_parallel_mode() {
     for scheme in ["flexcom", "prowd", "pyramidfl", "caesar-br", "caesar-dc"] {
         let srv = run_with_workers("har", scheme, 2, 4);
@@ -313,7 +371,12 @@ fn worker_panic_surfaces_as_error_and_next_round_runs() {
     let pool = WorkerPool::new(2, |_wi| Ok(WorkerCtx { trainer: Trainer::native("har") }))
         .unwrap();
     let exec = ExecutorHandle::Pool(pool);
-    let ecfg = EngineConfig { workers: 2, agg_group: 1, dropout_rate: 0.0, heartbeat_s: 0.0 };
+    let ecfg = EngineConfig {
+        workers: 2,
+        agg_group: 1,
+        heartbeat_s: 0.0,
+        ..EngineConfig::default()
+    };
     let mut engine = Engine::new(ecfg, 4);
 
     // round 1 includes the poisoned device: the panic surfaces as an

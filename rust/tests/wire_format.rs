@@ -208,7 +208,7 @@ fn fold_encoded_is_bit_identical_to_decoded_folds() {
     let total = |shard: AggregatorShard| -> Vec<f64> {
         let mut r = ShardReducer::new(n, 1);
         r.push(shard).unwrap();
-        r.finish().unwrap().0
+        r.finish().unwrap().0.to_vec()
     };
     let a = total(payload_shard);
     let b = total(encoded_shard);
@@ -243,7 +243,7 @@ fn sparse_and_dense_aggregation_agree_bit_exactly() {
     let total = |shard: AggregatorShard| -> Vec<f64> {
         let mut r = ShardReducer::new(n, 1);
         r.push(shard).unwrap();
-        r.finish().unwrap().0
+        r.finish().unwrap().0.to_vec()
     };
     let a = total(dense_shard);
     let b = total(sparse_shard);
