@@ -51,6 +51,10 @@ require_keys BENCH_transport.json bench codec_cases tcp_roundtrip \
   n_params kind frame_bytes encode_ns encode_frames_per_s \
   encode_allocs_per_frame decode_ns decode_frames_per_s \
   decode_allocs_per_frame rtt_us
+require_keys BENCH_journal.json bench append_cases recover \
+  case frame_bytes append_ns appends_per_s mb_per_s \
+  allocs_per_append alloc_bytes_per_append \
+  image_bytes records scan_ns
 
 echo "== cargo fmt --check =="
 cargo fmt --all -- --check
@@ -111,6 +115,33 @@ echo "== bench_transport smoke =="
   cd "$smoke_dir"
   CAESAR_BENCH_QUICK=1 cargo bench \
     --manifest-path "$OLDPWD/Cargo.toml" --bench bench_transport
+)
+
+echo "== journal smoke (kill-point resume + offline replay) =="
+# a short journaled run is killed mid-run by the scripted fault injector
+# (expected to exit non-zero), resumed to completion from the journal,
+# and then cross-checked offline with `caesar replay` — the durable-rounds
+# invariant end to end through the real CLI (tests/durability.rs pins the
+# bit-identity sweep in-process)
+journal="$smoke_dir/smoke.cjl"
+run_flags="scheme=caesar task=har rounds=3 devices=6 alpha=0.5 n-train=240 \
+  eval-every=2 seed=7 trainer=native compression-backend=native quiet"
+if cargo run --release --bin caesar -- run $run_flags \
+  journal="$journal" journal-every=2 journal-kill-after=9 \
+  out="$smoke_dir/killed"; then
+  echo "journal smoke: the armed kill point did not fire"; exit 1
+fi
+[[ -s "$journal" ]] || { echo "journal smoke: no journal written"; exit 1; }
+cargo run --release --bin caesar -- run $run_flags \
+  journal="$journal" journal-every=2 out="$smoke_dir/resumed"
+cargo run --release --bin caesar -- replay journal="$journal"
+
+echo "== bench_journal smoke =="
+# append throughput + recovery-scan rate, quick mode
+(
+  cd "$smoke_dir"
+  CAESAR_BENCH_QUICK=1 cargo bench \
+    --manifest-path "$OLDPWD/Cargo.toml" --bench bench_journal
 )
 
 echo "CI OK"

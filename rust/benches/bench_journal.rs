@@ -1,0 +1,193 @@
+//! Journal benchmark: framed-append throughput (the per-decision cost a
+//! journaled run pays) for the round-dominating EndRound record and for
+//! model-sized snapshots, against both the in-memory sink and the
+//! flush-per-record file sink, plus the recovery scan's bytes/s — the
+//! restart-latency number.
+//!
+//! Results are written to BENCH_journal.json in the current directory
+//! with `"placeholder": false` (the flag marks hand-authored files
+//! committed from toolchain-less environments; this binary always
+//! measures). Quick mode: CAESAR_BENCH_QUICK=1 (skips the 64k-param
+//! snapshot and shrinks the recovery image).
+
+use caesar_fl::bench::Bench;
+use caesar_fl::coordinator::RoundRecord;
+use caesar_fl::journal::{
+    self, EndRound, JournalSink, ParamBlock, Record, RoundClose, RoundOpen, RunHeader, Snapshot,
+    VecSink, JOURNAL_VERSION,
+};
+use caesar_fl::config::{ExperimentConfig, TrainerBackend};
+use caesar_fl::fleet::FleetKind;
+use caesar_fl::schemes::{DownloadCodec, UploadCodec};
+use caesar_fl::util::alloc_count::{self, CountingAlloc};
+use caesar_fl::util::json::{self, Json};
+use caesar_fl::util::rng::{Rng, RngState};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn end_record(t: usize) -> Record {
+    Record::EndRound(EndRound {
+        t,
+        device: 2,
+        w_digest: 0xDEAD_BEEF_0BAD_F00D,
+        upload_bits: 52_412,
+        down_wire_bits: 131_072,
+        grad_norm: 1.25,
+        loss: 0.7,
+        download_s: 0.8,
+        compute_s: 2.4,
+        upload_s: 0.3,
+    })
+}
+
+fn snapshot_record(t: usize, n_params: usize, n_dev: usize) -> Record {
+    Record::Snapshot(Box::new(Snapshot {
+        t,
+        model_version: t as u64,
+        sim_time_s: t as f64 * 42.0,
+        rng: RngState { s: [1, 2, 3, 4], spare_normal: None },
+        down_bits: 1e9,
+        up_bits: 4e8,
+        model: ParamBlock::new(randn(n_params, 17)),
+        locals: (0..n_dev).map(|d| Some(ParamBlock::new(randn(n_params, d as u64)))).collect(),
+        grad_norms: (0..n_dev).map(|d| d as f64).collect(),
+        last_round: vec![t; n_dev],
+    }))
+}
+
+/// A small synthetic run image for the recovery-scan case.
+fn image(rounds: usize, n_params: usize) -> Vec<u8> {
+    let mut cfg = ExperimentConfig::preset("har");
+    cfg.trainer = TrainerBackend::Native;
+    cfg.fleet = FleetKind::JetsonScaled(4);
+    let mut recs = vec![Record::RunHeader(RunHeader {
+        version: JOURNAL_VERSION,
+        scheme: "caesar".to_string(),
+        snapshot_every: 10,
+        cfg,
+    })];
+    recs.push(snapshot_record(0, n_params, 4));
+    for t in 1..=rounds {
+        recs.push(Record::RoundOpen(RoundOpen {
+            t,
+            model_version: t as u64 - 1,
+            sim_now_s: t as f64,
+            lr: 0.05,
+            stream_base: 42,
+            plans: (0..3)
+                .map(|d| journal::PlanEntry {
+                    device: d,
+                    download: DownloadCodec::CaesarSplit { ratio: 0.4 },
+                    upload: UploadCodec::TopK { ratio: 0.5 },
+                    batch: 16,
+                    tau: 5,
+                    beta_d: 1e6,
+                    beta_u: 5e5,
+                    mu: 1e-4,
+                })
+                .collect(),
+        }));
+        for _ in 0..3 {
+            recs.push(end_record(t));
+        }
+        recs.push(Record::RoundClose(RoundClose {
+            t,
+            completers: 3,
+            model_version: t as u64,
+            model_digest: t as u64 * 31,
+            down_bits: t as f64 * 4096.0,
+            up_bits: t as f64 * 1024.0,
+            rec: RoundRecord { t, participants: 3, ..RoundRecord::default() },
+        }));
+        if t % 10 == 0 {
+            recs.push(snapshot_record(t, n_params, 4));
+        }
+    }
+    recs.iter().flat_map(journal::encode_record).collect()
+}
+
+fn main() {
+    let quick = std::env::var("CAESAR_BENCH_QUICK").is_ok();
+    let mut rows: Vec<Json> = Vec::new();
+
+    // --- append throughput, in-memory sink ---
+    let b = Bench::new("journal append").quick();
+    let snap_sizes: &[usize] = if quick { &[1_000] } else { &[1_000, 65_536] };
+    let mut cases: Vec<(String, Record)> = vec![("end-round".to_string(), end_record(3))];
+    for &n in snap_sizes {
+        cases.push((format!("snapshot-{n}p"), snapshot_record(4, n, 4)));
+    }
+    for (name, rec) in &cases {
+        let frame_bytes = journal::encode_record(rec).len();
+        let mut sink = VecSink::default();
+        let a0 = alloc_count::snapshot();
+        let st = b.case(&format!("{name} (VecSink)"), frame_bytes, || {
+            // bound the buffer so the case measures appends, not growth
+            if sink.buf.len() > 1 << 26 {
+                sink.buf.clear();
+            }
+            sink.append(&journal::encode_record(std::hint::black_box(rec))).unwrap();
+        });
+        let alloc = alloc_count::snapshot().since(&a0);
+        let mut o = Json::obj();
+        o.set("case", json::s(&format!("{name}-vec")))
+            .set("frame_bytes", json::num(frame_bytes as f64))
+            .set("append_ns", json::num(st.mean_ns))
+            .set("appends_per_s", json::num(1e9 / st.mean_ns))
+            .set("mb_per_s", json::num(frame_bytes as f64 * 1e9 / st.mean_ns / 1e6))
+            .set("allocs_per_append", json::num(alloc.count as f64 / st.iters as f64))
+            .set("alloc_bytes_per_append", json::num(alloc.bytes as f64 / st.iters as f64));
+        rows.push(o);
+    }
+
+    // --- append throughput, flush-per-record file sink ---
+    let path = std::env::temp_dir().join(format!("caesar_bench_journal_{}.cjl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let mut fsink = journal::FileSink::create(&path).expect("create bench journal");
+    let rec = end_record(3);
+    let frame_bytes = journal::encode_record(&rec).len();
+    let a0 = alloc_count::snapshot();
+    let st = b.case("end-round (FileSink, flush/record)", frame_bytes, || {
+        fsink.append(&journal::encode_record(std::hint::black_box(&rec))).unwrap();
+    });
+    let alloc = alloc_count::snapshot().since(&a0);
+    let mut o = Json::obj();
+    o.set("case", json::s("end-round-file"))
+        .set("frame_bytes", json::num(frame_bytes as f64))
+        .set("append_ns", json::num(st.mean_ns))
+        .set("appends_per_s", json::num(1e9 / st.mean_ns))
+        .set("allocs_per_append", json::num(alloc.count as f64 / st.iters as f64));
+    rows.push(o);
+    drop(fsink);
+    let _ = std::fs::remove_file(&path);
+
+    // --- recovery scan: restart latency per journal byte ---
+    let rounds = if quick { 100 } else { 1_000 };
+    let img = image(rounds, 1_000);
+    let n_records = journal::recover(&img).records.len();
+    let b = Bench::new("journal recover").quick();
+    let st = b.case(&format!("scan {rounds}-round image"), img.len(), || {
+        std::hint::black_box(journal::recover(std::hint::black_box(&img)));
+    });
+    let mut recover_row = Json::obj();
+    recover_row
+        .set("image_bytes", json::num(img.len() as f64))
+        .set("records", json::num(n_records as f64))
+        .set("scan_ns", json::num(st.mean_ns))
+        .set("mb_per_s", json::num(img.len() as f64 * 1e9 / st.mean_ns / 1e6));
+
+    let mut out = Json::obj();
+    out.set("bench", json::s("journal"))
+        .set("quick", Json::Bool(quick))
+        .set("placeholder", Json::Bool(false))
+        .set("append_cases", Json::Arr(rows))
+        .set("recover", recover_row);
+    std::fs::write("BENCH_journal.json", out.to_string()).expect("write BENCH_journal.json");
+    println!("wrote BENCH_journal.json");
+}

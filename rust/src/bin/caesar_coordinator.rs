@@ -3,7 +3,14 @@
 //! Usage:
 //!   caesar-coordinator [listen=127.0.0.1:0] [task=har] [scheme=caesar]
 //!                      [expect=<n>] [rendezvous-timeout=60]
-//!                      [round-timeout=120] [key=value overrides] [quiet]
+//!                      [round-timeout=120] [journal=<path>]
+//!                      [journal-every=K] [key=value overrides] [quiet]
+//!
+//! With `journal=`, every coordinator decision is event-sourced to an
+//! append-only CRC-framed log; a coordinator killed mid-run resumes from
+//! the last snapshot + journal tail when restarted with the same journal
+//! path, config and scheme, and finishes bit-identically. Verify offline
+//! with `caesar replay journal=<path>`.
 //!
 //! Binds `listen` (port 0 = OS-assigned; the resolved address is printed
 //! as `listening on <addr>` — the line `caesar-device` users and the
@@ -53,7 +60,24 @@ fn run(args: &Args) -> Result<()> {
     let rendezvous = Duration::from_secs(args.get_u64("rendezvous-timeout").unwrap_or(60));
     let round_timeout = Duration::from_secs(args.get_u64("round-timeout").unwrap_or(120));
 
-    let server = Server::new(cfg, scheme)?;
+    let (server, mut journal) = match args.get("journal") {
+        Some(jpath) => {
+            let snap_every = args.get_usize("journal-every").unwrap_or(10);
+            let path = std::path::Path::new(jpath);
+            let (srv, jw) = Server::journaled_open(cfg, scheme, path, snap_every)?;
+            if jw.is_fresh() {
+                println!("journal: fresh run -> {}", path.display());
+            } else {
+                println!(
+                    "journal: resuming after round {} from {}",
+                    jw.prior_rounds(),
+                    path.display()
+                );
+            }
+            (srv, Some(jw))
+        }
+        None => (Server::new(cfg, scheme)?, None),
+    };
     let transport =
         TcpTransport::bind(listen).map_err(|e| anyhow!("binding {listen}: {e}"))?;
     let mut svc = CoordinatorService::new(server, transport);
@@ -70,14 +94,18 @@ fn run(args: &Args) -> Result<()> {
     println!("{} devices joined; starting", svc.connected());
 
     let use_auc = task == "oppo";
-    let result = svc.run_cb(|r| {
+    let mut progress = |r: &caesar_fl::coordinator::RoundRecord| {
         if !quiet && !r.accuracy.is_nan() {
             println!(
                 "  round {:>4}  acc={:.4}  loss={:.4}  time={:>8.1}s  traffic={:.3}GB",
                 r.t, r.accuracy, r.mean_loss, r.sim_time_s, r.traffic_gb
             );
         }
-    })?;
+    };
+    let result = match journal.as_mut() {
+        Some(jw) => svc.run_journaled_cb(jw, &mut progress)?,
+        None => svc.run_cb(&mut progress)?,
+    };
     let server = svc.into_server();
     println!(
         "final: metric={:.4}  time={:.1}s(sim)  traffic={:.3}GB",

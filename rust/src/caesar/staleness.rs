@@ -38,6 +38,17 @@ impl ParticipationTracker {
         self.last_round[device] = t;
     }
 
+    /// The raw per-device last-participation rounds (0 = never) — what
+    /// the round journal snapshots.
+    pub fn last_rounds(&self) -> &[usize] {
+        &self.last_round
+    }
+
+    /// Rebuild a tracker from journaled state (crash resume).
+    pub fn from_rounds(last_round: Vec<usize>) -> Self {
+        ParticipationTracker { last_round }
+    }
+
     pub fn len(&self) -> usize {
         self.last_round.len()
     }

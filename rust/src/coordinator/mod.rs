@@ -43,6 +43,7 @@ use crate::coordinator::codec::effective_download;
 use crate::data::{self, Dataset, Partition, TaskSpec};
 use crate::engine::{self, Engine, ExecutorHandle, ExternalRound, StartRound};
 use crate::fleet::Fleet;
+use crate::journal::{self, record as jrec, RunJournal};
 use crate::nn::MlpSpec;
 use crate::schemes::{RoundCtx, Scheme};
 use crate::runtime::Runtime;
@@ -552,6 +553,363 @@ impl Server {
             });
         }
         Ok((round, starts))
+    }
+}
+
+// ---------------------------------------------------------------------
+// durable rounds: the journaled run loop + crash resume
+// ---------------------------------------------------------------------
+
+impl Server {
+    /// Open a journaled run: resume from `path` when it holds a valid
+    /// run-header + snapshot prefix for this exact config and scheme,
+    /// otherwise start fresh (truncating whatever unresumable bytes were
+    /// there). Artifacts come from [`Runtime::default_dir`].
+    pub fn journaled_open(
+        cfg: ExperimentConfig,
+        scheme: Box<dyn Scheme>,
+        path: &std::path::Path,
+        snapshot_every: usize,
+    ) -> Result<(Server, RunJournal)> {
+        Self::journaled_open_with(cfg, scheme, path, snapshot_every, &Runtime::default_dir())
+    }
+
+    /// [`journaled_open`] with an explicit artifact directory.
+    ///
+    /// Resume is **verify-then-truncate**: recover the longest valid
+    /// record prefix, drop only the torn bytes past it, restore the last
+    /// complete snapshot, and retain the records after that snapshot as
+    /// an *expected tail* — the resumed run re-executes those rounds and
+    /// [`RunJournal::append`] byte-compares each re-derived record
+    /// against the tail, so any divergence from the original run fails
+    /// loudly instead of forking history. A journal written by a
+    /// different config or scheme is an error, never silently clobbered.
+    pub fn journaled_open_with(
+        cfg: ExperimentConfig,
+        scheme: Box<dyn Scheme>,
+        path: &std::path::Path,
+        snapshot_every: usize,
+        artifact_dir: &std::path::Path,
+    ) -> Result<(Server, RunJournal)> {
+        let (recovered, bytes) = journal::recover_file(path)
+            .with_context(|| format!("recover journal {}", path.display()))?;
+
+        // resumable = a complete RunHeader followed by at least the
+        // initial snapshot survived; anything less (missing file, empty
+        // file, a run killed before snapshot 0 landed) starts fresh
+        let header = match recovered.records.first() {
+            Some(jrec::Record::RunHeader(h)) => Some(h),
+            _ => None,
+        };
+        let snap_idx = recovered
+            .records
+            .iter()
+            .rposition(|r| matches!(r, jrec::Record::Snapshot(_)));
+        let (header, snap_idx) = match (header, snap_idx) {
+            (Some(h), Some(i)) => (h, i),
+            _ => {
+                let srv = Server::with_artifacts(cfg, scheme, artifact_dir)?;
+                let sink = journal::FileSink::create(path)
+                    .with_context(|| format!("create journal {}", path.display()))?;
+                return Ok((srv, RunJournal::fresh(Box::new(sink), snapshot_every.max(1))));
+            }
+        };
+
+        // the journal's identity must match what the caller is opening —
+        // scheme first (better message), then the full config, compared
+        // through the canonical record encoding (ExperimentConfig has no
+        // PartialEq, and the encoding is the format's source of truth)
+        if header.scheme != scheme.name() {
+            return Err(anyhow!(
+                "journal {} was written by scheme '{}', refusing to resume as '{}'",
+                path.display(),
+                header.scheme,
+                scheme.name()
+            ));
+        }
+        let candidate = jrec::Record::RunHeader(jrec::RunHeader {
+            version: jrec::JOURNAL_VERSION,
+            scheme: scheme.name().to_string(),
+            snapshot_every: header.snapshot_every,
+            cfg: cfg.clone(),
+        });
+        if journal::encode_record(&candidate) != bytes[..recovered.ends[0]] {
+            return Err(anyhow!(
+                "journal {} was written under a different experiment config, \
+                 refusing to resume",
+                path.display()
+            ));
+        }
+        // the journal's snapshot cadence governs where snapshots sit in
+        // the byte stream, so a resume adopts it regardless of the flag
+        let snapshot_every = header.snapshot_every.max(1);
+
+        let snap = match &recovered.records[snap_idx] {
+            jrec::Record::Snapshot(s) => s,
+            _ => unreachable!("rposition matched a snapshot"),
+        };
+
+        // per-round records for rounds 1..=snap.t, in close order
+        let prior: Vec<RoundRecord> = recovered.records[..snap_idx]
+            .iter()
+            .filter_map(|r| match r {
+                jrec::Record::RoundClose(c) => Some(c.rec),
+                _ => None,
+            })
+            .collect();
+        if prior.len() != snap.t {
+            return Err(anyhow!(
+                "journal {} is inconsistent: snapshot at t={} but {} round closes precede it",
+                path.display(),
+                snap.t,
+                prior.len()
+            ));
+        }
+
+        // records past the snapshot stay on disk and become the expected
+        // tail: the exact original frame bytes, sliced per record
+        let expected_tail: std::collections::VecDeque<Vec<u8>> = (snap_idx + 1
+            ..recovered.records.len())
+            .map(|j| bytes[recovered.ends[j - 1]..recovered.ends[j]].to_vec())
+            .collect();
+
+        let mut srv = Server::with_artifacts(cfg, scheme, artifact_dir)?;
+        // the fleet's only per-round mutation is the periodic mode
+        // reroll; replaying the call sequence reproduces its state
+        for t in 1..=snap.t {
+            srv.fleet.on_round_start(t);
+        }
+        srv.restore_snapshot(snap)?;
+
+        // drop only the torn bytes; the valid prefix (snapshot + tail
+        // records included) stays, so the finished file is byte-identical
+        // to an uninterrupted run's
+        if bytes.len() > recovered.valid_len {
+            journal::truncate_file(path, recovered.valid_len)
+                .with_context(|| format!("truncate torn tail of {}", path.display()))?;
+        }
+        let sink = journal::FileSink::append_to(path)
+            .with_context(|| format!("reopen journal {}", path.display()))?;
+        let carry = journal::ResumeCarry { records: prior, expected_tail };
+        Ok((srv, RunJournal::resumed(Box::new(sink), snapshot_every, carry)))
+    }
+
+    /// [`run_cb`] with every coordinator decision event-sourced through
+    /// `jw`. On a fresh journal this writes the run header + initial
+    /// snapshot first; on a resumed one it continues at
+    /// `jw.prior_rounds() + 1`, re-verifying the retained tail as it
+    /// goes. The returned [`RunResult`] covers the whole run either way.
+    pub fn run_journaled_cb(
+        &mut self,
+        jw: &mut RunJournal,
+        mut cb: impl FnMut(&RoundRecord),
+    ) -> Result<RunResult> {
+        if jw.is_fresh() {
+            jw.append(&self.record_header(jw.snapshot_every()))?;
+            jw.append(&self.journal_snapshot(0))?;
+        }
+        let mut records = jw.take_prior_records();
+        let mut reached = self.recompute_reached(&records);
+        for t in records.len() + 1..=self.cfg.rounds {
+            let (items, lr) = self.plan_round(t);
+            jw.append(&self.record_open(t, &items, lr))?;
+            let env = engine::RoundEnv {
+                t,
+                lr,
+                cfg: &self.cfg,
+                global: &self.global,
+                model_version: self.model_version,
+                locals: &self.locals,
+                train_ds: &self.train_ds,
+                partition: &self.partition,
+                scale: &self.scale,
+                stream_base: self.stream_base,
+                sim_now_s: self.sim_time_s,
+            };
+            let out = self.engine.execute_round(&env, &items, &self.executor)?;
+            let completers = out.updates.len();
+            for r in self.resolution_records(t, &out) {
+                jw.append(&r)?;
+            }
+            let outcome = self.apply_round(t, out);
+            let rec = self.observe_round(t, &outcome, &mut reached)?;
+            jw.append(&self.record_close(t, completers, &rec))?;
+            if jw.due_snapshot(t) {
+                jw.append(&self.journal_snapshot(t))?;
+            }
+            cb(&rec);
+            records.push(rec);
+        }
+        Ok(self.finish_run(records, reached))
+    }
+
+    /// [`run_journaled_cb`] without a progress observer.
+    pub fn run_journaled(&mut self, jw: &mut RunJournal) -> Result<RunResult> {
+        self.run_journaled_cb(jw, |_| {})
+    }
+
+    /// Re-derive the reached-target marker from journaled per-round
+    /// records, exactly as `observe_round` would have set it live: the
+    /// first evaluated round (non-NaN accuracy) whose metric crossed
+    /// `cfg.target_acc`.
+    pub(crate) fn recompute_reached(&self, records: &[RoundRecord]) -> Option<(usize, f64, f64)> {
+        let uses_auc = self.uses_auc();
+        for rec in records {
+            if !rec.accuracy.is_nan() {
+                let metric = if uses_auc { rec.auc } else { rec.accuracy };
+                if metric >= self.cfg.target_acc {
+                    return Some((rec.t, rec.sim_time_s, rec.traffic_gb));
+                }
+            }
+        }
+        None
+    }
+
+    /// The journal's first record: format version, scheme, cadence, and
+    /// the full config (what resume and `replay` rebuild the run from).
+    pub(crate) fn record_header(&self, snapshot_every: usize) -> jrec::Record {
+        jrec::Record::RunHeader(jrec::RunHeader {
+            version: jrec::JOURNAL_VERSION,
+            scheme: self.scheme.name().to_string(),
+            snapshot_every,
+            cfg: self.cfg.clone(),
+        })
+    }
+
+    /// Round `t` opened: the participant plans in **canonical ascending
+    /// device order** — `plan_round` emits sampled order but the
+    /// networked path sorts before kickoff, and execution is
+    /// order-insensitive, so canonicalizing here makes the in-process
+    /// and networked loops write byte-identical journals.
+    pub(crate) fn record_open(&self, t: usize, items: &[StartRound], lr: f32) -> jrec::Record {
+        let mut plans: Vec<jrec::PlanEntry> = items
+            .iter()
+            .map(|it| jrec::PlanEntry {
+                device: it.plan.device,
+                download: it.plan.download,
+                upload: it.plan.upload,
+                batch: it.plan.batch,
+                tau: it.plan.tau,
+                beta_d: it.beta_d,
+                beta_u: it.beta_u,
+                mu: it.mu,
+            })
+            .collect();
+        plans.sort_by_key(|p| p.device);
+        jrec::Record::RoundOpen(jrec::RoundOpen {
+            t,
+            model_version: self.model_version,
+            sim_now_s: self.sim_time_s,
+            lr,
+            stream_base: self.stream_base,
+            plans,
+        })
+    }
+
+    /// Per-device resolutions in fold order (ascending device id), built
+    /// from the drained round output *before* [`Self::apply_round`]
+    /// consumes it.
+    pub(crate) fn resolution_records(&self, t: usize, out: &engine::RoundOutput) -> Vec<jrec::Record> {
+        out.resolutions()
+            .into_iter()
+            .map(|res| match res {
+                engine::Resolution::Update(u) => jrec::Record::EndRound(jrec::EndRound {
+                    t,
+                    device: u.device,
+                    w_digest: crate::transport::model_digest(&u.w_final),
+                    upload_bits: u.upload.bits,
+                    down_wire_bits: u.down_wire_bits,
+                    grad_norm: u.grad_norm,
+                    loss: u.loss,
+                    download_s: u.cost.download_s,
+                    compute_s: u.cost.compute_s,
+                    upload_s: u.cost.upload_s,
+                }),
+                engine::Resolution::Dropped(d) => jrec::Record::Dropout(jrec::Dropout {
+                    t,
+                    device: d.device,
+                    after_s: d.after_s,
+                    down_wire_bits: d.down_wire_bits,
+                }),
+            })
+            .collect()
+    }
+
+    /// Round `t` closed: post-apply model version + digest, cumulative
+    /// ledger totals, and the full metrics record.
+    pub(crate) fn record_close(&self, t: usize, completers: usize, rec: &RoundRecord) -> jrec::Record {
+        jrec::Record::RoundClose(jrec::RoundClose {
+            t,
+            completers,
+            model_version: self.model_version,
+            model_digest: crate::transport::model_digest(&self.global),
+            down_bits: self.traffic.down_bits,
+            up_bits: self.traffic.up_bits,
+            rec: *rec,
+        })
+    }
+
+    /// The complete mutable server state after `t` rounds, as a journal
+    /// snapshot record.
+    pub(crate) fn journal_snapshot(&self, t: usize) -> jrec::Record {
+        jrec::Record::Snapshot(Box::new(jrec::Snapshot {
+            t,
+            model_version: self.model_version,
+            sim_time_s: self.sim_time_s,
+            rng: self.rng.state(),
+            down_bits: self.traffic.down_bits,
+            up_bits: self.traffic.up_bits,
+            model: jrec::ParamBlock::new(self.global.clone()),
+            locals: self
+                .locals
+                .iter()
+                .map(|l| l.as_ref().map(|w| jrec::ParamBlock::new(w.clone())))
+                .collect(),
+            grad_norms: self.grad_norms.clone(),
+            last_round: self.tracker.last_rounds().to_vec(),
+        }))
+    }
+
+    /// Restore the mutable server state from a journal snapshot,
+    /// verifying every stored digest against its bytes first.
+    pub(crate) fn restore_snapshot(&mut self, s: &jrec::Snapshot) -> Result<()> {
+        let n = self.cfg.n_devices();
+        if !s.model.digest_ok() {
+            return Err(anyhow!("journal snapshot t={}: model digest mismatch", s.t));
+        }
+        if s.model.w.len() != self.global.len() {
+            return Err(anyhow!(
+                "journal snapshot t={}: model has {} params, this run has {}",
+                s.t,
+                s.model.w.len(),
+                self.global.len()
+            ));
+        }
+        if s.locals.len() != n || s.grad_norms.len() != n || s.last_round.len() != n {
+            return Err(anyhow!(
+                "journal snapshot t={}: per-device state is not sized for {n} devices",
+                s.t
+            ));
+        }
+        for (d, local) in s.locals.iter().enumerate() {
+            if let Some(b) = local {
+                if !b.digest_ok() {
+                    return Err(anyhow!(
+                        "journal snapshot t={}: local model of device {d} fails its digest",
+                        s.t
+                    ));
+                }
+            }
+        }
+        self.global = s.model.w.clone();
+        self.model_version = s.model_version;
+        self.sim_time_s = s.sim_time_s;
+        self.rng = Rng::from_state(s.rng);
+        self.traffic = TrafficMeter { down_bits: s.down_bits, up_bits: s.up_bits };
+        self.locals = s.locals.iter().map(|l| l.as_ref().map(|b| b.w.clone())).collect();
+        self.grad_norms = s.grad_norms.clone();
+        self.tracker = ParticipationTracker::from_rounds(s.last_round.clone());
+        Ok(())
     }
 }
 

@@ -294,6 +294,36 @@ pub struct RoundOutput {
     pub dropped: Vec<DroppedDevice>,
 }
 
+/// One device's fate in a finished round — borrowed view for consumers
+/// (the round journal) that need the resolutions in fold order without
+/// taking the updates apart.
+pub enum Resolution<'a> {
+    Update(&'a RoundUpdate),
+    Dropped(&'a DroppedDevice),
+}
+
+impl RoundOutput {
+    /// All per-device resolutions merged in canonical fold order
+    /// (ascending device id — each planned device appears exactly once,
+    /// as an update or a dropout).
+    pub fn resolutions(&self) -> Vec<Resolution<'_>> {
+        let mut out = Vec::with_capacity(self.updates.len() + self.dropped.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.updates.len() && j < self.dropped.len() {
+            if self.updates[i].device < self.dropped[j].device {
+                out.push(Resolution::Update(&self.updates[i]));
+                i += 1;
+            } else {
+                out.push(Resolution::Dropped(&self.dropped[j]));
+                j += 1;
+            }
+        }
+        out.extend(self.updates[i..].iter().map(Resolution::Update));
+        out.extend(self.dropped[j..].iter().map(Resolution::Dropped));
+        out
+    }
+}
+
 /// The event-driven coordinator engine.
 pub struct Engine {
     cfg: EngineConfig,

@@ -1,0 +1,703 @@
+//! Journal record vocabulary + body codec.
+//!
+//! Every coordinator decision is event-sourced as one [`Record`]:
+//!
+//! * [`RunHeader`] — first record of every journal: format version, the
+//!   scheme name, the snapshot cadence, and the **full**
+//!   [`ExperimentConfig`], so a resume rebuilds datasets, partition,
+//!   importance table and model init from nothing but the file.
+//! * [`Snapshot`] — the complete mutable server state after `t` rounds
+//!   (model / locals as length+digest-prefixed f32 blocks, RNG state,
+//!   traffic ledger, tracker, clock). Written at `t = 0` and then every
+//!   `snapshot_every` rounds; resume restores the last complete one.
+//! * [`RoundOpen`] — participant set with codec/ratio assignments (in
+//!   canonical ascending-device order), the learning rate, the RNG
+//!   stream base, and the pre-round `model_version`.
+//! * [`EndRound`] / [`Dropout`] — per-device resolutions in fold order
+//!   (ascending device id, exactly the order `Server::apply_round`
+//!   consumes them). `EndRound` carries the `w_final` digest — enough
+//!   for resume-time cross-checks without storing every local model
+//!   every round.
+//! * [`RoundClose`] — the traffic-ledger totals, the post-round model
+//!   version + digest, and the full [`RoundRecord`] (accuracy / AUC /
+//!   mean loss / timing) as raw f64 bit patterns.
+//!
+//! Bodies are encoded through the same [`BitWriter`] as the wire frame
+//! codec (every field a whole number of bytes, little-endian) and decoded
+//! by a total bounds-checked byte cursor — a corrupt body yields a typed
+//! [`JournalError`], never a panic. Unlike `transport::frame`, f64 fields
+//! are stored and returned as **raw bit patterns** with no finiteness
+//! checks: NaN is a legal value here (an unevaluated round's accuracy),
+//! and integrity is the CRC frame's job (`journal::encode_record`).
+
+use crate::config::{CompressionBackend, EngineConfig, ExperimentConfig, TrainerBackend};
+use crate::coordinator::RoundRecord;
+use crate::fleet::FleetKind;
+use crate::journal::JournalError;
+use crate::schemes::{DownloadCodec, UploadCodec};
+use crate::util::bitio::BitWriter;
+use crate::util::rng::RngState;
+
+/// Journal format version, bumped on ANY record-layout change.
+pub const JOURNAL_VERSION: u32 = 1;
+
+/// A length+digest-prefixed f32 parameter block (a model or a retained
+/// local). The digest is `transport::model_digest` over the block — what
+/// `journal replay` and resume cross-check against the recorded bytes.
+#[derive(Clone, Debug)]
+pub struct ParamBlock {
+    pub digest: u64,
+    pub w: Vec<f32>,
+}
+
+impl ParamBlock {
+    pub fn new(w: Vec<f32>) -> ParamBlock {
+        ParamBlock { digest: crate::transport::model_digest(&w), w }
+    }
+
+    /// Whether the stored digest matches the stored bytes.
+    pub fn digest_ok(&self) -> bool {
+        crate::transport::model_digest(&self.w) == self.digest
+    }
+}
+
+/// First record of every journal (see module docs).
+#[derive(Clone, Debug)]
+pub struct RunHeader {
+    pub version: u32,
+    pub scheme: String,
+    /// Snapshot cadence K: a [`Snapshot`] follows every K-th round close.
+    pub snapshot_every: usize,
+    pub cfg: ExperimentConfig,
+}
+
+/// Complete mutable server state after `t` rounds.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// Rounds completed when this snapshot was taken (0 = initial state).
+    pub t: usize,
+    pub model_version: u64,
+    pub sim_time_s: f64,
+    /// Server RNG state (participant sampling consumes it every round).
+    pub rng: RngState,
+    /// Traffic-ledger totals, bit-exact f64s.
+    pub down_bits: f64,
+    pub up_bits: f64,
+    pub model: ParamBlock,
+    /// Per-device retained locals (None until first participation).
+    pub locals: Vec<Option<ParamBlock>>,
+    pub grad_norms: Vec<f64>,
+    /// `ParticipationTracker` state: last participation round per device.
+    pub last_round: Vec<usize>,
+}
+
+/// One planned participant: the scheme's codec/ratio assignment plus the
+/// link/compute draws the plan was costed with.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanEntry {
+    pub device: usize,
+    pub download: DownloadCodec,
+    pub upload: UploadCodec,
+    pub batch: usize,
+    pub tau: usize,
+    pub beta_d: f64,
+    pub beta_u: f64,
+    pub mu: f64,
+}
+
+/// Round `t` opened: participant set + assignments, canonical order.
+#[derive(Clone, Debug)]
+pub struct RoundOpen {
+    pub t: usize,
+    /// Pre-round model version (what the downloads were encoded from).
+    pub model_version: u64,
+    pub sim_now_s: f64,
+    pub lr: f32,
+    /// Base key of the pure per-(round, device) RNG streams.
+    pub stream_base: u64,
+    /// Ascending device id — the same canonical order resolutions fold in.
+    pub plans: Vec<PlanEntry>,
+}
+
+/// A device completed round `t` (fold-order resolution).
+#[derive(Clone, Copy, Debug)]
+pub struct EndRound {
+    pub t: usize,
+    pub device: usize,
+    /// `transport::model_digest` of the device's final local model.
+    pub w_digest: u64,
+    /// Measured wire bits of the serialized upload (stand-in scale).
+    pub upload_bits: usize,
+    /// Measured wire bits of the download it received (stand-in scale).
+    pub down_wire_bits: usize,
+    pub grad_norm: f64,
+    pub loss: f64,
+    pub download_s: f64,
+    pub compute_s: f64,
+    pub upload_s: f64,
+}
+
+/// A device vanished mid-round (fold-order resolution).
+#[derive(Clone, Copy, Debug)]
+pub struct Dropout {
+    pub t: usize,
+    pub device: usize,
+    pub after_s: f64,
+    pub down_wire_bits: usize,
+}
+
+/// Round `t` closed: ledger deltas applied, model aggregated, metrics
+/// recorded.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundClose {
+    pub t: usize,
+    /// Devices whose updates reached aggregation this round.
+    pub completers: usize,
+    /// Post-round model version (bumped iff `completers > 0`).
+    pub model_version: u64,
+    /// `transport::model_digest` of the post-round global model.
+    pub model_digest: u64,
+    /// Cumulative traffic-ledger totals after this round, bit-exact.
+    pub down_bits: f64,
+    pub up_bits: f64,
+    /// The full per-round metrics record (f64s stored as raw bits; NaN
+    /// accuracy means the round was not evaluated).
+    pub rec: RoundRecord,
+}
+
+/// One journal record. See the module docs for the life cycle.
+#[derive(Clone, Debug)]
+pub enum Record {
+    RunHeader(RunHeader),
+    Snapshot(Box<Snapshot>),
+    RoundOpen(RoundOpen),
+    EndRound(EndRound),
+    Dropout(Dropout),
+    RoundClose(RoundClose),
+}
+
+impl Record {
+    pub(crate) fn kind(&self) -> u8 {
+        match self {
+            Record::RunHeader(_) => 1,
+            Record::Snapshot(_) => 2,
+            Record::RoundOpen(_) => 3,
+            Record::EndRound(_) => 4,
+            Record::Dropout(_) => 5,
+            Record::RoundClose(_) => 6,
+        }
+    }
+
+    /// Human-readable kind tag for diagnostics.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Record::RunHeader(_) => "run-header",
+            Record::Snapshot(_) => "snapshot",
+            Record::RoundOpen(_) => "round-open",
+            Record::EndRound(_) => "end-round",
+            Record::Dropout(_) => "dropout",
+            Record::RoundClose(_) => "round-close",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// encoding
+// ---------------------------------------------------------------------
+
+pub(crate) fn encode_body(rec: &Record, w: &mut BitWriter) {
+    match rec {
+        Record::RunHeader(h) => {
+            w.push_bits(h.version as u64, 32);
+            put_str(w, &h.scheme);
+            put_u64(w, h.snapshot_every as u64);
+            encode_cfg(&h.cfg, w);
+        }
+        Record::Snapshot(s) => {
+            put_u64(w, s.t as u64);
+            put_u64(w, s.model_version);
+            put_f64(w, s.sim_time_s);
+            encode_rng_state(&s.rng, w);
+            put_f64(w, s.down_bits);
+            put_f64(w, s.up_bits);
+            encode_block(&s.model, w);
+            put_u64(w, s.locals.len() as u64);
+            for local in &s.locals {
+                match local {
+                    None => w.push_bits(0, 8),
+                    Some(b) => {
+                        w.push_bits(1, 8);
+                        encode_block(b, w);
+                    }
+                }
+            }
+            put_u64(w, s.grad_norms.len() as u64);
+            for &g in &s.grad_norms {
+                put_f64(w, g);
+            }
+            put_u64(w, s.last_round.len() as u64);
+            for &r in &s.last_round {
+                put_u64(w, r as u64);
+            }
+        }
+        Record::RoundOpen(o) => {
+            put_u64(w, o.t as u64);
+            put_u64(w, o.model_version);
+            put_f64(w, o.sim_now_s);
+            w.push_f32(o.lr);
+            put_u64(w, o.stream_base);
+            put_u64(w, o.plans.len() as u64);
+            for p in &o.plans {
+                encode_plan_entry(p, w);
+            }
+        }
+        Record::EndRound(e) => {
+            put_u64(w, e.t as u64);
+            put_u64(w, e.device as u64);
+            put_u64(w, e.w_digest);
+            put_u64(w, e.upload_bits as u64);
+            put_u64(w, e.down_wire_bits as u64);
+            put_f64(w, e.grad_norm);
+            put_f64(w, e.loss);
+            put_f64(w, e.download_s);
+            put_f64(w, e.compute_s);
+            put_f64(w, e.upload_s);
+        }
+        Record::Dropout(d) => {
+            put_u64(w, d.t as u64);
+            put_u64(w, d.device as u64);
+            put_f64(w, d.after_s);
+            put_u64(w, d.down_wire_bits as u64);
+        }
+        Record::RoundClose(c) => {
+            put_u64(w, c.t as u64);
+            put_u64(w, c.completers as u64);
+            put_u64(w, c.model_version);
+            put_u64(w, c.model_digest);
+            put_f64(w, c.down_bits);
+            put_f64(w, c.up_bits);
+            put_u64(w, c.rec.t as u64);
+            put_f64(w, c.rec.sim_time_s);
+            put_f64(w, c.rec.traffic_gb);
+            put_f64(w, c.rec.accuracy);
+            put_f64(w, c.rec.auc);
+            put_f64(w, c.rec.mean_loss);
+            put_f64(w, c.rec.round_s);
+            put_f64(w, c.rec.avg_wait_s);
+            put_u64(w, c.rec.participants as u64);
+        }
+    }
+}
+
+fn encode_block(b: &ParamBlock, w: &mut BitWriter) {
+    put_u64(w, b.w.len() as u64);
+    put_u64(w, b.digest);
+    for &x in &b.w {
+        w.push_f32(x);
+    }
+}
+
+fn encode_plan_entry(p: &PlanEntry, w: &mut BitWriter) {
+    put_u64(w, p.device as u64);
+    match p.download {
+        DownloadCodec::Full => w.push_bits(0, 8),
+        DownloadCodec::CaesarSplit { ratio } => {
+            w.push_bits(1, 8);
+            put_f64(w, ratio);
+        }
+        DownloadCodec::TopK { ratio } => {
+            w.push_bits(2, 8);
+            put_f64(w, ratio);
+        }
+        DownloadCodec::Quant { bits } => {
+            w.push_bits(3, 8);
+            w.push_bits(bits as u64, 32);
+        }
+    }
+    match p.upload {
+        UploadCodec::Full => w.push_bits(0, 8),
+        UploadCodec::TopK { ratio } => {
+            w.push_bits(1, 8);
+            put_f64(w, ratio);
+        }
+        UploadCodec::Quant { bits } => {
+            w.push_bits(2, 8);
+            w.push_bits(bits as u64, 32);
+        }
+    }
+    put_u64(w, p.batch as u64);
+    put_u64(w, p.tau as u64);
+    put_f64(w, p.beta_d);
+    put_f64(w, p.beta_u);
+    put_f64(w, p.mu);
+}
+
+fn encode_rng_state(st: &RngState, w: &mut BitWriter) {
+    for &word in &st.s {
+        put_u64(w, word);
+    }
+    match st.spare_normal {
+        None => w.push_bits(0, 8),
+        Some(x) => {
+            w.push_bits(1, 8);
+            put_f64(w, x);
+        }
+    }
+}
+
+fn encode_cfg(cfg: &ExperimentConfig, w: &mut BitWriter) {
+    put_str(w, &cfg.task);
+    match cfg.fleet {
+        FleetKind::Jetson80 => w.push_bits(0, 8),
+        FleetKind::Phone40 => w.push_bits(1, 8),
+        FleetKind::JetsonScaled(n) => {
+            w.push_bits(2, 8);
+            put_u64(w, n as u64);
+        }
+    }
+    put_u64(w, cfg.n_train as u64);
+    put_u64(w, cfg.n_test as u64);
+    put_u64(w, cfg.rounds as u64);
+    put_f64(w, cfg.alpha);
+    put_u64(w, cfg.tau as u64);
+    put_u64(w, cfg.batch as u64);
+    put_f64(w, cfg.lr);
+    put_f64(w, cfg.lr_decay);
+    put_f64(w, cfg.het_p);
+    put_f64(w, cfg.theta_min);
+    put_f64(w, cfg.theta_max);
+    put_f64(w, cfg.lambda);
+    put_u64(w, cfg.clusters as u64);
+    put_u64(w, cfg.n_params_paper as u64);
+    put_f64(w, cfg.model_cost);
+    put_u64(w, cfg.eval_every as u64);
+    put_f64(w, cfg.target_acc);
+    put_u64(w, cfg.seed);
+    w.push_bits(
+        match cfg.trainer {
+            TrainerBackend::Native => 0,
+            TrainerBackend::Xla => 1,
+        },
+        8,
+    );
+    w.push_bits(
+        match cfg.compression {
+            CompressionBackend::Native => 0,
+            CompressionBackend::Xla => 1,
+        },
+        8,
+    );
+    put_u64(w, cfg.engine.workers as u64);
+    put_u64(w, cfg.engine.agg_group as u64);
+    put_u64(w, cfg.engine.agg_chunk as u64);
+    put_f64(w, cfg.engine.dropout_rate);
+    put_f64(w, cfg.engine.heartbeat_s);
+}
+
+fn put_u64(w: &mut BitWriter, v: u64) {
+    w.push_bits(v, 64);
+}
+
+fn put_f64(w: &mut BitWriter, v: f64) {
+    w.push_bits(v.to_bits(), 64);
+}
+
+fn put_str(w: &mut BitWriter, s: &str) {
+    w.push_bits(s.len() as u64, 32);
+    w.push_bytes(s.as_bytes());
+}
+
+// ---------------------------------------------------------------------
+// decoding
+// ---------------------------------------------------------------------
+
+pub(crate) fn decode_body(kind: u8, body: &[u8]) -> Result<Record, JournalError> {
+    let mut r = Reader { buf: body, pos: 0 };
+    let rec = match kind {
+        1 => Record::RunHeader(RunHeader {
+            version: {
+                let v = r.u32()?;
+                if v != JOURNAL_VERSION {
+                    return Err(JournalError::Version { got: v, want: JOURNAL_VERSION });
+                }
+                v
+            },
+            scheme: r.string()?,
+            snapshot_every: r.usize64()?,
+            cfg: decode_cfg(&mut r)?,
+        }),
+        2 => {
+            let t = r.usize64()?;
+            let model_version = r.u64()?;
+            let sim_time_s = r.f64raw()?;
+            let rng = decode_rng_state(&mut r)?;
+            let down_bits = r.f64raw()?;
+            let up_bits = r.f64raw()?;
+            let model = decode_block(&mut r)?;
+            let n_locals = r.usize64()?;
+            r.need_at_least(n_locals)?; // 1 flag byte per local, minimum
+            let mut locals = Vec::with_capacity(n_locals);
+            for _ in 0..n_locals {
+                locals.push(match r.u8()? {
+                    0 => None,
+                    1 => Some(decode_block(&mut r)?),
+                    _ => return Err(JournalError::Malformed("local-model flag")),
+                });
+            }
+            let n_norms = r.usize64()?;
+            r.need_at_least(n_norms.checked_mul(8).ok_or(OVERFLOW)?)?;
+            let mut grad_norms = Vec::with_capacity(n_norms);
+            for _ in 0..n_norms {
+                grad_norms.push(r.f64raw()?);
+            }
+            let n_last = r.usize64()?;
+            r.need_at_least(n_last.checked_mul(8).ok_or(OVERFLOW)?)?;
+            let mut last_round = Vec::with_capacity(n_last);
+            for _ in 0..n_last {
+                last_round.push(r.usize64()?);
+            }
+            Record::Snapshot(Box::new(Snapshot {
+                t,
+                model_version,
+                sim_time_s,
+                rng,
+                down_bits,
+                up_bits,
+                model,
+                locals,
+                grad_norms,
+                last_round,
+            }))
+        }
+        3 => {
+            let t = r.round_no()?;
+            let model_version = r.u64()?;
+            let sim_now_s = r.f64raw()?;
+            let lr = r.f32()?;
+            let stream_base = r.u64()?;
+            let n = r.usize64()?;
+            r.need_at_least(n.checked_mul(64).ok_or(OVERFLOW)?)?;
+            let mut plans = Vec::with_capacity(n);
+            for _ in 0..n {
+                plans.push(decode_plan_entry(&mut r)?);
+            }
+            Record::RoundOpen(RoundOpen { t, model_version, sim_now_s, lr, stream_base, plans })
+        }
+        4 => Record::EndRound(EndRound {
+            t: r.round_no()?,
+            device: r.usize64()?,
+            w_digest: r.u64()?,
+            upload_bits: r.usize64()?,
+            down_wire_bits: r.usize64()?,
+            grad_norm: r.f64raw()?,
+            loss: r.f64raw()?,
+            download_s: r.f64raw()?,
+            compute_s: r.f64raw()?,
+            upload_s: r.f64raw()?,
+        }),
+        5 => Record::Dropout(Dropout {
+            t: r.round_no()?,
+            device: r.usize64()?,
+            after_s: r.f64raw()?,
+            down_wire_bits: r.usize64()?,
+        }),
+        6 => Record::RoundClose(RoundClose {
+            t: r.round_no()?,
+            completers: r.usize64()?,
+            model_version: r.u64()?,
+            model_digest: r.u64()?,
+            down_bits: r.f64raw()?,
+            up_bits: r.f64raw()?,
+            rec: RoundRecord {
+                t: r.usize64()?,
+                sim_time_s: r.f64raw()?,
+                traffic_gb: r.f64raw()?,
+                accuracy: r.f64raw()?,
+                auc: r.f64raw()?,
+                mean_loss: r.f64raw()?,
+                round_s: r.f64raw()?,
+                avg_wait_s: r.f64raw()?,
+                participants: r.usize64()?,
+            },
+        }),
+        other => return Err(JournalError::UnknownKind(other)),
+    };
+    if r.pos != r.buf.len() {
+        return Err(JournalError::Malformed("trailing bytes in record body"));
+    }
+    Ok(rec)
+}
+
+const OVERFLOW: JournalError = JournalError::Malformed("length overflow");
+
+fn decode_block(r: &mut Reader) -> Result<ParamBlock, JournalError> {
+    let n = r.usize64()?;
+    let digest = r.u64()?;
+    r.need_at_least(n.checked_mul(4).ok_or(OVERFLOW)?)?;
+    let mut w = Vec::with_capacity(n);
+    for _ in 0..n {
+        w.push(r.f32()?);
+    }
+    Ok(ParamBlock { digest, w })
+}
+
+fn decode_plan_entry(r: &mut Reader) -> Result<PlanEntry, JournalError> {
+    let device = r.usize64()?;
+    let download = match r.u8()? {
+        0 => DownloadCodec::Full,
+        1 => DownloadCodec::CaesarSplit { ratio: r.f64raw()? },
+        2 => DownloadCodec::TopK { ratio: r.f64raw()? },
+        3 => DownloadCodec::Quant { bits: r.u32()? },
+        _ => return Err(JournalError::Malformed("unknown download codec")),
+    };
+    let upload = match r.u8()? {
+        0 => UploadCodec::Full,
+        1 => UploadCodec::TopK { ratio: r.f64raw()? },
+        2 => UploadCodec::Quant { bits: r.u32()? },
+        _ => return Err(JournalError::Malformed("unknown upload codec")),
+    };
+    Ok(PlanEntry {
+        device,
+        download,
+        upload,
+        batch: r.usize64()?,
+        tau: r.usize64()?,
+        beta_d: r.f64raw()?,
+        beta_u: r.f64raw()?,
+        mu: r.f64raw()?,
+    })
+}
+
+fn decode_rng_state(r: &mut Reader) -> Result<RngState, JournalError> {
+    let s = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+    let spare_normal = match r.u8()? {
+        0 => None,
+        1 => Some(r.f64raw()?),
+        _ => return Err(JournalError::Malformed("rng spare-normal flag")),
+    };
+    Ok(RngState { s, spare_normal })
+}
+
+fn decode_cfg(r: &mut Reader) -> Result<ExperimentConfig, JournalError> {
+    let task = r.string()?;
+    let fleet = match r.u8()? {
+        0 => FleetKind::Jetson80,
+        1 => FleetKind::Phone40,
+        2 => FleetKind::JetsonScaled(r.usize64()?),
+        _ => return Err(JournalError::Malformed("unknown fleet kind")),
+    };
+    Ok(ExperimentConfig {
+        task,
+        fleet,
+        n_train: r.usize64()?,
+        n_test: r.usize64()?,
+        rounds: r.usize64()?,
+        alpha: r.f64raw()?,
+        tau: r.usize64()?,
+        batch: r.usize64()?,
+        lr: r.f64raw()?,
+        lr_decay: r.f64raw()?,
+        het_p: r.f64raw()?,
+        theta_min: r.f64raw()?,
+        theta_max: r.f64raw()?,
+        lambda: r.f64raw()?,
+        clusters: r.usize64()?,
+        n_params_paper: r.usize64()?,
+        model_cost: r.f64raw()?,
+        eval_every: r.usize64()?,
+        target_acc: r.f64raw()?,
+        seed: r.u64()?,
+        trainer: match r.u8()? {
+            0 => TrainerBackend::Native,
+            1 => TrainerBackend::Xla,
+            _ => return Err(JournalError::Malformed("unknown trainer backend")),
+        },
+        compression: match r.u8()? {
+            0 => CompressionBackend::Native,
+            1 => CompressionBackend::Xla,
+            _ => return Err(JournalError::Malformed("unknown compression backend")),
+        },
+        engine: EngineConfig {
+            workers: r.usize64()?,
+            agg_group: r.usize64()?,
+            agg_chunk: r.usize64()?,
+            dropout_rate: r.f64raw()?,
+            heartbeat_s: r.f64raw()?,
+        },
+    })
+}
+
+/// Bounds-checked byte cursor over a record body — the journal-side
+/// sibling of `transport::frame`'s `BodyReader`. Total: every read either
+/// yields a value or a typed [`JournalError`].
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn need(&self, n: usize) -> Result<(), JournalError> {
+        let have = self.buf.len() - self.pos;
+        if n > have {
+            return Err(JournalError::Malformed("record body too short"));
+        }
+        Ok(())
+    }
+
+    /// Pre-flight a declared element count before `Vec::with_capacity`:
+    /// the remaining bytes must plausibly hold it, so a corrupt length
+    /// can never drive an over-allocation.
+    fn need_at_least(&self, n: usize) -> Result<(), JournalError> {
+        self.need(n)
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], JournalError> {
+        self.need(n)?;
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, JournalError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, JournalError> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, JournalError> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Result<f32, JournalError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// An f64 as its raw bit pattern — NaN and ∞ round-trip untouched.
+    fn f64raw(&mut self) -> Result<f64, JournalError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn usize64(&mut self) -> Result<usize, JournalError> {
+        usize::try_from(self.u64()?)
+            .map_err(|_| JournalError::Malformed("length overflows usize"))
+    }
+
+    /// A 1-based round number.
+    fn round_no(&mut self) -> Result<usize, JournalError> {
+        let t = self.usize64()?;
+        if t == 0 {
+            return Err(JournalError::Malformed("round numbers are 1-based"));
+        }
+        Ok(t)
+    }
+
+    fn string(&mut self) -> Result<String, JournalError> {
+        let n = self.u32()? as usize;
+        let b = self.bytes(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| JournalError::Malformed("non-utf8 string"))
+    }
+}

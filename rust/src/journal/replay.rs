@@ -1,0 +1,376 @@
+//! Offline journal verification — `caesar replay`.
+//!
+//! [`verify`] re-derives a run from nothing but its journal records and
+//! cross-checks every re-derivable quantity **bit-exactly**, without
+//! constructing a trainer, dataset, or accelerator runtime:
+//!
+//! * the traffic ledger, replayed through the same [`TrafficMeter`] /
+//!   [`PayloadScale`] arithmetic `Server::apply_round` uses, in the same
+//!   f64 accumulation order (all EndRounds of a round, then its
+//!   Dropouts — the journal stores resolutions merged in fold order, so
+//!   the replay makes two passes);
+//! * barrier timing (`round_s` as the same `f64::max` fold, `avg_wait_s`,
+//!   `sim_time_s`) and `mean_loss`;
+//! * the evaluation cadence (`accuracy` is NaN exactly on unevaluated
+//!   rounds) and the learning-rate schedule (`cfg.lr_at`);
+//! * `model_version` bumps (iff a round had completers);
+//! * every stored digest: [`ParamBlock`] self-consistency in snapshots,
+//!   snapshot locals against the last `EndRound.w_digest` per device,
+//!   and the model-digest *chain* — a round with no completers must
+//!   carry the previous model digest forward, and every snapshot's model
+//!   digest must equal the preceding `RoundClose.model_digest`.
+//!
+//! What replay deliberately cannot check: training itself (`w_digest` of
+//! a fresh local, the aggregated model bits between snapshots) — those
+//! are pinned by the resume path and `rust/tests/durability.rs`, which
+//! do own trainers.
+//!
+//! A journal recovered from a crash is a valid *prefix*: a trailing
+//! round that opened but never closed (or a due snapshot the kill
+//! preempted) is reported via [`ReplaySummary::partial_tail`], not as an
+//! error.
+
+use anyhow::{anyhow, Result};
+
+use crate::compress::traffic::{PayloadScale, TrafficMeter};
+use crate::journal::record::{Record, RoundClose, RoundOpen, RunHeader, Snapshot};
+
+/// What [`verify`] established about a journal.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplaySummary {
+    /// Complete rounds verified (open + resolutions + close).
+    pub rounds: usize,
+    /// Digest cross-checks performed (block self-checks, local-vs-
+    /// EndRound matches, model-chain links).
+    pub digests_checked: usize,
+    /// Digest of the model as of the last verified point.
+    pub final_model_digest: u64,
+    /// Replayed traffic-ledger totals, bit-exact.
+    pub down_bits: f64,
+    pub up_bits: f64,
+    pub sim_time_s: f64,
+    /// Snapshots verified (including the initial one).
+    pub snapshots: usize,
+    /// True when the journal ends mid-round or before a due snapshot —
+    /// the valid-prefix shape a crash leaves behind.
+    pub partial_tail: bool,
+}
+
+/// Bit-exact f64 comparison: NaN == NaN, -0.0 != 0.0 — the journal
+/// stores raw bit patterns and the replay must reproduce them exactly.
+fn same_bits(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits()
+}
+
+fn check(cond: bool, what: impl FnOnce() -> String) -> Result<()> {
+    if cond {
+        Ok(())
+    } else {
+        Err(anyhow!("replay: {}", what()))
+    }
+}
+
+/// Verify a recovered record stream (see module docs). Errors name the
+/// first inconsistency; a torn-but-valid prefix is not an error.
+pub fn verify(records: &[Record]) -> Result<ReplaySummary> {
+    let mut it = records.iter().peekable();
+
+    let header: &RunHeader = match it.next() {
+        Some(Record::RunHeader(h)) => h,
+        Some(other) => {
+            return Err(anyhow!("replay: journal starts with {}, not a run header", other.kind_name()))
+        }
+        None => return Err(anyhow!("replay: empty journal")),
+    };
+    let cfg = &header.cfg;
+    check(header.snapshot_every >= 1, || {
+        format!("snapshot cadence {} is not >= 1", header.snapshot_every)
+    })?;
+
+    let snap0: &Snapshot = match it.next() {
+        Some(Record::Snapshot(s)) if s.t == 0 => s,
+        Some(other) => {
+            return Err(anyhow!(
+                "replay: second record is {}, not the initial snapshot",
+                other.kind_name()
+            ))
+        }
+        None => return Err(anyhow!("replay: journal ends before the initial snapshot")),
+    };
+
+    let n_devices = cfg.n_devices();
+    let n_real = snap0.model.w.len();
+    let scale = PayloadScale { n_real, n_paper: cfg.n_params_paper };
+    let participants = cfg.participants_per_round();
+
+    let mut digests_checked = 0usize;
+    let verify_snapshot_shape = |s: &Snapshot| -> Result<()> {
+        check(s.model.digest_ok(), || format!("snapshot t={}: model digest mismatch", s.t))?;
+        check(s.model.w.len() == n_real, || {
+            format!("snapshot t={}: model has {} params, expected {n_real}", s.t, s.model.w.len())
+        })?;
+        check(
+            s.locals.len() == n_devices
+                && s.grad_norms.len() == n_devices
+                && s.last_round.len() == n_devices,
+            || format!("snapshot t={}: per-device vectors are not fleet-sized", s.t),
+        )?;
+        for (d, local) in s.locals.iter().enumerate() {
+            if let Some(b) = local {
+                check(b.digest_ok(), || format!("snapshot t={}: local {d} digest mismatch", s.t))?;
+            }
+        }
+        Ok(())
+    };
+    verify_snapshot_shape(snap0)?;
+    digests_checked += 1 + snap0.locals.iter().flatten().count();
+
+    // --- replayed server state ---
+    let mut traffic = TrafficMeter { down_bits: snap0.down_bits, up_bits: snap0.up_bits };
+    let mut sim_time_s = snap0.sim_time_s;
+    let mut model_version = snap0.model_version;
+    let mut model_digest = snap0.model.digest;
+    // per-device shadows of what snapshots must agree with
+    let mut last_w_digest: Vec<Option<u64>> = snap0
+        .locals
+        .iter()
+        .map(|l| l.as_ref().map(|b| b.digest))
+        .collect();
+    let mut grad_norms: Vec<f64> = snap0.grad_norms.clone();
+    let mut last_round: Vec<usize> = snap0.last_round.clone();
+
+    let mut stream_base: Option<u64> = None;
+    let mut rounds = 0usize;
+    let mut snapshots = 1usize;
+    let mut partial_tail = false;
+
+    'rounds: loop {
+        let t = rounds + 1;
+        let open: &RoundOpen = match it.next() {
+            None => break 'rounds,
+            Some(Record::RoundOpen(o)) => o,
+            Some(other) => {
+                return Err(anyhow!(
+                    "replay: expected round {t} to open, found {}",
+                    other.kind_name()
+                ))
+            }
+        };
+        check(open.t == t, || format!("round open out of sequence: got t={}, expected {t}", open.t))?;
+        check(open.model_version == model_version, || {
+            format!("round {t} opened at model v{}, replay is at v{model_version}", open.model_version)
+        })?;
+        check(same_bits(open.sim_now_s, sim_time_s), || {
+            format!("round {t} opened at sim time {}, replay is at {sim_time_s}", open.sim_now_s)
+        })?;
+        check(open.lr.to_bits() == (cfg.lr_at(t - 1) as f32).to_bits(), || {
+            format!("round {t} lr {} differs from the schedule's {}", open.lr, cfg.lr_at(t - 1))
+        })?;
+        match stream_base {
+            None => stream_base = Some(open.stream_base),
+            Some(base) => check(open.stream_base == base, || {
+                format!("round {t} changed the RNG stream base")
+            })?,
+        }
+        check(open.plans.len() == participants, || {
+            format!("round {t} planned {} devices, cfg says {participants}", open.plans.len())
+        })?;
+        check(
+            open.plans.windows(2).all(|w| w[0].device < w[1].device)
+                && open.plans.iter().all(|p| p.device < n_devices),
+            || format!("round {t} plan set is not strictly ascending in-range device ids"),
+        )?;
+
+        // --- resolutions in fold order, until the close ---
+        let mut ends = Vec::new();
+        let mut drops = Vec::new();
+        let mut resolved: Vec<usize> = Vec::new();
+        let close: &RoundClose = loop {
+            match it.next() {
+                None => {
+                    partial_tail = true;
+                    break 'rounds;
+                }
+                Some(Record::EndRound(e)) => {
+                    check(e.t == t, || format!("round {t}: end-round tagged t={}", e.t))?;
+                    resolved.push(e.device);
+                    ends.push(e);
+                }
+                Some(Record::Dropout(d)) => {
+                    check(d.t == t, || format!("round {t}: dropout tagged t={}", d.t))?;
+                    resolved.push(d.device);
+                    drops.push(d);
+                }
+                Some(Record::RoundClose(c)) => break c,
+                Some(other) => {
+                    return Err(anyhow!(
+                        "replay: round {t} interrupted by {}",
+                        other.kind_name()
+                    ))
+                }
+            }
+        };
+        // the synchronous barrier resolves every planned device exactly
+        // once, in ascending device order
+        let planned: Vec<usize> = open.plans.iter().map(|p| p.device).collect();
+        check(resolved == planned, || {
+            format!("round {t}: resolutions {resolved:?} do not match the plan {planned:?}")
+        })?;
+
+        // --- replay apply_round, in its exact f64 order: every
+        // completer's down+up first, then every dropout's down ---
+        let completers = ends.len();
+        let mut loss_sum = 0.0f64;
+        let mut costs: Vec<f64> = Vec::with_capacity(completers);
+        for e in &ends {
+            traffic.add_down(scale.scale_bits(e.down_wire_bits));
+            traffic.add_up(scale.scale_bits(e.upload_bits));
+            grad_norms[e.device] = e.grad_norm;
+            last_w_digest[e.device] = Some(e.w_digest);
+            last_round[e.device] = t;
+            loss_sum += e.loss;
+            costs.push(e.download_s + e.compute_s + e.upload_s);
+        }
+        for d in &drops {
+            traffic.add_down(scale.scale_bits(d.down_wire_bits));
+        }
+        if completers > 0 {
+            model_version += 1;
+            // the model moved: its digest is whatever the close claims,
+            // chain-checked at the next snapshot
+            model_digest = close.model_digest;
+        } else {
+            check(close.model_digest == model_digest, || {
+                format!("round {t} had no completers but the model digest changed")
+            })?;
+        }
+        digests_checked += 1;
+        let round_s = costs
+            .iter()
+            .copied()
+            .chain(drops.iter().map(|d| d.after_s))
+            .fold(0.0f64, f64::max);
+        let avg_wait_s = if completers > 0 {
+            costs.iter().map(|&c| round_s - c).sum::<f64>() / completers as f64
+        } else {
+            0.0
+        };
+        sim_time_s += round_s;
+        let mean_loss = if completers > 0 { loss_sum / completers as f64 } else { f64::NAN };
+
+        check(close.t == t, || format!("round close tagged t={}, expected {t}", close.t))?;
+        check(close.completers == completers, || {
+            format!("round {t} close claims {} completers, replay counted {completers}", close.completers)
+        })?;
+        check(close.model_version == model_version, || {
+            format!("round {t} close at model v{}, replay is at v{model_version}", close.model_version)
+        })?;
+        check(same_bits(close.down_bits, traffic.down_bits), || {
+            format!("round {t}: downlink ledger diverged ({} vs replayed {})", close.down_bits, traffic.down_bits)
+        })?;
+        check(same_bits(close.up_bits, traffic.up_bits), || {
+            format!("round {t}: uplink ledger diverged ({} vs replayed {})", close.up_bits, traffic.up_bits)
+        })?;
+        let rec = &close.rec;
+        check(rec.t == t, || format!("round {t} metrics record tagged t={}", rec.t))?;
+        check(same_bits(rec.sim_time_s, sim_time_s), || {
+            format!("round {t}: sim time diverged ({} vs replayed {sim_time_s})", rec.sim_time_s)
+        })?;
+        check(same_bits(rec.traffic_gb, traffic.total_gb()), || {
+            format!("round {t}: traffic_gb diverged ({} vs replayed {})", rec.traffic_gb, traffic.total_gb())
+        })?;
+        check(same_bits(rec.mean_loss, mean_loss), || {
+            format!("round {t}: mean loss diverged ({} vs replayed {mean_loss})", rec.mean_loss)
+        })?;
+        check(same_bits(rec.round_s, round_s), || {
+            format!("round {t}: round_s diverged ({} vs replayed {round_s})", rec.round_s)
+        })?;
+        check(same_bits(rec.avg_wait_s, avg_wait_s), || {
+            format!("round {t}: avg_wait_s diverged ({} vs replayed {avg_wait_s})", rec.avg_wait_s)
+        })?;
+        check(rec.participants == participants, || {
+            format!("round {t}: {} participants recorded, cfg says {participants}", rec.participants)
+        })?;
+        let evaluated = t % cfg.eval_every == 0 || t == cfg.rounds;
+        check(evaluated != rec.accuracy.is_nan(), || {
+            format!(
+                "round {t}: accuracy {} contradicts the eval cadence (evaluated={evaluated})",
+                rec.accuracy
+            )
+        })?;
+        if !evaluated {
+            check(rec.auc.is_nan(), || format!("round {t}: auc set on an unevaluated round"))?;
+        }
+        rounds = t;
+
+        // --- due snapshot, unless the journal ends first ---
+        if t % header.snapshot_every == 0 {
+            match it.peek() {
+                None => {
+                    partial_tail = true;
+                    break 'rounds;
+                }
+                Some(Record::Snapshot(s)) => {
+                    it.next();
+                    check(s.t == t, || format!("snapshot after round {t} tagged t={}", s.t))?;
+                    verify_snapshot_shape(s)?;
+                    digests_checked += 1 + s.locals.iter().flatten().count();
+                    check(s.model.digest == model_digest, || {
+                        format!(
+                            "snapshot t={t}: model digest breaks the chain from the round close"
+                        )
+                    })?;
+                    digests_checked += 1;
+                    check(s.model_version == model_version, || {
+                        format!("snapshot t={t}: model v{}, replay is at v{model_version}", s.model_version)
+                    })?;
+                    check(same_bits(s.sim_time_s, sim_time_s), || {
+                        format!("snapshot t={t}: sim time diverged")
+                    })?;
+                    check(
+                        same_bits(s.down_bits, traffic.down_bits)
+                            && same_bits(s.up_bits, traffic.up_bits),
+                        || format!("snapshot t={t}: traffic ledger diverged"),
+                    )?;
+                    for d in 0..n_devices {
+                        let got = s.locals[d].as_ref().map(|b| b.digest);
+                        check(got == last_w_digest[d], || {
+                            format!(
+                                "snapshot t={t}: local {d} digest {:?} contradicts the \
+                                 end-round history {:?}",
+                                got, last_w_digest[d]
+                            )
+                        })?;
+                        if got.is_some() {
+                            digests_checked += 1;
+                        }
+                        check(same_bits(s.grad_norms[d], grad_norms[d]), || {
+                            format!("snapshot t={t}: grad norm of device {d} diverged")
+                        })?;
+                        check(s.last_round[d] == last_round[d], || {
+                            format!("snapshot t={t}: participation round of device {d} diverged")
+                        })?;
+                    }
+                    snapshots += 1;
+                }
+                Some(other) => {
+                    return Err(anyhow!(
+                        "replay: snapshot due after round {t}, found {}",
+                        other.kind_name()
+                    ))
+                }
+            }
+        }
+    }
+
+    Ok(ReplaySummary {
+        rounds,
+        digests_checked,
+        final_model_digest: model_digest,
+        down_bits: traffic.down_bits,
+        up_bits: traffic.up_bits,
+        sim_time_s,
+        snapshots,
+        partial_tail,
+    })
+}

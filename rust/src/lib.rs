@@ -52,6 +52,14 @@
 //!   side of a round remotely. Invariant: a fixed-seed Tcp localhost run
 //!   is bit-identical (final model, traffic ledger, round records) to
 //!   the Loopback and in-process runs.
+//! * [`journal`] — durable rounds: an append-only, CRC-framed record log
+//!   event-sourcing every coordinator decision (round plans, per-device
+//!   resolutions in fold order, traffic ledgers, periodic model
+//!   snapshots). `Server::journaled_open` resumes a killed run from the
+//!   last snapshot + journal tail and continues **bit-identically**;
+//!   [`journal::verify`] re-derives the whole run offline — no trainers —
+//!   cross-checking every recorded digest; torn tails are CRC-detected
+//!   and discarded, never trusted.
 //! * [`caesar`] — Eq. 3–9: staleness, importance, batch-size regulation.
 //! * [`fleet`], [`data`] — the simulated testbed and non-IID datasets.
 //! * [`runtime`] — PJRT CPU execution of the AOT artifacts.
@@ -73,6 +81,7 @@ pub mod data;
 pub mod engine;
 pub mod experiments;
 pub mod fleet;
+pub mod journal;
 pub mod nn;
 pub mod runtime;
 pub mod schemes;

@@ -2,6 +2,7 @@
 //!
 //! Usage:
 //!   caesar run scheme=<name> task=<cifar|har|speech|oppo> [key=value ...]
+//!   caesar replay journal=<path>   # offline digest cross-check, no trainer
 //!   caesar <fig1|fig1c|fig1d|fig5|fig8|fig9|fig10|table3|all> [overrides]
 //!   caesar info            # artifact/runtime inventory
 //!   caesar list            # schemes, tasks, experiments
@@ -10,12 +11,14 @@
 //! lambda= clusters= devices= seed= target= eval-every= n-train=
 //! trainer=xla|native compression-backend=native|xla out=<dir> quiet
 //! Engine knobs:     engine-workers= agg-group= dropout= heartbeat=
+//! Durability:       journal=<path> journal-every=K journal-kill-after=N
 
 use anyhow::Result;
 
 use caesar_fl::config::ExperimentConfig;
-use caesar_fl::coordinator::Server;
+use caesar_fl::coordinator::{RoundRecord, Server};
 use caesar_fl::experiments;
+use caesar_fl::journal::{self, KillSink};
 use caesar_fl::runtime::Runtime;
 use caesar_fl::schemes;
 use caesar_fl::util::cli::Args;
@@ -31,6 +34,7 @@ fn main() {
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(args),
+        Some("replay") => cmd_replay(args),
         Some("info") => cmd_info(),
         Some("list") | None => cmd_list(),
         Some(exp) => experiments::run_by_name(exp, args),
@@ -54,15 +58,43 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     let quiet = args.has_flag("quiet");
     let every = args.get_usize("print-every").unwrap_or(10);
-    let mut srv = Server::new(cfg, scheme)?;
-    let result = srv.run_cb(|r| {
+    let mut progress = |r: &RoundRecord| {
         if !quiet && (r.t % every == 0 || r.t == 1) && !r.accuracy.is_nan() {
             println!(
                 "  round {:>4}  acc={:.4}  auc={:.4}  loss={:.4}  time={:>8.1}s  traffic={:.3}GB  wait={:.2}s",
                 r.t, r.accuracy, r.auc, r.mean_loss, r.sim_time_s, r.traffic_gb, r.avg_wait_s
             );
         }
-    })?;
+    };
+    let result = match args.get("journal") {
+        Some(jpath) => {
+            let snap_every = args.get_usize("journal-every").unwrap_or(10);
+            let path = std::path::Path::new(jpath);
+            let (mut srv, mut jw) = Server::journaled_open(cfg, scheme, path, snap_every)?;
+            if jw.is_fresh() {
+                println!("journal: fresh run -> {}", path.display());
+            } else {
+                println!(
+                    "journal: resuming after round {} from {}",
+                    jw.prior_rounds(),
+                    path.display()
+                );
+            }
+            if let Some(k) = args.get_usize("journal-kill-after") {
+                // fault injection for the durability smoke: the k-th
+                // append tears mid-frame and the process dies with an
+                // error exit — a subsequent run with the same journal=
+                // must resume and finish bit-identically
+                println!("journal: fault injection armed, dying at append #{k}");
+                jw.map_sink(|s| Box::new(KillSink::new(s, k, 3)));
+            }
+            srv.run_journaled_cb(&mut jw, &mut progress)?
+        }
+        None => {
+            let mut srv = Server::new(cfg, scheme)?;
+            srv.run_cb(&mut progress)?
+        }
+    };
     println!(
         "final: metric={:.4}  time={:.1}s(sim)  traffic={:.3}GB  mean-wait={:.2}s",
         result.final_metric(use_auc),
@@ -81,6 +113,43 @@ fn cmd_run(args: &Args) -> Result<()> {
     let dir = experiments::out_dir(args).join("run");
     result.save(&dir, "")?;
     println!("saved per-round CSV/JSON under {}", dir.display());
+    Ok(())
+}
+
+/// Offline replay verification: re-derive the run from its journal alone
+/// (no trainer, no fleet) and cross-check every recorded digest, traffic
+/// bit-count and round record. Exits non-zero on any mismatch.
+fn cmd_replay(args: &Args) -> Result<()> {
+    let jpath = args
+        .get("journal")
+        .or_else(|| args.positional.first().map(|s| s.as_str()))
+        .ok_or_else(|| anyhow::anyhow!("usage: caesar replay journal=<path>"))?;
+    let path = std::path::Path::new(jpath);
+    let (recovered, bytes) = journal::recover_file(path)?;
+    if bytes.is_empty() {
+        return Err(anyhow::anyhow!("journal {} is missing or empty", path.display()));
+    }
+    println!(
+        "journal {}: {} records, {} valid bytes, {} torn bytes discarded",
+        path.display(),
+        recovered.records.len(),
+        recovered.valid_len,
+        recovered.discarded(bytes.len()),
+    );
+    let summary = journal::verify(&recovered.records)
+        .map_err(|e| anyhow::anyhow!("replay verification FAILED: {e:#}"))?;
+    println!(
+        "replay OK: {} rounds, {} digests cross-checked, {} snapshots{}",
+        summary.rounds,
+        summary.digests_checked,
+        summary.snapshots,
+        if summary.partial_tail { " (journal ends mid-round)" } else { "" },
+    );
+    println!("  final model digest {:016x}", summary.final_model_digest);
+    println!(
+        "  traffic: {} bits down, {} bits up; sim time {:.1}s",
+        summary.down_bits, summary.up_bits, summary.sim_time_s
+    );
     Ok(())
 }
 
@@ -110,6 +179,8 @@ fn cmd_list() -> Result<()> {
     println!("experiments:  fig1 fig1c fig1d fig5 (=fig6/fig7/table3) fig8 fig9 fig10 all");
     println!("extensions:   ablation-k ablation-lambda");
     println!("also:         run scheme=<s> task=<t> [key=value ...] | info");
+    println!("              replay journal=<path>   (offline digest cross-check)");
     println!("engine knobs: engine-workers= agg-group= dropout= heartbeat=");
+    println!("durability:   journal= journal-every= journal-kill-after=");
     Ok(())
 }

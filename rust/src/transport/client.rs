@@ -46,6 +46,28 @@ use super::{model_digest, Conn, TransportError};
 /// Receive slice while waiting for the next frame.
 const RECV_SLICE: Duration = Duration::from_millis(100);
 
+/// Stream-key salt for redial-backoff jitter draws.
+const REDIAL_SALT: u64 = 0x12ED;
+/// First-attempt redial delay (doubles per consecutive fruitless attempt).
+const REDIAL_BASE_MS: u64 = 20;
+/// Backoff ceiling — a fleet of patient clients, not a thundering herd.
+const REDIAL_CAP_MS: u64 = 2000;
+
+/// Redial delay before consecutive fruitless attempt `attempt` (1-based):
+/// capped exponential backoff plus deterministic jitter in
+/// `[0, nominal/2]`, drawn from the device's own `Rng::stream` so two
+/// clients dropped by the same fault never redial in lockstep — and so
+/// tests of the delay sequence stay reproducible. A session that makes
+/// protocol progress restarts the sequence at attempt 1.
+fn redial_backoff_ms(seed: u64, device: usize, attempt: usize) -> u64 {
+    let attempt = attempt.max(1);
+    // 20 << 7 already clears the cap; clamping the shift avoids overflow
+    let nominal = (REDIAL_BASE_MS << (attempt - 1).min(7) as u32).min(REDIAL_CAP_MS);
+    let jitter = Rng::stream(seed ^ REDIAL_SALT, device as u64, attempt as u64)
+        .below(nominal as usize / 2 + 1) as u64;
+    nominal + jitter
+}
+
 /// Counters for one client session (diagnostics; not part of parity).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ClientStats {
@@ -186,9 +208,9 @@ impl DeviceClient {
                 Err(TransportError::Closed) | Err(TransportError::Io(_)) => {
                     return Ok(SessionEnd::Disconnected)
                 }
-                Err(e @ TransportError::Frame(_)) => {
-                    return Err(anyhow!("device {}: {e}", self.device))
-                }
+                // framing (the peer speaks garbage) and anything else
+                // the transport grows are fatal, not retryable
+                Err(e) => return Err(anyhow!("device {}: {e}", self.device)),
             };
             match msg {
                 WireMsg::JoinAck { device, n_devices } => {
@@ -271,7 +293,13 @@ impl DeviceClient {
             if redials > max_redials {
                 return Ok(SessionEnd::Disconnected);
             }
-            std::thread::sleep(Duration::from_millis(20));
+            // capped exponential backoff with deterministic per-device
+            // jitter; a progressing session restarts at the base delay
+            std::thread::sleep(Duration::from_millis(redial_backoff_ms(
+                self.cfg.seed,
+                self.device,
+                redials.max(1),
+            )));
         }
     }
 
@@ -526,6 +554,36 @@ mod tests {
             prior_digest: None,
             download: Arc::new(Payload::Dense(vec![0.0f32; 4]).encode()),
         }))
+    }
+
+    #[test]
+    fn redial_backoff_is_deterministic_bounded_and_capped() {
+        for attempt in 1..=12 {
+            let nominal = (REDIAL_BASE_MS << (attempt as u32 - 1).min(7)).min(REDIAL_CAP_MS);
+            let a = redial_backoff_ms(0xCAE5, 3, attempt);
+            // deterministic: the same (seed, device, attempt) always
+            // draws the same jitter
+            assert_eq!(a, redial_backoff_ms(0xCAE5, 3, attempt));
+            // jitter bounded in [nominal, 3·nominal/2]
+            assert!(a >= nominal && a <= nominal + nominal / 2, "attempt {attempt}: {a}");
+        }
+        // the exponential growth is capped
+        assert!(redial_backoff_ms(1, 0, 40) <= REDIAL_CAP_MS + REDIAL_CAP_MS / 2);
+        // different devices de-sync even at the same attempt (for this
+        // seed; the jitter range at attempt 7 is wide enough to check)
+        let spread: std::collections::BTreeSet<u64> =
+            (0..16).map(|d| redial_backoff_ms(7, d, 7)).collect();
+        assert!(spread.len() > 1, "all devices drew identical jitter");
+    }
+
+    #[test]
+    fn redial_backoff_restarts_from_base_after_progress_reset() {
+        // run_reconnecting passes redials.max(1): after a progress reset
+        // (redials = 0) the next fruitless attempt is attempt 1 again
+        let late = redial_backoff_ms(2, 5, 5);
+        let reset = redial_backoff_ms(2, 5, 1);
+        assert!(reset >= REDIAL_BASE_MS && reset <= REDIAL_BASE_MS + REDIAL_BASE_MS / 2);
+        assert!(late > reset, "attempt 5 ({late}ms) should dwarf attempt 1 ({reset}ms)");
     }
 
     #[test]

@@ -46,6 +46,11 @@ pub enum TransportError {
     Frame(FrameError),
     /// The peer hung up (clean close or channel disconnect).
     Closed,
+    /// The listener's accept call itself failed (fd exhaustion, a dying
+    /// interface) — a *coordinator-side* fault, typed apart from
+    /// [`TransportError::Io`] so drivers don't mistake it for one bad
+    /// peer connection and busy-poll past it.
+    Accept(std::io::Error),
 }
 
 impl std::fmt::Display for TransportError {
@@ -54,6 +59,7 @@ impl std::fmt::Display for TransportError {
             TransportError::Io(e) => write!(f, "transport i/o: {e}"),
             TransportError::Frame(e) => write!(f, "transport framing: {e}"),
             TransportError::Closed => write!(f, "peer closed the connection"),
+            TransportError::Accept(e) => write!(f, "listener accept: {e}"),
         }
     }
 }
@@ -64,6 +70,7 @@ impl std::error::Error for TransportError {
             TransportError::Io(e) => Some(e),
             TransportError::Frame(e) => Some(e),
             TransportError::Closed => None,
+            TransportError::Accept(e) => Some(e),
         }
     }
 }

@@ -37,7 +37,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::{RoundOutcome, RoundRecord, RunResult, Server};
-use crate::engine::DeviceMsg;
+use crate::engine::{DeviceMsg, StartRound};
+use crate::journal::RunJournal;
 
 use super::frame::{reject, WireMsg};
 use super::{Conn, Transport};
@@ -152,7 +153,7 @@ impl<T: Transport> CoordinatorService<T> {
         let mut records = Vec::with_capacity(rounds);
         let mut reached: Option<(usize, f64, f64)> = None;
         for t in 1..=rounds {
-            let outcome = self.round_networked(t)?;
+            let (outcome, _) = self.round_networked(t, None)?;
             let rec = self.server.observe_round(t, &outcome, &mut reached)?;
             cb(&rec);
             records.push(rec);
@@ -168,6 +169,41 @@ impl<T: Transport> CoordinatorService<T> {
         self.run_cb(|_| {})
     }
 
+    /// [`run_cb`] with every coordinator decision event-sourced through
+    /// `jw` — the networked twin of `Server::run_journaled_cb`. Records
+    /// are written in canonical order (round open sorted by device,
+    /// resolutions in fold order), so a networked run's journal is
+    /// byte-identical to the in-process loop's for the same seed and
+    /// arrival outcome — and a journal written here resumes on either
+    /// path.
+    pub fn run_journaled_cb(
+        &mut self,
+        jw: &mut RunJournal,
+        mut cb: impl FnMut(&RoundRecord),
+    ) -> Result<RunResult> {
+        if jw.is_fresh() {
+            jw.append(&self.server.record_header(jw.snapshot_every()))?;
+            jw.append(&self.server.journal_snapshot(0))?;
+        }
+        let mut records = jw.take_prior_records();
+        let mut reached = self.server.recompute_reached(&records);
+        let rounds = self.server.cfg.rounds;
+        for t in records.len() + 1..=rounds {
+            let (outcome, completers) = self.round_networked(t, Some(jw))?;
+            let rec = self.server.observe_round(t, &outcome, &mut reached)?;
+            jw.append(&self.server.record_close(t, completers, &rec))?;
+            if jw.due_snapshot(t) {
+                jw.append(&self.server.journal_snapshot(t))?;
+            }
+            cb(&rec);
+            records.push(rec);
+        }
+        for conn in self.conns.values_mut() {
+            let _ = conn.send(&WireMsg::Finish);
+        }
+        Ok(self.server.finish_run(records, reached))
+    }
+
     /// Evict devices whose last simulated-time heartbeat is stale (see
     /// the module docs for why this is NOT called automatically: under
     /// the synchronous barrier only kickoff-executing devices heartbeat,
@@ -180,8 +216,21 @@ impl<T: Transport> CoordinatorService<T> {
 
     /// One networked round: kickoff frames out, device frames in until
     /// the external round drains, canonical aggregation, application.
-    fn round_networked(&mut self, t: usize) -> Result<RoundOutcome> {
+    /// With a journal, the round-open record goes out before any kickoff
+    /// frame and the fold-order resolutions after the round drains (both
+    /// before `apply_round` mutates the server). Returns the outcome and
+    /// the completer count (what the close record needs).
+    fn round_networked(
+        &mut self,
+        t: usize,
+        mut jw: Option<&mut RunJournal>,
+    ) -> Result<(RoundOutcome, usize)> {
         let (mut round, starts) = self.server.begin_networked_round(t)?;
+        if let Some(jw) = jw.as_deref_mut() {
+            let items: Vec<StartRound> = starts.iter().map(|s| s.item).collect();
+            let lr = self.server.cfg.lr_at(t - 1) as f32;
+            jw.append(&self.server.record_open(t, &items, lr))?;
+        }
         let mut down_bits: BTreeMap<usize, usize> = BTreeMap::new();
         let mut outbox: BTreeMap<usize, WireMsg> = BTreeMap::new();
         for s in starts {
@@ -319,6 +368,12 @@ impl<T: Transport> CoordinatorService<T> {
         }
 
         let out = self.server.engine_mut().finish_external(round)?;
-        Ok(self.server.apply_round(t, out))
+        let completers = out.updates.len();
+        if let Some(jw) = jw.as_deref_mut() {
+            for r in self.server.resolution_records(t, &out) {
+                jw.append(&r)?;
+            }
+        }
+        Ok((self.server.apply_round(t, out), completers))
     }
 }

@@ -61,7 +61,10 @@ impl Transport for TcpTransport {
                     }
                     std::thread::sleep(ACCEPT_POLL.min(timeout));
                 }
-                Err(e) => return Err(TransportError::Io(e)),
+                // a non-WouldBlock accept failure is the listener itself
+                // breaking (fd exhaustion, interface death) — surface it
+                // typed instead of busy-polling past it like a timeout
+                Err(e) => return Err(TransportError::Accept(e)),
             }
         }
     }

@@ -1,0 +1,476 @@
+//! Durable rounds: the journal subsystem's headline invariants.
+//!
+//! 1. **Resume bit-identity.** A run killed at ANY append point and then
+//!    resumed from its journal finishes with the same final model bits,
+//!    traffic ledger, per-round records — and the same journal file,
+//!    byte for byte — as the run that was never interrupted.
+//! 2. **Torn tails are discarded, never trusted.** Truncation at every
+//!    byte offset and single-bit flips anywhere in the image always
+//!    recover a valid record prefix without panicking.
+//! 3. **Offline replay.** `journal::verify` re-derives the run from the
+//!    records alone — no trainer, no fleet — and catches digest, traffic
+//!    and bookkeeping corruption.
+//! 4. **Journaling is an observer.** Writing the journal must not
+//!    perturb the run, and the networked coordinator journals the exact
+//!    bytes the in-process one does.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use caesar_fl::config::{CompressionBackend, ExperimentConfig, TrainerBackend};
+use caesar_fl::coordinator::{RoundRecord, RunResult, Server};
+use caesar_fl::fleet::FleetKind;
+use caesar_fl::journal::{
+    self, Dropout, EndRound, KillSink, ParamBlock, PlanEntry, Record, RoundClose, RoundOpen,
+    RunHeader, Snapshot, JOURNAL_VERSION,
+};
+use caesar_fl::schemes::{self, DownloadCodec, UploadCodec};
+use caesar_fl::transport::{
+    model_digest, CoordinatorService, DeviceClient, LoopbackHub, SessionEnd,
+};
+use caesar_fl::util::prop::{forall, Config as PropConfig};
+use caesar_fl::util::rng::{Rng, RngState};
+
+const N_DEVICES: usize = 6;
+const SNAP_EVERY: usize = 2;
+
+fn tiny_cfg(rounds: usize, workers: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("har");
+    cfg.trainer = TrainerBackend::Native;
+    cfg.compression = CompressionBackend::Native;
+    cfg.fleet = FleetKind::JetsonScaled(N_DEVICES);
+    cfg.rounds = rounds;
+    cfg.alpha = 0.5; // 3 participants per round
+    cfg.n_train = 240;
+    cfg.n_test = 120;
+    cfg.tau = 2;
+    cfg.batch = 8;
+    cfg.eval_every = 2;
+    cfg.seed = 7;
+    cfg.engine.workers = workers;
+    cfg
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("caesar_durability_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+/// One journaled run against `path`; `kill` arms the fault injector to
+/// tear the `kill`-th append (0-based) mid-frame and die.
+fn journaled_run(
+    cfg: &ExperimentConfig,
+    scheme: &str,
+    path: &Path,
+    kill: Option<usize>,
+) -> anyhow::Result<(Server, RunResult)> {
+    let (mut srv, mut jw) =
+        Server::journaled_open(cfg.clone(), schemes::by_name(scheme).unwrap(), path, SNAP_EVERY)?;
+    if let Some(k) = kill {
+        jw.map_sink(|s| Box::new(KillSink::new(s, k, 3)));
+    }
+    let result = srv.run_journaled(&mut jw)?;
+    Ok((srv, result))
+}
+
+/// Bit-exact comparison of everything the durability invariant covers.
+fn assert_identical(what: &str, a: (&Server, &RunResult), b: (&Server, &RunResult)) {
+    let ((sa, ra), (sb, rb)) = (a, b);
+    assert_eq!(model_digest(&sa.global), model_digest(&sb.global), "{what}: final model");
+    assert_eq!(
+        sa.traffic().down_bits.to_bits(),
+        sb.traffic().down_bits.to_bits(),
+        "{what}: download traffic"
+    );
+    assert_eq!(
+        sa.traffic().up_bits.to_bits(),
+        sb.traffic().up_bits.to_bits(),
+        "{what}: upload traffic"
+    );
+    assert_eq!(sa.sim_time_s().to_bits(), sb.sim_time_s().to_bits(), "{what}: clock");
+    assert_eq!(sa.model_version(), sb.model_version(), "{what}: model version");
+    assert_eq!(ra.records.len(), rb.records.len(), "{what}: record count");
+    for (x, y) in ra.records.iter().zip(&rb.records) {
+        assert_eq!(x.t, y.t, "{what}: round ids");
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{what}: round {}", x.t);
+        assert_eq!(x.traffic_gb.to_bits(), y.traffic_gb.to_bits(), "{what}: round {}", x.t);
+        assert_eq!(x.mean_loss.to_bits(), y.mean_loss.to_bits(), "{what}: round {}", x.t);
+        assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits(), "{what}: round {}", x.t);
+    }
+}
+
+// ---------------------------------------------------------------------
+// journaling is a pure observer
+// ---------------------------------------------------------------------
+
+#[test]
+fn journaling_does_not_perturb_the_run_and_replay_verifies_it() {
+    let cfg = tiny_cfg(4, 1);
+    let mut plain_srv = Server::new(cfg.clone(), schemes::by_name("caesar").unwrap()).unwrap();
+    let plain = plain_srv.run().unwrap();
+
+    let path = tmp_path("observer.cjl");
+    let (srv, result) = journaled_run(&cfg, "caesar", &path, None).unwrap();
+    assert_identical("journaled vs plain", (&srv, &result), (&plain_srv, &plain));
+
+    // the finished journal replays offline — no trainer — and every
+    // recorded digest cross-checks
+    let (rec, bytes) = journal::recover_file(&path).unwrap();
+    assert_eq!(rec.discarded(bytes.len()), 0, "a clean run leaves no torn tail");
+    let summary = journal::verify(&rec.records).unwrap();
+    assert_eq!(summary.rounds, cfg.rounds);
+    assert!(!summary.partial_tail, "run closed with its final snapshot");
+    assert_eq!(summary.final_model_digest, model_digest(&srv.global));
+    assert_eq!(summary.down_bits.to_bits(), srv.traffic().down_bits.to_bits());
+    assert_eq!(summary.up_bits.to_bits(), srv.traffic().up_bits.to_bits());
+    assert_eq!(summary.sim_time_s.to_bits(), srv.sim_time_s().to_bits());
+}
+
+// ---------------------------------------------------------------------
+// kill-point sweep: resume is bit-identical
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_kill_point_resumes_bit_identically() {
+    let cfg = tiny_cfg(4, 1);
+    let golden_path = tmp_path("golden.cjl");
+    let (gold_srv, gold_res) = journaled_run(&cfg, "caesar", &golden_path, None).unwrap();
+    let golden = std::fs::read(&golden_path).unwrap();
+    let (gold_rec, _) = journal::recover_file(&golden_path).unwrap();
+    let n_appends = gold_rec.records.len();
+    assert!(n_appends > 2 * cfg.rounds, "sweep would be vacuous: {n_appends} appends");
+
+    let path = tmp_path("killsweep.cjl");
+    for k in 0..n_appends {
+        let _ = std::fs::remove_file(&path);
+        let err = journaled_run(&cfg, "caesar", &path, Some(k))
+            .err()
+            .unwrap_or_else(|| panic!("kill at append {k} did not fire"));
+        assert!(
+            err.to_string().contains("kill point"),
+            "kill at {k}: unexpected error {err:#}"
+        );
+        // the dead process left k whole records plus a torn fragment;
+        // a fresh open resumes and finishes the run
+        let (srv, result) = journaled_run(&cfg, "caesar", &path, None)
+            .unwrap_or_else(|e| panic!("resume after kill at {k} failed: {e:#}"));
+        assert_identical(
+            &format!("kill at {k}"),
+            (&srv, &result),
+            (&gold_srv, &gold_res),
+        );
+        let resumed = std::fs::read(&path).unwrap();
+        assert_eq!(resumed, golden, "kill at {k}: journal file diverged from uninterrupted run");
+    }
+}
+
+#[test]
+fn kill_points_resume_for_other_schemes_worker_counts_and_dropouts() {
+    for (scheme, workers, dropout) in
+        [("prowd", 1, 0.0), ("fedavg", 4, 0.0), ("caesar", 4, 0.4)]
+    {
+        let mut cfg = tiny_cfg(4, workers);
+        cfg.engine.dropout_rate = dropout;
+        let what = format!("{scheme}/w{workers}/d{dropout}");
+        let golden_path = tmp_path(&format!("golden_{scheme}_{workers}.cjl"));
+        let (gold_srv, gold_res) = journaled_run(&cfg, scheme, &golden_path, None).unwrap();
+        let golden = std::fs::read(&golden_path).unwrap();
+        let (gold_rec, _) = journal::recover_file(&golden_path).unwrap();
+        let n_appends = gold_rec.records.len();
+
+        let path = tmp_path(&format!("killsweep_{scheme}_{workers}.cjl"));
+        // semantic kill points: mid-preamble, mid-round-1, mid-run, and
+        // the very last append
+        for k in [1, 4, n_appends / 2, n_appends - 1] {
+            let _ = std::fs::remove_file(&path);
+            journaled_run(&cfg, scheme, &path, Some(k))
+                .err()
+                .unwrap_or_else(|| panic!("{what}: kill at {k} did not fire"));
+            let (srv, result) = journaled_run(&cfg, scheme, &path, None)
+                .unwrap_or_else(|e| panic!("{what}: resume after kill at {k} failed: {e:#}"));
+            assert_identical(&format!("{what} kill {k}"), (&srv, &result), (&gold_srv, &gold_res));
+            assert_eq!(
+                std::fs::read(&path).unwrap(),
+                golden,
+                "{what}: journal diverged after kill at {k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn reopening_a_finished_journal_reproduces_the_result_without_retraining() {
+    let cfg = tiny_cfg(4, 1);
+    let path = tmp_path("finished.cjl");
+    let (srv, result) = journaled_run(&cfg, "caesar", &path, None).unwrap();
+    let before = std::fs::read(&path).unwrap();
+    // rounds=4 with SNAP_EVERY=2 ends on a snapshot, so everything is
+    // restorable state: no rounds re-execute
+    let (srv2, result2) = journaled_run(&cfg, "caesar", &path, None).unwrap();
+    assert_identical("reopen", (&srv2, &result2), (&srv, &result));
+    assert_eq!(std::fs::read(&path).unwrap(), before, "reopen must not rewrite the journal");
+}
+
+#[test]
+fn a_journal_from_a_different_scheme_or_config_is_refused() {
+    let cfg = tiny_cfg(2, 1);
+    let path = tmp_path("identity.cjl");
+    journaled_run(&cfg, "caesar", &path, None).unwrap();
+
+    let err = journaled_run(&cfg, "prowd", &path, None).unwrap_err();
+    assert!(err.to_string().contains("scheme"), "{err:#}");
+
+    let mut other = cfg.clone();
+    other.seed = 8;
+    let err = journaled_run(&other, "caesar", &path, None).unwrap_err();
+    assert!(err.to_string().contains("config"), "{err:#}");
+}
+
+// ---------------------------------------------------------------------
+// torn-tail fuzz over a synthetic journal image
+// ---------------------------------------------------------------------
+
+/// A small, fully synthetic 5-round journal image: real record encodings
+/// (tiny 4-param models, 3 devices) that keep the truncate-at-every-byte
+/// sweep quadratic-affordable. Recovery is structural — the contents
+/// need not pass `verify`.
+fn synthetic_journal(rounds: usize) -> Vec<u8> {
+    let mut rng = Rng::new(0xD15C);
+    let n_dev = 3usize;
+    let n_params = 4usize;
+    let mut cfg = ExperimentConfig::preset("har");
+    cfg.trainer = TrainerBackend::Native;
+    cfg.fleet = FleetKind::JetsonScaled(n_dev);
+    let mut recs = vec![Record::RunHeader(RunHeader {
+        version: JOURNAL_VERSION,
+        scheme: "caesar".to_string(),
+        snapshot_every: 2,
+        cfg,
+    })];
+    let snap = |rng: &mut Rng, t: usize| {
+        Record::Snapshot(Box::new(Snapshot {
+            t,
+            model_version: t as u64,
+            sim_time_s: t as f64 * 3.5,
+            rng: RngState { s: [rng.next_u64(); 4], spare_normal: None },
+            down_bits: rng.f64() * 1e9,
+            up_bits: rng.f64() * 1e9,
+            model: ParamBlock::new((0..n_params).map(|i| i as f32).collect()),
+            locals: (0..n_dev)
+                .map(|d| {
+                    (d % 2 == 0).then(|| {
+                        ParamBlock::new((0..n_params).map(|i| (d + i) as f32).collect())
+                    })
+                })
+                .collect(),
+            grad_norms: (0..n_dev).map(|d| d as f64).collect(),
+            last_round: (0..n_dev).map(|d| d % (t + 1)).collect(),
+        }))
+    };
+    recs.push(snap(&mut rng, 0));
+    for t in 1..=rounds {
+        recs.push(Record::RoundOpen(RoundOpen {
+            t,
+            model_version: t as u64 - 1,
+            sim_now_s: t as f64,
+            lr: 0.1,
+            stream_base: 0xBEEF,
+            plans: (0..2)
+                .map(|d| PlanEntry {
+                    device: d,
+                    download: DownloadCodec::CaesarSplit { ratio: 0.4 },
+                    upload: UploadCodec::TopK { ratio: 0.5 },
+                    batch: 16,
+                    tau: 5,
+                    beta_d: 1e6,
+                    beta_u: 5e5,
+                    mu: 1e-4,
+                })
+                .collect(),
+        }));
+        recs.push(Record::EndRound(EndRound {
+            t,
+            device: 0,
+            w_digest: rng.next_u64(),
+            upload_bits: 1024,
+            down_wire_bits: 2048,
+            grad_norm: 1.5,
+            loss: 0.7,
+            download_s: 0.1,
+            compute_s: 0.2,
+            upload_s: 0.3,
+        }));
+        recs.push(Record::Dropout(Dropout { t, device: 1, after_s: 0.15, down_wire_bits: 2048 }));
+        recs.push(Record::RoundClose(RoundClose {
+            t,
+            completers: 1,
+            model_version: t as u64,
+            model_digest: rng.next_u64(),
+            down_bits: t as f64 * 4096.0,
+            up_bits: t as f64 * 1024.0,
+            rec: RoundRecord {
+                t,
+                sim_time_s: t as f64,
+                traffic_gb: t as f64 * 1e-3,
+                accuracy: if t % 2 == 0 { 0.5 } else { f64::NAN },
+                auc: f64::NAN,
+                mean_loss: 0.7,
+                round_s: 0.6,
+                avg_wait_s: 0.0,
+                participants: 2,
+            },
+        }));
+        if t % 2 == 0 {
+            recs.push(snap(&mut rng, t));
+        }
+    }
+    recs.iter().flat_map(journal::encode_record).collect()
+}
+
+#[test]
+fn truncation_at_every_byte_recovers_exactly_the_whole_record_prefix() {
+    let bytes = synthetic_journal(5);
+    let full = journal::recover(&bytes);
+    assert_eq!(full.valid_len, bytes.len(), "the synthetic image itself must be valid");
+    let ends = full.ends.clone();
+
+    for cut in 0..=bytes.len() {
+        let rec = journal::recover(&bytes[..cut]);
+        let expect = ends.iter().filter(|&&e| e <= cut).count();
+        assert_eq!(rec.records.len(), expect, "cut at {cut}");
+        assert_eq!(rec.valid_len, if expect == 0 { 0 } else { ends[expect - 1] }, "cut at {cut}");
+        // the newest surviving record decoded to exactly its original
+        // frame (earlier ones are covered by smaller cuts)
+        if let Some(last) = rec.records.last() {
+            let (s, e) = (if expect == 1 { 0 } else { ends[expect - 2] }, ends[expect - 1]);
+            assert_eq!(journal::encode_record(last), &bytes[s..e], "cut at {cut}");
+        }
+    }
+}
+
+#[test]
+fn bit_flips_never_panic_and_records_before_the_flip_survive() {
+    let bytes = synthetic_journal(5);
+    let ends = journal::recover(&bytes).ends;
+    forall(
+        PropConfig { cases: 48, seed: 0xF11B },
+        |rng, _size| (rng.below(bytes.len()), rng.below(8)),
+        |&(idx, bit)| {
+            let mut flipped = bytes.clone();
+            flipped[idx] ^= 1 << bit;
+            let rec = journal::recover(&flipped);
+            // the record containing the flip (and everything after it)
+            // may be lost — but never the ones wholly before it
+            let before = ends.iter().filter(|&&e| e <= idx).count();
+            if rec.records.len() < before {
+                return Err(format!(
+                    "flip at byte {idx} bit {bit} lost {} intact records",
+                    before - rec.records.len()
+                ));
+            }
+            for (j, r) in rec.records.iter().take(before).enumerate() {
+                let (s, e) = (if j == 0 { 0 } else { ends[j - 1] }, ends[j]);
+                if journal::encode_record(r) != bytes[s..e] {
+                    return Err(format!("flip at byte {idx} corrupted earlier record {j}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// offline replay catches corruption
+// ---------------------------------------------------------------------
+
+#[test]
+fn replay_catches_digest_traffic_and_bookkeeping_corruption() {
+    let cfg = tiny_cfg(4, 1);
+    let path = tmp_path("replay.cjl");
+    journaled_run(&cfg, "caesar", &path, None).unwrap();
+    let (rec, _) = journal::recover_file(&path).unwrap();
+    journal::verify(&rec.records).expect("the untampered journal verifies");
+
+    // traffic ledger: a close's totals must equal the summed resolutions
+    let mut tampered = rec.records.clone();
+    let i = tampered
+        .iter()
+        .rposition(|r| matches!(r, Record::RoundClose(_)))
+        .unwrap();
+    if let Record::RoundClose(c) = &mut tampered[i] {
+        c.down_bits += 1.0;
+    }
+    journal::verify(&tampered).expect_err("corrupted traffic total must fail replay");
+
+    // per-device upload bits feed the same cross-check from the other side
+    let mut tampered = rec.records.clone();
+    let i = tampered.iter().position(|r| matches!(r, Record::EndRound(_))).unwrap();
+    if let Record::EndRound(e) = &mut tampered[i] {
+        e.upload_bits += 1;
+    }
+    journal::verify(&tampered).expect_err("corrupted upload bits must fail replay");
+
+    // snapshot payloads carry their own digests
+    let mut tampered = rec.records.clone();
+    let i = tampered.iter().rposition(|r| matches!(r, Record::Snapshot(_))).unwrap();
+    if let Record::Snapshot(s) = &mut tampered[i] {
+        s.model.w[0] = s.model.w[0] + 1.0;
+    }
+    journal::verify(&tampered).expect_err("corrupted snapshot model must fail replay");
+
+    // the model-version counter only moves when someone completed
+    let mut tampered = rec.records.clone();
+    let i = tampered.iter().position(|r| matches!(r, Record::RoundClose(_))).unwrap();
+    if let Record::RoundClose(c) = &mut tampered[i] {
+        c.model_version += 1;
+    }
+    journal::verify(&tampered).expect_err("corrupted model version must fail replay");
+}
+
+// ---------------------------------------------------------------------
+// the networked coordinator journals the same bytes
+// ---------------------------------------------------------------------
+
+#[test]
+fn networked_journal_matches_the_in_process_journal_byte_for_byte() {
+    let cfg = tiny_cfg(3, 1);
+    let inproc_path = tmp_path("inproc.cjl");
+    let (inproc_srv, inproc_res) = journaled_run(&cfg, "caesar", &inproc_path, None).unwrap();
+
+    let net_path = tmp_path("loopback.cjl");
+    let (server, mut jw) = Server::journaled_open(
+        cfg.clone(),
+        schemes::by_name("caesar").unwrap(),
+        &net_path,
+        SNAP_EVERY,
+    )
+    .unwrap();
+    let hub = LoopbackHub::new();
+    let dialer = hub.dialer();
+    let mut svc = CoordinatorService::new(server, hub);
+    let mut handles = Vec::new();
+    for d in 0..N_DEVICES {
+        let dialer = dialer.clone();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = DeviceClient::new(cfg, d).unwrap();
+            let mut conn = dialer.connect().unwrap();
+            client.run(&mut conn).unwrap()
+        }));
+    }
+    svc.wait_for_devices(N_DEVICES, Duration::from_secs(30)).unwrap();
+    let result = svc.run_journaled_cb(&mut jw, |_| {}).unwrap();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), SessionEnd::Finished);
+    }
+    let srv = svc.into_server();
+    assert_identical("networked journaled", (&srv, &result), (&inproc_srv, &inproc_res));
+    assert_eq!(
+        std::fs::read(&net_path).unwrap(),
+        std::fs::read(&inproc_path).unwrap(),
+        "loopback and in-process journals must be byte-identical"
+    );
+}
