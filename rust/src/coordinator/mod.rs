@@ -562,9 +562,12 @@ impl Server {
 
 impl Server {
     /// Open a journaled run: resume from `path` when it holds a valid
-    /// run-header + snapshot prefix for this exact config and scheme,
-    /// otherwise start fresh (truncating whatever unresumable bytes were
-    /// there). Artifacts come from [`Runtime::default_dir`].
+    /// run-header + snapshot prefix for this exact config and scheme.
+    /// Starts fresh only over a missing/empty file or a torn crash-at-
+    /// birth prefix that never reached its initial snapshot; a non-empty
+    /// file this build cannot decode (version skew, corruption, foreign
+    /// bytes) is an error, never silently truncated. Artifacts come from
+    /// [`Runtime::default_dir`].
     pub fn journaled_open(
         cfg: ExperimentConfig,
         scheme: Box<dyn Scheme>,
@@ -608,6 +611,30 @@ impl Server {
         let (header, snap_idx) = match (header, snap_idx) {
             (Some(h), Some(i)) => (h, i),
             _ => {
+                // Starting fresh truncates `path`, so it is only allowed
+                // over nothing (no file / empty file) or over the shape a
+                // crash-at-birth leaves behind: a valid prefix — possibly
+                // just a torn first write — that never reached snapshot 0.
+                // A non-empty file whose records stop for any reason other
+                // than truncation (format-version skew, a CRC failure, a
+                // foreign file) is an error, never silently clobbered.
+                let torn_only = matches!(
+                    recovered.terminal,
+                    None | Some(journal::JournalError::Truncated { .. })
+                );
+                let header_shaped = recovered.records.is_empty()
+                    || matches!(recovered.records.first(), Some(jrec::Record::RunHeader(_)));
+                if !bytes.is_empty() && !(torn_only && header_shaped) {
+                    let why = match &recovered.terminal {
+                        Some(e) => e.to_string(),
+                        None => "it does not begin with a run header".to_string(),
+                    };
+                    return Err(anyhow!(
+                        "journal {} exists but cannot be read by this build ({why}); \
+                         refusing to overwrite it",
+                        path.display()
+                    ));
+                }
                 let srv = Server::with_artifacts(cfg, scheme, artifact_dir)?;
                 let sink = journal::FileSink::create(path)
                     .with_context(|| format!("create journal {}", path.display()))?;

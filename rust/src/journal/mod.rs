@@ -24,7 +24,12 @@
 //! Writing goes through the [`JournalSink`] trait so the fault-injection
 //! harness ([`KillSink`]) can script a crash at the N-th append — torn
 //! mid-record, exactly like a process killed inside `write(2)` — while
-//! production uses [`FileSink`] (append + flush per record).
+//! production uses [`FileSink`] (append + flush per record). The
+//! durability guarantee is scoped to **process crashes**: every
+//! acknowledged append has reached the kernel, so killing the process at
+//! any point loses at most a torn tail. No fsync is issued, so an OS
+//! crash or power loss can drop recently acknowledged records entirely —
+//! recovery still yields a clean earlier prefix, never corruption.
 //!
 //! [`RunJournal`] is the run-level wrapper the coordinator drives: it
 //! frames records, enforces the snapshot cadence, and — after a resume —
@@ -211,6 +216,11 @@ pub struct Recovered {
     pub ends: Vec<usize>,
     /// Total valid bytes — everything past this is torn/corrupt tail.
     pub valid_len: usize,
+    /// Why the scan stopped: `None` when every byte decoded cleanly,
+    /// otherwise the error at the first invalid record. Lets callers
+    /// tell a torn tail ([`JournalError::Truncated`]) apart from a file
+    /// this build cannot read at all (version skew, CRC corruption).
+    pub terminal: Option<JournalError>,
 }
 
 impl Recovered {
@@ -233,7 +243,10 @@ pub fn recover(bytes: &[u8]) -> Recovered {
                 out.records.push(rec);
                 out.ends.push(pos);
             }
-            Err(_) => break,
+            Err(e) => {
+                out.terminal = Some(e);
+                break;
+            }
         }
     }
     out.valid_len = pos;
@@ -284,9 +297,14 @@ impl JournalSink for Box<dyn JournalSink> {
 }
 
 /// Append-mode file sink: one `write_all` + `flush` per record, so every
-/// acknowledged append has left the process before the next decision is
-/// made. (Torn tails from an OS/power crash inside the write are exactly
-/// what [`recover`] discards.)
+/// acknowledged append has left the **process** (reached the kernel)
+/// before the next decision is made — a `kill -9` at any instant loses
+/// at most the torn record in flight. This deliberately stops short of
+/// `fsync`: an OS crash or power loss may drop acknowledged records that
+/// were still in the page cache, in which case [`recover`] returns a
+/// clean earlier prefix (never a corrupt state) and the resumed run
+/// re-executes the lost rounds. Callers needing power-loss durability at
+/// a milestone can [`FileSink::sync_data`] explicitly.
 pub struct FileSink {
     file: File,
 }
@@ -303,6 +321,12 @@ impl FileSink {
     pub fn create(path: &Path) -> std::io::Result<FileSink> {
         let file = OpenOptions::new().create(true).write(true).truncate(true).open(path)?;
         Ok(FileSink { file })
+    }
+
+    /// Force everything appended so far to stable storage (`fdatasync`).
+    /// Not called per-append — see the struct docs for the trade-off.
+    pub fn sync_data(&self) -> std::io::Result<()> {
+        self.file.sync_data()
     }
 }
 
@@ -599,6 +623,46 @@ mod tests {
             assert_eq!(used, framed.len());
             // canonical codec: re-encoding the decode reproduces the bytes
             assert_eq!(encode_record(&back), framed, "{}", rec.kind_name());
+        }
+    }
+
+    #[test]
+    fn minimum_size_plan_entries_decode() {
+        // Full/Full entries encode to 50 bytes — the smallest possible —
+        // so a plan of them must pass the decoder's count pre-flight
+        // (a 64-byte/entry estimate used to reject journals from schemes
+        // like fedavg whose every entry is Full/Full)
+        use crate::schemes::{DownloadCodec, UploadCodec};
+        let codecs: [(DownloadCodec, UploadCodec); 3] = [
+            (DownloadCodec::Full, UploadCodec::Full),
+            (DownloadCodec::Quant { bits: 8 }, UploadCodec::Full),
+            (DownloadCodec::Quant { bits: 8 }, UploadCodec::Quant { bits: 4 }),
+        ];
+        for (download, upload) in codecs {
+            let rec = Record::RoundOpen(RoundOpen {
+                t: 1,
+                model_version: 0,
+                sim_now_s: 0.0,
+                lr: 0.1,
+                stream_base: 0xBEEF,
+                plans: (0..8)
+                    .map(|d| PlanEntry {
+                        device: d,
+                        download,
+                        upload,
+                        batch: 16,
+                        tau: 5,
+                        beta_d: 1e6,
+                        beta_u: 5e5,
+                        mu: 1e-4,
+                    })
+                    .collect(),
+            });
+            let framed = encode_record(&rec);
+            let (back, used) = decode_record(&framed)
+                .unwrap_or_else(|e| panic!("{download:?}/{upload:?} plan rejected: {e}"));
+            assert_eq!(used, framed.len());
+            assert_eq!(encode_record(&back), framed);
         }
     }
 

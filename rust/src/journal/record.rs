@@ -476,7 +476,7 @@ pub(crate) fn decode_body(kind: u8, body: &[u8]) -> Result<Record, JournalError>
             let lr = r.f32()?;
             let stream_base = r.u64()?;
             let n = r.usize64()?;
-            r.need_at_least(n.checked_mul(64).ok_or(OVERFLOW)?)?;
+            r.need_at_least(n.checked_mul(MIN_PLAN_ENTRY_BYTES).ok_or(OVERFLOW)?)?;
             let mut plans = Vec::with_capacity(n);
             for _ in 0..n {
                 plans.push(decode_plan_entry(&mut r)?);
@@ -529,6 +529,11 @@ pub(crate) fn decode_body(kind: u8, body: &[u8]) -> Result<Record, JournalError>
 }
 
 const OVERFLOW: JournalError = JournalError::Malformed("length overflow");
+
+/// Smallest possible [`PlanEntry`] encoding, used to pre-flight the plan
+/// count before `Vec::with_capacity`: device (8) + two codec tags with no
+/// payload (Full/Full, 1+1) + batch (8) + tau (8) + three f64s (24).
+const MIN_PLAN_ENTRY_BYTES: usize = 50;
 
 fn decode_block(r: &mut Reader) -> Result<ParamBlock, JournalError> {
     let n = r.usize64()?;

@@ -86,6 +86,14 @@ pub fn verify(records: &[Record]) -> Result<ReplaySummary> {
     check(header.snapshot_every >= 1, || {
         format!("snapshot cadence {} is not >= 1", header.snapshot_every)
     })?;
+    // cfg invariants the replay arithmetic depends on: a CRC-valid but
+    // crafted/corrupted header must yield a typed error, not a panic —
+    // eval_every feeds a remainder below, and no live run can journal a
+    // zero (the CLI clamps it and the coordinator's own eval cadence
+    // would divide by it)
+    check(cfg.eval_every >= 1, || {
+        format!("config eval_every {} is not >= 1", cfg.eval_every)
+    })?;
 
     let snap0: &Snapshot = match it.next() {
         Some(Record::Snapshot(s)) if s.t == 0 => s,

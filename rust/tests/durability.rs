@@ -220,13 +220,60 @@ fn a_journal_from_a_different_scheme_or_config_is_refused() {
     let path = tmp_path("identity.cjl");
     journaled_run(&cfg, "caesar", &path, None).unwrap();
 
-    let err = journaled_run(&cfg, "prowd", &path, None).unwrap_err();
+    let err =
+        journaled_run(&cfg, "prowd", &path, None).err().expect("scheme mismatch must refuse");
     assert!(err.to_string().contains("scheme"), "{err:#}");
 
     let mut other = cfg.clone();
     other.seed = 8;
-    let err = journaled_run(&other, "caesar", &path, None).unwrap_err();
+    let err =
+        journaled_run(&other, "caesar", &path, None).err().expect("config mismatch must refuse");
     assert!(err.to_string().contains("config"), "{err:#}");
+}
+
+#[test]
+fn an_unreadable_journal_is_refused_not_clobbered() {
+    let cfg = tiny_cfg(2, 1);
+
+    // a non-empty file that is not a journal at all (BadLength at record 0)
+    let path = tmp_path("foreign.cjl");
+    std::fs::write(&path, [0xFFu8; 64]).unwrap();
+    let err =
+        journaled_run(&cfg, "caesar", &path, None).err().expect("foreign file must refuse");
+    assert!(err.to_string().contains("refusing to overwrite"), "{err:#}");
+    assert_eq!(std::fs::read(&path).unwrap(), [0xFFu8; 64], "refusal must not touch the file");
+
+    // a real journal whose header frame took a bit flip (BadCrc at record 0)
+    let path = tmp_path("flipped_header.cjl");
+    journaled_run(&cfg, "caesar", &path, None).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[6] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    let err =
+        journaled_run(&cfg, "caesar", &path, None).err().expect("corrupt header must refuse");
+    assert!(err.to_string().contains("refusing to overwrite"), "{err:#}");
+    assert_eq!(std::fs::read(&path).unwrap(), bytes);
+
+    // a journal from a newer format version (Version at record 0): bump
+    // the version field and re-seal the CRC so only version skew objects
+    let path = tmp_path("newer_version.cjl");
+    let mut hdr_cfg = cfg.clone();
+    hdr_cfg.trainer = TrainerBackend::Native;
+    let mut framed = journal::encode_record(&Record::RunHeader(RunHeader {
+        version: JOURNAL_VERSION,
+        scheme: "caesar".to_string(),
+        snapshot_every: SNAP_EVERY,
+        cfg: hdr_cfg,
+    }));
+    framed[5] = JOURNAL_VERSION as u8 + 1;
+    let n = framed.len();
+    let crc = journal::crc32(&framed[..n - 4]);
+    framed[n - 4..].copy_from_slice(&crc.to_le_bytes());
+    std::fs::write(&path, &framed).unwrap();
+    let err =
+        journaled_run(&cfg, "caesar", &path, None).err().expect("version skew must refuse");
+    assert!(err.to_string().contains("journal format version"), "{err:#}");
+    assert_eq!(std::fs::read(&path).unwrap(), framed);
 }
 
 // ---------------------------------------------------------------------
@@ -428,6 +475,15 @@ fn replay_catches_digest_traffic_and_bookkeeping_corruption() {
         c.model_version += 1;
     }
     journal::verify(&tampered).expect_err("corrupted model version must fail replay");
+
+    // a CRC-valid but nonsensical header config is a typed error, not a
+    // panic (eval_every feeds a remainder in the replay loop)
+    let mut tampered = rec.records.clone();
+    if let Record::RunHeader(h) = &mut tampered[0] {
+        h.cfg.eval_every = 0;
+    }
+    let err = journal::verify(&tampered).expect_err("eval_every=0 must fail replay");
+    assert!(err.to_string().contains("eval_every"), "{err:#}");
 }
 
 // ---------------------------------------------------------------------
