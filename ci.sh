@@ -39,6 +39,8 @@ require_keys BENCH_engine.json bench task trainer host_workers cases \
   encode_calls_per_round encode_reduction \
   pool trainer_builds builds_reduction \
   cross_round_cache cache_cross_round_hits \
+  semi_async barrier_round_s_mean overlap_round_s_mean round_s_reduction \
+  barrier_ms_per_round overlap_ms_per_round staleness_bound \
   selection_scale keys rank sort_ms_per_call radix_ms_per_call \
   select_speedup radix_warm_alloc_bytes_per_call knee_keys \
   tree_agg groups chunk fold_baseline_ms stream_ms tree_ms \
@@ -135,6 +137,23 @@ fi
 cargo run --release --bin caesar -- run $run_flags \
   journal="$journal" journal-every=2 out="$smoke_dir/resumed"
 cargo run --release --bin caesar -- replay journal="$journal"
+
+echo "== pipelined journal smoke (semi-async rounds survive kill + replay) =="
+# the same kill/resume/replay loop with the semi-async window open:
+# round t+1 is in flight while round t's stragglers fold through the
+# staleness buffer, and the journal grammar (EndRound fold_t) must
+# resume and replay exactly like the barrier schedule
+pipe_journal="$smoke_dir/smoke_pipe.cjl"
+pipe_flags="$run_flags pipeline-depth=2 staleness-bound=1"
+if cargo run --release --bin caesar -- run $pipe_flags \
+  journal="$pipe_journal" journal-every=2 journal-kill-after=9 \
+  out="$smoke_dir/pipe_killed"; then
+  echo "pipelined journal smoke: the armed kill point did not fire"; exit 1
+fi
+[[ -s "$pipe_journal" ]] || { echo "pipelined journal smoke: no journal written"; exit 1; }
+cargo run --release --bin caesar -- run $pipe_flags \
+  journal="$pipe_journal" journal-every=2 out="$smoke_dir/pipe_resumed"
+cargo run --release --bin caesar -- replay journal="$pipe_journal"
 
 echo "== bench_journal smoke =="
 # append throughput + recovery-scan rate, quick mode

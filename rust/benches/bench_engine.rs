@@ -34,6 +34,13 @@
 //! reduce-phase allocation and live-bytes peak via the counting
 //! allocator and asserting chunk-sharded buffers stay below chunk size.
 //!
+//! A `semi_async` case compares the barrier schedule (depth 1, bound 0)
+//! against the pipelined one (depth 2, bound 2) at 1 000 devices: same
+//! seed, same participants — the overlap path closes each round on its
+//! on-time cohort and folds the straggler tail later, so its mean
+//! simulated round time must be no longer (and with real stragglers,
+//! materially shorter) than the barrier's.
+//!
 //! Results are written to BENCH_engine.json in the current directory.
 //! Quick mode: CAESAR_BENCH_QUICK=1 (fewer rounds, skips the 10k scale).
 
@@ -209,6 +216,42 @@ fn main() {
         "\n== bench: cross-round cache ({cross_rounds} all-dropout rounds) ==\n\
          {:>8} downloads  {:>4} encodes  {:>6} cross-round hits",
         cst.download_requests, cst.download_encodes, cst.cache_cross_round_hits
+    );
+
+    // --- semi-async pipelined rounds (ISSUE 9): with the window open the
+    // coordinator closes round t on its on-time cohort and folds the
+    // straggler tail into a later round, so the simulated round time
+    // drops from the slowest participant to the cost-median deadline.
+    // Same seed → same participants and per-device costs on both paths,
+    // so the overlap round can never be longer than the barrier round.
+    let sa_rounds = if quick { 3 } else { 6 };
+    let mut sa_run = |depth: usize, bound: usize| {
+        let mut cfg = cfg_at(1_000, par_workers);
+        cfg.rounds = sa_rounds;
+        cfg.engine.pipeline_depth = depth;
+        cfg.engine.staleness_bound = bound;
+        let mut srv = Server::new(cfg, schemes::by_name("caesar").unwrap()).unwrap();
+        let t0 = Instant::now();
+        let res = srv.run().unwrap();
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / sa_rounds as f64;
+        let round_s =
+            res.records.iter().map(|r| r.round_s).sum::<f64>() / res.records.len().max(1) as f64;
+        (ms, round_s)
+    };
+    let (barrier_ms, barrier_round_s) = sa_run(1, 0);
+    let (overlap_ms, overlap_round_s) = sa_run(2, 2);
+    let round_s_reduction =
+        if overlap_round_s > 0.0 { barrier_round_s / overlap_round_s } else { 1.0 };
+    assert!(
+        overlap_round_s <= barrier_round_s + 1e-12,
+        "overlap must never lengthen the simulated round: \
+         {overlap_round_s} vs {barrier_round_s}"
+    );
+    println!(
+        "\n== bench: semi-async rounds (1000 devices, depth 2, bound 2) ==\n\
+         {barrier_round_s:>10.2} s/round barrier  {overlap_round_s:>8.2} s/round overlap  \
+         {round_s_reduction:>6.2}x shorter\n\
+         host: {barrier_ms:>8.1} ms/round barrier  {overlap_ms:>8.1} ms/round overlap"
     );
 
     // --- radix selection case (ISSUE 7): the per-participant Top-K /
@@ -422,6 +465,18 @@ fn main() {
         .set("download_encodes", json::num(cst.download_encodes as f64))
         .set("cache_cross_round_hits", json::num(cst.cache_cross_round_hits as f64));
     out.set("cross_round_cache", cross_row);
+    let mut sa_row = Json::obj();
+    sa_row
+        .set("devices", json::num(1_000.0))
+        .set("rounds", json::num(sa_rounds as f64))
+        .set("depth", json::num(2.0))
+        .set("staleness_bound", json::num(2.0))
+        .set("barrier_round_s_mean", json::num(barrier_round_s))
+        .set("overlap_round_s_mean", json::num(overlap_round_s))
+        .set("round_s_reduction", json::num(round_s_reduction))
+        .set("barrier_ms_per_round", json::num(barrier_ms))
+        .set("overlap_ms_per_round", json::num(overlap_ms));
+    out.set("semi_async", sa_row);
     let mut sel = Json::obj();
     sel.set("cases", Json::Arr(sel_rows)).set(
         "knee_keys",

@@ -34,6 +34,7 @@ fn randn(n: usize, seed: u64) -> Vec<f32> {
 fn end_record(t: usize) -> Record {
     Record::EndRound(EndRound {
         t,
+        fold_t: t,
         device: 2,
         w_digest: 0xDEAD_BEEF_0BAD_F00D,
         upload_bits: 52_412,

@@ -4,7 +4,13 @@
 //!   caesar-coordinator [listen=127.0.0.1:0] [task=har] [scheme=caesar]
 //!                      [expect=<n>] [rendezvous-timeout=60]
 //!                      [round-timeout=120] [journal=<path>]
-//!                      [journal-every=K] [key=value overrides] [quiet]
+//!                      [journal-every=K] [pipeline-depth=D]
+//!                      [staleness-bound=S] [key=value overrides] [quiet]
+//!
+//! With `pipeline-depth` > 1 (or `staleness-bound` > 0) the run is
+//! semi-async: up to D rounds are open on the wire at once and a
+//! straggler's update may fold into a round up to S past its origin.
+//! Depth 1 / bound 0 reproduces the barrier schedule bit for bit.
 //!
 //! With `journal=`, every coordinator decision is event-sourced to an
 //! append-only CRC-framed log; a coordinator killed mid-run resumes from

@@ -40,23 +40,74 @@
 //! needs no compaction at all. No allocation: the histogram lives on
 //! the stack and compaction is in place in the caller's (pooled) key
 //! buffer.
+//!
+//! **Streaming fusion.** [`select_threshold`] does not run the key
+//! transform and pass 1 as two sweeps of n: [`abs_keys_hist24`] builds
+//! the keys AND the top-byte histogram in ONE pass over the floats, so
+//! each model-sized cache line is pulled exactly once before the select
+//! recurses into its (much smaller) bucket. The fused path is
+//! property-pinned bit-identical to `abs_sort_keys` + fresh histogram.
 
 use crate::util::pool;
+
+/// Fused |x|-key transform + top-byte histogram: the streaming first
+/// pass of [`select_threshold`]. Writes exactly what
+/// [`super::abs_sort_keys`] writes (same 8-wide chunking, same scalar
+/// tail) while counting `key >> 24` occupancy in the same sweep, so the
+/// selector's pass 1 never re-reads the key buffer.
+fn abs_keys_hist24(src: &[f32], dst: &mut Vec<u32>) -> [usize; 256] {
+    const SIGN_OFF: u32 = 0x7fff_ffff;
+    let mut hist = [0usize; 256];
+    dst.clear();
+    dst.reserve(src.len());
+    let mut chunks = src.chunks_exact(8);
+    for c in chunks.by_ref() {
+        let keys: [u32; 8] = std::array::from_fn(|j| c[j].to_bits() & SIGN_OFF);
+        for &k in &keys {
+            hist[(k >> 24) as usize] += 1;
+        }
+        dst.extend_from_slice(&keys);
+    }
+    for x in chunks.remainder() {
+        let k = x.to_bits() & SIGN_OFF;
+        hist[(k >> 24) as usize] += 1;
+        dst.push(k);
+    }
+    hist
+}
 
 /// The key at ascending rank `idx` among `keys[..]`, as a full sort
 /// would place it. O(n) counting select, MSB-first over 8-bit digits;
 /// the prefix of `keys` is permuted (it is scratch, like
 /// `select_nth_unstable`'s reordering). Panics if `idx >= keys.len()`.
 pub fn radix_select_kth(keys: &mut [u32], idx: usize) -> u32 {
+    let mut hist = [0usize; 256];
+    for &k in keys.iter() {
+        hist[(k >> 24) as usize] += 1;
+    }
+    radix_select_with_hist24(keys, idx, hist)
+}
+
+/// [`radix_select_kth`] with the top-byte histogram already counted by a
+/// producer that streamed the keys into place ([`abs_keys_hist24`]).
+/// `hist24[b]` must equal the number of keys whose top byte is `b` —
+/// debug-asserted against a recount.
+fn radix_select_with_hist24(keys: &mut [u32], idx: usize, hist24: [usize; 256]) -> u32 {
     assert!(idx < keys.len(), "rank {idx} out of range ({} keys)", keys.len());
+    debug_assert_eq!(hist24.iter().sum::<usize>(), keys.len(), "histogram miscounts the keys");
     let mut len = keys.len();
     let mut rank = idx;
     let mut prefix: u32 = 0;
     for shift in [24u32, 16, 8, 0] {
-        let mut hist = [0usize; 256];
-        for &k in &keys[..len] {
-            hist[((k >> shift) & 0xff) as usize] += 1;
-        }
+        let hist = if shift == 24 {
+            hist24
+        } else {
+            let mut h = [0usize; 256];
+            for &k in &keys[..len] {
+                h[((k >> shift) & 0xff) as usize] += 1;
+            }
+            h
+        };
         // find the digit bucket containing the rank
         let mut digit = 0usize;
         let mut below = 0usize;
@@ -103,15 +154,16 @@ pub fn radix_select_kth(keys: &mut [u32], idx: usize) -> u32 {
 
 /// The |·| threshold at ascending rank `rank` of `g` — the single entry
 /// point behind `topk::keep_threshold` and
-/// `caesar_model::quant_threshold`. Builds sort keys with the 8-wide
-/// branch-free [`super::abs_sort_keys`] transform into pooled per-thread
-/// scratch (zero model-sized allocation on the warm path) and radix
-/// selects in place. Panics if `rank >= g.len()`; callers own their
-/// `ratio → rank` clamping.
+/// `caesar_model::quant_threshold`. Streams the floats ONCE through the
+/// fused [`abs_keys_hist24`] pass (8-wide branch-free key transform into
+/// pooled per-thread scratch + the selector's first histogram, zero
+/// model-sized allocation on the warm path) and radix selects in place.
+/// Panics if `rank >= g.len()`; callers own their `ratio → rank`
+/// clamping.
 pub fn select_threshold(g: &[f32], rank: usize) -> f32 {
     let mut keys = pool::u32_buf();
-    super::abs_sort_keys(g, &mut keys);
-    f32::from_bits(radix_select_kth(&mut keys, rank))
+    let hist24 = abs_keys_hist24(g, &mut keys);
+    f32::from_bits(radix_select_with_hist24(&mut keys, rank, hist24))
 }
 
 #[cfg(test)]
@@ -216,6 +268,36 @@ mod tests {
             let thr = select_threshold(&g, rank);
             assert_eq!(thr.to_bits(), sort_select(&keys, rank), "rank {rank}");
         }
+    }
+
+    #[test]
+    fn prop_fused_first_pass_matches_transform_plus_recount() {
+        forall(
+            Config { cases: 64, seed: 0xF0_5ED },
+            |rng, size| {
+                // sizes straddling the 8-wide chunk boundary, with NaN /
+                // ±0 / subnormal salting via the generator's full range
+                let bound = (size * 3 + rng.below(9)).max(1);
+                gen_vec_f32(rng, bound, 1.0)
+            },
+            |g| {
+                let mut fused = Vec::new();
+                let hist = abs_keys_hist24(g, &mut fused);
+                let mut plain = Vec::new();
+                super::super::abs_sort_keys(g, &mut plain);
+                if fused != plain {
+                    return Err(format!("fused keys diverged at n={}", g.len()));
+                }
+                let mut recount = [0usize; 256];
+                for &k in &plain {
+                    recount[(k >> 24) as usize] += 1;
+                }
+                if hist != recount {
+                    return Err(format!("fused histogram diverged at n={}", g.len()));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -50,6 +50,19 @@ pub struct EngineConfig {
     /// Simulated device heartbeat interval in seconds (<= 0 disables
     /// liveness pings).
     pub heartbeat_s: f64,
+    /// Rounds the coordinator may hold in flight at once. `1` (the
+    /// default) is the classic hard barrier: round t fully closes before
+    /// round t+1 opens, bit-identical to the pre-pipelining engine.
+    /// Values above 1 open round t+1 (participant selection, download
+    /// encodes, device execution) while round t's stragglers drain.
+    pub pipeline_depth: usize,
+    /// Maximum rounds a straggler's upload may fold late (semi-async
+    /// staleness bound). `0` (the default) means every upload folds into
+    /// its own round — the barrier semantics. With S >= 1, an upload
+    /// whose round cost exceeds twice the round's median folds into a
+    /// later round's aggregate (at most S rounds later), so the slowest
+    /// devices stop holding the barrier.
+    pub staleness_bound: usize,
 }
 
 impl Default for EngineConfig {
@@ -57,11 +70,49 @@ impl Default for EngineConfig {
         EngineConfig {
             workers: 1,
             agg_group: 8,
-            agg_chunk: 65_536,
+            agg_chunk: detect_agg_chunk(),
             dropout_rate: 0.0,
             heartbeat_s: 10.0,
+            pipeline_depth: 1,
+            staleness_bound: 0,
         }
     }
+}
+
+/// Fallback aggregation chunk length (f64 elements) when the L2 cache
+/// size cannot be detected: 64Ki elements = 512 KiB per chunk, the
+/// pre-autotune default.
+pub const AGG_CHUNK_FALLBACK: usize = 65_536;
+
+/// Default `agg_chunk`, autotuned from the detected L2 cache size so a
+/// partial-sum chunk fits the per-core cache: `L2 bytes / 8` f64
+/// elements, clamped to [4Ki, 1Mi] and detected once per process.
+/// Chunking is bit-transparent (it splits storage, never arithmetic), so
+/// the autotuned value only moves performance — an explicit `agg-chunk=`
+/// override always wins, and `EngineStats::agg_chunk` records what a run
+/// actually used.
+pub fn detect_agg_chunk() -> usize {
+    static CHUNK: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CHUNK.get_or_init(|| {
+        parse_cache_size(
+            &std::fs::read_to_string("/sys/devices/system/cpu/cpu0/cache/index2/size")
+                .unwrap_or_default(),
+        )
+        .map(|bytes| (bytes / 8).clamp(1 << 12, 1 << 20))
+        .unwrap_or(AGG_CHUNK_FALLBACK)
+    })
+}
+
+/// Parse a sysfs cache-size string ("512K", "4M", "1048576") to bytes.
+fn parse_cache_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (digits, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        _ => (s, 1),
+    };
+    let v: usize = digits.trim().parse().ok()?;
+    (v > 0).then(|| v.saturating_mul(mult))
 }
 
 /// Full configuration of one FL experiment run.
@@ -248,6 +299,12 @@ impl ExperimentConfig {
         if let Some(v) = args.get_f64("heartbeat") {
             self.engine.heartbeat_s = v;
         }
+        if let Some(v) = args.get_usize("pipeline-depth") {
+            self.engine.pipeline_depth = v.max(1);
+        }
+        if let Some(v) = args.get_usize("staleness-bound") {
+            self.engine.staleness_bound = v;
+        }
         if let Some(v) = args.get("compression-backend") {
             self.compression = match v {
                 "native" => CompressionBackend::Native,
@@ -349,6 +406,39 @@ mod tests {
         // zero workers clamps up to 1
         let z = Args::parse("x engine-workers=0".split_whitespace().map(String::from));
         assert_eq!(ExperimentConfig::preset("har").apply_overrides(&z).engine.workers, 1);
+    }
+
+    #[test]
+    fn pipeline_knobs_default_to_the_barrier_and_apply() {
+        let d = EngineConfig::default();
+        assert_eq!((d.pipeline_depth, d.staleness_bound), (1, 0));
+        let args = Args::parse(
+            "x pipeline-depth=2 staleness-bound=3".split_whitespace().map(String::from),
+        );
+        let c = ExperimentConfig::preset("har").apply_overrides(&args);
+        assert_eq!(c.engine.pipeline_depth, 2);
+        assert_eq!(c.engine.staleness_bound, 3);
+        // depth 0 clamps up to 1 (the barrier)
+        let z = Args::parse("x pipeline-depth=0".split_whitespace().map(String::from));
+        assert_eq!(
+            ExperimentConfig::preset("har").apply_overrides(&z).engine.pipeline_depth,
+            1
+        );
+    }
+
+    #[test]
+    fn agg_chunk_autotune_parses_sysfs_sizes_and_falls_back() {
+        assert_eq!(parse_cache_size("512K\n"), Some(512 * 1024));
+        assert_eq!(parse_cache_size("4M"), Some(4 * 1024 * 1024));
+        assert_eq!(parse_cache_size("1048576"), Some(1024 * 1024));
+        assert_eq!(parse_cache_size(""), None);
+        assert_eq!(parse_cache_size("0K"), None);
+        assert_eq!(parse_cache_size("nope"), None);
+        // the detected default is clamped and power-of-two-friendly; the
+        // fallback is the historical 64Ki elements
+        let d = detect_agg_chunk();
+        assert!((1 << 12..=1 << 20).contains(&d), "detected {d}");
+        assert_eq!(EngineConfig::default().agg_chunk, d);
     }
 
     #[test]

@@ -41,7 +41,7 @@ use crate::compress::traffic::{PayloadScale, TrafficMeter};
 use crate::config::{CompressionBackend, ExperimentConfig};
 use crate::coordinator::codec::effective_download;
 use crate::data::{self, Dataset, Partition, TaskSpec};
-use crate::engine::{self, Engine, ExecutorHandle, ExternalRound, StartRound};
+use crate::engine::{self, Engine, ExecutorHandle, ExternalRound, LateUpload, StartRound};
 use crate::fleet::Fleet;
 use crate::journal::{self, record as jrec, RunJournal};
 use crate::nn::MlpSpec;
@@ -104,6 +104,15 @@ pub struct Server {
     stream_base: u64,
     /// The event-driven round engine (state machine + encode cache).
     engine: Engine,
+    /// Semi-async staleness buffer: stragglers' uploads parked at their
+    /// origin round's close, waiting for their fold round. Kept in
+    /// (origin round, device) order — closes are sequential and each
+    /// close appends in device order, so no re-sort is ever needed.
+    late_buffer: Vec<LateUpload>,
+    /// Consecutive completed rounds during which the worker pool ran
+    /// short-handed (a worker panicked and retired). Drives the
+    /// self-healing respawn in [`Server::maintain_workers`].
+    short_rounds: usize,
 }
 
 /// Everything measured in one executed round.
@@ -193,6 +202,8 @@ impl Server {
             traffic: TrafficMeter::default(),
             sim_time_s: 0.0,
             model_version: 0,
+            late_buffer: Vec::new(),
+            short_rounds: 0,
             scheme,
             fleet,
             train_ds,
@@ -275,11 +286,15 @@ impl Server {
     /// evaluating every `cfg.eval_every` rounds. `cb` observes each record
     /// as it is produced (progress printing).
     pub fn run_cb(&mut self, mut cb: impl FnMut(&RoundRecord)) -> Result<RunResult> {
+        if self.pipelined() {
+            return self.run_pipelined_cb(None, cb);
+        }
         let mut records = Vec::with_capacity(self.cfg.rounds);
         let mut reached: Option<(usize, f64, f64)> = None;
         for t in 1..=self.cfg.rounds {
             let out = self.round(t)?;
             let rec = self.observe_round(t, &out, &mut reached)?;
+            self.maintain_workers();
             cb(&rec);
             records.push(rec);
         }
@@ -735,6 +750,9 @@ impl Server {
             jw.append(&self.record_header(jw.snapshot_every()))?;
             jw.append(&self.journal_snapshot(0))?;
         }
+        if self.pipelined() {
+            return self.run_pipelined_cb(Some(jw), cb);
+        }
         let mut records = jw.take_prior_records();
         let mut reached = self.recompute_reached(&records);
         for t in records.len() + 1..=self.cfg.rounds {
@@ -764,6 +782,7 @@ impl Server {
             if jw.due_snapshot(t) {
                 jw.append(&self.journal_snapshot(t))?;
             }
+            self.maintain_workers();
             cb(&rec);
             records.push(rec);
         }
@@ -835,13 +854,40 @@ impl Server {
 
     /// Per-device resolutions in fold order (ascending device id), built
     /// from the drained round output *before* [`Self::apply_round`]
-    /// consumes it.
+    /// consumes it. The barrier path: every upload folds at its own
+    /// round, so `fold_t == t` throughout.
     pub(crate) fn resolution_records(&self, t: usize, out: &engine::RoundOutput) -> Vec<jrec::Record> {
-        out.resolutions()
-            .into_iter()
-            .map(|res| match res {
-                engine::Resolution::Update(u) => jrec::Record::EndRound(jrec::EndRound {
+        let fold_ts = vec![t; out.updates.len()];
+        self.resolution_records_with(t, &out.updates, &out.dropped, &fold_ts)
+    }
+
+    /// [`Self::resolution_records`] with an explicit fold round per
+    /// update (`fold_ts` is parallel to `updates`): the semi-async close
+    /// journals each straggler's EndRound in its **origin** round's close
+    /// group, carrying the round its upload will fold into. `updates`
+    /// and `dropped` must already be device-ascending; the merge emits
+    /// one record per resolution in that canonical order.
+    fn resolution_records_with(
+        &self,
+        t: usize,
+        updates: &[engine::RoundUpdate],
+        dropped: &[engine::DroppedDevice],
+        fold_ts: &[usize],
+    ) -> Vec<jrec::Record> {
+        debug_assert_eq!(updates.len(), fold_ts.len());
+        let mut recs = Vec::with_capacity(updates.len() + dropped.len());
+        let (mut ui, mut di) = (0usize, 0usize);
+        while ui < updates.len() || di < dropped.len() {
+            let end_first = match (updates.get(ui), dropped.get(di)) {
+                (Some(u), Some(d)) => u.device < d.device,
+                (Some(_), None) => true,
+                _ => false,
+            };
+            if end_first {
+                let u = &updates[ui];
+                recs.push(jrec::Record::EndRound(jrec::EndRound {
                     t,
+                    fold_t: fold_ts[ui],
                     device: u.device,
                     w_digest: crate::transport::model_digest(&u.w_final),
                     upload_bits: u.upload.bits,
@@ -851,15 +897,20 @@ impl Server {
                     download_s: u.cost.download_s,
                     compute_s: u.cost.compute_s,
                     upload_s: u.cost.upload_s,
-                }),
-                engine::Resolution::Dropped(d) => jrec::Record::Dropout(jrec::Dropout {
+                }));
+                ui += 1;
+            } else {
+                let d = &dropped[di];
+                recs.push(jrec::Record::Dropout(jrec::Dropout {
                     t,
                     device: d.device,
                     after_s: d.after_s,
                     down_wire_bits: d.down_wire_bits,
-                }),
-            })
-            .collect()
+                }));
+                di += 1;
+            }
+        }
+        recs
     }
 
     /// Round `t` closed: post-apply model version + digest, cumulative
@@ -937,6 +988,279 @@ impl Server {
         self.grad_norms = s.grad_norms.clone();
         self.tracker = ParticipationTracker::from_rounds(s.last_round.clone());
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// semi-async pipelined rounds: straggler-overlapped aggregation
+// ---------------------------------------------------------------------
+
+/// One opened-but-unclosed pipelined round. Time is simulated, so the
+/// download/train/upload phase ran **eagerly at open** (against the
+/// global model as of the open — round t+1 trains on the pre-close-t
+/// model, the semi-async staleness the paper's baseline tolerates);
+/// the resolutions wait here for their close slot, where lateness is
+/// classified and the deferred fold happens.
+pub(crate) struct PendingRound {
+    pub(crate) t: usize,
+    /// Planned participants, ascending (the canonical fold order).
+    pub(crate) devices: Vec<usize>,
+    /// Resolutions sorted by device id.
+    pub(crate) updates: Vec<engine::RoundUpdate>,
+    pub(crate) dropped: Vec<engine::DroppedDevice>,
+}
+
+/// The last round the scheduler may hold open while round `t` is the
+/// oldest unclosed one: the end of the run, or — on journaled runs —
+/// the next snapshot boundary (`quiesce` = the snapshot cadence, 0 for
+/// no journal). Snapshots only land on fully-drained state (empty
+/// window, empty staleness buffer), so no round and no parked upload
+/// may straddle one; that keeps the snapshot format unchanged and
+/// resume trivially correct.
+pub(crate) fn barrier_after(t: usize, quiesce: usize, rounds: usize) -> usize {
+    if quiesce == 0 { rounds } else { (t.div_ceil(quiesce) * quiesce).min(rounds) }
+}
+
+/// Classify round `t`'s completers as on-time or late, returning each
+/// one's fold round (`== t` when on time). `costs` are the completers'
+/// total simulated costs in device order. A pure function of the
+/// round's own journaled EndRound costs, so `caesar replay` re-derives
+/// every fold round bit-exactly from the journal alone: sort the costs,
+/// take the median, call anything beyond 2× the median late, and park
+/// it `ceil(cost/deadline) − 1` rounds ahead, capped by the effective
+/// staleness budget `s_eff` (0 disables lateness entirely — the
+/// barrier). The median rule guarantees at least half the completers
+/// stay on time, so a round's clock never collapses to zero.
+pub(crate) fn classify_lateness(costs: &[f64], t: usize, s_eff: usize) -> Vec<usize> {
+    if costs.is_empty() || s_eff == 0 {
+        return vec![t; costs.len()];
+    }
+    let mut cs = costs.to_vec();
+    cs.sort_by(f64::total_cmp);
+    let deadline = 2.0 * cs[(cs.len() - 1) / 2];
+    costs
+        .iter()
+        .map(|&c| {
+            if deadline <= 0.0 || c <= deadline {
+                return t;
+            }
+            let lag = ((c / deadline).ceil() as usize).saturating_sub(1).clamp(1, s_eff);
+            t + lag
+        })
+        .collect()
+}
+
+impl Server {
+    /// Whether the semi-async scheduler drives this run: any pipeline
+    /// depth beyond 1, or any staleness tolerance. Depth 1 / bound 0
+    /// routes through the untouched barrier loops, bit-for-bit.
+    pub(crate) fn pipelined(&self) -> bool {
+        self.cfg.engine.pipeline_depth > 1 || self.cfg.engine.staleness_bound > 0
+    }
+
+    /// Open round `u` for pipelined execution: plan (consuming the
+    /// server RNG in open order), journal the RoundOpen, and execute the
+    /// simulated round eagerly against the current global model. The
+    /// output is NOT applied — it parks as a [`PendingRound`] until its
+    /// close slot.
+    fn open_pipelined(&mut self, u: usize, jw: Option<&mut RunJournal>) -> Result<PendingRound> {
+        let (mut items, lr) = self.plan_round(u);
+        if let Some(jw) = jw {
+            jw.append(&self.record_open(u, &items, lr))?;
+        }
+        // canonical (ascending device) order, as the networked path kicks off
+        items.sort_by_key(|it| it.plan.device);
+        let devices: Vec<usize> = items.iter().map(|it| it.plan.device).collect();
+        let env = engine::RoundEnv {
+            t: u,
+            lr,
+            cfg: &self.cfg,
+            global: &self.global,
+            model_version: self.model_version,
+            locals: &self.locals,
+            train_ds: &self.train_ds,
+            partition: &self.partition,
+            scale: &self.scale,
+            stream_base: self.stream_base,
+            sim_now_s: self.sim_time_s,
+        };
+        let (mut updates, mut dropped) =
+            self.engine.execute_round_unfolded(&env, &items, &self.executor)?;
+        updates.sort_by_key(|up| up.device);
+        dropped.sort_by_key(|d| d.device);
+        Ok(PendingRound { t: u, devices, updates, dropped })
+    }
+
+    /// Close round `t`: classify lateness from the round's own costs,
+    /// journal the device-ascending resolutions (each EndRound carrying
+    /// its fold round), fold the on-time uploads plus any prior rounds'
+    /// stragglers due this round, and apply everything at the origin
+    /// round in canonical device order. The single close path shared by
+    /// the in-process scheduler and the networked coordinator — both
+    /// write byte-identical journals. Returns the round outcome and the
+    /// number of uploads folded (what RoundClose records as
+    /// `completers`).
+    pub(crate) fn close_pipelined(
+        &mut self,
+        pend: PendingRound,
+        quiesce: usize,
+        jw: Option<&mut RunJournal>,
+    ) -> Result<(RoundOutcome, usize)> {
+        let PendingRound { t, devices, updates, dropped } = pend;
+        let s_eff = self
+            .cfg
+            .engine
+            .staleness_bound
+            .min(barrier_after(t, quiesce, self.cfg.rounds) - t);
+        let costs_all: Vec<f64> = updates.iter().map(|u| u.cost.total()).collect();
+        let fold_ts = classify_lateness(&costs_all, t, s_eff);
+        let on_time: Vec<bool> = fold_ts.iter().map(|&f| f == t).collect();
+
+        if let Some(jw) = jw {
+            for r in self.resolution_records_with(t, &updates, &dropped, &fold_ts) {
+                jw.append(&r)?;
+            }
+        }
+
+        // prior rounds' parked stragglers whose fold slot arrived; the
+        // partition preserves the buffer's (origin, device) order
+        let parked = std::mem::take(&mut self.late_buffer);
+        let (late_ins, parked): (Vec<_>, Vec<_>) =
+            parked.into_iter().partition(|l| l.fold_t <= t);
+        self.late_buffer = parked;
+
+        let (agg, folded) =
+            self.engine.fold_round(self.global.len(), &devices, &updates, &on_time, &late_ins)?;
+
+        // --- apply in canonical device order: everything except the
+        // gradient fold lands at the origin round, late or not ---
+        let n_ends = updates.len();
+        let mut n_on_time = 0usize;
+        let mut costs: Vec<f64> = Vec::with_capacity(n_ends);
+        let mut loss_sum = 0.0f64;
+        for (i, u) in updates.into_iter().enumerate() {
+            self.traffic.add_down(self.scale.scale_bits(u.down_wire_bits));
+            self.traffic.add_up(self.scale.scale_bits(u.upload.bits));
+            self.grad_norms[u.device] = u.grad_norm;
+            self.locals[u.device] = Some(u.w_final);
+            self.tracker.record(u.device, t);
+            loss_sum += u.loss;
+            if on_time[i] {
+                n_on_time += 1;
+                costs.push(u.cost.total());
+            } else {
+                self.late_buffer.push(LateUpload {
+                    origin_t: t,
+                    fold_t: fold_ts[i],
+                    device: u.device,
+                    upload: u.upload,
+                });
+            }
+        }
+        for d in &dropped {
+            self.traffic.add_down(self.scale.scale_bits(d.down_wire_bits));
+        }
+
+        // --- global aggregation: the mean over everything folded THIS
+        // round (on-time completers + absorbed stragglers) ---
+        if folded > 0 {
+            let inv = 1.0 / folded as f64;
+            for (w, a) in self.global.iter_mut().zip(agg.iter()) {
+                *w -= (a * inv) as f32;
+            }
+            self.model_version += 1;
+        }
+
+        // --- semi-async timing: the barrier waits only for on-time
+        // completers and noticed dropouts; stragglers no longer hold the
+        // round open (THE wall-clock lever of this scheduler) ---
+        let round_s = costs
+            .iter()
+            .copied()
+            .chain(dropped.iter().map(|d| d.after_s))
+            .fold(0.0f64, f64::max);
+        let avg_wait_s = if n_on_time > 0 {
+            costs.iter().map(|&c| round_s - c).sum::<f64>() / n_on_time as f64
+        } else {
+            0.0
+        };
+        self.sim_time_s += round_s;
+        let mean_loss = if n_ends > 0 { loss_sum / n_ends as f64 } else { f64::NAN };
+        Ok((RoundOutcome { round_s, avg_wait_s, mean_loss }, folded))
+    }
+
+    /// The semi-async run loop: a depth-bounded window of open rounds,
+    /// closed oldest-first. While round `t` drains, rounds up to
+    /// `barrier_after(t)` open behind it (plan → journal RoundOpen →
+    /// eager execute); every close folds its on-time uploads plus the
+    /// staleness buffer's due entries. With a journal, opens never cross
+    /// a snapshot boundary, so every snapshot lands on fully-quiescent
+    /// state and resume restarts the scheduler cold at `snap.t + 1`.
+    fn run_pipelined_cb(
+        &mut self,
+        mut jw: Option<&mut RunJournal>,
+        mut cb: impl FnMut(&RoundRecord),
+    ) -> Result<RunResult> {
+        let quiesce = jw.as_ref().map(|j| j.snapshot_every()).unwrap_or(0);
+        let mut records = match jw.as_mut() {
+            Some(j) => j.take_prior_records(),
+            None => Vec::with_capacity(self.cfg.rounds),
+        };
+        let mut reached = self.recompute_reached(&records);
+        let depth = self.cfg.engine.pipeline_depth.max(1);
+        let rounds = self.cfg.rounds;
+        let mut window: std::collections::VecDeque<PendingRound> =
+            std::collections::VecDeque::with_capacity(depth);
+        let mut next_open = records.len() + 1;
+        for t in records.len() + 1..=rounds {
+            while next_open <= barrier_after(t, quiesce, rounds) && window.len() < depth {
+                let pend = self.open_pipelined(next_open, jw.as_deref_mut())?;
+                window.push_back(pend);
+                next_open += 1;
+            }
+            let pend = window.pop_front().expect("the window always holds round t");
+            debug_assert_eq!(pend.t, t);
+            let (outcome, folded) = self.close_pipelined(pend, quiesce, jw.as_deref_mut())?;
+            let rec = self.observe_round(t, &outcome, &mut reached)?;
+            if let Some(j) = jw.as_mut() {
+                j.append(&self.record_close(t, folded, &rec))?;
+                if j.due_snapshot(t) {
+                    debug_assert!(
+                        window.is_empty() && self.late_buffer.is_empty(),
+                        "snapshots only land on quiescent state"
+                    );
+                    j.append(&self.journal_snapshot(t))?;
+                }
+            }
+            self.maintain_workers();
+            cb(&rec);
+            records.push(rec);
+        }
+        Ok(self.finish_run(records, reached))
+    }
+
+    /// Self-healing worker pool: a panicked worker retires mid-round
+    /// (the round still completes on the survivors — results are
+    /// worker-count-invariant, so nothing shifts); after two consecutive
+    /// short-handed completed rounds the pool rebuilds the missing
+    /// threads through the same setup closure that built them at run
+    /// start. Called after every applied round; failed rounds never
+    /// reach it.
+    pub(crate) fn maintain_workers(&mut self) {
+        let (target, alive) = self.executor.worker_census();
+        if alive >= target {
+            self.short_rounds = 0;
+            return;
+        }
+        self.short_rounds += 1;
+        if self.short_rounds >= 2 {
+            match self.executor.respawn_dead() {
+                Ok(_) => self.short_rounds = 0,
+                // a failed rebuild leaves the pool as it was; retry at
+                // the next round boundary
+                Err(_) => {}
+            }
+        }
     }
 }
 

@@ -20,9 +20,11 @@
 //!    `n_groups`, so *any* execution of the tree produces the same bits:
 //!    the [`ShardReducer`] executes it streaming (combining the moment
 //!    both children of a node exist, buffering at most O(log G) partial
-//!    nodes), and [`reduce_shards_parallel`] executes it level-by-level
-//!    with pairwise combines fanned over scoped threads. Bit-identical
-//!    by construction — pinned in tests here and in `engine_parity`.
+//!    nodes), and [`reduce_shards_parallel`] executes it *climb-merge*
+//!    over scoped threads — each worker carries its leaf upward,
+//!    rendezvousing with the sibling's carrier at every pair, with NO
+//!    barrier between tree levels. Bit-identical by construction —
+//!    pinned in tests here and in `engine_parity`.
 //!
 //! Partial sums are [`ChunkedSum`]s: the model vector chunk-sharded into
 //! fixed power-of-two runs (`EngineConfig::agg_chunk`), so no single
@@ -434,14 +436,22 @@ impl ShardReducer {
     }
 }
 
-/// Execute the canonical reduction tree level-synchronously, pairwise
-/// combines fanned over `n_workers` scoped threads. Exactly the tree
-/// [`ShardReducer`] evaluates streaming — level `l` pairs positions
-/// `(2i, 2i+1)`, lower position on the left, lone trailing node promoted
-/// — so the result is bit-identical to a streaming reduction of the same
-/// shards at ANY worker count (`n_workers <= 1` runs the pairing loop
-/// inline). Validation matches [`ShardReducer::push`]/`finish`: shards
-/// must be complete and cover every group exactly once.
+/// Execute the canonical reduction tree **climb-merge** over `n_workers`
+/// scoped threads. Exactly the tree [`ShardReducer`] evaluates streaming
+/// — level `l` pairs positions `(2i, 2i+1)`, lower position on the left,
+/// lone trailing node promoted — but with NO barrier between levels:
+/// each worker takes one leaf and climbs, and at every pair the two
+/// carriers rendezvous through a take-once slot. The first to arrive
+/// deposits its node and ends its climb; the second merges (lower
+/// position always the left addend) and carries the parent upward. A
+/// fast subtree therefore reaches its upper merges while slow subtrees
+/// are still folding leaves — wall-clock is the deepest *path*, not the
+/// sum of slowest-per-level. The race decides only WHICH thread performs
+/// a merge, never the operand order, so the result is bit-identical to
+/// the streaming reduction at ANY worker count (`n_workers <= 1` climbs
+/// inline: leaf `g` deposits, leaf `g+1` merges, exactly the ascending
+/// streaming order). Validation matches [`ShardReducer::push`]/`finish`:
+/// shards must be complete and cover every group exactly once.
 pub fn reduce_shards_parallel(
     n_params: usize,
     n_groups: usize,
@@ -461,7 +471,7 @@ pub fn reduce_shards_parallel(
     }
     shards.sort_by_key(AggregatorShard::group);
     let mut folded_devices = 0usize;
-    let mut nodes: Vec<ChunkedSum> = Vec::with_capacity(n_groups);
+    let mut leaves: Vec<Mutex<Option<ChunkedSum>>> = Vec::with_capacity(n_groups);
     for (g, shard) in shards.into_iter().enumerate() {
         if !shard.complete() {
             return Err(anyhow!("group {} shard pushed incomplete", shard.group()));
@@ -474,28 +484,74 @@ pub fn reduce_shards_parallel(
         }
         folded_devices += shard.folded;
         let AggregatorShard { sum, .. } = shard;
-        nodes.push(sum);
+        leaves.push(Mutex::new(Some(sum)));
     }
-    while nodes.len() > 1 {
-        // hand each (left, right) pair to exactly one worker via a
-        // take-once slot; order is restored by scope_map's indexed output
-        let mut pairs: Vec<Mutex<Option<(ChunkedSum, Option<ChunkedSum>)>>> =
-            Vec::with_capacity(nodes.len().div_ceil(2));
-        let mut it = nodes.into_iter();
-        while let Some(left) = it.next() {
-            pairs.push(Mutex::new(Some((left, it.next()))));
+    // one rendezvous slot per (level, pair); a lone trailing node never
+    // touches a slot — it promotes unchanged, same as the streaming tree
+    let mut slots: Vec<Vec<Mutex<Option<(usize, ChunkedSum)>>>> = Vec::new();
+    for level in 0.. {
+        let width = level_width(n_groups, level);
+        if width <= 1 {
+            break;
         }
-        nodes = threadpool::scope_map(pairs.len(), n_workers, |i| {
-            let (mut left, right) =
-                pairs[i].lock().unwrap().take().expect("tree pair executed twice");
-            if let Some(right) = right {
-                left.merge(right);
-            }
-            left
-        });
+        slots.push((0..width / 2).map(|_| Mutex::new(None)).collect());
     }
-    let root = nodes.pop().ok_or_else(|| anyhow!("reduction tree lost its root"))?;
-    Ok((root, folded_devices))
+    let slots = &slots;
+    let leaves = &leaves;
+    let climbs = threadpool::scope_map(n_groups, n_workers, move |g| {
+        let mut node = leaves[g].lock().unwrap().take().expect("leaf climbed twice");
+        let mut pos = g;
+        for (level, pairs) in slots.iter().enumerate() {
+            let width = level_width(n_groups, level as u32);
+            let sib = pos ^ 1;
+            if sib >= width {
+                // lone trailing node: promote unchanged
+                pos >>= 1;
+                continue;
+            }
+            let deposited = slots_take_or_deposit(&pairs[pos >> 1], pos, node);
+            match deposited {
+                None => return None, // sibling's carrier finishes the pair
+                Some((other_pos, other, mine)) => {
+                    // the LOWER position is always the left addend
+                    let (mut left, right) =
+                        if pos < other_pos { (mine, other) } else { (other, mine) };
+                    left.merge(right);
+                    node = left;
+                    pos >>= 1;
+                }
+            }
+        }
+        Some(node)
+    });
+    let mut roots: Vec<ChunkedSum> = climbs.into_iter().flatten().collect();
+    if roots.len() != 1 {
+        return Err(anyhow!("reduction tree lost its root ({} climbs finished)", roots.len()));
+    }
+    Ok((roots.pop().expect("checked above"), folded_devices))
+}
+
+/// The pair rendezvous: atomically either deposit `(pos, node)` into an
+/// empty slot (returning `None` — this climb ends) or take the sibling's
+/// deposit out of a full one (returning it plus `node` back — the caller
+/// merges and climbs on). The lock is held only for the swap, never for
+/// the merge.
+fn slots_take_or_deposit(
+    slot: &Mutex<Option<(usize, ChunkedSum)>>,
+    pos: usize,
+    node: ChunkedSum,
+) -> Option<(usize, ChunkedSum, ChunkedSum)> {
+    let mut guard = slot.lock().unwrap();
+    match guard.take() {
+        None => {
+            *guard = Some((pos, node));
+            None
+        }
+        Some((other_pos, other)) => {
+            debug_assert_eq!(other_pos ^ 1, pos, "rendezvous between non-siblings");
+            Some((other_pos, other, node))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -639,6 +695,35 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn climb_merge_matches_streaming_on_deep_ragged_trees() {
+        // 33 groups: a 6-level tree whose lone trailing node promotes
+        // through every level — the shape where a climb-ordering bug
+        // would first show. Race it at several worker counts against the
+        // streaming reducer's bits.
+        let n_groups = 33;
+        let vals = [1.0e-3f32, -0.77, 42.5];
+        let build = || -> Vec<AggregatorShard> {
+            (0..n_groups).map(|g| shard_of(g, &[g], &vals)).collect()
+        };
+        let mut r = ShardReducer::new(vals.len(), n_groups);
+        for s in build() {
+            r.push(s).unwrap();
+        }
+        let (want, want_folded) = r.finish().unwrap();
+        let want = want.to_vec();
+        for workers in [1usize, 2, 4, 8] {
+            let (root, folded) =
+                reduce_shards_parallel(vals.len(), n_groups, 0, build(), workers).unwrap();
+            assert_eq!(folded, want_folded, "workers={workers}");
+            assert_eq!(
+                root.to_vec().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "workers={workers}"
+            );
         }
     }
 

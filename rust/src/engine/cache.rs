@@ -44,7 +44,7 @@
 //! `begin_round` takes `&mut self`: generations only turn over between
 //! rounds, on the coordinator thread.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 
@@ -84,13 +84,29 @@ struct Entry {
     carried: bool,
 }
 
+/// One model generation's worth of encoded downloads.
+struct Gen {
+    /// Model version these entries encode (None for the implicit
+    /// pre-`begin_round` generation standalone use keys).
+    version: Option<u64>,
+    entries: HashMap<CacheKey, Entry>,
+}
+
 /// Shares one encoded download per distinct codec per model generation.
+///
+/// Holds up to `capacity` generations (the engine sizes it to
+/// `pipeline_depth`): with semi-async rounds two model versions are live
+/// at once — round t+1 opens against the post-t model while round t's
+/// stragglers still re-fetch the pre-t model — and neither round's
+/// encodes may evict the other's. Serving order is front-is-current:
+/// [`DownloadCache::begin_round`] promotes (or creates) the generation
+/// for the round being opened, and misses insert into the front
+/// generation only. At `capacity == 1` this is exactly the single-
+/// generation cache the barrier engine always had.
 pub struct DownloadCache {
-    entries: Mutex<HashMap<CacheKey, Entry>>,
-    /// Model version the current entries encode (None before the first
-    /// `begin_round`; pre-round standalone use keys a single implicit
-    /// generation).
-    generation: Option<u64>,
+    gens: Mutex<VecDeque<Gen>>,
+    /// Maximum live generations (≥ 1).
+    capacity: usize,
     requests: AtomicUsize,
     encodes: AtomicUsize,
     cross_round_hits: AtomicUsize,
@@ -104,34 +120,54 @@ impl Default for DownloadCache {
 
 impl DownloadCache {
     pub fn new() -> DownloadCache {
+        Self::with_capacity(1)
+    }
+
+    /// A cache holding up to `capacity` live model generations.
+    pub fn with_capacity(capacity: usize) -> DownloadCache {
         DownloadCache {
-            entries: Mutex::new(HashMap::new()),
-            generation: None,
+            gens: Mutex::new(VecDeque::new()),
+            capacity: capacity.max(1),
             requests: AtomicUsize::new(0),
             encodes: AtomicUsize::new(0),
             cross_round_hits: AtomicUsize::new(0),
         }
     }
 
-    /// Turn the generation over for a round serving `model_version`: a
-    /// changed version invalidates every entry, an unchanged one carries
-    /// them across the round boundary (subsequent hits count as
-    /// cross-round reuse). Counters are cumulative and never reset.
+    /// Live generations this cache can hold.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Turn the generations over for a round serving `model_version`: if a
+    /// live generation already encodes it, promote it to the front and
+    /// mark its entries carried (subsequent hits count as cross-round
+    /// reuse); otherwise open a fresh front generation. Generations past
+    /// `capacity` are evicted oldest-first. Counters are cumulative and
+    /// never reset.
     pub fn begin_round(&mut self, model_version: u64) {
-        // The cache is run-lifetime now: a panic under the lock (an encode
+        // The cache is run-lifetime: a panic under the lock (an encode
         // dying mid-miss on a worker) must not kill every later round. The
-        // map itself is coherent on that path — inserts happen only after
-        // a successful encode — but start the generation clean anyway.
-        let poisoned = self.entries.is_poisoned();
-        let entries = self.entries.get_mut().unwrap_or_else(PoisonError::into_inner);
-        if poisoned || self.generation != Some(model_version) {
-            entries.clear();
-            self.generation = Some(model_version);
-        } else {
-            for e in entries.values_mut() {
-                e.carried = true;
+        // maps themselves are coherent on that path — inserts happen only
+        // after a successful encode — but start from clean anyway.
+        let poisoned = self.gens.is_poisoned();
+        let gens = self.gens.get_mut().unwrap_or_else(PoisonError::into_inner);
+        if poisoned {
+            gens.clear();
+        }
+        match gens.iter().position(|g| g.version == Some(model_version)) {
+            Some(i) => {
+                let mut g = gens.remove(i).unwrap();
+                for e in g.entries.values_mut() {
+                    e.carried = true;
+                }
+                gens.push_front(g);
+            }
+            None => {
+                gens.push_front(Gen { version: Some(model_version), entries: HashMap::new() });
             }
         }
+        gens.truncate(self.capacity);
     }
 
     /// The serialized download for `codec`, encoding at most once per
@@ -159,8 +195,13 @@ impl DownloadCache {
         };
         // survive a poisoned lock (another worker's encode panicked): the
         // entries present are all post-successful-encode, so keep serving
-        let mut entries = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
-        if let Some(hit) = entries.get(&key) {
+        let mut gens = self.gens.lock().unwrap_or_else(PoisonError::into_inner);
+        if gens.is_empty() {
+            // pre-`begin_round` standalone use keys one implicit generation
+            gens.push_front(Gen { version: None, entries: HashMap::new() });
+        }
+        let front = gens.front_mut().expect("front generation just ensured");
+        if let Some(hit) = front.entries.get(&key) {
             if hit.carried {
                 self.cross_round_hits.fetch_add(1, Ordering::Relaxed);
             }
@@ -170,7 +211,7 @@ impl DownloadCache {
         // cacheable codecs are RNG-free by the module contract: feed a
         // throwaway stream so hit/miss can never diverge device draws
         let enc = Arc::new(engine.encode_download(codec, w, &mut Rng::new(0))?);
-        entries.insert(key, Entry { enc: Arc::clone(&enc), carried: false });
+        front.entries.insert(key, Entry { enc: Arc::clone(&enc), carried: false });
         Ok(enc)
     }
 
@@ -282,6 +323,108 @@ mod tests {
         // and the served bytes are the NEW model's
         let direct = e.encode_download(DownloadCodec::Full, &w1, &mut Rng::new(0)).unwrap();
         assert_eq!(b.bytes, direct.bytes);
+    }
+
+    #[test]
+    fn two_live_generations_never_evict_each_other() {
+        // the semi-async shape: rounds t and t+1 are open at once, serving
+        // model versions v and v+1 — a depth-2 cache must keep BOTH warm
+        // while the scheduler alternates begin_round between them
+        let wv = randn(300, 10);
+        let wv1 = randn(300, 11);
+        let e = CodecEngine::native();
+        let mut cache = DownloadCache::with_capacity(2);
+        assert_eq!(cache.capacity(), 2);
+
+        cache.begin_round(7);
+        let a7 = cache
+            .get_or_encode(&e, DownloadCodec::Full, &wv, true, &mut Rng::new(1))
+            .unwrap();
+        cache.begin_round(8);
+        let a8 = cache
+            .get_or_encode(&e, DownloadCodec::Full, &wv1, true, &mut Rng::new(2))
+            .unwrap();
+        assert_eq!(cache.encodes(), 2, "one encode per live generation");
+
+        // promoting v=7 back to the front serves its ORIGINAL bytes (no
+        // re-encode) and classifies the hit as cross-round reuse; v=8's
+        // entry survives the promotion untouched
+        cache.begin_round(7);
+        let b7 = cache
+            .get_or_encode(&e, DownloadCodec::Full, &wv, true, &mut Rng::new(3))
+            .unwrap();
+        assert!(Arc::ptr_eq(&a7, &b7), "generation 7 was evicted by generation 8");
+        cache.begin_round(8);
+        let b8 = cache
+            .get_or_encode(&e, DownloadCodec::Full, &wv1, true, &mut Rng::new(4))
+            .unwrap();
+        assert!(Arc::ptr_eq(&a8, &b8), "generation 8 was evicted by the promotion");
+        assert_eq!(cache.encodes(), 2, "ping-ponging live generations must not re-encode");
+        assert_eq!(cache.cross_round_hits(), 2);
+
+        // a THIRD version overflows capacity 2: the oldest (7) is evicted,
+        // so returning to it re-encodes
+        cache.begin_round(9);
+        cache
+            .get_or_encode(&e, DownloadCodec::Full, &randn(300, 12), true, &mut Rng::new(5))
+            .unwrap();
+        cache.begin_round(7);
+        let c7 = cache
+            .get_or_encode(&e, DownloadCodec::Full, &wv, true, &mut Rng::new(6))
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a7, &c7), "evicted generation must not resurrect its Arc");
+        assert_eq!(cache.encodes(), 4);
+        // the re-encode still serves the right bytes
+        assert_eq!(c7.bytes, a7.bytes);
+    }
+
+    #[test]
+    fn capacity_one_matches_the_legacy_single_generation_counters() {
+        // depth 1 must reproduce the barrier cache bit-for-bit, counters
+        // included: alternating versions re-encodes every time
+        let wv = randn(200, 13);
+        let wv1 = randn(200, 14);
+        let e = CodecEngine::native();
+        let mut cache = DownloadCache::new();
+        assert_eq!(cache.capacity(), 1);
+        for (round, w) in [(1u64, &wv), (2, &wv1), (1, &wv), (2, &wv1)] {
+            cache.begin_round(round);
+            cache.get_or_encode(&e, DownloadCodec::Full, w, true, &mut Rng::new(round)).unwrap();
+        }
+        assert_eq!(cache.requests(), 4);
+        assert_eq!(cache.encodes(), 4, "capacity 1 evicts on every version turn");
+        assert_eq!(cache.cross_round_hits(), 0);
+    }
+
+    #[test]
+    fn promotion_marks_entries_carried_per_generation() {
+        // cross_round_hits is deterministic: hits in the generation that
+        // FIRST encoded an entry never count; hits after the generation
+        // survives a begin_round boundary always do — independent of the
+        // other live generation's activity
+        let wv = randn(150, 15);
+        let wv1 = randn(150, 16);
+        let e = CodecEngine::native();
+        let mut cache = DownloadCache::with_capacity(2);
+        cache.begin_round(1);
+        cache.get_or_encode(&e, DownloadCodec::Full, &wv, true, &mut Rng::new(1)).unwrap();
+        // same round (no boundary): a plain hit, not cross-round
+        cache.get_or_encode(&e, DownloadCodec::Full, &wv, true, &mut Rng::new(2)).unwrap();
+        assert_eq!(cache.cross_round_hits(), 0);
+        // open the overlapping round on the next version — gen 1 is
+        // untouched behind it
+        cache.begin_round(2);
+        cache.get_or_encode(&e, DownloadCodec::Full, &wv1, true, &mut Rng::new(3)).unwrap();
+        assert_eq!(cache.cross_round_hits(), 0, "fresh generation's first miss");
+        // promote gen 1 back: its entries are now carried
+        cache.begin_round(1);
+        cache.get_or_encode(&e, DownloadCodec::Full, &wv, true, &mut Rng::new(4)).unwrap();
+        assert_eq!(cache.cross_round_hits(), 1);
+        // and promoting gen 2 back marks ITS entry carried too
+        cache.begin_round(2);
+        cache.get_or_encode(&e, DownloadCodec::Full, &wv1, true, &mut Rng::new(5)).unwrap();
+        assert_eq!(cache.cross_round_hits(), 2);
+        assert_eq!(cache.encodes(), 2, "no eviction anywhere in the ping-pong");
     }
 
     #[test]

@@ -91,3 +91,18 @@ pub struct DroppedDevice {
     /// Download traffic it had already consumed (measured stand-in bits).
     pub down_wire_bits: usize,
 }
+
+/// A straggler's upload parked in the semi-async staleness buffer: it was
+/// produced in `origin_t` but folds into `fold_t > origin_t`'s aggregate.
+/// All other round-`origin_t` accounting (traffic, locals, tracker) was
+/// applied when `origin_t` closed; only the gradient fold is deferred.
+#[derive(Clone, Debug)]
+pub struct LateUpload {
+    /// Round the device trained in.
+    pub origin_t: usize,
+    /// Round whose aggregate absorbs the upload.
+    pub fold_t: usize,
+    pub device: usize,
+    /// The serialized upload, refolded verbatim at `fold_t`.
+    pub upload: EncodedPayload,
+}

@@ -68,7 +68,7 @@ pub mod registry;
 
 pub use aggregate::{reduce_shards_parallel, AggregatorShard, ChunkedSum, ShardReducer};
 pub use cache::DownloadCache;
-pub use message::{DeviceMsg, DroppedDevice, Event, RoundUpdate, StartRound};
+pub use message::{DeviceMsg, DroppedDevice, Event, LateUpload, RoundUpdate, StartRound};
 pub use registry::{DeviceStatus, Registry};
 
 use std::collections::BTreeSet;
@@ -127,6 +127,10 @@ pub struct EngineStats {
     /// O(workers) per RUN (pool setup builds them once), where the
     /// per-round scoped fan-out paid O(workers·rounds).
     pub trainer_builds: usize,
+    /// The aggregation chunk length this engine runs with — the explicit
+    /// `agg-chunk=` override, or the L2-autotuned default
+    /// (`config::detect_agg_chunk`).
+    pub agg_chunk: usize,
 }
 
 /// Read-only view of everything a device round needs from the server.
@@ -224,6 +228,27 @@ impl ExecutorHandle {
                 p.run_batch(1, |ctx, _| ctx.trainer.n_params(), |r| out = r.ok());
                 out.ok_or_else(|| anyhow!("worker pool lost the n_params probe"))
             }
+        }
+    }
+
+    /// `(target, alive)` worker census: how many worker threads the pool
+    /// was built with vs how many survive (a panicked worker retires
+    /// itself). Inline executors are their own, always-alive thread.
+    pub fn worker_census(&self) -> (usize, usize) {
+        match self {
+            ExecutorHandle::Inline(_) => (1, 1),
+            ExecutorHandle::Pool(p) => (p.workers(), p.alive()),
+        }
+    }
+
+    /// Rebuild any dead pool workers on fresh threads via the pool's
+    /// original setup closure (trainers and runtimes are reconstructed
+    /// exactly as at run start). Returns how many were rebuilt; inline
+    /// executors have nothing to heal.
+    pub fn respawn_dead(&mut self) -> Result<usize> {
+        match self {
+            ExecutorHandle::Inline(_) => Ok(0),
+            ExecutorHandle::Pool(p) => p.respawn_dead(),
         }
     }
 
@@ -331,8 +356,12 @@ pub struct Engine {
     registry: Registry,
     stats: EngineStats,
     /// Cross-round download-encode cache, generation-keyed by the model
-    /// version; shared by the inline and pool paths.
+    /// version; shared by the inline and pool paths. Sized to hold one
+    /// generation per in-flight round (`pipeline_depth`).
     cache: DownloadCache,
+    /// Externally driven rounds currently open, ascending — at most
+    /// `pipeline_depth` at once (1 = the classic single-round barrier).
+    open_external: BTreeSet<usize>,
 }
 
 impl Engine {
@@ -340,8 +369,9 @@ impl Engine {
         Engine {
             registry: Registry::new(n_devices, cfg.heartbeat_s),
             phase: Phase::Standby,
-            stats: EngineStats::default(),
-            cache: DownloadCache::new(),
+            stats: EngineStats { agg_chunk: cfg.agg_chunk, ..EngineStats::default() },
+            cache: DownloadCache::with_capacity(cfg.pipeline_depth.max(1)),
+            open_external: BTreeSet::new(),
             cfg,
         }
     }
@@ -394,12 +424,40 @@ impl Engine {
             Phase::Finished => return Err(anyhow!("engine is finished; no further rounds")),
         }
         self.phase = Phase::Round(env.t);
-        let out = self.round_inner(env, items, executor);
+        let out = self.round_inner(env, items, executor, true);
         self.phase = Phase::Standby;
         if out.is_ok() {
             self.stats.rounds += 1;
         }
-        out
+        out.map(|(agg, updates, dropped)| RoundOutput {
+            agg: agg.expect("folding round returns an aggregate"),
+            updates,
+            dropped,
+        })
+    }
+
+    /// [`Engine::execute_round`] without the aggregation fold: device work
+    /// runs (and the registry / cache / stats bookkeeping happens) exactly
+    /// as in a folding round, but the uploads are handed back unfolded.
+    /// The semi-async driver executes overlapped rounds through this and
+    /// defers each round's fold to [`Engine::fold_round`] at close time,
+    /// when it knows which stragglers park in the staleness buffer.
+    /// Does NOT bump `stats.rounds` — the round counts when it closes.
+    pub fn execute_round_unfolded(
+        &mut self,
+        env: &RoundEnv,
+        items: &[StartRound],
+        executor: &ExecutorHandle,
+    ) -> Result<(Vec<RoundUpdate>, Vec<DroppedDevice>)> {
+        match self.phase {
+            Phase::Standby => {}
+            Phase::Round(r) => return Err(anyhow!("engine re-entered while in round {r}")),
+            Phase::Finished => return Err(anyhow!("engine is finished; no further rounds")),
+        }
+        self.phase = Phase::Round(env.t);
+        let out = self.round_inner(env, items, executor, false);
+        self.phase = Phase::Standby;
+        out.map(|(_, updates, dropped)| (updates, dropped))
     }
 
     fn round_inner(
@@ -407,7 +465,8 @@ impl Engine {
         env: &RoundEnv,
         items: &[StartRound],
         executor: &ExecutorHandle,
-    ) -> Result<RoundOutput> {
+        fold: bool,
+    ) -> Result<(Option<ChunkedSum>, Vec<RoundUpdate>, Vec<DroppedDevice>)> {
         let n_params = env.global.len();
 
         // trainers are run-lifetime resources: mirror the executor's build
@@ -432,7 +491,7 @@ impl Engine {
         for &i in &order {
             let d = items[i].plan.device;
             registry.join(d, env.sim_now_s);
-            registry.start_round(d, env.sim_now_s);
+            registry.start_round_in(d, env.sim_now_s, env.t);
             stats.messages += 2; // Join ack + StartRound
         }
 
@@ -441,7 +500,7 @@ impl Engine {
         let n_groups = groups.len();
         let ecfg = *cfg;
 
-        let mut reducer = ShardReducer::with_chunk(n_params, n_groups, cfg.agg_chunk);
+        let mut reducer = fold.then(|| ShardReducer::with_chunk(n_params, n_groups, cfg.agg_chunk));
         let mut updates: Vec<RoundUpdate> = Vec::with_capacity(order.len());
         let mut dropped: Vec<DroppedDevice> = Vec::new();
         let mut worker_err: Option<anyhow::Error> = None;
@@ -452,7 +511,7 @@ impl Engine {
                     CodecEngine::new(env.cfg.compression, trainer.runtime(), &env.cfg.task)?;
                 for (g, members) in groups.iter().enumerate() {
                     let events =
-                        execute_group(env, items, &ecfg, g, members, trainer, &codec, cache)?;
+                        execute_group(env, items, &ecfg, g, members, trainer, &codec, cache, fold)?;
                     for ev in events {
                         apply_event(
                             stats,
@@ -490,6 +549,7 @@ impl Engine {
                             &ctx.trainer,
                             &codec,
                             cache,
+                            fold,
                         ) {
                             Ok(events) => events,
                             Err(e) => vec![Event::Error(format!("group {g}: {e:#}"))],
@@ -540,6 +600,9 @@ impl Engine {
         stats.download_encodes = cache.encodes();
         stats.cache_cross_round_hits = cache.cross_round_hits();
 
+        let Some(reducer) = reducer else {
+            return Ok((None, updates, dropped));
+        };
         let (agg, folded) = reducer.finish()?;
         if folded != updates.len() {
             return Err(anyhow!(
@@ -547,7 +610,7 @@ impl Engine {
                 updates.len()
             ));
         }
-        Ok(RoundOutput { agg, updates, dropped })
+        Ok((Some(agg), updates, dropped))
     }
 
     /// Read access to the engine-owned download cache, so an external
@@ -575,6 +638,9 @@ impl Engine {
     /// `devices` must be sorted ascending and unique — the caller sends
     /// StartRound frames in this order, and it becomes the canonical
     /// aggregation order at [`Engine::finish_external`].
+    /// With `EngineConfig::pipeline_depth > 1` up to that many external
+    /// rounds may be open at once (the semi-async window); at the default
+    /// depth 1 a second open is rejected exactly as it always was.
     pub fn begin_external(
         &mut self,
         t: usize,
@@ -583,10 +649,17 @@ impl Engine {
         devices: &[usize],
         n_params: usize,
     ) -> Result<ExternalRound> {
+        let depth = self.cfg.pipeline_depth.max(1);
         match self.phase {
             Phase::Standby => {}
-            Phase::Round(r) => return Err(anyhow!("engine re-entered while in round {r}")),
+            Phase::Round(r) if self.open_external.len() >= depth => {
+                return Err(anyhow!("engine re-entered while in round {r}"));
+            }
+            Phase::Round(_) => {}
             Phase::Finished => return Err(anyhow!("engine is finished; no further rounds")),
+        }
+        if self.open_external.contains(&t) {
+            return Err(anyhow!("round {t} is already open"));
         }
         for pair in devices.windows(2) {
             if pair[0] >= pair[1] {
@@ -604,10 +677,11 @@ impl Engine {
             ));
         }
         self.phase = Phase::Round(t);
+        self.open_external.insert(t);
         self.cache.begin_round(model_version);
         for &d in devices {
             self.registry.join(d, sim_now_s);
-            self.registry.start_round(d, sim_now_s);
+            self.registry.start_round_in(d, sim_now_s, t);
             self.stats.messages += 2; // Join ack + StartRound
         }
         Ok(ExternalRound {
@@ -694,7 +768,7 @@ impl Engine {
     /// function of the group count alone, so the bits match the serial
     /// walk at any worker count.
     pub fn finish_external(&mut self, round: ExternalRound) -> Result<RoundOutput> {
-        if self.phase != Phase::Round(round.t) {
+        if !self.open_external.contains(&round.t) {
             return Err(anyhow!("finish_external outside round {}", round.t));
         }
         if !round.drained() {
@@ -704,7 +778,7 @@ impl Engine {
                 round.pending()
             ));
         }
-        let ExternalRound { n_params, expected, mut updates, mut dropped, .. } = round;
+        let ExternalRound { t, n_params, expected, mut updates, mut dropped, .. } = round;
         updates.sort_by_key(|u| u.device);
         dropped.sort_by_key(|d| d.device);
 
@@ -744,9 +818,120 @@ impl Engine {
                 updates.len()
             ));
         }
-        self.phase = Phase::Standby;
-        self.stats.rounds += 1;
+        self.close_open_round(t);
         Ok(RoundOutput { agg, updates, dropped })
+    }
+
+    /// Close a drained external round **without** folding: the semi-async
+    /// service takes the raw resolutions in canonical order and defers
+    /// the aggregation to [`Engine::fold_round`] at close time, exactly
+    /// like the in-process pipelined driver. Counts the round, mirrors
+    /// the cache counters, and retires the round from the open window.
+    /// Returns `(expected participants, updates, dropped)`, each sorted
+    /// by device id.
+    pub fn take_external(
+        &mut self,
+        round: ExternalRound,
+    ) -> Result<(Vec<usize>, Vec<RoundUpdate>, Vec<DroppedDevice>)> {
+        if !self.open_external.contains(&round.t) {
+            return Err(anyhow!("take_external outside round {}", round.t));
+        }
+        if !round.drained() {
+            return Err(anyhow!(
+                "round {} still waiting on devices {:?}",
+                round.t,
+                round.pending()
+            ));
+        }
+        let ExternalRound { t, expected, mut updates, mut dropped, .. } = round;
+        updates.sort_by_key(|u| u.device);
+        dropped.sort_by_key(|d| d.device);
+        self.stats.download_requests = self.cache.requests();
+        self.stats.download_encodes = self.cache.encodes();
+        self.stats.cache_cross_round_hits = self.cache.cross_round_hits();
+        self.close_open_round(t);
+        Ok((expected, updates, dropped))
+    }
+
+    /// Retire round `t` from the open window and restore the phase: back
+    /// to the newest still-open round, or Standby once the window drains.
+    fn close_open_round(&mut self, t: usize) {
+        self.open_external.remove(&t);
+        self.phase = match self.open_external.iter().next_back() {
+            Some(&r) => Phase::Round(r),
+            None => Phase::Standby,
+        };
+        self.stats.rounds += 1;
+    }
+
+    /// The deferred aggregation fold of one semi-async round: fold the
+    /// round's own on-time uploads in the canonical grouped order, skip
+    /// its stragglers (their uploads park in the staleness buffer), and
+    /// absorb prior rounds' late uploads whose fold round is this one as
+    /// a single trailing shard. The tree shape is a function of the
+    /// planned group count alone (always `groups + 1` here), so lateness
+    /// changes WHAT the shards hold — never the f64 fold order — and the
+    /// result is bit-identical at any worker count.
+    ///
+    /// `devices` is the round's planned participant set (ascending),
+    /// `updates` its resolutions sorted by device, `on_time[i]` whether
+    /// `updates[i]` folds now, and `late_ins` the absorbed uploads in
+    /// (origin round, device) order. Returns the aggregate and the number
+    /// of uploads folded (`on-time + late_ins`).
+    pub fn fold_round(
+        &self,
+        n_params: usize,
+        devices: &[usize],
+        updates: &[RoundUpdate],
+        on_time: &[bool],
+        late_ins: &[LateUpload],
+    ) -> Result<(ChunkedSum, usize)> {
+        if updates.len() != on_time.len() {
+            return Err(anyhow!(
+                "fold_round: {} updates but {} on-time flags",
+                updates.len(),
+                on_time.len()
+            ));
+        }
+        let group = self.cfg.agg_group.max(1);
+        let chunk = self.cfg.agg_chunk;
+        let groups: Vec<&[usize]> = devices.chunks(group).collect();
+        let n_groups = groups.len();
+        let workers = threadpool::workers(self.cfg.workers.max(1));
+        let groups_ref: &[&[usize]] = &groups;
+        let shards = threadpool::scope_map(n_groups + 1, workers, |g| {
+            if g == n_groups {
+                // the staleness shard: late uploads fold under synthetic
+                // ascending slot ids (device ids may repeat across origins)
+                let mut shard = AggregatorShard::with_chunk(
+                    g,
+                    n_params,
+                    chunk,
+                    (0..late_ins.len()).collect(),
+                );
+                for (slot, late) in late_ins.iter().enumerate() {
+                    shard.fold_encoded(slot, &late.upload, 1.0);
+                }
+                return shard;
+            }
+            let members = groups_ref[g];
+            let mut shard = AggregatorShard::with_chunk(g, n_params, chunk, members.to_vec());
+            let mut next = updates.partition_point(|u| u.device < members[0]);
+            for &d in members {
+                if next < updates.len() && updates[next].device == d {
+                    if on_time[next] {
+                        shard.fold_encoded(d, &updates[next].upload, 1.0);
+                    } else {
+                        shard.mark_dropped(d);
+                    }
+                    next += 1;
+                } else {
+                    shard.mark_dropped(d);
+                }
+            }
+            shard
+        });
+        aggregate::reduce_shards_parallel(n_params, n_groups + 1, chunk, shards, workers)
     }
 }
 
@@ -758,7 +943,7 @@ fn apply_event(
     registry: &mut Registry,
     ev: Event,
     round_start_s: f64,
-    reducer: &mut ShardReducer,
+    reducer: &mut Option<ShardReducer>,
     updates: &mut Vec<RoundUpdate>,
     dropped: &mut Vec<DroppedDevice>,
 ) -> Result<()> {
@@ -780,7 +965,11 @@ fn apply_event(
             registry.dropout(device, round_start_s + after_s);
             dropped.push(DroppedDevice { device, after_s, down_wire_bits });
         }
-        Event::Shard(shard) => reducer.push(shard)?,
+        Event::Shard(shard) => match reducer {
+            Some(r) => r.push(shard)?,
+            // unfolded rounds never emit shards; reaching here is a bug
+            None => return Err(anyhow!("shard event in an unfolded round")),
+        },
         Event::Error(msg) => return Err(anyhow!("engine worker failed: {msg}")),
     }
     Ok(())
@@ -799,15 +988,19 @@ fn execute_group(
     trainer: &Trainer,
     codec: &CodecEngine,
     cache: &DownloadCache,
+    fold: bool,
 ) -> Result<Vec<Event>> {
-    let expect: Vec<usize> = members.iter().map(|&i| items[i].plan.device).collect();
-    let mut shard =
-        AggregatorShard::with_chunk(group, env.global.len(), ecfg.agg_chunk, expect);
+    let mut shard = fold.then(|| {
+        let expect: Vec<usize> = members.iter().map(|&i| items[i].plan.device).collect();
+        AggregatorShard::with_chunk(group, env.global.len(), ecfg.agg_chunk, expect)
+    });
     let mut events = Vec::new();
     for &i in members {
-        run_device(env, &items[i], ecfg, trainer, codec, cache, &mut events, &mut shard)?;
+        run_device(env, &items[i], ecfg, trainer, codec, cache, &mut events, shard.as_mut())?;
     }
-    events.push(Event::Shard(shard));
+    if let Some(shard) = shard {
+        events.push(Event::Shard(shard));
+    }
     Ok(events)
 }
 
@@ -836,7 +1029,7 @@ fn run_device(
     codec: &CodecEngine,
     cache: &DownloadCache,
     events: &mut Vec<Event>,
-    shard: &mut AggregatorShard,
+    mut shard: Option<&mut AggregatorShard>,
 ) -> Result<()> {
     debug_assert_eq!(item.t, env.t, "StartRound round number disagrees with RoundEnv");
     let plan = item.plan;
@@ -868,7 +1061,9 @@ fn run_device(
                 after_s,
                 down_wire_bits,
             }));
-            shard.mark_dropped(d);
+            if let Some(shard) = shard.as_mut() {
+                shard.mark_dropped(d);
+            }
             return Ok(());
         }
     }
@@ -902,7 +1097,9 @@ fn run_device(
     // the dense update never leaves this worker
     let up_enc = codec.encode_upload(plan.upload, &g, &mut dev_rng)?;
     drop(g);
-    shard.fold_encoded(d, &up_enc, 1.0);
+    if let Some(shard) = shard.as_mut() {
+        shard.fold_encoded(d, &up_enc, 1.0);
+    }
 
     // (5) simulated cost (Eq. 7) from the measured wire lengths +
     // liveness traffic

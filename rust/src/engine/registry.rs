@@ -37,6 +37,10 @@ pub struct Registry {
     completions: Vec<u32>,
     /// Mid-round dropouts per device.
     dropouts: Vec<u32>,
+    /// Highest round each device was kicked off in (0 = never) — the
+    /// fence the semi-async engine checks so a resolution for an older
+    /// overlapped round can never be mistaken for the newest one.
+    round_of: Vec<usize>,
     /// Expected heartbeat interval (s); liveness allows 2 missed beats.
     heartbeat_s: f64,
 }
@@ -48,6 +52,7 @@ impl Registry {
             last_seen_s: vec![f64::NEG_INFINITY; n_devices],
             completions: vec![0; n_devices],
             dropouts: vec![0; n_devices],
+            round_of: vec![0; n_devices],
             heartbeat_s,
         }
     }
@@ -104,6 +109,24 @@ impl Registry {
         self.status[device] = DeviceStatus::Training;
         self.touch(device, now_s);
         true
+    }
+
+    /// [`Registry::start_round`] plus the round fence: records that the
+    /// newest round `device` was kicked off in is at least `t` (monotone,
+    /// so an overlapped older round's kickoff cannot rewind it).
+    pub fn start_round_in(&mut self, device: usize, now_s: f64, t: usize) -> bool {
+        if !self.start_round(device, now_s) {
+            return false;
+        }
+        let r = &mut self.round_of[device];
+        *r = (*r).max(t);
+        true
+    }
+
+    /// Highest round `device` was ever kicked off in (0 = never, including
+    /// out-of-range ids).
+    pub fn last_started(&self, device: usize) -> usize {
+        self.round_of.get(device).copied().unwrap_or(0)
     }
 
     /// Record a completed round; `false` rejects an out-of-range id.
@@ -307,6 +330,21 @@ mod tests {
         off.join(0, 0.0);
         assert!(off.sweep_expired(1e12).is_empty());
         assert_eq!(off.status(0), DeviceStatus::Idle);
+    }
+
+    #[test]
+    fn round_fence_is_monotone_and_rejects_out_of_range() {
+        let mut r = Registry::new(2, 10.0);
+        assert_eq!(r.last_started(0), 0);
+        r.join(0, 0.0);
+        assert!(r.start_round_in(0, 0.0, 3));
+        assert_eq!(r.status(0), DeviceStatus::Training);
+        assert_eq!(r.last_started(0), 3);
+        // an overlapped older round's kickoff cannot rewind the fence
+        assert!(r.start_round_in(0, 1.0, 2));
+        assert_eq!(r.last_started(0), 3);
+        assert!(!r.start_round_in(9, 0.0, 1));
+        assert_eq!(r.last_started(9), 0);
     }
 
     #[test]

@@ -572,6 +572,7 @@ mod tests {
             }));
             out.push(Record::EndRound(EndRound {
                 t,
+                fold_t: t,
                 device: 0,
                 w_digest: rng.next_u64(),
                 upload_bits: 1024,

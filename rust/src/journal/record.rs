@@ -39,7 +39,9 @@ use crate::util::bitio::BitWriter;
 use crate::util::rng::RngState;
 
 /// Journal format version, bumped on ANY record-layout change.
-pub const JOURNAL_VERSION: u32 = 1;
+/// v2: `EndRound` carries `fold_t` (the round a late upload folds into)
+/// and the engine config tail gains `pipeline_depth` / `staleness_bound`.
+pub const JOURNAL_VERSION: u32 = 2;
 
 /// A length+digest-prefixed f32 parameter block (a model or a retained
 /// local). The digest is `transport::model_digest` over the block — what
@@ -123,6 +125,10 @@ pub struct RoundOpen {
 #[derive(Clone, Copy, Debug)]
 pub struct EndRound {
     pub t: usize,
+    /// Round this upload folds into: `t` when on time, `> t` when the
+    /// semi-async engine classified the device as a straggler and parked
+    /// the upload in the staleness buffer. Always `t` at depth 1/bound 0.
+    pub fold_t: usize,
     pub device: usize,
     /// `transport::model_digest` of the device's final local model.
     pub w_digest: u64,
@@ -253,6 +259,7 @@ pub(crate) fn encode_body(rec: &Record, w: &mut BitWriter) {
         }
         Record::EndRound(e) => {
             put_u64(w, e.t as u64);
+            put_u64(w, e.fold_t as u64);
             put_u64(w, e.device as u64);
             put_u64(w, e.w_digest);
             put_u64(w, e.upload_bits as u64);
@@ -392,6 +399,8 @@ fn encode_cfg(cfg: &ExperimentConfig, w: &mut BitWriter) {
     put_u64(w, cfg.engine.agg_chunk as u64);
     put_f64(w, cfg.engine.dropout_rate);
     put_f64(w, cfg.engine.heartbeat_s);
+    put_u64(w, cfg.engine.pipeline_depth as u64);
+    put_u64(w, cfg.engine.staleness_bound as u64);
 }
 
 fn put_u64(w: &mut BitWriter, v: u64) {
@@ -483,18 +492,26 @@ pub(crate) fn decode_body(kind: u8, body: &[u8]) -> Result<Record, JournalError>
             }
             Record::RoundOpen(RoundOpen { t, model_version, sim_now_s, lr, stream_base, plans })
         }
-        4 => Record::EndRound(EndRound {
-            t: r.round_no()?,
-            device: r.usize64()?,
-            w_digest: r.u64()?,
-            upload_bits: r.usize64()?,
-            down_wire_bits: r.usize64()?,
-            grad_norm: r.f64raw()?,
-            loss: r.f64raw()?,
-            download_s: r.f64raw()?,
-            compute_s: r.f64raw()?,
-            upload_s: r.f64raw()?,
-        }),
+        4 => {
+            let t = r.round_no()?;
+            let fold_t = r.round_no()?;
+            if fold_t < t {
+                return Err(JournalError::Malformed("fold round precedes origin round"));
+            }
+            Record::EndRound(EndRound {
+                t,
+                fold_t,
+                device: r.usize64()?,
+                w_digest: r.u64()?,
+                upload_bits: r.usize64()?,
+                down_wire_bits: r.usize64()?,
+                grad_norm: r.f64raw()?,
+                loss: r.f64raw()?,
+                download_s: r.f64raw()?,
+                compute_s: r.f64raw()?,
+                upload_s: r.f64raw()?,
+            })
+        }
         5 => Record::Dropout(Dropout {
             t: r.round_no()?,
             device: r.usize64()?,
@@ -628,6 +645,8 @@ fn decode_cfg(r: &mut Reader) -> Result<ExperimentConfig, JournalError> {
             agg_chunk: r.usize64()?,
             dropout_rate: r.f64raw()?,
             heartbeat_s: r.f64raw()?,
+            pipeline_depth: r.usize64()?,
+            staleness_bound: r.usize64()?,
         },
     })
 }

@@ -20,19 +20,31 @@
 //!   carry the previous model digest forward, and every snapshot's model
 //!   digest must equal the preceding `RoundClose.model_digest`.
 //!
+//! **Semi-async journals.** The verifier simulates the same deterministic
+//! scheduler `Server::run_pipelined_cb` runs: a depth-capped window of
+//! open rounds that never crosses a snapshot boundary, closed oldest
+//! first (a barrier run is the depth-1 degenerate case — same grammar).
+//! Each `EndRound` carries the round its upload folds into; replay
+//! re-derives that fold round from the round's **own journaled costs**
+//! via the cost-median lateness rule ([`crate::coordinator::
+//! classify_lateness`]) and demands an exact match, then tracks the
+//! staleness buffer so every close's `completers` (= on-time + absorbed
+//! stragglers) and every timing/ledger formula checks bit-exactly.
+//!
 //! What replay deliberately cannot check: training itself (`w_digest` of
 //! a fresh local, the aggregated model bits between snapshots) — those
 //! are pinned by the resume path and `rust/tests/durability.rs`, which
 //! do own trainers.
 //!
 //! A journal recovered from a crash is a valid *prefix*: a trailing
-//! round that opened but never closed (or a due snapshot the kill
-//! preempted) is reported via [`ReplaySummary::partial_tail`], not as an
-//! error.
+//! round that opened but never closed (or a due open or snapshot the
+//! kill preempted) is reported via [`ReplaySummary::partial_tail`], not
+//! as an error.
 
 use anyhow::{anyhow, Result};
 
 use crate::compress::traffic::{PayloadScale, TrafficMeter};
+use crate::coordinator::{barrier_after, classify_lateness};
 use crate::journal::record::{Record, RoundClose, RoundOpen, RunHeader, Snapshot};
 
 /// What [`verify`] established about a journal.
@@ -51,8 +63,11 @@ pub struct ReplaySummary {
     pub sim_time_s: f64,
     /// Snapshots verified (including the initial one).
     pub snapshots: usize,
-    /// True when the journal ends mid-round or before a due snapshot —
-    /// the valid-prefix shape a crash leaves behind.
+    /// Uploads classified late (parked in the staleness buffer at their
+    /// origin round, folded at a later one). Always 0 for barrier runs.
+    pub late_uploads: usize,
+    /// True when the journal ends mid-round or before a due open or
+    /// snapshot — the valid-prefix shape a crash leaves behind.
     pub partial_tail: bool,
 }
 
@@ -147,47 +162,88 @@ pub fn verify(records: &[Record]) -> Result<ReplaySummary> {
     let mut grad_norms: Vec<f64> = snap0.grad_norms.clone();
     let mut last_round: Vec<usize> = snap0.last_round.clone();
 
+    let depth = cfg.engine.pipeline_depth.max(1);
+    let quiesce = header.snapshot_every;
+    let total_rounds = cfg.rounds;
+
     let mut stream_base: Option<u64> = None;
     let mut rounds = 0usize;
     let mut snapshots = 1usize;
+    let mut late_uploads = 0usize;
     let mut partial_tail = false;
+    // fold rounds of parked stragglers (the replayed staleness buffer)
+    let mut parked: Vec<usize> = Vec::new();
+    // opened-but-unclosed rounds, oldest first (the front is round t)
+    let mut window: std::collections::VecDeque<&RoundOpen> = std::collections::VecDeque::new();
+    let mut next_open = 1usize;
 
     'rounds: loop {
         let t = rounds + 1;
-        let open: &RoundOpen = match it.next() {
-            None => break 'rounds,
-            Some(Record::RoundOpen(o)) => o,
-            Some(other) => {
+        if t > total_rounds {
+            if let Some(other) = it.next() {
                 return Err(anyhow!(
-                    "replay: expected round {t} to open, found {}",
+                    "replay: journal continues past the configured {total_rounds} rounds with {}",
                     other.kind_name()
-                ))
+                ));
             }
-        };
-        check(open.t == t, || format!("round open out of sequence: got t={}, expected {t}", open.t))?;
-        check(open.model_version == model_version, || {
-            format!("round {t} opened at model v{}, replay is at v{model_version}", open.model_version)
-        })?;
-        check(same_bits(open.sim_now_s, sim_time_s), || {
-            format!("round {t} opened at sim time {}, replay is at {sim_time_s}", open.sim_now_s)
-        })?;
-        check(open.lr.to_bits() == (cfg.lr_at(t - 1) as f32).to_bits(), || {
-            format!("round {t} lr {} differs from the schedule's {}", open.lr, cfg.lr_at(t - 1))
-        })?;
-        match stream_base {
-            None => stream_base = Some(open.stream_base),
-            Some(base) => check(open.stream_base == base, || {
-                format!("round {t} changed the RNG stream base")
-            })?,
+            break;
         }
-        check(open.plans.len() == participants, || {
-            format!("round {t} planned {} devices, cfg says {participants}", open.plans.len())
-        })?;
-        check(
-            open.plans.windows(2).all(|w| w[0].device < w[1].device)
-                && open.plans.iter().all(|p| p.device < n_devices),
-            || format!("round {t} plan set is not strictly ascending in-range device ids"),
-        )?;
+
+        // --- opens due before round t can close: the deterministic
+        // window schedule — depth-capped, never past the next quiescence
+        // barrier (a snapshot boundary) — exactly as the scheduler in
+        // `Server::run_pipelined_cb` emits it (the barrier loop is its
+        // depth-1 degenerate case). Each open is validated against the
+        // replay state AT THIS POINT: overlapped rounds legitimately
+        // open at the pre-close model version and clock ---
+        while next_open <= barrier_after(t, quiesce, total_rounds) && window.len() < depth {
+            let u = next_open;
+            let open: &RoundOpen = match it.next() {
+                None => {
+                    partial_tail = true;
+                    break 'rounds;
+                }
+                Some(Record::RoundOpen(o)) => o,
+                Some(other) => {
+                    return Err(anyhow!(
+                        "replay: expected round {u} to open, found {}",
+                        other.kind_name()
+                    ))
+                }
+            };
+            check(open.t == u, || {
+                format!("round open out of sequence: got t={}, expected {u}", open.t)
+            })?;
+            check(open.model_version == model_version, || {
+                format!(
+                    "round {u} opened at model v{}, replay is at v{model_version}",
+                    open.model_version
+                )
+            })?;
+            check(same_bits(open.sim_now_s, sim_time_s), || {
+                format!("round {u} opened at sim time {}, replay is at {sim_time_s}", open.sim_now_s)
+            })?;
+            check(open.lr.to_bits() == (cfg.lr_at(u - 1) as f32).to_bits(), || {
+                format!("round {u} lr {} differs from the schedule's {}", open.lr, cfg.lr_at(u - 1))
+            })?;
+            match stream_base {
+                None => stream_base = Some(open.stream_base),
+                Some(base) => check(open.stream_base == base, || {
+                    format!("round {u} changed the RNG stream base")
+                })?,
+            }
+            check(open.plans.len() == participants, || {
+                format!("round {u} planned {} devices, cfg says {participants}", open.plans.len())
+            })?;
+            check(
+                open.plans.windows(2).all(|w| w[0].device < w[1].device)
+                    && open.plans.iter().all(|p| p.device < n_devices),
+                || format!("round {u} plan set is not strictly ascending in-range device ids"),
+            )?;
+            window.push_back(open);
+            next_open += 1;
+        }
+        let open = window.pop_front().expect("the schedule opens round t before it closes");
 
         // --- resolutions in fold order, until the close ---
         let mut ends = Vec::new();
@@ -218,57 +274,96 @@ pub fn verify(records: &[Record]) -> Result<ReplaySummary> {
                 }
             }
         };
-        // the synchronous barrier resolves every planned device exactly
-        // once, in ascending device order
+        // every planned device resolves at its own round exactly once,
+        // in ascending device order — late or not, an upload's EndRound
+        // lives in its origin round's close group
         let planned: Vec<usize> = open.plans.iter().map(|p| p.device).collect();
         check(resolved == planned, || {
             format!("round {t}: resolutions {resolved:?} do not match the plan {planned:?}")
         })?;
 
-        // --- replay apply_round, in its exact f64 order: every
-        // completer's down+up first, then every dropout's down ---
-        let completers = ends.len();
+        // --- re-derive each completer's fold round from the round's own
+        // journaled costs (the cost-median lateness rule is a pure
+        // function of them) and demand the journal agrees ---
+        let costs_all: Vec<f64> =
+            ends.iter().map(|e| e.download_s + e.compute_s + e.upload_s).collect();
+        let s_eff = cfg
+            .engine
+            .staleness_bound
+            .min(barrier_after(t, quiesce, total_rounds).saturating_sub(t));
+        let fold_ts = classify_lateness(&costs_all, t, s_eff);
+        for (e, &f) in ends.iter().zip(&fold_ts) {
+            check(e.fold_t == f, || {
+                format!(
+                    "round {t}: device {} journaled fold round {} but the cost-median \
+                     rule derives {f}",
+                    e.device, e.fold_t
+                )
+            })?;
+        }
+
+        // --- replay the close, in its exact f64 order: every end's
+        // down+up first (all land at the origin round), then every
+        // dropout's down ---
+        let n_ends = ends.len();
+        let mut n_on_time = 0usize;
         let mut loss_sum = 0.0f64;
-        let mut costs: Vec<f64> = Vec::with_capacity(completers);
-        for e in &ends {
+        let mut costs: Vec<f64> = Vec::with_capacity(n_ends);
+        for (i, e) in ends.iter().enumerate() {
             traffic.add_down(scale.scale_bits(e.down_wire_bits));
             traffic.add_up(scale.scale_bits(e.upload_bits));
             grad_norms[e.device] = e.grad_norm;
             last_w_digest[e.device] = Some(e.w_digest);
             last_round[e.device] = t;
             loss_sum += e.loss;
-            costs.push(e.download_s + e.compute_s + e.upload_s);
+            if fold_ts[i] == t {
+                n_on_time += 1;
+                costs.push(costs_all[i]);
+            } else {
+                parked.push(fold_ts[i]);
+                late_uploads += 1;
+            }
         }
         for d in &drops {
             traffic.add_down(scale.scale_bits(d.down_wire_bits));
         }
-        if completers > 0 {
+        // prior rounds' stragglers whose fold slot is this round
+        let due = parked.iter().filter(|&&f| f <= t).count();
+        parked.retain(|&f| f > t);
+        let folded = n_on_time + due;
+        if folded > 0 {
             model_version += 1;
             // the model moved: its digest is whatever the close claims,
             // chain-checked at the next snapshot
             model_digest = close.model_digest;
         } else {
             check(close.model_digest == model_digest, || {
-                format!("round {t} had no completers but the model digest changed")
+                format!("round {t} folded nothing but the model digest changed")
             })?;
         }
         digests_checked += 1;
+        // semi-async timing: only on-time completers and noticed
+        // dropouts hold the round (identical to the barrier fold when
+        // nothing is late)
         let round_s = costs
             .iter()
             .copied()
             .chain(drops.iter().map(|d| d.after_s))
             .fold(0.0f64, f64::max);
-        let avg_wait_s = if completers > 0 {
-            costs.iter().map(|&c| round_s - c).sum::<f64>() / completers as f64
+        let avg_wait_s = if n_on_time > 0 {
+            costs.iter().map(|&c| round_s - c).sum::<f64>() / n_on_time as f64
         } else {
             0.0
         };
         sim_time_s += round_s;
-        let mean_loss = if completers > 0 { loss_sum / completers as f64 } else { f64::NAN };
+        let mean_loss = if n_ends > 0 { loss_sum / n_ends as f64 } else { f64::NAN };
 
         check(close.t == t, || format!("round close tagged t={}, expected {t}", close.t))?;
-        check(close.completers == completers, || {
-            format!("round {t} close claims {} completers, replay counted {completers}", close.completers)
+        check(close.completers == folded, || {
+            format!(
+                "round {t} close claims {} folded uploads, replay counted {folded}",
+                close.completers
+            )
         })?;
         check(close.model_version == model_version, || {
             format!("round {t} close at model v{}, replay is at v{model_version}", close.model_version)
@@ -379,6 +474,7 @@ pub fn verify(records: &[Record]) -> Result<ReplaySummary> {
         up_bits: traffic.up_bits,
         sim_time_s,
         snapshots,
+        late_uploads,
         partial_tail,
     })
 }

@@ -11,6 +11,7 @@
 //! lambda= clusters= devices= seed= target= eval-every= n-train=
 //! trainer=xla|native compression-backend=native|xla out=<dir> quiet
 //! Engine knobs:     engine-workers= agg-group= dropout= heartbeat=
+//!                   pipeline-depth= staleness-bound=   (semi-async rounds)
 //! Durability:       journal=<path> journal-every=K journal-kill-after=N
 
 use anyhow::Result;
@@ -139,10 +140,11 @@ fn cmd_replay(args: &Args) -> Result<()> {
     let summary = journal::verify(&recovered.records)
         .map_err(|e| anyhow::anyhow!("replay verification FAILED: {e:#}"))?;
     println!(
-        "replay OK: {} rounds, {} digests cross-checked, {} snapshots{}",
+        "replay OK: {} rounds, {} digests cross-checked, {} snapshots, {} late uploads{}",
         summary.rounds,
         summary.digests_checked,
         summary.snapshots,
+        summary.late_uploads,
         if summary.partial_tail { " (journal ends mid-round)" } else { "" },
     );
     println!("  final model digest {:016x}", summary.final_model_digest);
@@ -181,6 +183,7 @@ fn cmd_list() -> Result<()> {
     println!("also:         run scheme=<s> task=<t> [key=value ...] | info");
     println!("              replay journal=<path>   (offline digest cross-check)");
     println!("engine knobs: engine-workers= agg-group= dropout= heartbeat=");
+    println!("semi-async:   pipeline-depth= staleness-bound=  (1/0 = barrier)");
     println!("durability:   journal= journal-every= journal-kill-after=");
     Ok(())
 }

@@ -10,9 +10,10 @@
 //!    (the PS-side download encode already consumed its draws),
 //! 2. run the dropout lottery on the independent fate stream,
 //! 3. recover the download against the retained local model the kickoff's
-//!    prior digest selects (see `pick_prior` — the coordinator can lag
-//!    one round behind when it refused an EndRound), train τ local
-//!    steps, encode the upload,
+//!    prior digest selects (see `pick_prior` — under semi-async
+//!    pipelining the coordinator's view can lag several rounds behind,
+//!    so the client keeps a short digest-matched history ring), train τ
+//!    local steps, encode the upload,
 //! 4. send heartbeats on the shared simulated-time schedule, then the
 //!    EndRound (or Dropout) frame.
 //!
@@ -20,13 +21,15 @@
 //! update frames are bit-identical to the in-process path — the
 //! transport parity invariant.
 //!
-//! Redelivery: the client caches its last resolution frame. A duplicate
-//! StartRound for an already-completed round (the coordinator re-sends
-//! kickoffs on rejoin — it cannot know whether the EndRound made it out
-//! before the connection died) is answered by resending that cached
-//! frame, never by re-training: the local model has already advanced,
-//! so a second training pass would diverge.
+//! Redelivery: the client caches the resolution frames of its last few
+//! rounds. A duplicate StartRound for an already-completed round (the
+//! coordinator re-sends kickoffs on rejoin — it cannot know whether the
+//! EndRound made it out before the connection died, and under pipelining
+//! several rounds can be open at once) is answered by resending the
+//! cached frame, never by re-training: the local model has already
+//! advanced, so a second training pass would diverge.
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Context, Result};
@@ -85,18 +88,13 @@ pub struct ClientStats {
     pub stale_rejects: usize,
 }
 
-/// Which retained model matches the coordinator's declared recovery
-/// prior for a kickoff (see `DeviceClient::pick_prior`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum PriorPick {
-    /// The coordinator holds no local for this device: recover priorless.
-    None,
-    /// The digest matches `local` — the normal case.
-    Current,
-    /// The digest matches `prev_local`: the coordinator refused or never
-    /// received the last EndRound, so it is one round behind.
-    Previous,
-}
+/// How many post-training models (and resolution frames) the client
+/// retains for digest-matched recovery and redelivery. The coordinator's
+/// `locals[d]` can trail this client by one round per refused EndRound
+/// *plus* one per round of pipeline overlap, so the ring comfortably
+/// covers `pipeline_depth ≤ 3` with a refusal on top; a deeper mismatch
+/// is genuine divergence and fails loudly in `pick_prior`.
+const HISTORY_DEPTH: usize = 4;
 
 /// How a client session over one connection ended.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -116,25 +114,22 @@ pub struct DeviceClient {
     trainer: Trainer,
     train_ds: Dataset,
     partition: Partition,
-    /// Retained post-training model — the reference for CaesarSplit
-    /// download recovery. Advances when a round's EndRound goes out; the
-    /// coordinator's `locals[d]` advances only when that EndRound is
-    /// *accepted*, so the sides can disagree by exactly one round (e.g.
-    /// the round deadline converted this device to a Dropout while its
-    /// EndRound was in flight). Each kickoff therefore declares the
-    /// digest of the prior the PS encoded against, and the client picks
-    /// whichever of `local`/`prev_local` matches (see `pick_prior`).
-    local: Option<Vec<f32>>,
-    /// The prior `local` actually used in the last executed round —
-    /// exactly what the coordinator still holds if it refused that
-    /// round's EndRound. One round of history suffices: the coordinator
-    /// only ever advances `locals[d]` to an accepted `w_final`, which
-    /// this client produced from one of these two models.
-    prev_local: Option<Vec<f32>>,
-    /// Redelivery cache: the round number and resolution frame of the
-    /// last round this device resolved.
+    /// Retained post-training models, newest first — the reference set
+    /// for CaesarSplit download recovery. An entry is pushed when a
+    /// round's EndRound goes out; the coordinator's `locals[d]` advances
+    /// only when an EndRound is *accepted* and, under semi-async
+    /// pipelining, rounds are *opened* against pre-close locals — so the
+    /// sides can disagree by several rounds. Each kickoff therefore
+    /// declares the digest of the prior the PS encoded against, and the
+    /// client recovers against whichever retained model matches (see
+    /// `pick_prior`). Capped at [`HISTORY_DEPTH`]; matched entries are
+    /// never removed (the same prior can serve several open rounds).
+    history: VecDeque<Vec<f32>>,
+    /// Redelivery cache: `(round, resolution frame)` for the last
+    /// [`HISTORY_DEPTH`] rounds this device resolved, newest first.
+    resolutions: VecDeque<(usize, WireMsg)>,
+    /// Highest round this device has resolved (0 before any round).
     last_round: usize,
-    last_resolution: Option<WireMsg>,
     pub stats: ClientStats,
     /// Silence budget before a session reports [`SessionEnd::Disconnected`].
     /// Idle is normal (non-participants wait out whole rounds), so this
@@ -166,10 +161,9 @@ impl DeviceClient {
             trainer,
             train_ds,
             partition,
-            local: None,
-            prev_local: None,
+            history: VecDeque::new(),
+            resolutions: VecDeque::new(),
             last_round: 0,
-            last_resolution: None,
             stats: ClientStats::default(),
             idle_timeout: Duration::from_secs(600),
         })
@@ -179,9 +173,9 @@ impl DeviceClient {
         self.device
     }
 
-    /// The retained local model, if any round has completed.
+    /// The newest retained local model, if any round has completed.
     pub fn local(&self) -> Option<&[f32]> {
-        self.local.as_deref()
+        self.history.front().map(Vec::as_slice)
     }
 
     /// Run one session over `conn`: Join, then serve kickoffs until the
@@ -228,18 +222,22 @@ impl DeviceClient {
                 }
                 WireMsg::StartRound(start) => {
                     let t = start.item.t;
-                    if t == self.last_round {
+                    let cached = self
+                        .resolutions
+                        .iter()
+                        .find(|(rt, _)| *rt == t)
+                        .map(|(_, frame)| frame.clone());
+                    if let Some(cached) = cached {
                         // duplicate kickoff after a rejoin: answer from
                         // the cache, never re-train (see module docs)
-                        if let Some(cached) = self.last_resolution.clone() {
-                            self.stats.redeliveries += 1;
-                            if conn.send(&cached).is_err() {
-                                return Ok(SessionEnd::Disconnected);
-                            }
+                        self.stats.redeliveries += 1;
+                        if conn.send(&cached).is_err() {
+                            return Ok(SessionEnd::Disconnected);
                         }
-                    } else if t < self.last_round {
-                        // stale straggler frame: the coordinator has long
-                        // since closed that round
+                    } else if t <= self.last_round {
+                        // stale straggler frame beyond the redelivery
+                        // cache: the coordinator has long since closed
+                        // that round
                     } else if self.handle_start(conn, *start)?.is_none() {
                         return Ok(SessionEnd::Disconnected);
                     }
@@ -341,8 +339,7 @@ impl DeviceClient {
                     return Ok(None);
                 }
                 // the local model does NOT advance on a dropout
-                self.last_round = t;
-                self.last_resolution = Some(resolution);
+                self.remember_resolution(t, resolution);
                 self.stats.dropouts += 1;
                 return Ok(Some(()));
             }
@@ -355,11 +352,7 @@ impl DeviceClient {
         let mut dev_rng = Rng::from_state(start.rng);
         let codec = CodecEngine::native();
         let mut model = pool::f32_buf();
-        let prior = match pick {
-            PriorPick::None => None,
-            PriorPick::Current => self.local.as_deref(),
-            PriorPick::Previous => self.prev_local.as_deref(),
-        };
+        let prior = pick.map(|i| self.history[i].as_slice());
         codec.recover_download_into(&start.download, prior, &mut model)?;
         let shard = &self.partition.shards[d];
         let (w_final, loss) = self.trainer.train(
@@ -407,41 +400,45 @@ impl DeviceClient {
         if conn.send(&resolution).is_err() {
             return Ok(None);
         }
-        // keep the prior this round trained from: it is exactly what the
-        // coordinator still holds if it refuses this EndRound
-        self.prev_local = match pick {
-            PriorPick::None => None,
-            PriorPick::Current => self.local.take(),
-            PriorPick::Previous => self.prev_local.take(),
-        };
-        self.local = Some(w_final);
-        self.last_round = t;
-        self.last_resolution = Some(resolution);
+        // the ring keeps the priors recent rounds trained from — exactly
+        // what the coordinator still holds for any EndRound it refuses
+        // or any pipelined round it opened before this one closed
+        self.history.push_front(w_final);
+        self.history.truncate(HISTORY_DEPTH);
+        self.remember_resolution(t, resolution);
         self.stats.rounds += 1;
         Ok(Some(()))
     }
 
     /// Match a kickoff's declared prior digest against the retained
-    /// models. The coordinator encodes downloads against its `locals[d]`
-    /// — normally this client's `local`, but one round behind it
-    /// (`prev_local`) when the coordinator refused or never received the
-    /// last EndRound. Anything else is genuine divergence (say, a client
-    /// restart losing the retained model) and fails loudly here: training
-    /// from a mismatched prior would break bit parity silently.
-    fn pick_prior(&self, declared: Option<u64>) -> Result<PriorPick> {
-        let Some(dig) = declared else { return Ok(PriorPick::None) };
-        if self.local.as_deref().is_some_and(|l| model_digest(l) == dig) {
-            return Ok(PriorPick::Current);
-        }
-        if self.prev_local.as_deref().is_some_and(|l| model_digest(l) == dig) {
-            return Ok(PriorPick::Previous);
+    /// history ring, returning the matching entry's index (newest = 0)
+    /// or `None` for a priorless recovery. The coordinator encodes
+    /// downloads against its `locals[d]` — normally this client's newest
+    /// model, but older when the coordinator refused an EndRound or
+    /// opened a pipelined round before an earlier one closed. A digest
+    /// matching nothing in the ring is genuine divergence (say, a client
+    /// restart losing the retained models) and fails loudly here:
+    /// training from a mismatched prior would break bit parity silently.
+    fn pick_prior(&self, declared: Option<u64>) -> Result<Option<usize>> {
+        let Some(dig) = declared else { return Ok(None) };
+        if let Some(i) = self.history.iter().position(|l| model_digest(l) == dig) {
+            return Ok(Some(i));
         }
         Err(anyhow!(
             "device {}: the coordinator's recovery prior (digest {dig:#018x}) matches \
-             neither the retained local model nor its predecessor — the sides have \
-             diverged (was this client restarted mid-run?)",
-            self.device
+             none of the {} retained local models — the sides have diverged (was this \
+             client restarted mid-run?)",
+            self.device,
+            self.history.len()
         ))
+    }
+
+    /// Record a round's resolution frame in the redelivery ring and
+    /// advance the high-water round marker.
+    fn remember_resolution(&mut self, t: usize, frame: WireMsg) {
+        self.last_round = self.last_round.max(t);
+        self.resolutions.push_front((t, frame));
+        self.resolutions.truncate(HISTORY_DEPTH);
     }
 
     /// Send the simulated-time heartbeat schedule (shared with the
@@ -486,24 +483,48 @@ mod tests {
     }
 
     #[test]
-    fn pick_prior_matches_current_previous_none_and_fails_on_divergence() {
+    fn pick_prior_matches_any_ring_entry_and_fails_on_divergence() {
         let mut client = tiny_client();
-        let cur = vec![1.0f32, 2.0, 3.0];
-        let prev = vec![4.0f32, 5.0, 6.0];
-        client.local = Some(cur.clone());
-        client.prev_local = Some(prev.clone());
-
-        assert_eq!(client.pick_prior(None).unwrap(), PriorPick::None);
-        assert_eq!(client.pick_prior(Some(model_digest(&cur))).unwrap(), PriorPick::Current);
-        assert_eq!(client.pick_prior(Some(model_digest(&prev))).unwrap(), PriorPick::Previous);
+        let models: Vec<Vec<f32>> =
+            (0..HISTORY_DEPTH as i32).map(|i| vec![i as f32, 2.0, 3.0]).collect();
+        for m in &models {
+            client.history.push_front(m.clone());
+        }
+        // newest first: models[3] is at index 0
+        assert_eq!(client.pick_prior(None).unwrap(), None);
+        for (i, m) in models.iter().rev().enumerate() {
+            assert_eq!(client.pick_prior(Some(model_digest(m))).unwrap(), Some(i));
+        }
         let err = client.pick_prior(Some(0xBAD)).unwrap_err();
         assert!(format!("{err}").contains("diverged"), "{err}");
 
+        // a model pushed out of the capped ring no longer matches
+        client.history.push_front(vec![9.0f32, 9.0, 9.0]);
+        client.history.truncate(HISTORY_DEPTH);
+        assert!(client.pick_prior(Some(model_digest(&models[0]))).is_err());
+
         // a fresh client (no retained models) must refuse any Some digest
-        client.local = None;
-        client.prev_local = None;
-        assert!(client.pick_prior(Some(model_digest(&cur))).is_err());
-        assert_eq!(client.pick_prior(None).unwrap(), PriorPick::None);
+        client.history.clear();
+        assert!(client.pick_prior(Some(model_digest(&models[0]))).is_err());
+        assert_eq!(client.pick_prior(None).unwrap(), None);
+    }
+
+    #[test]
+    fn redelivery_ring_covers_several_rounds_and_is_capped() {
+        let mut client = tiny_client();
+        for t in 1..=HISTORY_DEPTH + 2 {
+            client.remember_resolution(
+                t,
+                WireMsg::Dropout { t, device: 0, after_s: t as f64, down_wire_bits: 64 },
+            );
+        }
+        assert_eq!(client.last_round, HISTORY_DEPTH + 2);
+        assert_eq!(client.resolutions.len(), HISTORY_DEPTH);
+        // the newest HISTORY_DEPTH rounds are answerable, older ones gone
+        for t in 3..=HISTORY_DEPTH + 2 {
+            assert!(client.resolutions.iter().any(|(rt, _)| *rt == t), "round {t} evicted");
+        }
+        assert!(!client.resolutions.iter().any(|(rt, _)| *rt == 1));
     }
 
     /// A [`Conn`] that replays a scripted receive sequence and accepts
@@ -609,9 +630,10 @@ mod tests {
         let mut client = tiny_client();
         // pretend round 1 already resolved so a duplicate kickoff is
         // answered from the redelivery cache (= protocol progress)
-        client.last_round = 1;
-        client.last_resolution =
-            Some(WireMsg::Dropout { t: 1, device: 0, after_s: 0.5, down_wire_bits: 64 });
+        client.remember_resolution(
+            1,
+            WireMsg::Dropout { t: 1, device: 0, after_s: 0.5, down_wire_bits: 64 },
+        );
         let n = client.cfg.n_devices();
 
         let mut dials = 0usize;

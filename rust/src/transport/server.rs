@@ -21,6 +21,14 @@
 //! round (a straggler's EndRound buffered past the deadline conversion)
 //! is refused with [`reject::STALE_ROUND`] and never reaches the engine.
 //!
+//! With `pipeline-depth` > 1 (or `staleness-bound` > 0) the service runs
+//! the semi-async schedule instead: up to D rounds are open at once
+//! (their kickoffs all on the wire), resolution frames route to
+//! whichever open round they are tagged with, and only frames matching
+//! NO open round are refused stale — see [`CoordinatorService::run_cb`]
+//! routing to the pipelined loop and `Server::close_pipelined` for the
+//! shared close.
+//!
 //! The registry's liveness sweep (`Engine::sweep_expired`) is exposed as
 //! [`CoordinatorService::sweep_expired`] but NOT run automatically:
 //! under the synchronous barrier, devices only heartbeat while executing
@@ -36,8 +44,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::{RoundOutcome, RoundRecord, RunResult, Server};
-use crate::engine::{DeviceMsg, StartRound};
+use crate::coordinator::{self, RoundOutcome, RoundRecord, RunResult, Server};
+use crate::engine::{DeviceMsg, ExternalRound, StartRound};
 use crate::journal::RunJournal;
 
 use super::frame::{reject, WireMsg};
@@ -149,6 +157,9 @@ impl<T: Transport> CoordinatorService<T> {
     /// evaluation/records identical to `Server::run_cb`, then a Finish
     /// broadcast so devices disconnect cleanly.
     pub fn run_cb(&mut self, mut cb: impl FnMut(&RoundRecord)) -> Result<RunResult> {
+        if self.server.pipelined() {
+            return self.run_pipelined(None, cb);
+        }
         let rounds = self.server.cfg.rounds;
         let mut records = Vec::with_capacity(rounds);
         let mut reached: Option<(usize, f64, f64)> = None;
@@ -184,6 +195,9 @@ impl<T: Transport> CoordinatorService<T> {
         if jw.is_fresh() {
             jw.append(&self.server.record_header(jw.snapshot_every()))?;
             jw.append(&self.server.journal_snapshot(0))?;
+        }
+        if self.server.pipelined() {
+            return self.run_pipelined(Some(jw), cb);
         }
         let mut records = jw.take_prior_records();
         let mut reached = self.server.recompute_reached(&records);
@@ -376,4 +390,245 @@ impl<T: Transport> CoordinatorService<T> {
         }
         Ok((self.server.apply_round(t, out), completers))
     }
+
+    // -----------------------------------------------------------------
+    // semi-async pipelined rounds over the transport
+    // -----------------------------------------------------------------
+
+    /// The networked semi-async run loop — the transport twin of
+    /// `Server::run_pipelined_cb`, sharing its schedule (`barrier_after`
+    /// window bounds) and its close (`Server::close_pipelined`), so the
+    /// two write byte-identical journals and bit-identical state for the
+    /// same seed and arrival outcome. While the oldest open round
+    /// drains, later rounds' kickoffs are already on the wire; a
+    /// resolution frame is routed to whichever open round it is tagged
+    /// with, and only frames matching NO open round are refused as
+    /// [`reject::STALE_ROUND`].
+    fn run_pipelined(
+        &mut self,
+        mut jw: Option<&mut RunJournal>,
+        mut cb: impl FnMut(&RoundRecord),
+    ) -> Result<RunResult> {
+        let quiesce = jw.as_ref().map(|j| j.snapshot_every()).unwrap_or(0);
+        let mut records = match jw.as_mut() {
+            Some(j) => j.take_prior_records(),
+            None => Vec::with_capacity(self.server.cfg.rounds),
+        };
+        let mut reached = self.server.recompute_reached(&records);
+        let depth = self.server.cfg.engine.pipeline_depth.max(1);
+        let rounds = self.server.cfg.rounds;
+        let mut window: Vec<NetRound> = Vec::with_capacity(depth);
+        let mut next_open = records.len() + 1;
+        for t in records.len() + 1..=rounds {
+            while next_open <= coordinator::barrier_after(t, quiesce, rounds)
+                && window.len() < depth
+            {
+                let nr = self.open_networked(next_open, jw.as_deref_mut())?;
+                window.push(nr);
+                next_open += 1;
+            }
+            let pend = self.drain_front(&mut window)?;
+            debug_assert_eq!(pend.t, t);
+            let (outcome, folded) = self.server.close_pipelined(pend, quiesce, jw.as_deref_mut())?;
+            let rec = self.server.observe_round(t, &outcome, &mut reached)?;
+            if let Some(j) = jw.as_mut() {
+                j.append(&self.server.record_close(t, folded, &rec))?;
+                if j.due_snapshot(t) {
+                    j.append(&self.server.journal_snapshot(t))?;
+                }
+            }
+            cb(&rec);
+            records.push(rec);
+        }
+        for conn in self.conns.values_mut() {
+            let _ = conn.send(&WireMsg::Finish);
+        }
+        Ok(self.server.finish_run(records, reached))
+    }
+
+    /// Open round `u` behind the still-draining window front: plan +
+    /// journal the RoundOpen + put every kickoff frame on the wire. The
+    /// engine tracks up to `pipeline_depth` concurrently open external
+    /// rounds; devices selected in overlapping rounds see their kickoffs
+    /// in round order on the same connection.
+    fn open_networked(&mut self, u: usize, jw: Option<&mut RunJournal>) -> Result<NetRound> {
+        let (round, starts) = self.server.begin_networked_round(u)?;
+        if let Some(jw) = jw {
+            let items: Vec<StartRound> = starts.iter().map(|s| s.item).collect();
+            let lr = self.server.cfg.lr_at(u - 1) as f32;
+            jw.append(&self.server.record_open(u, &items, lr))?;
+        }
+        let mut down_bits: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut outbox: BTreeMap<usize, WireMsg> = BTreeMap::new();
+        for s in starts {
+            let d = s.item.plan.device;
+            down_bits.insert(d, s.download.bits);
+            outbox.insert(d, WireMsg::StartRound(Box::new(s)));
+        }
+        for (d, msg) in &outbox {
+            match self.conns.get_mut(d) {
+                Some(conn) => {
+                    if conn.send(msg).is_err() {
+                        self.conns.remove(d);
+                    }
+                }
+                None => {} // never connected / currently gone: deadline handles it
+            }
+        }
+        Ok(NetRound { round, outbox, down_bits })
+    }
+
+    /// Poll until the window's oldest round drains, then take it out of
+    /// the engine as a [`coordinator::PendingRound`] for the shared
+    /// close. Frames tagged for younger open rounds are fed to those
+    /// rounds as they arrive (their devices resolve early); the
+    /// wall-clock deadline converts only the FRONT round's stragglers
+    /// into dropouts — younger rounds get a fresh deadline once they
+    /// reach the front.
+    fn drain_front(&mut self, window: &mut Vec<NetRound>) -> Result<coordinator::PendingRound> {
+        let deadline = Instant::now() + self.round_timeout;
+        while !window[0].round.drained() {
+            // rejoins: a reconnecting device gets the kickoff of every
+            // open round it is still pending in, in round order
+            if let Some(d) = self.accept_and_identify()? {
+                for nr in window.iter_mut() {
+                    if nr.round.pending().contains(&d) {
+                        if let (Some(msg), Some(conn)) = (nr.outbox.get(&d), self.conns.get_mut(&d))
+                        {
+                            let _ = conn.send(msg);
+                        }
+                    }
+                }
+            }
+
+            for d in window[0].round.pending() {
+                let msg = match self.conns.get_mut(&d) {
+                    None => continue,
+                    Some(conn) => match conn.recv_timeout(POLL) {
+                        Ok(None) => continue,
+                        Ok(Some(m)) => m,
+                        Err(_) => {
+                            self.conns.remove(&d);
+                            continue;
+                        }
+                    },
+                };
+                self.route_frame(window, d, msg)?;
+            }
+
+            if !window[0].round.drained() && Instant::now() >= deadline {
+                // front-round stragglers become dropouts so the round
+                // can close; their download traffic is already spent
+                let nr = &mut window[0];
+                for d in nr.round.pending() {
+                    let bits = nr.down_bits.get(&d).copied().unwrap_or(0);
+                    self.server.engine_mut().external_msg(
+                        &mut nr.round,
+                        DeviceMsg::Dropout { device: d, after_s: 0.0, down_wire_bits: bits },
+                    )?;
+                }
+            }
+        }
+        let nr = window.remove(0);
+        let t = nr.round.t();
+        let (devices, updates, dropped) = self.server.engine_mut().take_external(nr.round)?;
+        Ok(coordinator::PendingRound { t, devices, updates, dropped })
+    }
+
+    /// Dispatch one decoded frame from device `d` against the open
+    /// window: resolutions go to the round they are tagged with,
+    /// heartbeats and in-band rejoins to the front, anything matching no
+    /// open round is refused without touching the engine.
+    fn route_frame(&mut self, window: &mut [NetRound], d: usize, msg: WireMsg) -> Result<()> {
+        match msg {
+            WireMsg::Heartbeat { device, sim_t_s } if device == d => {
+                let _ = self
+                    .server
+                    .engine_mut()
+                    .external_msg(&mut window[0].round, DeviceMsg::Heartbeat { device, sim_t_s });
+            }
+            WireMsg::Join { device } if device == d => {
+                // in-band rejoin on a surviving connection: re-kick every
+                // open round the device is still pending in
+                let _ = self
+                    .server
+                    .engine_mut()
+                    .external_msg(&mut window[0].round, DeviceMsg::Join { device });
+                for nr in window.iter_mut() {
+                    if nr.round.pending().contains(&d) {
+                        if let (Some(m), Some(conn)) = (nr.outbox.get(&d), self.conns.get_mut(&d)) {
+                            let _ = conn.send(m);
+                        }
+                    }
+                }
+            }
+            WireMsg::EndRound { t: ft, update } if update.device == d => {
+                match window.iter_mut().find(|nr| nr.round.t() == ft) {
+                    None => {
+                        // a resolution for a round that already closed:
+                        // refuse it, keep the connection
+                        if let Some(conn) = self.conns.get_mut(&d) {
+                            let _ = conn
+                                .send(&WireMsg::Reject { device: d, code: reject::STALE_ROUND });
+                        }
+                    }
+                    Some(nr) => {
+                        if self
+                            .server
+                            .engine_mut()
+                            .external_msg(&mut nr.round, DeviceMsg::EndRound(update))
+                            .is_err()
+                        {
+                            // decoded fine but failed engine validation:
+                            // refuse it and count the device out of that
+                            // round (its download traffic is spent)
+                            if let Some(conn) = self.conns.get_mut(&d) {
+                                let _ = conn
+                                    .send(&WireMsg::Reject { device: d, code: reject::BAD_UPDATE });
+                            }
+                            let bits = nr.down_bits.get(&d).copied().unwrap_or(0);
+                            self.server.engine_mut().external_msg(
+                                &mut nr.round,
+                                DeviceMsg::Dropout { device: d, after_s: 0.0, down_wire_bits: bits },
+                            )?;
+                        }
+                    }
+                }
+            }
+            WireMsg::Dropout { t: ft, device, after_s, down_wire_bits } if device == d => {
+                match window.iter_mut().find(|nr| nr.round.t() == ft) {
+                    None => {
+                        if let Some(conn) = self.conns.get_mut(&d) {
+                            let _ = conn
+                                .send(&WireMsg::Reject { device: d, code: reject::STALE_ROUND });
+                        }
+                    }
+                    Some(nr) => {
+                        self.server.engine_mut().external_msg(
+                            &mut nr.round,
+                            DeviceMsg::Dropout { device, after_s, down_wire_bits },
+                        )?;
+                    }
+                }
+            }
+            _other => {
+                // a frame this side of the protocol never expects:
+                // refuse and cut the connection
+                if let Some(conn) = self.conns.get_mut(&d) {
+                    let _ = conn.send(&WireMsg::Reject { device: d, code: reject::BAD_STATE });
+                }
+                self.conns.remove(&d);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One open round of the networked window: the engine-side external
+/// round plus the outbox (for rejoin re-kicks) and the per-device
+/// download bill (for synthesized dropouts).
+struct NetRound {
+    round: ExternalRound,
+    outbox: BTreeMap<usize, WireMsg>,
+    down_bits: BTreeMap<usize, usize>,
 }

@@ -134,6 +134,10 @@ struct WorkerLink<W: 'static> {
 pub struct WorkerPool<W: 'static> {
     links: Vec<WorkerLink<W>>,
     builds: usize,
+    /// The construction-time setup, retained so [`WorkerPool::respawn_dead`]
+    /// can rebuild a retired worker's state on a fresh thread exactly as
+    /// at pool birth.
+    setup: Arc<dyn Fn(usize) -> Result<W> + Send + Sync>,
 }
 
 impl<W: 'static> WorkerPool<W> {
@@ -177,7 +181,7 @@ impl<W: 'static> WorkerPool<W> {
                 }
             }
         }
-        let mut pool = WorkerPool { links, builds: n_workers };
+        let mut pool = WorkerPool { links, builds: n_workers, setup };
         if let Some(e) = first_err {
             pool.shutdown();
             return Err(e.context("worker pool setup"));
@@ -339,6 +343,49 @@ impl<W: 'static> WorkerPool<W> {
                 sink(Err(WorkerLost { item: i }));
             }
         }
+    }
+
+    /// Rebuild every retired worker on a fresh thread via the pool's
+    /// original `setup` closure (same worker index, so index-dependent
+    /// state is reconstructed identically). Blocks until each
+    /// replacement reports in. Returns how many workers were rebuilt; on
+    /// a setup failure the slot stays dead (the pool keeps running on
+    /// the survivors) and the error is returned for a later retry.
+    pub fn respawn_dead(&mut self) -> Result<usize> {
+        let mut rebuilt = 0;
+        for wi in 0..self.links.len() {
+            if self.links[wi].alive.load(Ordering::Acquire) {
+                continue;
+            }
+            // join the dead thread first: its state must be fully gone
+            // before a replacement claims the slot
+            if let Some(h) = self.links[wi].handle.take() {
+                let _ = h.join();
+            }
+            let (tx, rx) = std::sync::mpsc::channel::<Cmd<W>>();
+            let alive = Arc::new(AtomicBool::new(true));
+            let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+            let handle = {
+                let setup = Arc::clone(&self.setup);
+                let alive = Arc::clone(&alive);
+                std::thread::spawn(move || worker_main(wi, rx, setup, alive, ready_tx))
+            };
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    let _ = handle.join();
+                    return Err(e.context(format!("respawn worker {wi}")));
+                }
+                Err(_) => {
+                    let _ = handle.join();
+                    return Err(anyhow!("replacement worker {wi} panicked during setup"));
+                }
+            }
+            self.links[wi] = WorkerLink { tx, alive, handle: Some(handle) };
+            self.builds += 1;
+            rebuilt += 1;
+        }
+        Ok(rebuilt)
     }
 
     /// Stop every worker and join its thread. Idempotent; also runs on
@@ -562,6 +609,40 @@ mod tests {
         pool.run_batch(20, |_s, i| i, |r| got.push(r.unwrap()));
         got.sort_unstable();
         assert_eq!(got, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn respawn_rebuilds_dead_workers_via_the_original_setup() {
+        let setups = Arc::new(AtomicU64::new(0));
+        let s = Arc::clone(&setups);
+        let mut pool = WorkerPool::new(3, move |_wi| {
+            s.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        })
+        .unwrap();
+        pool.run_batch(
+            10,
+            |_s, i| {
+                if i == 0 {
+                    panic!("boom");
+                }
+            },
+            |_r| {},
+        );
+        assert_eq!(pool.alive(), 2);
+        // the replacement runs the same setup, on a fresh thread, in the
+        // same worker slot
+        assert_eq!(pool.respawn_dead().unwrap(), 1);
+        assert_eq!(pool.alive(), 3);
+        assert_eq!(pool.builds(), 4);
+        assert_eq!(setups.load(Ordering::Relaxed), 4);
+        // the healed pool covers whole batches again
+        let mut got = Vec::new();
+        pool.run_batch(20, |_s, i| i, |r| got.push(r.unwrap()));
+        got.sort_unstable();
+        assert_eq!(got, (0..20).collect::<Vec<_>>());
+        // a fully-alive pool is a no-op
+        assert_eq!(pool.respawn_dead().unwrap(), 0);
     }
 
     #[test]

@@ -340,6 +340,7 @@ fn synthetic_journal(rounds: usize) -> Vec<u8> {
         }));
         recs.push(Record::EndRound(EndRound {
             t,
+            fold_t: t,
             device: 0,
             w_digest: rng.next_u64(),
             upload_bits: 1024,
@@ -490,20 +491,16 @@ fn replay_catches_digest_traffic_and_bookkeeping_corruption() {
 // the networked coordinator journals the same bytes
 // ---------------------------------------------------------------------
 
-#[test]
-fn networked_journal_matches_the_in_process_journal_byte_for_byte() {
-    let cfg = tiny_cfg(3, 1);
-    let inproc_path = tmp_path("inproc.cjl");
-    let (inproc_srv, inproc_res) = journaled_run(&cfg, "caesar", &inproc_path, None).unwrap();
-
-    let net_path = tmp_path("loopback.cjl");
-    let (server, mut jw) = Server::journaled_open(
-        cfg.clone(),
-        schemes::by_name("caesar").unwrap(),
-        &net_path,
-        SNAP_EVERY,
-    )
-    .unwrap();
+/// One journaled loopback-networked run against `path` with all
+/// `N_DEVICES` device threads attached.
+fn loopback_journaled_run(
+    cfg: &ExperimentConfig,
+    scheme: &str,
+    path: &Path,
+) -> (Server, RunResult) {
+    let (server, mut jw) =
+        Server::journaled_open(cfg.clone(), schemes::by_name(scheme).unwrap(), path, SNAP_EVERY)
+            .unwrap();
     let hub = LoopbackHub::new();
     let dialer = hub.dialer();
     let mut svc = CoordinatorService::new(server, hub);
@@ -522,11 +519,118 @@ fn networked_journal_matches_the_in_process_journal_byte_for_byte() {
     for h in handles {
         assert_eq!(h.join().unwrap(), SessionEnd::Finished);
     }
-    let srv = svc.into_server();
+    (svc.into_server(), result)
+}
+
+#[test]
+fn networked_journal_matches_the_in_process_journal_byte_for_byte() {
+    let cfg = tiny_cfg(3, 1);
+    let inproc_path = tmp_path("inproc.cjl");
+    let (inproc_srv, inproc_res) = journaled_run(&cfg, "caesar", &inproc_path, None).unwrap();
+
+    let net_path = tmp_path("loopback.cjl");
+    let (srv, result) = loopback_journaled_run(&cfg, "caesar", &net_path);
     assert_identical("networked journaled", (&srv, &result), (&inproc_srv, &inproc_res));
     assert_eq!(
         std::fs::read(&net_path).unwrap(),
         std::fs::read(&inproc_path).unwrap(),
         "loopback and in-process journals must be byte-identical"
+    );
+}
+
+// ---------------------------------------------------------------------
+// semi-async pipelined rounds stay durable
+// ---------------------------------------------------------------------
+
+/// `tiny_cfg` with the semi-async window open: two rounds in flight and
+/// a staleness buffer holding one round of lag.
+fn pipelined_cfg(rounds: usize, workers: usize) -> ExperimentConfig {
+    let mut cfg = tiny_cfg(rounds, workers);
+    cfg.engine.pipeline_depth = 2;
+    cfg.engine.staleness_bound = 1;
+    cfg
+}
+
+#[test]
+fn pipelined_journals_replay_offline_and_every_kill_point_resumes_bit_identically() {
+    let cfg = pipelined_cfg(4, 1);
+    let golden_path = tmp_path("pipe_golden.cjl");
+    let (gold_srv, gold_res) = journaled_run(&cfg, "caesar", &golden_path, None).unwrap();
+    let golden = std::fs::read(&golden_path).unwrap();
+    let (gold_rec, _) = journal::recover_file(&golden_path).unwrap();
+
+    // offline replay re-derives the fold schedule (the cost-median
+    // lateness rule) from the records alone — no trainer — and
+    // cross-checks every digest, traffic total and model-version bump
+    let summary = journal::verify(&gold_rec.records).unwrap();
+    assert_eq!(summary.rounds, cfg.rounds);
+    assert!(!summary.partial_tail, "run closed with its final snapshot");
+    assert_eq!(summary.final_model_digest, model_digest(&gold_srv.global));
+    assert_eq!(summary.down_bits.to_bits(), gold_srv.traffic().down_bits.to_bits());
+    assert_eq!(summary.up_bits.to_bits(), gold_srv.traffic().up_bits.to_bits());
+    assert_eq!(summary.sim_time_s.to_bits(), gold_srv.sim_time_s().to_bits());
+
+    // kill-at-every-append: the open window and staleness buffer are
+    // provably drained at snapshot boundaries, so resume needs no new
+    // record kinds — and must stay byte-identical
+    let n_appends = gold_rec.records.len();
+    assert!(n_appends > 2 * cfg.rounds, "sweep would be vacuous: {n_appends} appends");
+    let path = tmp_path("pipe_killsweep.cjl");
+    for k in 0..n_appends {
+        let _ = std::fs::remove_file(&path);
+        let err = journaled_run(&cfg, "caesar", &path, Some(k))
+            .err()
+            .unwrap_or_else(|| panic!("pipelined kill at append {k} did not fire"));
+        assert!(
+            err.to_string().contains("kill point"),
+            "pipelined kill at {k}: unexpected error {err:#}"
+        );
+        let (srv, result) = journaled_run(&cfg, "caesar", &path, None)
+            .unwrap_or_else(|e| panic!("pipelined resume after kill at {k} failed: {e:#}"));
+        assert_identical(
+            &format!("pipelined kill at {k}"),
+            (&srv, &result),
+            (&gold_srv, &gold_res),
+        );
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            golden,
+            "pipelined kill at {k}: journal diverged from uninterrupted run"
+        );
+    }
+}
+
+#[test]
+fn a_pipelined_journal_refuses_the_barrier_config_and_vice_versa() {
+    // pipeline knobs are part of the journal's config identity: resuming
+    // a depth-2 journal with barrier knobs (or the reverse) must refuse
+    // rather than silently produce a different run
+    let pipe = pipelined_cfg(2, 1);
+    let path = tmp_path("pipe_identity.cjl");
+    journaled_run(&pipe, "caesar", &path, None).unwrap();
+    let barrier = tiny_cfg(2, 1);
+    let err = journaled_run(&barrier, "caesar", &path, None)
+        .err()
+        .expect("depth mismatch must refuse");
+    assert!(err.to_string().contains("config"), "{err:#}");
+}
+
+#[test]
+fn networked_pipelined_journal_matches_the_in_process_one_byte_for_byte() {
+    let cfg = pipelined_cfg(3, 1);
+    let inproc_path = tmp_path("pipe_inproc.cjl");
+    let (inproc_srv, inproc_res) = journaled_run(&cfg, "caesar", &inproc_path, None).unwrap();
+
+    let net_path = tmp_path("pipe_loopback.cjl");
+    let (srv, result) = loopback_journaled_run(&cfg, "caesar", &net_path);
+    assert_identical(
+        "networked pipelined journaled",
+        (&srv, &result),
+        (&inproc_srv, &inproc_res),
+    );
+    assert_eq!(
+        std::fs::read(&net_path).unwrap(),
+        std::fs::read(&inproc_path).unwrap(),
+        "pipelined loopback and in-process journals must be byte-identical"
     );
 }

@@ -406,6 +406,154 @@ fn worker_panic_surfaces_as_error_and_next_round_runs() {
     drop(exec);
 }
 
+// ---------------------------------------------------------------------
+// semi-async pipelined rounds
+// ---------------------------------------------------------------------
+
+fn run_pipelined(
+    scheme: &str,
+    rounds: usize,
+    workers: usize,
+    depth: usize,
+    bound: usize,
+) -> (Server, caesar_fl::coordinator::RunResult) {
+    let mut cfg = tiny_cfg("har", rounds);
+    cfg.engine.workers = workers;
+    cfg.engine.pipeline_depth = depth;
+    cfg.engine.staleness_bound = bound;
+    let mut srv = Server::new(cfg, schemes::by_name(scheme).unwrap()).unwrap();
+    let res = srv.run().unwrap();
+    (srv, res)
+}
+
+#[test]
+fn depth_one_bound_zero_is_the_barrier_engine() {
+    // the explicit knob values must route to (and therefore bit-match)
+    // the legacy barrier loop
+    let (barrier, barrier_res) = run_pipelined("caesar", 4, 2, 1, 0);
+    let mut cfg = tiny_cfg("har", 4);
+    cfg.engine.workers = 2;
+    let mut legacy = Server::new(cfg, schemes::by_name("caesar").unwrap()).unwrap();
+    let legacy_res = legacy.run().unwrap();
+    assert_bits_eq(&legacy.global, &barrier.global, "depth-1 routing");
+    for (ra, rb) in legacy_res.records.iter().zip(&barrier_res.records) {
+        assert_eq!(ra.traffic_gb.to_bits(), rb.traffic_gb.to_bits(), "round {}", ra.t);
+        assert_eq!(ra.sim_time_s.to_bits(), rb.sim_time_s.to_bits(), "round {}", ra.t);
+        assert_eq!(ra.mean_loss.to_bits(), rb.mean_loss.to_bits(), "round {}", ra.t);
+    }
+}
+
+#[test]
+fn pipelined_rounds_are_bit_identical_across_worker_counts() {
+    // the tentpole determinism pin: depth 2 with a live staleness buffer,
+    // same seed → same final model bits, traffic ledger and records at
+    // every worker count
+    for scheme in ["caesar", "fedavg"] {
+        let (base, base_res) = run_pipelined(scheme, 6, 1, 2, 2);
+        assert_eq!(base_res.records.len(), 6, "{scheme}");
+        for workers in [3usize, 8] {
+            let (srv, res) = run_pipelined(scheme, 6, workers, 2, 2);
+            let what = format!("{scheme} workers={workers}");
+            assert_bits_eq(&base.global, &srv.global, &what);
+            assert_eq!(base_res.records.len(), res.records.len(), "{what}");
+            for (ra, rb) in base_res.records.iter().zip(&res.records) {
+                assert_eq!(
+                    ra.traffic_gb.to_bits(),
+                    rb.traffic_gb.to_bits(),
+                    "{what} round {}",
+                    ra.t
+                );
+                assert_eq!(
+                    ra.sim_time_s.to_bits(),
+                    rb.sim_time_s.to_bits(),
+                    "{what} round {}",
+                    ra.t
+                );
+                assert_eq!(
+                    ra.mean_loss.to_bits(),
+                    rb.mean_loss.to_bits(),
+                    "{what} round {}",
+                    ra.t
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_runs_complete_with_dropouts_and_deep_windows() {
+    // deeper window + dropouts: every round still closes, the engine
+    // returns to Standby, and the run is reproducible
+    let run = |workers: usize| {
+        let mut cfg = tiny_cfg("har", 6);
+        cfg.engine.workers = workers;
+        cfg.engine.pipeline_depth = 3;
+        cfg.engine.staleness_bound = 2;
+        cfg.engine.dropout_rate = 0.3;
+        let mut srv = Server::new(cfg, schemes::by_name("caesar").unwrap()).unwrap();
+        let res = srv.run().unwrap();
+        (srv, res)
+    };
+    let (a, ares) = run(1);
+    let (b, bres) = run(6);
+    assert_eq!(a.engine().stats().rounds, 6);
+    assert_eq!(a.engine().phase(), Phase::Standby);
+    assert_eq!(ares.records.len(), bres.records.len());
+    assert_bits_eq(&a.global, &b.global, "deep window + dropouts");
+    assert_eq!(a.engine().stats().dropouts, b.engine().stats().dropouts);
+}
+
+#[test]
+fn dead_workers_are_respawned_through_the_original_setup() {
+    use caesar_fl::coordinator::Trainer;
+    use caesar_fl::engine::{ExecutorHandle, WorkerCtx};
+    use caesar_fl::util::threadpool::WorkerPool;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    // a pool whose first batch kills one worker: the engine-facing handle
+    // must report the casualty and rebuild it with the ORIGINAL setup
+    let setups = Arc::new(AtomicUsize::new(0));
+    let s2 = Arc::clone(&setups);
+    let pool = WorkerPool::new(2, move |_wi| {
+        s2.fetch_add(1, Ordering::SeqCst);
+        Ok(WorkerCtx { trainer: Trainer::native("har") })
+    })
+    .unwrap();
+    let mut exec = ExecutorHandle::Pool(pool);
+    assert_eq!(exec.worker_census(), (2, 2));
+    assert_eq!(setups.load(Ordering::SeqCst), 2);
+
+    // kill one worker with a poison batch item
+    if let ExecutorHandle::Pool(p) = &exec {
+        let mut lost = 0usize;
+        p.run_batch(
+            2,
+            |_ctx: &mut WorkerCtx, i: usize| {
+                if i == 0 {
+                    panic!("poison item");
+                }
+                i
+            },
+            |r| {
+                if r.is_err() {
+                    lost += 1;
+                }
+            },
+        );
+        assert_eq!(lost, 1, "exactly the poison item is reported lost");
+    }
+    assert_eq!(exec.worker_census().1, 1, "the poisoned worker must be retired");
+
+    // respawn: one rebuild, through the stored setup closure
+    assert_eq!(exec.respawn_dead().unwrap(), 1);
+    assert_eq!(exec.worker_census(), (2, 2));
+    assert_eq!(setups.load(Ordering::SeqCst), 3, "respawn must re-run the setup");
+    // healthy pool: respawn is a no-op
+    assert_eq!(exec.respawn_dead().unwrap(), 0);
+    drop(exec);
+}
+
 #[test]
 fn heartbeats_flow_and_liveness_is_tracked() {
     let mut cfg = tiny_cfg("har", 2);

@@ -141,6 +141,24 @@ fn loopback_and_tcp_match_the_in_process_run_bit_for_bit() {
 }
 
 #[test]
+fn pipelined_depth_two_matches_the_in_process_run_bit_for_bit() {
+    // the semi-async tentpole over the wire: with a depth-2 window two
+    // rounds are open at once, EndRound/Dropout frames carry their round
+    // id and route to the matching window slot, and the staleness fold
+    // happens inside the shared `Server` — so a networked pipelined run
+    // must reproduce the in-process pipelined run exactly, records and
+    // traffic included
+    let mut cfg = tiny_cfg(4);
+    cfg.engine.pipeline_depth = 2;
+    cfg.engine.staleness_bound = 2;
+    let base = baseline(&cfg, "caesar");
+    let lb = run_loopback(&cfg, "caesar", &[5, 2, 0, 4, 1, 3]);
+    assert_parity("pipelined loopback vs in-process", (&lb.0, &lb.1), (&base.0, &base.1));
+    let tcp = run_tcp(&cfg, "caesar", &[3, 0, 5, 1, 4, 2]);
+    assert_parity("pipelined tcp vs in-process", (&tcp.0, &tcp.1), (&base.0, &base.1));
+}
+
+#[test]
 fn quant_noise_and_fedavg_survive_the_wire_too() {
     // prowd's Quant download draws device-stream noise — the RNG
     // resume-state handoff in the kickoff frame is what keeps this exact
