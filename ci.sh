@@ -52,7 +52,11 @@ require_keys BENCH_wire.json bench n_params codec_cases recovery aggregation \
 require_keys BENCH_transport.json bench codec_cases tcp_roundtrip \
   n_params kind frame_bytes encode_ns encode_frames_per_s \
   encode_allocs_per_frame decode_ns decode_frames_per_s \
-  decode_allocs_per_frame rtt_us
+  decode_allocs_per_frame rtt_us \
+  fleet_mux conns devices_per_conn frames_per_round \
+  reactor_frames_per_s reactor_ms_per_round reactor_wakeups \
+  sleep_poll_frames_per_s sleep_poll_ms_per_round sleep_poll_wakeups \
+  wakeup_ratio
 require_keys BENCH_journal.json bench append_cases recover \
   case frame_bytes append_ns appends_per_s mb_per_s \
   allocs_per_append alloc_bytes_per_append \
@@ -79,6 +83,13 @@ echo "== transport smoke (two processes over an ephemeral localhost port) =="
 # and socket boundaries (tests/transport_parity.rs pins the same
 # invariant in-process, including reconnect-with-rejoin)
 cargo run --release --example transport_localhost
+
+echo "== fleet transport smoke (2 fleet processes x 4 devices over one connection each) =="
+# the multiplexed sibling: 8 devices carried by TWO fleet processes (one
+# connection each, 4 sessions per connection) against a Tcp coordinator
+# on an ephemeral port; the example ASSERTS the model digest equals the
+# in-process baseline — connection packing is invisible to the math
+cargo run --release --example transport_fleet
 
 echo "== bench_wire smoke =="
 # run from a temp dir: the bench writes BENCH_wire.json to its cwd, and

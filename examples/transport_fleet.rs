@@ -1,0 +1,167 @@
+//! Multi-process fleet-multiplexed transport demo + parity check.
+//!
+//! Run with:
+//!   cargo run --release --example transport_fleet
+//!
+//! The fleet sibling of `transport_localhost`: the parent computes the
+//! in-process baseline (`Server::run`) for a small fixed-seed HAR run,
+//! then re-executes itself as a Tcp coordinator plus TWO fleet processes
+//! — each carrying FOUR device sessions over a single connection
+//! (`DeviceFleet`) — and checks that the networked model digest is
+//! **bit-identical** to the baseline. Eight devices, two sockets: the
+//! coordinator demux-routes every frame by the device id it names, so
+//! how sessions pack onto connections is invisible to the math.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Command, Stdio};
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use caesar_fl::config::{CompressionBackend, ExperimentConfig, TrainerBackend};
+use caesar_fl::coordinator::Server;
+use caesar_fl::schemes;
+use caesar_fl::transport::{
+    model_digest, CoordinatorService, DeviceFleet, SessionEnd, TcpConn, TcpTransport,
+};
+
+const N_DEVICES: usize = 8;
+/// Device sessions carried per fleet process (one connection each).
+const PER_FLEET: usize = 4;
+
+/// The one config every role must agree on.
+fn demo_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("har");
+    cfg.trainer = TrainerBackend::Native;
+    cfg.compression = CompressionBackend::Native;
+    cfg.fleet = caesar_fl::fleet::FleetKind::JetsonScaled(N_DEVICES);
+    cfg.rounds = 2;
+    cfg.alpha = 0.5; // 4 participants per round
+    cfg.n_train = 600;
+    cfg.n_test = 200;
+    cfg.tau = 2;
+    cfg.batch = 8;
+    cfg.eval_every = 1;
+    cfg.seed = 11;
+    cfg
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let result = match args.get(1).map(String::as_str) {
+        None => orchestrate(),
+        Some("coordinator") => role_coordinator(),
+        Some("fleet") => role_fleet(args.get(2).cloned(), args.get(3).cloned()),
+        Some(other) => Err(anyhow!("unknown role {other}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Child role: Tcp coordinator on an ephemeral port.
+fn role_coordinator() -> Result<()> {
+    let scheme = schemes::by_name("caesar").unwrap();
+    let server = Server::new(demo_cfg(), scheme)?;
+    let transport = TcpTransport::bind("127.0.0.1:0").map_err(|e| anyhow!("bind: {e}"))?;
+    let mut svc = CoordinatorService::new(server, transport);
+    println!("listening on {}", svc.local_addr());
+    svc.wait_for_devices(N_DEVICES, Duration::from_secs(30))?;
+    svc.run()?;
+    println!("reactor wakeups {}", svc.wakeups());
+    println!("model digest {:016x}", model_digest(svc.server().model()));
+    Ok(())
+}
+
+/// Child role: one fleet of [`PER_FLEET`] devices over ONE connection.
+fn role_fleet(addr: Option<String>, range: Option<String>) -> Result<()> {
+    let addr = addr.ok_or_else(|| anyhow!("fleet role needs the coordinator address"))?;
+    let range = range.ok_or_else(|| anyhow!("fleet role needs a device range a-b"))?;
+    let (a, b) = range.split_once('-').ok_or_else(|| anyhow!("bad range {range}"))?;
+    let (a, b): (usize, usize) = (a.parse()?, b.parse()?);
+    let mut fleet = DeviceFleet::new(demo_cfg(), a..=b)?;
+    match fleet.run_reconnecting(|| TcpConn::connect(addr.as_str()), 5)? {
+        SessionEnd::Finished => Ok(()),
+        SessionEnd::Disconnected => {
+            Err(anyhow!("fleet {range} lost the coordinator"))
+        }
+    }
+}
+
+/// Parent: baseline run, then the three children, then the digest check.
+fn orchestrate() -> Result<()> {
+    println!("[1/3] in-process baseline...");
+    let scheme = schemes::by_name("caesar").unwrap();
+    let mut baseline = Server::new(demo_cfg(), scheme)?;
+    baseline.run()?;
+    let want = model_digest(baseline.model());
+    println!("      baseline digest {want:016x}");
+
+    let n_fleets = N_DEVICES / PER_FLEET;
+    println!(
+        "[2/3] spawning coordinator + {n_fleets} fleet processes \
+         ({PER_FLEET} devices over one connection each)..."
+    );
+    let me = std::env::current_exe().context("resolving current_exe")?;
+    let mut coord = Command::new(&me)
+        .arg("coordinator")
+        .stdout(Stdio::piped())
+        .spawn()
+        .context("spawning coordinator process")?;
+    let mut lines = BufReader::new(coord.stdout.take().unwrap()).lines();
+
+    // rendezvous: the coordinator prints its resolved ephemeral address
+    let mut addr = None;
+    let mut digest_line = None;
+    for line in &mut lines {
+        let line = line?;
+        println!("      [coordinator] {line}");
+        if let Some(a) = line.strip_prefix("listening on ") {
+            addr = Some(a.trim().to_string());
+            break;
+        }
+    }
+    let addr = addr.ok_or_else(|| anyhow!("coordinator never printed its address"))?;
+
+    let mut fleets = Vec::new();
+    for f in 0..n_fleets {
+        let (a, b) = (f * PER_FLEET, f * PER_FLEET + PER_FLEET - 1);
+        fleets.push(
+            Command::new(&me)
+                .arg("fleet")
+                .arg(&addr)
+                .arg(format!("{a}-{b}"))
+                .spawn()
+                .with_context(|| format!("spawning fleet process {a}-{b}"))?,
+        );
+    }
+
+    // drain the rest of the coordinator's output, catching the digest
+    for line in &mut lines {
+        let line = line?;
+        println!("      [coordinator] {line}");
+        if let Some(d) = line.strip_prefix("model digest ") {
+            digest_line = Some(d.trim().to_string());
+        }
+    }
+    let coord_status = coord.wait()?;
+    let mut children_ok = true;
+    for f in fleets {
+        children_ok &= f.wait_with_output()?.status.success();
+    }
+    if !coord_status.success() || !children_ok {
+        return Err(anyhow!("a child process failed"));
+    }
+    let got = u64::from_str_radix(
+        digest_line.as_deref().ok_or_else(|| anyhow!("coordinator never printed a digest"))?,
+        16,
+    )?;
+
+    println!("[3/3] digest over fleet-multiplexed Tcp {got:016x}, in-process {want:016x}");
+    if got != want {
+        return Err(anyhow!("PARITY VIOLATION: the fleet run diverged from the in-process run"));
+    }
+    println!("parity holds: 8 devices on 2 sockets, bit-identical to 0 sockets");
+    Ok(())
+}

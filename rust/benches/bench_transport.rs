@@ -1,13 +1,18 @@
 //! Transport benchmark: frame codec throughput (encode/decode of the
 //! round-dominating StartRound and EndRound frames at 1k / 64k / 1M
-//! payload parameters, with allocation traffic per call) and localhost
+//! payload parameters, with allocation traffic per call), localhost
 //! Tcp round-trip latency (small control frame and a 64k-parameter
-//! update echoed back).
+//! update echoed back), and the `fleet_mux` serving-path case: 1000
+//! device sessions packed onto {1000, 10, 1} connections, served once
+//! by the readiness reactor and once by a classic sleep-poll sweep
+//! loop, with wakeups counted for both (the reactor's scale with frames
+//! delivered; the sweep's with elapsed-time × connections).
 //!
 //! Results are written to BENCH_transport.json in the current directory
 //! with `"placeholder": false` (the flag marks hand-authored files
 //! committed from toolchain-less environments; this binary always
-//! measures). Quick mode: CAESAR_BENCH_QUICK=1 (skips the 1M size).
+//! measures). Quick mode: CAESAR_BENCH_QUICK=1 (skips the 1M size and
+//! shrinks the fleet to 96 devices).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -18,7 +23,8 @@ use caesar_fl::engine::{RoundUpdate, StartRound};
 use caesar_fl::fleet::RoundCost;
 use caesar_fl::schemes::{DevicePlan, DownloadCodec, UploadCodec};
 use caesar_fl::transport::{
-    decode_frame, encode_frame, Conn, TcpConn, TcpTransport, Transport, WireMsg,
+    decode_frame, encode_frame, Conn, RawSource, Reactor, TcpConn, TcpTransport, Transport,
+    WireMsg,
 };
 use caesar_fl::util::alloc_count::{self, CountingAlloc};
 use caesar_fl::util::json::{self, Json};
@@ -157,12 +163,164 @@ fn main() {
     drop(conn);
     echo.join().expect("echo thread");
 
+    // --- fleet_mux: N device sessions over C connections, reactor vs
+    // sleep-poll serving loops -----------------------------------------
+    println!("\n== bench: fleet_mux serving path ==");
+    caesar_fl::transport::readiness::raise_fd_limit();
+    let (devices, mux_rounds) = if quick { (96, 3) } else { (1_000, 10) };
+    let topologies: &[usize] = if quick { &[96, 8, 1] } else { &[1_000, 10, 1] };
+    let mut mux_rows: Vec<Json> = Vec::new();
+    for &conns in topologies {
+        let dpc = devices / conns;
+        let reactor = serve_fleet_mux(conns, dpc, mux_rounds, ServeMode::Reactor);
+        let sleep = serve_fleet_mux(conns, dpc, mux_rounds, ServeMode::SleepPoll);
+        let ratio = sleep.wakeups as f64 / reactor.wakeups.max(1) as f64;
+        println!(
+            "  {conns:>5} conns x {dpc:>5} devices  reactor {:>9.0} fr/s {:>7.2} ms/round \
+             {:>7} wakeups | sleep-poll {:>9.0} fr/s {:>7.2} ms/round {:>9} wakeups \
+             ({ratio:.1}x)",
+            reactor.frames_per_s,
+            reactor.ms_per_round,
+            reactor.wakeups,
+            sleep.frames_per_s,
+            sleep.ms_per_round,
+            sleep.wakeups,
+        );
+        let mut o = Json::obj();
+        o.set("conns", json::num(conns as f64))
+            .set("devices_per_conn", json::num(dpc as f64))
+            .set("frames_per_round", json::num((conns * dpc) as f64))
+            .set("reactor_frames_per_s", json::num(reactor.frames_per_s))
+            .set("reactor_ms_per_round", json::num(reactor.ms_per_round))
+            .set("reactor_wakeups", json::num(reactor.wakeups as f64))
+            .set("sleep_poll_frames_per_s", json::num(sleep.frames_per_s))
+            .set("sleep_poll_ms_per_round", json::num(sleep.ms_per_round))
+            .set("sleep_poll_wakeups", json::num(sleep.wakeups as f64))
+            .set("wakeup_ratio", json::num(ratio));
+        mux_rows.push(o);
+    }
+
     let mut out = Json::obj();
     out.set("bench", json::s("transport"))
         .set("quick", Json::Bool(quick))
         .set("placeholder", Json::Bool(false))
         .set("codec_cases", Json::Arr(codec_rows))
-        .set("tcp_roundtrip", Json::Arr(rtt_rows));
+        .set("tcp_roundtrip", Json::Arr(rtt_rows))
+        .set("fleet_mux", Json::Arr(mux_rows));
     std::fs::write("BENCH_transport.json", out.to_string()).expect("write BENCH_transport.json");
     println!("wrote BENCH_transport.json");
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum ServeMode {
+    /// One readiness wait-set over every connection; wakeups =
+    /// `Reactor::wakeups()` (scales with frames delivered).
+    Reactor,
+    /// The loop this PR deleted from the serving path: nap, then
+    /// non-blocking-sweep every connection; wakeups = try_recv polls
+    /// (scales with elapsed-time × connections).
+    SleepPoll,
+}
+
+struct MuxStats {
+    frames_per_s: f64,
+    ms_per_round: f64,
+    wakeups: u64,
+}
+
+/// Serve `rounds` synthetic rounds to `conns` connections carrying
+/// `dpc` device sessions each: per round the server kicks every
+/// connection with one frame, and every session answers with one
+/// heartbeat — `conns * dpc` frames to collect per round. Training and
+/// codec work are deliberately absent; this measures the serving loop.
+fn serve_fleet_mux(conns: usize, dpc: usize, rounds: usize, mode: ServeMode) -> MuxStats {
+    let mut lst = TcpTransport::bind("127.0.0.1:0").expect("bind");
+    let addr = lst.socket_addr();
+    let mut clients = Vec::with_capacity(conns);
+    for c in 0..conns {
+        clients.push(
+            std::thread::Builder::new()
+                .stack_size(128 * 1024)
+                .spawn(move || {
+                    let mut conn = TcpConn::connect(addr).expect("dial");
+                    for r in 0..rounds {
+                        // wait for this round's kick
+                        loop {
+                            match conn.recv_timeout(Duration::from_secs(5)) {
+                                Ok(Some(_)) => break,
+                                Ok(None) => continue,
+                                Err(e) => panic!("client {c}: {e}"),
+                            }
+                        }
+                        for d in 0..dpc {
+                            conn.send(&WireMsg::Heartbeat {
+                                device: c * dpc + d,
+                                sim_t_s: r as f64,
+                            })
+                            .expect("heartbeat send");
+                        }
+                    }
+                })
+                .expect("spawn client"),
+        );
+    }
+    let mut socks: Vec<TcpConn> = Vec::with_capacity(conns);
+    while socks.len() < conns {
+        if let Some(s) = lst.accept_timeout(Duration::from_secs(10)).expect("accept") {
+            socks.push(s);
+        }
+    }
+
+    let kick = WireMsg::JoinAck { device: 0, n_devices: dpc };
+    let target = conns * dpc;
+    let mut reactor = Reactor::new(None);
+    let mut polls: u64 = 0;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for s in &mut socks {
+            s.send(&kick).expect("kick send");
+        }
+        let mut got = 0usize;
+        while got < target {
+            match mode {
+                ServeMode::Reactor => {
+                    let sources: Vec<(u64, RawSource)> =
+                        socks.iter().enumerate().map(|(i, s)| (i as u64, s.source())).collect();
+                    let wake = reactor
+                        .wait(lst.listener_source(), &sources, Duration::from_secs(5))
+                        .expect("reactor wait");
+                    let tokens: Vec<u64> =
+                        if wake.sweep { (0..conns as u64).collect() } else { wake.ready };
+                    for tok in tokens {
+                        let s = &mut socks[tok as usize];
+                        while let Some(_msg) = s.try_recv().expect("drain") {
+                            got += 1;
+                        }
+                    }
+                }
+                ServeMode::SleepPoll => {
+                    std::thread::sleep(Duration::from_millis(2));
+                    for s in socks.iter_mut() {
+                        polls += 1;
+                        while let Some(_msg) = s.try_recv().expect("sweep") {
+                            got += 1;
+                            polls += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    for h in clients {
+        h.join().expect("client thread");
+    }
+    MuxStats {
+        frames_per_s: (target * rounds) as f64 / elapsed,
+        ms_per_round: elapsed * 1e3 / rounds as f64,
+        wakeups: match mode {
+            ServeMode::Reactor => reactor.wakeups(),
+            ServeMode::SleepPoll => polls,
+        },
+    }
 }

@@ -1,0 +1,91 @@
+//! `caesar-fleet` — run many FL device workers over ONE Tcp connection
+//! against a `caesar-coordinator`.
+//!
+//! Usage:
+//!   caesar-fleet connect=127.0.0.1:PORT devices=0-7
+//!                [task=har] [max-redials=5] [key=value overrides] [quiet]
+//!
+//! The multiplexed sibling of `caesar-device`: where that binary opens
+//! one socket per device id, this one runs the whole `devices=` range as
+//! a [`DeviceFleet`] — a single framed connection carrying every
+//! session, demux-routed by the device id each frame names. Launch M
+//! processes with disjoint ranges to spread N devices across M sockets;
+//! the coordinator's math is bit-identical either way. Config overrides
+//! MUST match the coordinator's (both sides derive datasets, shards and
+//! model shape from the shared config + seed).
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use caesar_fl::config::{CompressionBackend, ExperimentConfig, TrainerBackend};
+use caesar_fl::transport::{DeviceFleet, SessionEnd, TcpConn};
+use caesar_fl::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// `devices=a-b` (inclusive) or `device=n`; defaults to every device in
+/// the fleet.
+fn device_range(args: &Args, n: usize) -> Result<Vec<usize>> {
+    if let Some(d) = args.get_usize("device") {
+        return Ok(vec![d]);
+    }
+    match args.get("devices") {
+        None => Ok((0..n).collect()),
+        Some(spec) => {
+            let (a, b) = spec
+                .split_once('-')
+                .ok_or_else(|| anyhow!("devices= expects a-b, got {spec}"))?;
+            let a: usize = a.trim().parse().map_err(|_| anyhow!("bad range start {a}"))?;
+            let b: usize = b.trim().parse().map_err(|_| anyhow!("bad range end {b}"))?;
+            if a > b {
+                return Err(anyhow!("empty device range {spec}"));
+            }
+            Ok((a..=b).collect())
+        }
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow!("connect=HOST:PORT is required"))?
+        .to_string();
+    let task = args.get_or("task", "har");
+    let mut cfg = ExperimentConfig::preset(task).apply_overrides(args);
+    cfg.trainer = TrainerBackend::Native;
+    cfg.compression = CompressionBackend::Native;
+    let devices = device_range(args, cfg.n_devices())?;
+    let max_redials = args.get_usize("max-redials").unwrap_or(5);
+    let quiet = args.has_flag("quiet");
+
+    if !quiet {
+        println!("fleet of devices {devices:?} connecting to {addr} on one connection");
+    }
+    let mut fleet = DeviceFleet::new(cfg, devices)?;
+    let end = fleet.run_reconnecting(|| TcpConn::connect(addr.as_str()), max_redials)?;
+    let stats = fleet.stats();
+    match end {
+        SessionEnd::Finished => {
+            if !quiet {
+                println!(
+                    "fleet finished: {} rounds, {} dropouts, {} redeliveries",
+                    stats.rounds, stats.dropouts, stats.redeliveries
+                );
+            }
+        }
+        SessionEnd::Disconnected => {
+            eprintln!("fleet gave up after repeated disconnects");
+            std::process::exit(2);
+        }
+    }
+    // give the coordinator a beat to log its side before we exit
+    std::thread::sleep(Duration::from_millis(50));
+    Ok(())
+}

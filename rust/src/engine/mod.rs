@@ -305,6 +305,14 @@ impl ExternalRound {
     pub fn pending(&self) -> Vec<usize> {
         self.pending.iter().copied().collect()
     }
+
+    /// Whether `device` is an expected participant that has not yet
+    /// resolved. The demux server guards resolutions on this before
+    /// calling [`Engine::external_msg`]: a duplicate EndRound/Dropout
+    /// is a stale frame to refuse, not an error to propagate.
+    pub fn is_pending(&self, device: usize) -> bool {
+        self.pending.contains(&device)
+    }
 }
 
 /// What one executed round hands back to the driver.
@@ -382,6 +390,18 @@ impl Engine {
 
     pub fn registry(&self) -> &Registry {
         &self.registry
+    }
+
+    /// Bind `device`'s session to transport connection `token` (see
+    /// [`Registry::bind_conn`]). `false` if the id is out of range.
+    pub fn bind_conn(&mut self, device: usize, token: u64) -> bool {
+        self.registry.bind_conn(device, token)
+    }
+
+    /// Sever every device bound to connection `token`, returning them
+    /// ascending — one socket death is a whole fleet's death.
+    pub fn unbind_conn(&mut self, token: u64) -> Vec<usize> {
+        self.registry.unbind_conn(token)
     }
 
     pub fn stats(&self) -> EngineStats {

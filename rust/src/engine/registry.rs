@@ -41,6 +41,12 @@ pub struct Registry {
     /// fence the semi-async engine checks so a resolution for an older
     /// overlapped round can never be mistaken for the newest one.
     round_of: Vec<usize>,
+    /// Transport binding: the opaque connection token each device's
+    /// session currently rides (`None` = unbound). Many devices may
+    /// share one token — a fleet multiplexes its whole device range
+    /// over a single connection — so the relation lives per-device
+    /// with reverse lookup by token, never per-socket.
+    conn: Vec<Option<u64>>,
     /// Expected heartbeat interval (s); liveness allows 2 missed beats.
     heartbeat_s: f64,
 }
@@ -53,6 +59,7 @@ impl Registry {
             completions: vec![0; n_devices],
             dropouts: vec![0; n_devices],
             round_of: vec![0; n_devices],
+            conn: vec![None; n_devices],
             heartbeat_s,
         }
     }
@@ -192,6 +199,43 @@ impl Registry {
             }
         }
         evicted
+    }
+
+    /// Bind `device`'s session to connection `token` (re-binding — a
+    /// rejoin from a fresh connection — simply replaces the old
+    /// binding). `false` rejects an out-of-range id.
+    pub fn bind_conn(&mut self, device: usize, token: u64) -> bool {
+        if !self.contains(device) {
+            return false;
+        }
+        self.conn[device] = Some(token);
+        true
+    }
+
+    /// The connection token `device` is currently bound to, if any.
+    pub fn conn_of(&self, device: usize) -> Option<u64> {
+        self.conn.get(device).copied().flatten()
+    }
+
+    /// Sever every binding to connection `token`, returning the devices
+    /// that rode it, ascending. This is the fleet-death primitive: one
+    /// poisoned or dead socket unbinds ALL devices multiplexed on it —
+    /// the caller decides whether they wait for a rejoin (clean death)
+    /// or convert to synthesized Dropouts (poisoned peer).
+    pub fn unbind_conn(&mut self, token: u64) -> Vec<usize> {
+        let mut severed = Vec::new();
+        for (d, c) in self.conn.iter_mut().enumerate() {
+            if *c == Some(token) {
+                *c = None;
+                severed.push(d);
+            }
+        }
+        severed
+    }
+
+    /// How many devices currently hold a connection binding.
+    pub fn bound_count(&self) -> usize {
+        self.conn.iter().filter(|c| c.is_some()).count()
     }
 
     pub fn completions(&self, device: usize) -> u32 {
@@ -345,6 +389,35 @@ mod tests {
         assert_eq!(r.last_started(0), 3);
         assert!(!r.start_round_in(9, 0.0, 1));
         assert_eq!(r.last_started(9), 0);
+    }
+
+    #[test]
+    fn conn_bindings_are_many_to_one_and_sever_together() {
+        let mut r = Registry::new(5, 10.0);
+        assert_eq!(r.conn_of(0), None);
+        assert_eq!(r.bound_count(), 0);
+        // a fleet: devices 0,2,4 ride conn 7; device 1 rides conn 9
+        assert!(r.bind_conn(0, 7));
+        assert!(r.bind_conn(2, 7));
+        assert!(r.bind_conn(4, 7));
+        assert!(r.bind_conn(1, 9));
+        assert!(!r.bind_conn(99, 7), "out-of-range ids are rejected");
+        assert_eq!(r.conn_of(2), Some(7));
+        assert_eq!(r.bound_count(), 4);
+        // rejoin from a fresh conn replaces the binding
+        assert!(r.bind_conn(2, 9));
+        assert_eq!(r.conn_of(2), Some(9));
+        // one socket death severs ALL devices multiplexed on it
+        assert_eq!(r.unbind_conn(7), vec![0, 4]);
+        assert_eq!(r.conn_of(0), None);
+        assert_eq!(r.conn_of(4), None);
+        assert_eq!(r.bound_count(), 2);
+        // severing an unknown token is a no-op
+        assert!(r.unbind_conn(7).is_empty());
+        assert_eq!(r.unbind_conn(9), vec![1, 2]);
+        assert_eq!(r.bound_count(), 0);
+        // bindings never touched status/liveness bookkeeping
+        assert_eq!(r.census(), (5, 0, 0, 0));
     }
 
     #[test]

@@ -46,12 +46,21 @@
 //!   [`transport::Conn`] pair with two implementations — in-process
 //!   [`transport::LoopbackHub`] (the default and parity baseline) and
 //!   [`transport::TcpTransport`] (framed `std::net::TcpStream`,
-//!   connection-per-device, reconnect-with-rejoin).
-//!   [`transport::CoordinatorService`] drives the `Server`+`Engine` pair
-//!   from decoded frames; [`transport::DeviceClient`] runs the worker
-//!   side of a round remotely. Invariant: a fixed-seed Tcp localhost run
-//!   is bit-identical (final model, traffic ledger, round records) to
-//!   the Loopback and in-process runs.
+//!   reconnect-with-rejoin). [`transport::CoordinatorService`] drives
+//!   the `Server`+`Engine` pair from decoded frames on a
+//!   readiness-driven serving loop — [`transport::Reactor`] parks in
+//!   `poll(2)` over the listener and every live connection at once
+//!   (waker keys on Loopback, a threaded-reader pump as the portable
+//!   fallback), so the coordinator wakes per frame delivered, never on
+//!   a sleep-poll timer. [`transport::DeviceClient`] runs the worker
+//!   side of a round remotely, and [`transport::DeviceFleet`]
+//!   multiplexes many device sessions over ONE connection — frames are
+//!   routed by device id, not socket, and the registry binds each
+//!   device to the connection its Join arrived on. Invariant: a
+//!   fixed-seed Tcp localhost run — connection-per-device or
+//!   fleet-multiplexed, barrier or pipelined — is bit-identical (final
+//!   model, traffic ledger, round records) to the Loopback and
+//!   in-process runs.
 //! * [`journal`] — durable rounds: an append-only, CRC-framed record log
 //!   event-sourcing every coordinator decision (round plans, per-device
 //!   resolutions in fold order, traffic ledgers, periodic model

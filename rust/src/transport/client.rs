@@ -62,7 +62,7 @@ const REDIAL_CAP_MS: u64 = 2000;
 /// clients dropped by the same fault never redial in lockstep — and so
 /// tests of the delay sequence stay reproducible. A session that makes
 /// protocol progress restarts the sequence at attempt 1.
-fn redial_backoff_ms(seed: u64, device: usize, attempt: usize) -> u64 {
+pub(crate) fn redial_backoff_ms(seed: u64, device: usize, attempt: usize) -> u64 {
     let attempt = attempt.max(1);
     // 20 << 7 already clears the cap; clamping the shift avoids overflow
     let nominal = (REDIAL_BASE_MS << (attempt - 1).min(7) as u32).min(REDIAL_CAP_MS);
@@ -104,6 +104,19 @@ pub enum SessionEnd {
     /// The connection died or went silent past the idle budget; the
     /// device state is intact and [`DeviceClient::run_reconnecting`]
     /// may dial again and re-Join.
+    Disconnected,
+}
+
+/// What one handled frame means for the session serving this device —
+/// the per-message unit [`DeviceClient::run`] and the fleet scheduler
+/// ([`super::fleet::DeviceFleet`]) both loop over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Step {
+    /// Keep serving.
+    Continue,
+    /// The coordinator broadcast Finish.
+    Finished,
+    /// The connection died mid-send; state is intact, redial-able.
     Disconnected,
 }
 
@@ -206,62 +219,76 @@ impl DeviceClient {
                 // the transport grows are fatal, not retryable
                 Err(e) => return Err(anyhow!("device {}: {e}", self.device)),
             };
-            match msg {
-                WireMsg::JoinAck { device, n_devices } => {
-                    ensure!(
-                        device == self.device,
-                        "joined as device {} but was acked as {device}",
-                        self.device
-                    );
-                    ensure!(
-                        n_devices == self.cfg.n_devices(),
-                        "config skew: coordinator runs {n_devices} devices, this client \
-                         was configured for {}",
-                        self.cfg.n_devices()
-                    );
-                }
-                WireMsg::StartRound(start) => {
-                    let t = start.item.t;
-                    let cached = self
-                        .resolutions
-                        .iter()
-                        .find(|(rt, _)| *rt == t)
-                        .map(|(_, frame)| frame.clone());
-                    if let Some(cached) = cached {
-                        // duplicate kickoff after a rejoin: answer from
-                        // the cache, never re-train (see module docs)
-                        self.stats.redeliveries += 1;
-                        if conn.send(&cached).is_err() {
-                            return Ok(SessionEnd::Disconnected);
-                        }
-                    } else if t <= self.last_round {
-                        // stale straggler frame beyond the redelivery
-                        // cache: the coordinator has long since closed
-                        // that round
-                    } else if self.handle_start(conn, *start)?.is_none() {
-                        return Ok(SessionEnd::Disconnected);
-                    }
-                }
-                WireMsg::Finish => return Ok(SessionEnd::Finished),
-                WireMsg::Reject { code: reject::STALE_ROUND, .. } => {
-                    // a resolution of ours was buffered past its round's
-                    // close and refused — informational, keep serving
-                    self.stats.stale_rejects += 1;
-                }
-                WireMsg::Reject { code, .. } => {
-                    return Err(anyhow!(
-                        "coordinator rejected device {} (code {code})",
-                        self.device
-                    ));
-                }
-                other => {
-                    return Err(anyhow!(
-                        "device {}: unexpected frame from coordinator: {other:?}",
-                        self.device
-                    ));
-                }
+            match self.on_msg(conn, msg)? {
+                Step::Continue => {}
+                Step::Finished => return Ok(SessionEnd::Finished),
+                Step::Disconnected => return Ok(SessionEnd::Disconnected),
             }
         }
+    }
+
+    /// Handle one coordinator frame addressed to this device. The unit
+    /// both [`run`](DeviceClient::run) and the fleet scheduler loop
+    /// over: `run` owns the receive, the fleet owns the demux, this owns
+    /// the protocol.
+    pub(crate) fn on_msg<C: Conn>(&mut self, conn: &mut C, msg: WireMsg) -> Result<Step> {
+        match msg {
+            WireMsg::JoinAck { device, n_devices } => {
+                ensure!(
+                    device == self.device,
+                    "joined as device {} but was acked as {device}",
+                    self.device
+                );
+                ensure!(
+                    n_devices == self.cfg.n_devices(),
+                    "config skew: coordinator runs {n_devices} devices, this client \
+                     was configured for {}",
+                    self.cfg.n_devices()
+                );
+                Ok(Step::Continue)
+            }
+            WireMsg::StartRound(start) => self.serve_kickoff(conn, start),
+            WireMsg::Finish => Ok(Step::Finished),
+            WireMsg::Reject { code: reject::STALE_ROUND, .. } => {
+                // a resolution of ours was buffered past its round's
+                // close and refused — informational, keep serving
+                self.stats.stale_rejects += 1;
+                Ok(Step::Continue)
+            }
+            WireMsg::Reject { code, .. } => {
+                Err(anyhow!("coordinator rejected device {} (code {code})", self.device))
+            }
+            other => Err(anyhow!(
+                "device {}: unexpected frame from coordinator: {other:?}",
+                self.device
+            )),
+        }
+    }
+
+    /// Serve one kickoff frame: answer duplicates from the redelivery
+    /// cache, drop stale stragglers, train fresh rounds.
+    pub(crate) fn serve_kickoff<C: Conn>(
+        &mut self,
+        conn: &mut C,
+        start: Box<NetworkedStart>,
+    ) -> Result<Step> {
+        let t = start.item.t;
+        let cached =
+            self.resolutions.iter().find(|(rt, _)| *rt == t).map(|(_, frame)| frame.clone());
+        if let Some(cached) = cached {
+            // duplicate kickoff after a rejoin: answer from the cache,
+            // never re-train (see module docs)
+            self.stats.redeliveries += 1;
+            if conn.send(&cached).is_err() {
+                return Ok(Step::Disconnected);
+            }
+        } else if t <= self.last_round {
+            // stale straggler frame beyond the redelivery cache: the
+            // coordinator has long since closed that round
+        } else if self.handle_start(conn, *start)?.is_none() {
+            return Ok(Step::Disconnected);
+        }
+        Ok(Step::Continue)
     }
 
     /// [`run`] with reconnect-with-rejoin: when a session disconnects,

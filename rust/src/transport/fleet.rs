@@ -1,0 +1,272 @@
+//! Device fleet: many [`DeviceClient`] sessions multiplexed over ONE
+//! connection.
+//!
+//! A process simulating hundreds of devices does not need hundreds of
+//! sockets: every frame in the protocol names its device (see
+//! [`WireMsg::device`]), so a single framed connection can carry any
+//! number of sessions, and the coordinator's demux routes by the frame,
+//! not the socket. [`DeviceFleet`] is the client half of that contract:
+//! it Joins every device it holds over the shared connection (ascending,
+//! so rendezvous counts are deterministic), then runs a scheduler loop
+//! that **interleaves kickoff handling** — incoming frames drain into a
+//! queue between every kickoff execution, so a device deep in τ local
+//! steps never blocks its fleet-mates' JoinAcks, rejects or newly
+//! arrived kickoffs from being picked up (their heartbeat/EndRound
+//! frames still serialize on the shared socket, which is the point:
+//! byte order on one connection is deterministic given the kickoff
+//! execution order, and the coordinator's canonical fold makes even
+//! *that* order bit-irrelevant).
+//!
+//! Fate sharing: one connection is one failure domain. If the socket
+//! dies, every session on it disconnects together — and on the
+//! coordinator side, every device bound to it is severed together
+//! (`Registry::unbind_conn`). [`DeviceFleet::run_reconnecting`] redials
+//! the whole fleet as a unit; each device's redelivery cache answers the
+//! duplicate kickoffs that follow the rejoin.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::NetworkedStart;
+
+use super::client::{redial_backoff_ms, ClientStats, DeviceClient, SessionEnd, Step};
+use super::frame::WireMsg;
+use super::{Conn, TransportError};
+
+/// Receive slice while the scheduler has no queued kickoff to execute.
+const RECV_SLICE: Duration = Duration::from_millis(100);
+
+/// Many device sessions over one connection.
+pub struct DeviceFleet {
+    clients: BTreeMap<usize, DeviceClient>,
+    /// Experiment seed, for deterministic redial jitter.
+    seed: u64,
+    /// Silence budget before a session reports
+    /// [`SessionEnd::Disconnected`] (the whole fleet disconnects as a
+    /// unit — one socket is one failure domain).
+    pub idle_timeout: Duration,
+}
+
+impl DeviceFleet {
+    /// Build one [`DeviceClient`] per id in `devices`. Each client
+    /// rebuilds the data world locally from `cfg.seed`, exactly as a
+    /// standalone client would — multiplexing changes the socket count,
+    /// never the math.
+    pub fn new(cfg: ExperimentConfig, devices: impl IntoIterator<Item = usize>) -> Result<DeviceFleet> {
+        let seed = cfg.seed;
+        let mut clients = BTreeMap::new();
+        for d in devices {
+            ensure!(
+                clients.insert(d, DeviceClient::new(cfg.clone(), d)?).is_none(),
+                "device {d} listed twice in the fleet"
+            );
+        }
+        ensure!(!clients.is_empty(), "a device fleet needs at least one device");
+        Ok(DeviceFleet { clients, seed, idle_timeout: Duration::from_secs(600) })
+    }
+
+    /// The device ids this fleet holds, ascending.
+    pub fn devices(&self) -> Vec<usize> {
+        self.clients.keys().copied().collect()
+    }
+
+    /// One member session, if `device` is in the fleet.
+    pub fn client(&self, device: usize) -> Option<&DeviceClient> {
+        self.clients.get(&device)
+    }
+
+    /// Summed session counters across the fleet.
+    pub fn stats(&self) -> ClientStats {
+        let mut sum = ClientStats::default();
+        for c in self.clients.values() {
+            sum.rounds += c.stats.rounds;
+            sum.dropouts += c.stats.dropouts;
+            sum.heartbeats += c.stats.heartbeats;
+            sum.redeliveries += c.stats.redeliveries;
+            sum.stale_rejects += c.stats.stale_rejects;
+        }
+        sum
+    }
+
+    /// Run one session over `conn`: Join every device, then serve
+    /// kickoffs until the coordinator finishes or the connection dies.
+    /// Same error contract as [`DeviceClient::run`]: transport failures
+    /// are `Ok(Disconnected)` (retryable), protocol violations are
+    /// `Err` (fatal).
+    pub fn run<C: Conn>(&mut self, conn: &mut C) -> Result<SessionEnd> {
+        // Join storm, ascending: the coordinator binds each id to this
+        // connection as the frames arrive
+        for d in self.clients.keys() {
+            if conn.send(&WireMsg::Join { device: *d }).is_err() {
+                return Ok(SessionEnd::Disconnected);
+            }
+        }
+        let mut kickoffs: VecDeque<(usize, Box<NetworkedStart>)> = VecDeque::new();
+        let mut last_activity = Instant::now();
+        loop {
+            // drain everything the connection has buffered before (and
+            // between) kickoff executions — cheap frames are handled
+            // inline, kickoffs queue up behind the one being trained
+            loop {
+                match conn.try_recv() {
+                    Ok(Some(msg)) => {
+                        last_activity = Instant::now();
+                        match self.dispatch(conn, msg, &mut kickoffs)? {
+                            Step::Continue => {}
+                            Step::Finished => return Ok(SessionEnd::Finished),
+                            Step::Disconnected => return Ok(SessionEnd::Disconnected),
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(TransportError::Closed) | Err(TransportError::Io(_)) => {
+                        return Ok(SessionEnd::Disconnected)
+                    }
+                    Err(e) => return Err(anyhow!("fleet: {e}")),
+                }
+            }
+            if let Some((d, start)) = kickoffs.pop_front() {
+                let client = self.clients.get_mut(&d).expect("queued kickoffs name members");
+                match client.serve_kickoff(conn, start)? {
+                    Step::Continue => {}
+                    Step::Finished => return Ok(SessionEnd::Finished),
+                    Step::Disconnected => return Ok(SessionEnd::Disconnected),
+                }
+                last_activity = Instant::now();
+                continue; // re-drain before executing the next kickoff
+            }
+            // nothing queued and nothing buffered: block for a slice
+            match conn.recv_timeout(RECV_SLICE) {
+                Ok(Some(msg)) => {
+                    last_activity = Instant::now();
+                    match self.dispatch(conn, msg, &mut kickoffs)? {
+                        Step::Continue => {}
+                        Step::Finished => return Ok(SessionEnd::Finished),
+                        Step::Disconnected => return Ok(SessionEnd::Disconnected),
+                    }
+                }
+                Ok(None) => {
+                    if last_activity.elapsed() >= self.idle_timeout {
+                        return Ok(SessionEnd::Disconnected);
+                    }
+                }
+                Err(TransportError::Closed) | Err(TransportError::Io(_)) => {
+                    return Ok(SessionEnd::Disconnected)
+                }
+                Err(e) => return Err(anyhow!("fleet: {e}")),
+            }
+        }
+    }
+
+    /// Route one coordinator frame to the session it names. Kickoffs
+    /// queue (executed by the scheduler loop, interleaved with drains);
+    /// everything else is handled inline by the member's own protocol
+    /// handler.
+    fn dispatch<C: Conn>(
+        &mut self,
+        conn: &mut C,
+        msg: WireMsg,
+        kickoffs: &mut VecDeque<(usize, Box<NetworkedStart>)>,
+    ) -> Result<Step> {
+        if matches!(msg, WireMsg::Finish) {
+            // Finish is fleet-wide: one frame ends every session on the
+            // connection
+            return Ok(Step::Finished);
+        }
+        let d = msg
+            .device()
+            .ok_or_else(|| anyhow!("fleet: coordinator frame names no device: {msg:?}"))?;
+        if !self.clients.contains_key(&d) {
+            return Err(anyhow!(
+                "fleet: coordinator sent a frame for device {d}, which this fleet does \
+                 not hold (members: {:?})",
+                self.devices()
+            ));
+        }
+        if let WireMsg::StartRound(start) = msg {
+            kickoffs.push_back((d, start));
+            return Ok(Step::Continue);
+        }
+        self.clients.get_mut(&d).expect("membership checked above").on_msg(conn, msg)
+    }
+
+    /// [`run`](DeviceFleet::run) with reconnect-with-rejoin, the fleet
+    /// analogue of [`DeviceClient::run_reconnecting`]: when a session
+    /// disconnects, dial a fresh connection and re-Join every member
+    /// (the coordinator re-binds them all and re-sends pending
+    /// kickoffs; redelivery caches answer the duplicates). Gives up
+    /// after `max_redials` **consecutive** fruitless attempts; any
+    /// member's protocol progress resets the budget. Backoff jitter is
+    /// keyed on the fleet's lowest device id, so co-located fleets
+    /// dropped by one fault do not redial in lockstep.
+    pub fn run_reconnecting<C: Conn>(
+        &mut self,
+        mut dial: impl FnMut() -> Result<C, TransportError>,
+        max_redials: usize,
+    ) -> Result<SessionEnd> {
+        let lead = *self.clients.keys().next().expect("fleets are non-empty");
+        let mut redials = 0;
+        loop {
+            let before = self.stats();
+            if let Ok(mut conn) = dial() {
+                if self.run(&mut conn)? == SessionEnd::Finished {
+                    return Ok(SessionEnd::Finished);
+                }
+            }
+            let after = self.stats();
+            let progressed = after.rounds > before.rounds
+                || after.dropouts > before.dropouts
+                || after.redeliveries > before.redeliveries;
+            redials = if progressed { 0 } else { redials + 1 };
+            if redials > max_redials {
+                return Ok(SessionEnd::Disconnected);
+            }
+            std::thread::sleep(Duration::from_millis(redial_backoff_ms(
+                self.seed,
+                lead,
+                redials.max(1),
+            )));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CompressionBackend, TrainerBackend};
+    use crate::fleet::FleetKind;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset("har");
+        cfg.trainer = TrainerBackend::Native;
+        cfg.compression = CompressionBackend::Native;
+        cfg.fleet = FleetKind::JetsonScaled(4);
+        cfg.n_train = 240;
+        cfg.n_test = 80;
+        cfg
+    }
+
+    #[test]
+    fn fleet_membership_is_validated_and_ascending() {
+        let fleet = DeviceFleet::new(tiny_cfg(), [2, 0, 3]).unwrap();
+        assert_eq!(fleet.devices(), vec![0, 2, 3]);
+        assert!(fleet.client(2).is_some());
+        assert!(fleet.client(1).is_none());
+
+        assert!(DeviceFleet::new(tiny_cfg(), []).is_err(), "empty fleets are refused");
+        assert!(DeviceFleet::new(tiny_cfg(), [1, 1]).is_err(), "duplicate ids are refused");
+        assert!(DeviceFleet::new(tiny_cfg(), [99]).is_err(), "out-of-range ids are refused");
+    }
+
+    #[test]
+    fn stats_sum_across_members() {
+        let mut fleet = DeviceFleet::new(tiny_cfg(), [0, 1]).unwrap();
+        fleet.clients.get_mut(&0).unwrap().stats.rounds = 3;
+        fleet.clients.get_mut(&1).unwrap().stats.rounds = 2;
+        fleet.clients.get_mut(&1).unwrap().stats.stale_rejects = 1;
+        let s = fleet.stats();
+        assert_eq!((s.rounds, s.stale_rejects), (5, 1));
+    }
+}

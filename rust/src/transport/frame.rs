@@ -96,6 +96,26 @@ pub enum WireMsg {
 }
 
 impl WireMsg {
+    /// The device a frame concerns, when it names one — the demux key
+    /// for connection multiplexing. Every device-relevant message has
+    /// carried its device id since protocol v1, which is what lets a
+    /// fleet interleave many sessions on one connection with **no**
+    /// frame-format change: both sides route by this id, never by which
+    /// socket a frame arrived on. `Finish` is a broadcast (one per
+    /// connection, however many devices ride it) and names no device.
+    pub fn device(&self) -> Option<usize> {
+        match self {
+            WireMsg::Join { device }
+            | WireMsg::JoinAck { device, .. }
+            | WireMsg::Heartbeat { device, .. }
+            | WireMsg::Dropout { device, .. }
+            | WireMsg::Reject { device, .. } => Some(*device),
+            WireMsg::StartRound(s) => Some(s.item.plan.device),
+            WireMsg::EndRound { update, .. } => Some(update.device),
+            WireMsg::Finish => None,
+        }
+    }
+
     fn tag(&self) -> u8 {
         match self {
             WireMsg::Join { .. } => 1,

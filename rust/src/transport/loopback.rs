@@ -7,11 +7,22 @@
 //! is exercised on every message — the only thing Loopback skips is the
 //! socket. A Tcp run that diverges from a Loopback run therefore
 //! isolates the fault to stream handling, not message encoding.
+//!
+//! Readiness integration is waker-keyed (see [`super::readiness`]):
+//! the hub owns a [`Waker`]; dialing posts [`ACCEPT_KEY`] after queuing
+//! the server half, and every client→server send posts the server
+//! half's key after queuing the frame (push-then-wake). The serving
+//! reactor therefore blocks on the hub's waker exactly like it blocks
+//! on `poll(2)` for sockets — the Loopback path exercises the same
+//! zero-sleep serving loop the Tcp path does.
 
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
 use std::time::Duration;
 
 use super::frame::{self, WireMsg};
+use super::readiness::{RawSource, Waker, ACCEPT_KEY};
 use super::{Conn, Transport, TransportError};
 
 /// Coordinator-side listener: a queue of freshly dialed connections.
@@ -22,17 +33,31 @@ pub struct LoopbackHub {
     /// lifetime (accept reports timeout, not closure, while devices may
     /// still dial).
     accept_tx: Sender<LoopbackConn>,
+    /// The wake channel the serving reactor blocks on; dialers and
+    /// client halves signal it.
+    waker: Arc<Waker>,
+    /// Key mint for server halves (key 0 is [`ACCEPT_KEY`]).
+    next_key: Arc<AtomicU64>,
 }
 
 impl LoopbackHub {
     pub fn new() -> LoopbackHub {
         let (accept_tx, accept_rx) = mpsc::channel();
-        LoopbackHub { accept_rx, accept_tx }
+        LoopbackHub {
+            accept_rx,
+            accept_tx,
+            waker: Waker::new(),
+            next_key: Arc::new(AtomicU64::new(1)),
+        }
     }
 
     /// A cloneable, `Send` handle devices use to dial this hub.
     pub fn dialer(&self) -> LoopbackDialer {
-        LoopbackDialer { accept_tx: self.accept_tx.clone() }
+        LoopbackDialer {
+            accept_tx: self.accept_tx.clone(),
+            waker: Arc::clone(&self.waker),
+            next_key: Arc::clone(&self.next_key),
+        }
     }
 }
 
@@ -57,6 +82,14 @@ impl Transport for LoopbackHub {
         }
     }
 
+    fn listener_source(&self) -> RawSource {
+        RawSource::Key(ACCEPT_KEY)
+    }
+
+    fn waker(&self) -> Option<Arc<Waker>> {
+        Some(Arc::clone(&self.waker))
+    }
+
     fn local_addr(&self) -> String {
         "loopback".into()
     }
@@ -66,19 +99,33 @@ impl Transport for LoopbackHub {
 #[derive(Clone)]
 pub struct LoopbackDialer {
     accept_tx: Sender<LoopbackConn>,
+    waker: Arc<Waker>,
+    next_key: Arc<AtomicU64>,
 }
 
 impl LoopbackDialer {
     /// Open a connection pair and hand the server half to the hub's
-    /// accept queue.
+    /// accept queue (then wake the reactor's accept token).
     pub fn connect(&self) -> Result<LoopbackConn, TransportError> {
         let (c2s_tx, c2s_rx) = mpsc::channel::<Vec<u8>>();
         let (s2c_tx, s2c_rx) = mpsc::channel::<Vec<u8>>();
-        let server_half =
-            LoopbackConn { tx: s2c_tx, rx: c2s_rx, peer: "loopback-device".into() };
-        let client_half =
-            LoopbackConn { tx: c2s_tx, rx: s2c_rx, peer: "loopback-coordinator".into() };
+        let key = self.next_key.fetch_add(1, Ordering::Relaxed);
+        let server_half = LoopbackConn {
+            tx: s2c_tx,
+            rx: c2s_rx,
+            key,
+            notify: None,
+            peer: "loopback-device".into(),
+        };
+        let client_half = LoopbackConn {
+            tx: c2s_tx,
+            rx: s2c_rx,
+            key: 0,
+            notify: Some((Arc::clone(&self.waker), key)),
+            peer: "loopback-coordinator".into(),
+        };
         self.accept_tx.send(server_half).map_err(|_| TransportError::Closed)?;
+        self.waker.wake(ACCEPT_KEY);
         Ok(client_half)
     }
 }
@@ -87,27 +134,58 @@ impl LoopbackDialer {
 pub struct LoopbackConn {
     tx: Sender<Vec<u8>>,
     rx: Receiver<Vec<u8>>,
+    /// Reactor key of this half when it is the *server* half; `0` on
+    /// the client half (which is never in a serving wait-set).
+    key: u64,
+    /// Client half only: wake `(waker, server_key)` after each send so
+    /// the serving reactor sees the frame without polling.
+    notify: Option<(Arc<Waker>, u64)>,
     peer: String,
+}
+
+impl LoopbackConn {
+    fn decode(buf: Vec<u8>) -> Result<Option<WireMsg>, TransportError> {
+        let (msg, used) = frame::decode_frame(&buf)?;
+        if used != buf.len() {
+            return Err(TransportError::Frame(frame::FrameError::TrailingBytes {
+                extra: buf.len() - used,
+            }));
+        }
+        Ok(Some(msg))
+    }
 }
 
 impl Conn for LoopbackConn {
     fn send(&mut self, msg: &WireMsg) -> Result<(), TransportError> {
-        self.tx.send(frame::encode_frame(msg)).map_err(|_| TransportError::Closed)
+        self.tx.send(frame::encode_frame(msg)).map_err(|_| TransportError::Closed)?;
+        // push-then-wake: the frame is visible before the key posts
+        if let Some((waker, key)) = &self.notify {
+            waker.wake(*key);
+        }
+        Ok(())
     }
 
     fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<WireMsg>, TransportError> {
         match self.rx.recv_timeout(timeout) {
-            Ok(buf) => {
-                let (msg, used) = frame::decode_frame(&buf)?;
-                if used != buf.len() {
-                    return Err(TransportError::Frame(frame::FrameError::TrailingBytes {
-                        extra: buf.len() - used,
-                    }));
-                }
-                Ok(Some(msg))
-            }
+            Ok(buf) => Self::decode(buf),
             Err(RecvTimeoutError::Timeout) => Ok(None),
             Err(RecvTimeoutError::Disconnected) => Err(TransportError::Closed),
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<WireMsg>, TransportError> {
+        match self.rx.try_recv() {
+            Ok(buf) => Self::decode(buf),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(TransportError::Closed),
+        }
+    }
+
+    fn source(&self) -> RawSource {
+        if self.key == 0 {
+            RawSource::Unready // client half: never in a serving wait-set
+        } else {
+            RawSource::Key(self.key)
         }
     }
 
@@ -158,5 +236,34 @@ mod tests {
             Err(TransportError::Closed) => {}
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn dials_and_sends_post_wake_keys() {
+        let mut hub = LoopbackHub::new();
+        let waker = Transport::waker(&hub).expect("loopback is waker-backed");
+        let dialer = hub.dialer();
+        let mut client = client_of(&dialer);
+        let server = hub.accept_timeout(Duration::from_millis(100)).unwrap().unwrap();
+        let server_key = match server.source() {
+            RawSource::Key(k) => k,
+            other => panic!("server half must be a key source, got {other:?}"),
+        };
+        assert_ne!(server_key, ACCEPT_KEY);
+        assert_eq!(client.source(), RawSource::Unready, "client half stays out of wait-sets");
+
+        // the dial posted ACCEPT_KEY; a send posts the server key
+        client.send(&WireMsg::Join { device: 1 }).unwrap();
+        let mut reactor = super::super::readiness::Reactor::new(Some(waker));
+        let sources = [(99u64, server.source())];
+        let wake = reactor
+            .wait(RawSource::Key(ACCEPT_KEY), &sources, Duration::from_millis(200))
+            .unwrap();
+        assert!(wake.accept, "dial must post the accept key");
+        assert!(wake.ready.contains(&99), "send must post the conn key");
+    }
+
+    fn client_of(dialer: &LoopbackDialer) -> LoopbackConn {
+        dialer.connect().unwrap()
     }
 }

@@ -12,10 +12,17 @@
 //!   frames* — the codec is genuinely exercised without a socket) and
 //!   [`tcp::TcpTransport`] (framed `std::net::TcpStream`, timeouts,
 //!   connection-per-device accept loop, reconnect-with-rejoin);
+//! * [`readiness`] — the serving-side reactor: one wait-set over the
+//!   listener plus every live connection (`poll(2)` via a vendored FFI
+//!   shim on unix, waker keys for channels, a threaded-reader fallback
+//!   for anything else), so the coordinator wakes on bytes, never on a
+//!   timer;
 //! * [`server::CoordinatorService`] — drives `coordinator::Server` +
-//!   `engine::Engine` from decoded frames; [`client::DeviceClient`] —
-//!   the worker-side round (recover download → train → encode upload)
-//!   run remotely.
+//!   `engine::Engine` from decoded frames, demux-routing every frame by
+//!   the device id it carries (never by which socket it arrived on);
+//!   [`client::DeviceClient`] — the worker-side round (recover download
+//!   → train → encode upload) run remotely; [`fleet::DeviceFleet`] —
+//!   many device sessions multiplexed over ONE connection.
 //!
 //! The headline invariant, pinned by `tests/transport_parity.rs`: a
 //! fixed-seed run over Tcp on localhost produces **bit-identical** final
@@ -24,17 +31,22 @@
 //! touches math.
 
 pub mod client;
+pub mod fleet;
 pub mod frame;
 pub mod loopback;
+pub mod readiness;
 pub mod server;
 pub mod tcp;
 
 pub use client::{ClientStats, DeviceClient, SessionEnd};
+pub use fleet::DeviceFleet;
 pub use frame::{decode_frame, encode_frame, FrameError, WireMsg};
 pub use loopback::{LoopbackConn, LoopbackDialer, LoopbackHub};
+pub use readiness::{RawSource, Reactor, ThreadedReader, Wake, Waker};
 pub use server::CoordinatorService;
 pub use tcp::{TcpConn, TcpTransport};
 
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Transport-layer failure.
@@ -88,7 +100,15 @@ impl From<FrameError> for TransportError {
 }
 
 /// One framed, bidirectional connection to a peer.
-pub trait Conn: Send {
+///
+/// The readiness hooks (`source`, `try_recv`) have conservative
+/// defaults so simple test doubles keep compiling: a defaulted conn
+/// reports [`RawSource::Unready`] and the reactor degrades to bounded
+/// sweeps for it. Real transports override both — `try_recv` in
+/// particular must actually pull newly arrived bytes (a zero-timeout
+/// `recv_timeout` on a socket would not), or a level-triggered wait
+/// would spin on a conn it can never drain.
+pub trait Conn: Send + 'static {
     /// Serialize and send one message (blocking, with the transport's
     /// write timeout).
     fn send(&mut self, msg: &WireMsg) -> Result<(), TransportError>;
@@ -97,6 +117,18 @@ pub trait Conn: Send {
     /// `Ok(None)` means the timeout elapsed with no complete frame (any
     /// partial bytes stay buffered for the next call).
     fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<WireMsg>, TransportError>;
+
+    /// Non-blocking receive: `Ok(None)` when no complete frame is
+    /// available *right now*. The default is a short sliced receive —
+    /// correct but slow; readiness-integrated conns override.
+    fn try_recv(&mut self) -> Result<Option<WireMsg>, TransportError> {
+        self.recv_timeout(Duration::from_millis(1))
+    }
+
+    /// How the reactor can wait on this conn (see [`readiness`]).
+    fn source(&self) -> RawSource {
+        RawSource::Unready
+    }
 
     /// Human-readable peer address (diagnostics).
     fn peer(&self) -> String;
@@ -110,6 +142,19 @@ pub trait Transport {
     /// `Ok(None)` on timeout.
     fn accept_timeout(&mut self, timeout: Duration)
         -> Result<Option<Self::Conn>, TransportError>;
+
+    /// How the reactor can wait on the accept queue itself.
+    fn listener_source(&self) -> RawSource {
+        RawSource::Unready
+    }
+
+    /// The wake channel this transport's conns signal, if readiness is
+    /// channel-based (the Loopback hub). Fd-based transports return
+    /// `None` and the reactor mints its own waker for any
+    /// threaded-reader fallbacks.
+    fn waker(&self) -> Option<Arc<Waker>> {
+        None
+    }
 
     /// The address devices should dial (diagnostics / test plumbing).
     fn local_addr(&self) -> String;

@@ -1,0 +1,627 @@
+//! Readiness-driven serving: one wait-set over the listener and every
+//! live connection.
+//!
+//! The pre-reactor coordinator drove each connection with its own short
+//! sleep-poll (`recv_timeout(2ms)` per pending device, `5ms` accept
+//! naps), so idle wall-clock cost scaled with elapsed-time ×
+//! connections. The [`Reactor`] inverts that: the serving loop blocks
+//! on *all* sources at once and wakes only when bytes or accepts are
+//! actually ready, so wakeups scale with frames delivered.
+//!
+//! Three readiness mechanisms hide behind one [`RawSource`] enum:
+//!
+//! * **`Fd` (unix)** — real sockets wait in a single `poll(2)` call over
+//!   the listener plus every connection fd. The syscall is declared by
+//!   hand in [`sys`] (std already links libc on unix) so the crate stays
+//!   dependency-free.
+//! * **`Key`** — channel-backed sources (the Loopback transport, the
+//!   threaded-reader fallback) signal a [`Waker`]: the sender pushes its
+//!   key *after* making the data visible, the reactor drains queued keys
+//!   or blocks on the condvar. Key `0` ([`ACCEPT_KEY`]) is reserved for
+//!   "the accept queue has a pending connection".
+//! * **`Unready`** — a source with no integration (e.g. a custom test
+//!   `Conn`). The reactor degrades to bounded sweep slices for wait-sets
+//!   containing one: every conn is reported sweepable each slice, which
+//!   is correct (a non-ready conn's `try_recv` returns `None`
+//!   harmlessly) just not cheap.
+//!
+//! Lost-wakeup safety: key posts are push-data-then-wake, so a key
+//! consumed before its conn is registered is harmless as long as the
+//! caller drains every *freshly accepted* conn once unconditionally —
+//! the data the orphaned key announced is already visible to that
+//! drain. Fd sources are level-triggered by `poll(2)` and the serving
+//! loop drains until `WouldBlock`, which restores the invariant "no
+//! complete frame is buffered when the reactor blocks".
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::frame::WireMsg;
+use super::{Conn, TransportError};
+
+/// Reserved waker key: "the listener's accept queue is non-empty".
+pub const ACCEPT_KEY: u64 = 0;
+
+/// Slice length for degraded (swept) wait-sets and for the identify
+/// deadline scan — bounded so protocol deadlines still fire without
+/// events, generous so degraded mode is not a busy loop.
+const SWEEP_SLICE: Duration = Duration::from_millis(10);
+
+/// Slice the threaded reader blocks per `recv_timeout` call, bounding
+/// how long shutdown (`stop` flag) can lag.
+const READER_SLICE: Duration = Duration::from_millis(20);
+
+/// How a source presents itself to the reactor's wait-set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RawSource {
+    /// An OS file descriptor `poll(2)` can wait on.
+    #[cfg(unix)]
+    Fd(std::os::unix::io::RawFd),
+    /// Signaled through the owning transport's [`Waker`] under this key.
+    Key(u64),
+    /// No readiness integration: forces the sweep fallback.
+    Unready,
+}
+
+/// Cross-thread wake channel for non-fd sources: senders post the key
+/// of the source that just became ready, the reactor drains keys or
+/// blocks on the condvar. Posting while nobody waits is fine — keys
+/// queue until the next wait.
+pub struct Waker {
+    keys: Mutex<VecDeque<u64>>,
+    cv: Condvar,
+}
+
+impl Waker {
+    pub fn new() -> Arc<Waker> {
+        Arc::new(Waker { keys: Mutex::new(VecDeque::new()), cv: Condvar::new() })
+    }
+
+    /// Post `key` and wake a waiting reactor (callers must make the
+    /// ready data visible *before* calling this).
+    pub fn wake(&self, key: u64) {
+        let mut q = self.keys.lock().expect("waker lock");
+        q.push_back(key);
+        self.cv.notify_one();
+    }
+
+    /// Drain all queued keys, blocking up to `timeout` if none are
+    /// queued yet. Empty result ⇔ the deadline passed with no posts.
+    fn drain(&self, timeout: Duration) -> Vec<u64> {
+        let deadline = Instant::now() + timeout;
+        let mut q = self.keys.lock().expect("waker lock");
+        loop {
+            if !q.is_empty() {
+                return q.drain(..).collect();
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Vec::new();
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(q, deadline - now)
+                .expect("waker condvar");
+            q = guard;
+        }
+    }
+}
+
+/// What one [`Reactor::wait`] observed.
+#[derive(Debug, Default)]
+pub struct Wake {
+    /// The listener has (or may have) pending accepts to drain.
+    pub accept: bool,
+    /// Tokens whose connections have readable data (may repeat; the
+    /// caller's drain-until-`None` makes duplicates harmless).
+    pub ready: Vec<u64>,
+    /// Degraded wait: *every* registered conn should be swept with a
+    /// non-blocking receive (set when the wait-set held sources without
+    /// readiness integration).
+    pub sweep: bool,
+}
+
+/// One serving-side wait-set. Owns the waker non-fd sources signal and
+/// the wakeup counter the benches compare against sleep-polling.
+pub struct Reactor {
+    waker: Arc<Waker>,
+    wakeups: u64,
+}
+
+impl Reactor {
+    /// `waker`: the transport's own wake channel if it has one (the
+    /// Loopback hub), otherwise the reactor mints a private one for
+    /// threaded-reader fallbacks.
+    pub fn new(waker: Option<Arc<Waker>>) -> Reactor {
+        Reactor { waker: waker.unwrap_or_else(Waker::new), wakeups: 0 }
+    }
+
+    /// The wake channel non-fd sources should signal.
+    pub fn waker(&self) -> &Arc<Waker> {
+        &self.waker
+    }
+
+    /// Times `wait` has returned — the "how often did the serving loop
+    /// run" number. With precise readiness this scales with frames
+    /// delivered + deadline expiries, not elapsed-time × connections.
+    pub fn wakeups(&self) -> u64 {
+        self.wakeups
+    }
+
+    /// Block until the listener or some conn is ready, or `timeout`
+    /// elapses. `conns` pairs an opaque caller token with each conn's
+    /// source; returned [`Wake::ready`] speaks in those tokens.
+    pub fn wait(
+        &mut self,
+        listener: RawSource,
+        conns: &[(u64, RawSource)],
+        timeout: Duration,
+    ) -> Result<Wake, TransportError> {
+        self.wakeups += 1;
+        let any_unready = matches!(listener, RawSource::Unready)
+            || conns.iter().any(|(_, s)| matches!(s, RawSource::Unready));
+        #[cfg(unix)]
+        {
+            let all_fd = matches!(listener, RawSource::Fd(_))
+                && conns.iter().all(|(_, s)| matches!(s, RawSource::Fd(_)));
+            if all_fd {
+                return self.wait_fds(listener, conns, timeout);
+            }
+        }
+        if any_unready {
+            // Degraded: bounded slice on the waker condvar (no
+            // thread::sleep — a key post still cuts the nap short),
+            // then report everything sweepable.
+            let _ = self.waker.drain(timeout.min(SWEEP_SLICE));
+            return Ok(Wake { accept: true, ready: Vec::new(), sweep: true });
+        }
+        self.wait_keys(listener, conns, timeout)
+    }
+
+    /// Precise waker path: every source is `Key`-backed.
+    fn wait_keys(
+        &mut self,
+        listener: RawSource,
+        conns: &[(u64, RawSource)],
+        timeout: Duration,
+    ) -> Result<Wake, TransportError> {
+        let mut wake = Wake::default();
+        let keys = self.waker.drain(timeout);
+        for key in keys {
+            if key == ACCEPT_KEY || listener == RawSource::Key(key) {
+                wake.accept = true;
+                continue;
+            }
+            if let Some(&(token, _)) =
+                conns.iter().find(|(_, s)| *s == RawSource::Key(key))
+            {
+                wake.ready.push(token);
+            }
+            // Unknown keys (a conn dropped since posting, or posted
+            // before registration) are safely discarded: push-then-wake
+            // ordering means the announced data is already visible to
+            // the caller's fresh-conn drain.
+        }
+        Ok(wake)
+    }
+
+    /// Precise fd path: one `poll(2)` over listener + conns.
+    #[cfg(unix)]
+    fn wait_fds(
+        &mut self,
+        listener: RawSource,
+        conns: &[(u64, RawSource)],
+        timeout: Duration,
+    ) -> Result<Wake, TransportError> {
+        let RawSource::Fd(lfd) = listener else { unreachable!("checked by caller") };
+        let mut fds = Vec::with_capacity(conns.len() + 1);
+        fds.push(sys::PollFd { fd: lfd, events: sys::POLLIN, revents: 0 });
+        for (_, s) in conns {
+            let RawSource::Fd(fd) = *s else { unreachable!("checked by caller") };
+            fds.push(sys::PollFd { fd, events: sys::POLLIN, revents: 0 });
+        }
+        let n = sys::poll_fds(&mut fds, timeout).map_err(TransportError::Io)?;
+        let mut wake = Wake::default();
+        if n == 0 {
+            return Ok(wake);
+        }
+        wake.accept = fds[0].readable();
+        for (i, pfd) in fds.iter().enumerate().skip(1) {
+            if pfd.readable() {
+                wake.ready.push(conns[i - 1].0);
+            }
+        }
+        Ok(wake)
+    }
+}
+
+/// Minimal vendored FFI shim over `poll(2)` — the one libc symbol the
+/// readiness path needs, declared by hand so the crate keeps zero
+/// external dependencies (std itself links libc on unix).
+#[cfg(unix)]
+pub(crate) mod sys {
+    use std::os::unix::io::RawFd;
+    use std::time::{Duration, Instant};
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: RawFd,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    impl PollFd {
+        /// Error/hangup conditions count as readable: the next read
+        /// surfaces the actual close/error instead of us guessing here.
+        pub fn readable(&self) -> bool {
+            self.revents & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0
+        }
+    }
+
+    // `nfds_t` is `unsigned long` on linux, `u32` on macOS.
+    #[cfg(target_os = "macos")]
+    type NfdsT = u32;
+    #[cfg(not(target_os = "macos"))]
+    type NfdsT = std::os::raw::c_ulong;
+
+    extern "C" {
+        fn poll(
+            fds: *mut PollFd,
+            nfds: NfdsT,
+            timeout: std::os::raw::c_int,
+        ) -> std::os::raw::c_int;
+    }
+
+    /// `poll(2)` over `fds` with an EINTR-retrying deadline. Returns
+    /// the number of entries with events set (0 ⇔ timeout).
+    pub fn poll_fds(fds: &mut [PollFd], timeout: Duration) -> std::io::Result<usize> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            let mut ms = left.as_millis() as i64;
+            // round a sub-ms remainder up so a short deadline still
+            // blocks instead of degenerating into a spin of 0ms polls
+            if ms == 0 && !left.is_zero() {
+                ms = 1;
+            }
+            let ms = ms.min(i32::MAX as i64) as i32;
+            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, ms) };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let err = std::io::Error::last_os_error();
+            if err.kind() != std::io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+            if Instant::now() >= deadline {
+                return Ok(0);
+            }
+        }
+    }
+
+    /// Block until `fd` is readable or `timeout` — the listener's
+    /// accept wait and nothing else sleeps for it.
+    pub fn wait_readable(fd: RawFd, timeout: Duration) -> std::io::Result<bool> {
+        let mut fds = [PollFd { fd, events: POLLIN, revents: 0 }];
+        Ok(poll_fds(&mut fds, timeout)? > 0)
+    }
+
+    /// Block until `fd` is writable or `timeout` — write-readiness for
+    /// the nonblocking send path (replaces any fixed retry nap).
+    pub fn wait_writable(fd: RawFd, timeout: Duration) -> std::io::Result<bool> {
+        let mut fds = [PollFd { fd, events: POLLOUT, revents: 0 }];
+        Ok(poll_fds(&mut fds, timeout)? > 0)
+    }
+
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    const RLIMIT_NOFILE: std::os::raw::c_int = 7;
+    #[cfg(not(any(target_os = "linux", target_os = "android")))]
+    const RLIMIT_NOFILE: std::os::raw::c_int = 8;
+
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+
+    extern "C" {
+        fn getrlimit(resource: std::os::raw::c_int, rlim: *mut RLimit) -> std::os::raw::c_int;
+        fn setrlimit(resource: std::os::raw::c_int, rlim: *const RLimit) -> std::os::raw::c_int;
+    }
+
+    /// Best-effort raise of the soft fd limit toward the hard limit
+    /// (capped at 65536 — some platforms refuse RLIM_INFINITY softs).
+    /// Errors are swallowed: callers treat this as an optimization.
+    pub fn raise_nofile_limit() {
+        unsafe {
+            let mut lim = RLimit { cur: 0, max: 0 };
+            if getrlimit(RLIMIT_NOFILE, &mut lim) != 0 {
+                return;
+            }
+            let want = lim.max.min(65_536);
+            if lim.cur < want {
+                let req = RLimit { cur: want, max: lim.max };
+                let _ = setrlimit(RLIMIT_NOFILE, &req);
+            }
+        }
+    }
+}
+
+/// Best-effort raise of the process fd limit (no-op off unix) — the
+/// fan-out benches open thousands of sockets from one process, which
+/// overruns common default soft limits.
+pub fn raise_fd_limit() {
+    #[cfg(unix)]
+    sys::raise_nofile_limit();
+}
+
+/// Portable threaded-reader fallback: adapts any [`Conn`] without
+/// readiness integration into a `Key` source. A dedicated thread owns
+/// the receive side (sliced `recv_timeout`s), forwards each decoded
+/// frame over a channel, and posts the key — so the reactor still
+/// blocks on one wait-set and the serving loop stays sleep-free even
+/// when the underlying conn can only sleep-poll. This is what keeps
+/// the crate buildable (and the coordinator correct) on targets
+/// without `poll(2)`.
+pub struct ThreadedReader<C: Conn> {
+    conn: Arc<Mutex<C>>,
+    rx: Receiver<Result<WireMsg, TransportError>>,
+    key: u64,
+    /// Set after the reader forwarded a terminal error; later receives
+    /// report `Closed` instead of blocking forever on a dead channel.
+    dead: bool,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    peer: String,
+}
+
+impl<C: Conn> ThreadedReader<C> {
+    pub fn new(conn: C, key: u64, waker: Arc<Waker>) -> ThreadedReader<C> {
+        let peer = conn.peer();
+        let conn = Arc::new(Mutex::new(conn));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel();
+        let handle = {
+            let conn = Arc::clone(&conn);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || reader_loop(conn, tx, key, waker, stop))
+        };
+        ThreadedReader { conn, rx, key, dead: false, stop, handle: Some(handle), peer }
+    }
+}
+
+fn reader_loop<C: Conn>(
+    conn: Arc<Mutex<C>>,
+    tx: Sender<Result<WireMsg, TransportError>>,
+    key: u64,
+    waker: Arc<Waker>,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        let r = {
+            let mut guard = conn.lock().expect("reader conn lock");
+            guard.recv_timeout(READER_SLICE)
+        };
+        match r {
+            Ok(None) => continue,
+            Ok(Some(msg)) => {
+                // push-then-wake: the frame is in the channel before
+                // the key is posted (lost-wakeup safety)
+                if tx.send(Ok(msg)).is_err() {
+                    return; // owner dropped
+                }
+                waker.wake(key);
+            }
+            Err(e) => {
+                let _ = tx.send(Err(e));
+                waker.wake(key);
+                return; // terminal: owner sees the error, drops us
+            }
+        }
+    }
+}
+
+impl<C: Conn> Conn for ThreadedReader<C> {
+    fn send(&mut self, msg: &WireMsg) -> Result<(), TransportError> {
+        // may wait out one reader slice for the lock — bounded by
+        // READER_SLICE, not a protocol timeout
+        self.conn.lock().expect("reader conn lock").send(msg)
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<WireMsg>, TransportError> {
+        if self.dead {
+            return Err(TransportError::Closed);
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(Ok(msg)) => Ok(Some(msg)),
+            Ok(Err(e)) => {
+                self.dead = true;
+                Err(e)
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.dead = true;
+                Err(TransportError::Closed)
+            }
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<WireMsg>, TransportError> {
+        if self.dead {
+            return Err(TransportError::Closed);
+        }
+        match self.rx.try_recv() {
+            Ok(Ok(msg)) => Ok(Some(msg)),
+            Ok(Err(e)) => {
+                self.dead = true;
+                Err(e)
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => {
+                self.dead = true;
+                Err(TransportError::Closed)
+            }
+        }
+    }
+
+    fn source(&self) -> RawSource {
+        RawSource::Key(self.key)
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+impl<C: Conn> Drop for ThreadedReader<C> {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join(); // exits within one READER_SLICE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::loopback::LoopbackHub;
+    use crate::transport::Transport;
+
+    #[test]
+    fn waker_queues_keys_posted_before_the_wait() {
+        let w = Waker::new();
+        w.wake(3);
+        w.wake(7);
+        let keys = w.drain(Duration::from_millis(1));
+        assert_eq!(keys, vec![3, 7]);
+        // drained: next wait times out empty
+        assert!(w.drain(Duration::from_millis(1)).is_empty());
+    }
+
+    #[test]
+    fn waker_wakes_a_blocked_drain_from_another_thread() {
+        let w = Waker::new();
+        let w2 = Arc::clone(&w);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            w2.wake(9);
+        });
+        let start = Instant::now();
+        let keys = w.drain(Duration::from_secs(5));
+        assert_eq!(keys, vec![9]);
+        assert!(start.elapsed() < Duration::from_secs(4), "woke, not timed out");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn key_reactor_maps_keys_to_tokens_and_accept() {
+        let hub = LoopbackHub::new();
+        let mut r = Reactor::new(hub.waker());
+        let conns = [(10u64, RawSource::Key(1)), (11u64, RawSource::Key(2))];
+        r.waker().wake(ACCEPT_KEY);
+        r.waker().wake(2);
+        r.waker().wake(42); // unknown: discarded
+        let wake = r
+            .wait(RawSource::Key(ACCEPT_KEY), &conns, Duration::from_millis(50))
+            .unwrap();
+        assert!(wake.accept);
+        assert_eq!(wake.ready, vec![11]);
+        assert!(!wake.sweep);
+        assert_eq!(r.wakeups(), 1);
+    }
+
+    #[test]
+    fn unready_sources_degrade_to_sweep() {
+        let mut r = Reactor::new(None);
+        let conns = [(0u64, RawSource::Unready)];
+        let wake = r
+            .wait(RawSource::Key(ACCEPT_KEY), &conns, Duration::from_millis(5))
+            .unwrap();
+        assert!(wake.sweep, "unready sources must force a sweep");
+        assert!(wake.accept);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn fd_reactor_wakes_on_listener_and_conn_bytes() {
+        use crate::transport::tcp::{TcpConn, TcpTransport};
+
+        let mut lst = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = lst.socket_addr();
+        let mut r = Reactor::new(None);
+        let listener_src = lst.listener_source();
+
+        // nothing pending: pure timeout, nothing ready
+        let wake = r.wait(listener_src, &[], Duration::from_millis(5)).unwrap();
+        assert!(!wake.accept && wake.ready.is_empty() && !wake.sweep);
+
+        // a dial makes the listener readable
+        let mut client = TcpConn::connect(addr).unwrap();
+        let wake = r.wait(listener_src, &[], Duration::from_secs(5)).unwrap();
+        assert!(wake.accept, "pending accept must wake the reactor");
+        let mut sconn = lst.accept_timeout(Duration::from_secs(5)).unwrap().unwrap();
+
+        // bytes on the conn wake its token
+        let sources = [(77u64, sconn.source())];
+        client.send(&WireMsg::Join { device: 1 }).unwrap();
+        let wake = r.wait(listener_src, &sources, Duration::from_secs(5)).unwrap();
+        assert!(wake.ready.contains(&77), "conn bytes must wake its token");
+        match sconn.try_recv().unwrap() {
+            Some(WireMsg::Join { device: 1 }) => {}
+            other => panic!("{other:?}"),
+        }
+        // drained: the wait-set goes quiet again
+        let wake = r.wait(listener_src, &sources, Duration::from_millis(5)).unwrap();
+        assert!(wake.ready.is_empty());
+    }
+
+    #[test]
+    fn threaded_reader_forwards_frames_and_wakes_its_key() {
+        let hub = LoopbackHub::new();
+        let dialer = hub.dialer();
+        let mut hub = hub;
+        let mut client = dialer.connect().unwrap();
+        let server = hub.accept_timeout(Duration::from_millis(200)).unwrap().unwrap();
+
+        let mut r = Reactor::new(None);
+        let mut reader = ThreadedReader::new(server, 5, Arc::clone(r.waker()));
+        assert_eq!(reader.source(), RawSource::Key(5));
+
+        client.send(&WireMsg::Heartbeat { device: 2, sim_t_s: 1.5 }).unwrap();
+        let sources = [(30u64, reader.source())];
+        let wake = r
+            .wait(RawSource::Key(ACCEPT_KEY), &sources, Duration::from_secs(5))
+            .unwrap();
+        assert!(wake.ready.contains(&30));
+        match reader.try_recv().unwrap() {
+            Some(WireMsg::Heartbeat { device: 2, .. }) => {}
+            other => panic!("{other:?}"),
+        }
+        // peer death surfaces as an error on the next receive
+        drop(client);
+        let mut saw_err = false;
+        for _ in 0..100 {
+            match reader.recv_timeout(Duration::from_millis(20)) {
+                Ok(Some(_)) => {}
+                Ok(None) => continue,
+                Err(_) => {
+                    saw_err = true;
+                    break;
+                }
+            }
+        }
+        assert!(saw_err, "reader must forward the peer's death");
+    }
+}

@@ -5,29 +5,55 @@
 //! parity baseline and real Tcp sessions. Per round it asks the server
 //! for a networked kickoff (`begin_networked_round` — plans, encoded
 //! downloads and per-device RNG resume states), sends one StartRound
-//! frame per participant, then polls the per-device connections feeding
-//! every arriving frame into the engine's external round until all
+//! frame per participant, then serves the wait-set until all
 //! participants resolve. The canonical aggregation in
 //! `Engine::finish_external` and the shared `Server::apply_round` make
 //! the result bit-identical to the in-process `Server::run` path — the
-//! invariant `tests/transport_parity.rs` pins across Loopback and Tcp.
+//! invariant `tests/transport_parity.rs` pins across Loopback, Tcp and
+//! fleet-multiplexed Tcp.
 //!
-//! Fault handling: a connection that drops mid-round keeps its device
-//! pending — the device may reconnect and re-Join (the service re-sends
-//! its StartRound, *reconnect-with-rejoin*). Devices still pending at
-//! the wall-clock round deadline are converted to protocol `Dropout`s
-//! (their download traffic is already spent) so one dead device cannot
-//! wedge the run. A resolution frame whose round number is not the open
-//! round (a straggler's EndRound buffered past the deadline conversion)
-//! is refused with [`reject::STALE_ROUND`] and never reaches the engine.
+//! **Readiness, not polling.** The serving loop blocks in one
+//! [`Reactor`] wait over the listener plus every live connection
+//! (`poll(2)` on unix, waker keys for Loopback, threaded readers for
+//! anything else — see [`super::readiness`]) and wakes only when bytes
+//! or accepts are ready. There is no per-connection receive poll and no
+//! `thread::sleep` anywhere in this serving path: wakeups scale with
+//! frames delivered, not elapsed-time × connections (the reactor's
+//! wakeup counter, surfaced by `bench_transport`'s `fleet_mux` case,
+//! records exactly this).
 //!
-//! With `pipeline-depth` > 1 (or `staleness-bound` > 0) the service runs
-//! the semi-async schedule instead: up to D rounds are open at once
-//! (their kickoffs all on the wire), resolution frames route to
-//! whichever open round they are tagged with, and only frames matching
-//! NO open round are refused stale — see [`CoordinatorService::run_cb`]
-//! routing to the pipelined loop and `Server::close_pipelined` for the
-//! shared close.
+//! **Demux routing.** Sessions are keyed by the device id each frame
+//! carries, never by the socket it arrived on: one connection may carry
+//! a single `DeviceClient` or a whole [`super::fleet::DeviceFleet`]'s
+//! device range. The connection table ([`Slots`]) holds anonymous
+//! transport endpoints; the registry holds the device→connection
+//! binding (`Registry::bind_conn`, many-to-one), established per device
+//! by its Join frame. A frame naming a device not bound to its
+//! connection is a protocol violation.
+//!
+//! **Fault handling — death vs poison.** A connection that dies cleanly
+//! (reset, close) mid-round keeps ALL its devices pending — each may
+//! reconnect, re-Join and receive its kickoffs again
+//! (*reconnect-with-rejoin*), and stragglers still pending at the
+//! wall-clock round deadline convert to protocol `Dropout`s. A
+//! connection that turns hostile (framing garbage, frames for devices
+//! it never identified, messages only a coordinator may send) is
+//! *poisoned*: it is cut immediately and every device multiplexed on it
+//! converts to a synthesized Dropout in every open round right away —
+//! the peer holding their sessions has proven it cannot be spoken to,
+//! so waiting out the deadline would only stall the fleet. Either way
+//! the synthesized message bits are identical (`after_s = 0`, the
+//! round's booked download bill), so timing never leaks into simulated
+//! state. A resolution frame whose round number matches no open round —
+//! or a duplicate for a device that already resolved — is refused with
+//! [`reject::STALE_ROUND`] and never reaches the engine.
+//!
+//! With `pipeline-depth` > 1 (or `staleness-bound` > 0) the service
+//! runs the semi-async schedule: up to D rounds are open at once (their
+//! kickoffs all on the wire) and resolution frames route to whichever
+//! open round they are tagged with. The barrier schedule is the same
+//! loop over a one-round window; only the close differs
+//! (`finish_external` vs `Server::close_pipelined`).
 //!
 //! The registry's liveness sweep (`Engine::sweep_expired`) is exposed as
 //! [`CoordinatorService::sweep_expired`] but NOT run automatically:
@@ -40,6 +66,7 @@
 //! continuously.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -49,33 +76,58 @@ use crate::engine::{DeviceMsg, ExternalRound, StartRound};
 use crate::journal::RunJournal;
 
 use super::frame::{reject, WireMsg};
-use super::{Conn, Transport};
+use super::readiness::{RawSource, Reactor, ThreadedReader};
+use super::{Conn, Transport, TransportError};
 
-/// Per-connection receive poll during a round.
-const POLL: Duration = Duration::from_millis(2);
-/// Accept-queue poll during a round (rejoins) and device wait.
-const ACCEPT_SLICE: Duration = Duration::from_millis(2);
-/// How long a freshly accepted connection gets to identify itself with
-/// a Join frame before being dropped.
+/// How long a freshly accepted connection gets to identify at least one
+/// device with a Join frame before being dropped.
 const IDENTIFY_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Waker-key base for threaded-reader fallbacks, far above any key a
+/// transport mints for its own conns (Loopback starts at 1).
+const PUMP_KEY_BASE: u64 = 1 << 32;
 
 /// A networked FL coordinator session over one [`Transport`].
 pub struct CoordinatorService<T: Transport> {
     server: Server,
     transport: T,
-    /// Connection-per-device: the latest identified connection wins
-    /// (a re-Join from a reconnecting device replaces the dead one).
-    conns: BTreeMap<usize, T::Conn>,
+    /// Anonymous live connections, token-indexed. Which devices ride
+    /// each connection lives in the registry (`bind_conn`), because the
+    /// relation is many-to-one under fleet multiplexing.
+    conns: Slots<T::Conn>,
+    /// The one wait-set the serving loop blocks on.
+    reactor: Reactor,
+    /// Key mint for threaded-reader-wrapped conns.
+    next_pump_key: u64,
     /// Wall-clock budget per round before stragglers become Dropouts.
     pub round_timeout: Duration,
 }
 
+/// What one reactor pump observed, in arrival order.
+enum Event {
+    /// A device identified itself (fresh-conn Join or in-band re-Join):
+    /// its binding is updated; open rounds re-kick it if pending.
+    Joined(usize),
+    /// A frame from an identified device (Heartbeat/EndRound/Dropout).
+    Frame(usize, WireMsg),
+    /// A connection died cleanly with these devices bound: they stay
+    /// pending (rejoin-with-redelivery or the deadline resolves them).
+    ConnDied(Vec<usize>),
+    /// A connection was poisoned (garbage frames, protocol violations)
+    /// with these devices bound: ALL of them convert to synthesized
+    /// Dropouts in every open round, immediately.
+    ConnPoisoned(Vec<usize>),
+}
+
 impl<T: Transport> CoordinatorService<T> {
     pub fn new(server: Server, transport: T) -> CoordinatorService<T> {
+        let reactor = Reactor::new(transport.waker());
         CoordinatorService {
             server,
             transport,
-            conns: BTreeMap::new(),
+            conns: Slots::new(),
+            reactor,
+            next_pump_key: PUMP_KEY_BASE,
             round_timeout: Duration::from_secs(120),
         }
     }
@@ -94,63 +146,42 @@ impl<T: Transport> CoordinatorService<T> {
         self.transport.local_addr()
     }
 
-    /// Number of identified device connections.
+    /// Number of identified device sessions (NOT connections — a fleet
+    /// binds many devices to one connection).
     pub fn connected(&self) -> usize {
-        self.conns.len()
+        self.server.engine().registry().bound_count()
     }
 
-    /// Accept + identify connections until `expect` devices are
-    /// connected or `timeout` elapses (error). Call before [`run`]: the
-    /// first round kicks off immediately.
+    /// Times the serving reactor has woken — with precise readiness
+    /// this scales with frames delivered plus deadline expiries, not
+    /// with elapsed-time × connections.
+    pub fn wakeups(&self) -> u64 {
+        self.reactor.wakeups()
+    }
+
+    /// Accept + identify connections until `expect` devices are bound
+    /// or `timeout` elapses (error). Call before [`run`]: the first
+    /// round kicks off immediately. Rendezvous-phase Joins only bind
+    /// transport routes — the engine first hears of a device when a
+    /// round selects it, so the census never counts connected-but-
+    /// unselected devices as joined.
     pub fn wait_for_devices(&mut self, expect: usize, timeout: Duration) -> Result<()> {
         let deadline = Instant::now() + timeout;
-        while self.conns.len() < expect {
-            if Instant::now() >= deadline {
+        let mut events = Vec::new();
+        while self.connected() < expect {
+            let now = Instant::now();
+            if now >= deadline {
                 return Err(anyhow!(
                     "{} of {expect} devices connected before the rendezvous timeout",
-                    self.conns.len()
+                    self.connected()
                 ));
             }
-            self.accept_and_identify()?;
+            events.clear();
+            self.pump(deadline - now, &mut events)?;
+            // Joined events already bound their routes in `on_frame`;
+            // any other pre-round frame is dropped here.
         }
         Ok(())
-    }
-
-    /// Accept at most one pending connection and run the Join handshake.
-    /// Returns the identified device id, if any. Unknown device ids get
-    /// a Reject frame and are dropped; a known id replaces any previous
-    /// connection for that device (rejoin).
-    fn accept_and_identify(&mut self) -> Result<Option<usize>> {
-        let Some(mut conn) = self.transport.accept_timeout(ACCEPT_SLICE).map_err(|e| anyhow!("{e}"))?
-        else {
-            return Ok(None);
-        };
-        // the first frame on a connection must be Join
-        let deadline = Instant::now() + IDENTIFY_TIMEOUT;
-        loop {
-            match conn.recv_timeout(POLL) {
-                Ok(Some(WireMsg::Join { device })) => {
-                    let n = self.server.cfg.n_devices();
-                    if !self.server.engine().registry().contains(device) {
-                        let _ = conn.send(&WireMsg::Reject {
-                            device,
-                            code: reject::UNKNOWN_DEVICE,
-                        });
-                        return Ok(None);
-                    }
-                    conn.send(&WireMsg::JoinAck { device, n_devices: n })
-                        .map_err(|e| anyhow!("join ack to device {device}: {e}"))?;
-                    self.conns.insert(device, conn);
-                    return Ok(Some(device));
-                }
-                Ok(Some(_)) | Err(_) => return Ok(None), // not our protocol: drop
-                Ok(None) => {
-                    if Instant::now() >= deadline {
-                        return Ok(None); // never identified: drop
-                    }
-                }
-            }
-        }
     }
 
     /// Execute the full run: rounds 1..=cfg.rounds over the transport,
@@ -169,9 +200,7 @@ impl<T: Transport> CoordinatorService<T> {
             cb(&rec);
             records.push(rec);
         }
-        for conn in self.conns.values_mut() {
-            let _ = conn.send(&WireMsg::Finish);
-        }
+        self.broadcast_finish();
         Ok(self.server.finish_run(records, reached))
     }
 
@@ -212,9 +241,7 @@ impl<T: Transport> CoordinatorService<T> {
             cb(&rec);
             records.push(rec);
         }
-        for conn in self.conns.values_mut() {
-            let _ = conn.send(&WireMsg::Finish);
-        }
+        self.broadcast_finish();
         Ok(self.server.finish_run(records, reached))
     }
 
@@ -228,160 +255,228 @@ impl<T: Transport> CoordinatorService<T> {
         self.server.engine_mut().sweep_expired(now_s)
     }
 
-    /// One networked round: kickoff frames out, device frames in until
-    /// the external round drains, canonical aggregation, application.
-    /// With a journal, the round-open record goes out before any kickoff
-    /// frame and the fold-order resolutions after the round drains (both
-    /// before `apply_round` mutates the server). Returns the outcome and
-    /// the completer count (what the close record needs).
+    /// One Finish frame per *connection* — a fleet's devices all hear
+    /// it through their shared socket.
+    fn broadcast_finish(&mut self) {
+        for slot in self.conns.iter_mut() {
+            let _ = slot.conn.send(&WireMsg::Finish);
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // the reactor pump: accept + drain, demux into events
+    // -----------------------------------------------------------------
+
+    /// One serving cycle: block on the wait-set (at most `wait`), drain
+    /// the accept queue and every readable connection, and append the
+    /// decoded per-device events in arrival order. Join frames are
+    /// handled here (JoinAck + route binding); everything else is
+    /// returned for the round loops to route.
+    fn pump(&mut self, wait: Duration, events: &mut Vec<Event>) -> Result<()> {
+        // cap the block while unidentified conns exist so their
+        // identify deadline fires without needing an event
+        let wait =
+            if self.conns.unidentified > 0 { wait.min(IDENTIFY_TIMEOUT) } else { wait };
+        let listener = self.transport.listener_source();
+        let sources = self.conns.sources();
+        let wake = self
+            .reactor
+            .wait(listener, &sources, wait)
+            .map_err(|e| anyhow!("reactor wait: {e}"))?;
+        let mut fresh = Vec::new();
+        if wake.accept || wake.sweep {
+            while let Some(conn) = self
+                .transport
+                .accept_timeout(Duration::ZERO)
+                .map_err(|e| anyhow!("accept: {e}"))?
+            {
+                fresh.push(self.add_conn(conn));
+            }
+        }
+        // Freshly accepted conns are drained once unconditionally: a
+        // frame (and its wake key) may have raced ahead of the conn's
+        // registration in the wait-set, and the key for data already
+        // visible now may have just been discarded as unknown.
+        for token in fresh {
+            self.drain_conn(token, events)?;
+        }
+        let tokens = if wake.sweep { self.conns.tokens() } else { wake.ready };
+        for token in tokens {
+            self.drain_conn(token, events)?;
+        }
+        self.expire_unidentified();
+        Ok(())
+    }
+
+    /// Register an accepted connection, wrapping readiness-less conns
+    /// in the threaded-reader fallback so the wait-set stays precise.
+    fn add_conn(&mut self, conn: T::Conn) -> u64 {
+        let served = if conn.source() == RawSource::Unready {
+            let key = self.next_pump_key;
+            self.next_pump_key += 1;
+            Served::Pumped(ThreadedReader::new(conn, key, Arc::clone(self.reactor.waker())))
+        } else {
+            Served::Direct(conn)
+        };
+        self.conns.add(served)
+    }
+
+    /// Pull every complete frame the connection has buffered right now.
+    fn drain_conn(&mut self, token: u64, events: &mut Vec<Event>) -> Result<()> {
+        loop {
+            let Some(slot) = self.conns.get_mut(token) else { return Ok(()) };
+            match slot.conn.try_recv() {
+                Ok(None) => return Ok(()),
+                Ok(Some(msg)) => self.on_frame(token, msg, events)?,
+                Err(TransportError::Frame(_)) => {
+                    // garbage on the wire: the peer is poisoned
+                    let devices = self.drop_conn(token);
+                    if !devices.is_empty() {
+                        events.push(Event::ConnPoisoned(devices));
+                    }
+                    return Ok(());
+                }
+                Err(_) => {
+                    // clean death: devices stay pending for a rejoin
+                    let devices = self.drop_conn(token);
+                    if !devices.is_empty() {
+                        events.push(Event::ConnDied(devices));
+                    }
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    /// Demux one decoded frame from connection `token`.
+    fn on_frame(&mut self, token: u64, msg: WireMsg, events: &mut Vec<Event>) -> Result<()> {
+        match msg {
+            WireMsg::Join { device } => {
+                if !self.server.engine().registry().contains(device) {
+                    // refuse the id but KEEP the connection: a fleet's
+                    // other (valid) devices may ride the same socket
+                    if let Some(slot) = self.conns.get_mut(token) {
+                        let _ = slot
+                            .conn
+                            .send(&WireMsg::Reject { device, code: reject::UNKNOWN_DEVICE });
+                    }
+                    return Ok(());
+                }
+                let n = self.server.cfg.n_devices();
+                let acked = match self.conns.get_mut(token) {
+                    Some(slot) => {
+                        slot.conn.send(&WireMsg::JoinAck { device, n_devices: n }).is_ok()
+                    }
+                    None => false,
+                };
+                if !acked {
+                    let devices = self.drop_conn(token);
+                    if !devices.is_empty() {
+                        events.push(Event::ConnDied(devices));
+                    }
+                    return Ok(());
+                }
+                // binding replaces any previous route (rejoin from a
+                // fresh connection)
+                self.server.engine_mut().bind_conn(device, token);
+                self.conns.mark_identified(token);
+                events.push(Event::Joined(device));
+            }
+            WireMsg::Heartbeat { .. } | WireMsg::EndRound { .. } | WireMsg::Dropout { .. } => {
+                let d = msg.device().expect("heartbeat/endround/dropout name a device");
+                if self.server.engine().registry().conn_of(d) != Some(token) {
+                    // a frame for a device this connection never
+                    // identified: protocol violation, poison the conn
+                    if let Some(slot) = self.conns.get_mut(token) {
+                        let _ = slot
+                            .conn
+                            .send(&WireMsg::Reject { device: d, code: reject::BAD_STATE });
+                    }
+                    let devices = self.drop_conn(token);
+                    if !devices.is_empty() {
+                        events.push(Event::ConnPoisoned(devices));
+                    }
+                    return Ok(());
+                }
+                events.push(Event::Frame(d, msg));
+            }
+            other => {
+                // JoinAck / StartRound / Reject / Finish: only a
+                // coordinator sends these — the peer is poisoned
+                let d = other.device().unwrap_or(0);
+                if let Some(slot) = self.conns.get_mut(token) {
+                    let _ =
+                        slot.conn.send(&WireMsg::Reject { device: d, code: reject::BAD_STATE });
+                }
+                let devices = self.drop_conn(token);
+                if !devices.is_empty() {
+                    events.push(Event::ConnPoisoned(devices));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Remove a connection and sever every device bound to it (returned
+    /// ascending) — one socket's death is a whole fleet's death.
+    fn drop_conn(&mut self, token: u64) -> Vec<usize> {
+        self.conns.remove(token);
+        self.server.engine_mut().unbind_conn(token)
+    }
+
+    /// Drop unidentified connections older than [`IDENTIFY_TIMEOUT`].
+    fn expire_unidentified(&mut self) {
+        if self.conns.unidentified == 0 {
+            return;
+        }
+        for token in self.conns.tokens() {
+            if let Some(slot) = self.conns.get(token) {
+                if !slot.identified && slot.accepted_at.elapsed() > IDENTIFY_TIMEOUT {
+                    self.drop_conn(token); // nothing bound: nothing severed
+                }
+            }
+        }
+    }
+
+    /// Send `msg` to the connection `d`'s session rides. `false` if the
+    /// device is unbound or the send failed (the connection is dropped;
+    /// `d` and any fleet-mates stay pending for rejoin or deadline).
+    fn send_to_device(&mut self, d: usize, msg: &WireMsg) -> bool {
+        let Some(token) = self.server.engine().registry().conn_of(d) else {
+            return false;
+        };
+        let Some(slot) = self.conns.get_mut(token) else {
+            // stale binding (should not happen — drops unbind eagerly)
+            self.server.engine_mut().unbind_conn(token);
+            return false;
+        };
+        if slot.conn.send(msg).is_ok() {
+            return true;
+        }
+        self.drop_conn(token);
+        false
+    }
+
+    // -----------------------------------------------------------------
+    // round driving: one loop for barrier and pipelined schedules
+    // -----------------------------------------------------------------
+
+    /// One barrier round: a one-round window through the shared serving
+    /// loop, then the canonical `finish_external` aggregation and
+    /// application. With a journal, the round-open record goes out
+    /// before any kickoff frame and the fold-order resolutions after
+    /// the round drains (both before `apply_round` mutates the server).
+    /// Returns the outcome and the completer count.
     fn round_networked(
         &mut self,
         t: usize,
         mut jw: Option<&mut RunJournal>,
     ) -> Result<(RoundOutcome, usize)> {
-        let (mut round, starts) = self.server.begin_networked_round(t)?;
-        if let Some(jw) = jw.as_deref_mut() {
-            let items: Vec<StartRound> = starts.iter().map(|s| s.item).collect();
-            let lr = self.server.cfg.lr_at(t - 1) as f32;
-            jw.append(&self.server.record_open(t, &items, lr))?;
-        }
-        let mut down_bits: BTreeMap<usize, usize> = BTreeMap::new();
-        let mut outbox: BTreeMap<usize, WireMsg> = BTreeMap::new();
-        for s in starts {
-            let d = s.item.plan.device;
-            down_bits.insert(d, s.download.bits);
-            outbox.insert(d, WireMsg::StartRound(Box::new(s)));
-        }
-        for (d, msg) in &outbox {
-            match self.conns.get_mut(d) {
-                Some(conn) => {
-                    if conn.send(msg).is_err() {
-                        // dead connection: drop it, the device may rejoin
-                        self.conns.remove(d);
-                    }
-                }
-                None => {} // never connected / currently gone: deadline handles it
-            }
-        }
-
-        let deadline = Instant::now() + self.round_timeout;
-        while !round.drained() {
-            // rejoins and late arrivals: a reconnecting pending device
-            // gets its kickoff frame again
-            if let Some(d) = self.accept_and_identify()? {
-                if round.pending().contains(&d) {
-                    if let (Some(msg), Some(conn)) = (outbox.get(&d), self.conns.get_mut(&d)) {
-                        let _ = conn.send(msg);
-                    }
-                }
-            }
-
-            for d in round.pending() {
-                let msg = match self.conns.get_mut(&d) {
-                    None => continue,
-                    Some(conn) => match conn.recv_timeout(POLL) {
-                        Ok(None) => continue,
-                        Ok(Some(m)) => m,
-                        Err(_) => {
-                            self.conns.remove(&d);
-                            continue;
-                        }
-                    },
-                };
-                match msg {
-                    WireMsg::Heartbeat { device, sim_t_s } if device == d => {
-                        let _ = self
-                            .server
-                            .engine_mut()
-                            .external_msg(&mut round, DeviceMsg::Heartbeat { device, sim_t_s });
-                    }
-                    WireMsg::Join { device } if device == d => {
-                        // in-band rejoin on a surviving connection
-                        let _ = self
-                            .server
-                            .engine_mut()
-                            .external_msg(&mut round, DeviceMsg::Join { device });
-                        if let (Some(m), Some(conn)) = (outbox.get(&d), self.conns.get_mut(&d)) {
-                            let _ = conn.send(m);
-                        }
-                    }
-                    WireMsg::EndRound { t: ft, update } if update.device == d => {
-                        if ft != t {
-                            // a resolution for a round that already closed
-                            // (e.g. buffered past the deadline conversion):
-                            // refuse it, keep the connection — the device's
-                            // *current*-round resolution may still arrive
-                            if let Some(conn) = self.conns.get_mut(&d) {
-                                let _ = conn
-                                    .send(&WireMsg::Reject { device: d, code: reject::STALE_ROUND });
-                            }
-                        } else if self
-                            .server
-                            .engine_mut()
-                            .external_msg(&mut round, DeviceMsg::EndRound(update))
-                            .is_err()
-                        {
-                            // decoded fine but failed engine validation:
-                            // refuse it and count the device out (its
-                            // download traffic is already spent)
-                            if let Some(conn) = self.conns.get_mut(&d) {
-                                let _ = conn
-                                    .send(&WireMsg::Reject { device: d, code: reject::BAD_UPDATE });
-                            }
-                            self.server.engine_mut().external_msg(
-                                &mut round,
-                                DeviceMsg::Dropout {
-                                    device: d,
-                                    after_s: 0.0,
-                                    down_wire_bits: down_bits.get(&d).copied().unwrap_or(0),
-                                },
-                            )?;
-                        }
-                    }
-                    WireMsg::Dropout { t: ft, device, after_s, down_wire_bits }
-                        if device == d =>
-                    {
-                        if ft != t {
-                            if let Some(conn) = self.conns.get_mut(&d) {
-                                let _ = conn
-                                    .send(&WireMsg::Reject { device: d, code: reject::STALE_ROUND });
-                            }
-                        } else {
-                            self.server.engine_mut().external_msg(
-                                &mut round,
-                                DeviceMsg::Dropout { device, after_s, down_wire_bits },
-                            )?;
-                        }
-                    }
-                    _other => {
-                        // a frame this side of the protocol never expects:
-                        // refuse and cut the connection
-                        if let Some(conn) = self.conns.get_mut(&d) {
-                            let _ =
-                                conn.send(&WireMsg::Reject { device: d, code: reject::BAD_STATE });
-                        }
-                        self.conns.remove(&d);
-                    }
-                }
-            }
-
-            if !round.drained() && Instant::now() >= deadline {
-                // stragglers become dropouts so the round can close; the
-                // engine books their already-spent download traffic
-                for d in round.pending() {
-                    self.server.engine_mut().external_msg(
-                        &mut round,
-                        DeviceMsg::Dropout {
-                            device: d,
-                            after_s: 0.0,
-                            down_wire_bits: down_bits.get(&d).copied().unwrap_or(0),
-                        },
-                    )?;
-                }
-            }
-        }
-
-        let out = self.server.engine_mut().finish_external(round)?;
+        let nr = self.open_networked(t, jw.as_deref_mut())?;
+        let mut window = vec![nr];
+        self.drain_front_round(&mut window)?;
+        let nr = window.pop().expect("the barrier window holds exactly one round");
+        let out = self.server.engine_mut().finish_external(nr.round)?;
         let completers = out.updates.len();
         if let Some(jw) = jw.as_deref_mut() {
             for r in self.server.resolution_records(t, &out) {
@@ -389,6 +484,159 @@ impl<T: Transport> CoordinatorService<T> {
             }
         }
         Ok((self.server.apply_round(t, out), completers))
+    }
+
+    /// Serve the wait-set until the window's FRONT round drains: block
+    /// on readiness, route events, convert front stragglers to Dropouts
+    /// at the wall-clock deadline. Younger open rounds resolve devices
+    /// as their frames arrive; they get a fresh deadline once they
+    /// reach the front.
+    fn drain_front_round(&mut self, window: &mut Vec<NetRound>) -> Result<()> {
+        let deadline = Instant::now() + self.round_timeout;
+        let mut events: Vec<Event> = Vec::new();
+        while !window[0].round.drained() {
+            let now = Instant::now();
+            if now >= deadline {
+                // stragglers become dropouts so the round can close;
+                // the engine books their already-spent download traffic
+                let nr = &mut window[0];
+                for d in nr.round.pending() {
+                    let bits = nr.down_bits.get(&d).copied().unwrap_or(0);
+                    self.server.engine_mut().external_msg(
+                        &mut nr.round,
+                        DeviceMsg::Dropout { device: d, after_s: 0.0, down_wire_bits: bits },
+                    )?;
+                }
+                continue; // loop re-checks drained()
+            }
+            events.clear();
+            self.pump(deadline - now, &mut events)?;
+            for ev in events.drain(..) {
+                self.route_event(window, ev)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply one pump event against the open window.
+    fn route_event(&mut self, window: &mut [NetRound], ev: Event) -> Result<()> {
+        match ev {
+            Event::Joined(d) => {
+                // (re)join mid-run: registry join + re-kick every open
+                // round the device is still pending in, in round order
+                let _ = self
+                    .server
+                    .engine_mut()
+                    .external_msg(&mut window[0].round, DeviceMsg::Join { device: d });
+                for nr in window.iter() {
+                    if nr.round.is_pending(d) {
+                        if let Some(msg) = nr.outbox.get(&d) {
+                            self.send_to_device(d, msg);
+                        }
+                    }
+                }
+            }
+            Event::Frame(d, msg) => self.route_frame(window, d, msg)?,
+            Event::ConnDied(_) => {
+                // devices stay pending: rejoin-with-redelivery may
+                // still resolve them, else the deadline will
+            }
+            Event::ConnPoisoned(devices) => {
+                // the peer holding these sessions cannot be spoken to:
+                // convert ALL its devices in every open round now (same
+                // message bits the deadline conversion would write)
+                for d in devices {
+                    for nr in window.iter_mut() {
+                        if nr.round.is_pending(d) {
+                            let bits = nr.down_bits.get(&d).copied().unwrap_or(0);
+                            self.server.engine_mut().external_msg(
+                                &mut nr.round,
+                                DeviceMsg::Dropout {
+                                    device: d,
+                                    after_s: 0.0,
+                                    down_wire_bits: bits,
+                                },
+                            )?;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Dispatch one identified device frame against the open window:
+    /// resolutions go to the round they are tagged with, heartbeats to
+    /// the front; anything matching no open round — or duplicating a
+    /// device that already resolved — is refused without touching the
+    /// engine.
+    fn route_frame(&mut self, window: &mut [NetRound], d: usize, msg: WireMsg) -> Result<()> {
+        match msg {
+            WireMsg::Heartbeat { device, sim_t_s } => {
+                let _ = self
+                    .server
+                    .engine_mut()
+                    .external_msg(&mut window[0].round, DeviceMsg::Heartbeat { device, sim_t_s });
+            }
+            WireMsg::EndRound { t: ft, update } => {
+                match window.iter_mut().find(|nr| nr.round.t() == ft) {
+                    Some(nr) if nr.round.is_pending(d) => {
+                        if self
+                            .server
+                            .engine_mut()
+                            .external_msg(&mut nr.round, DeviceMsg::EndRound(update))
+                            .is_err()
+                        {
+                            // decoded fine but failed engine validation:
+                            // refuse it and count the device out of that
+                            // round (its download traffic is spent)
+                            let bits = nr.down_bits.get(&d).copied().unwrap_or(0);
+                            self.server.engine_mut().external_msg(
+                                &mut nr.round,
+                                DeviceMsg::Dropout {
+                                    device: d,
+                                    after_s: 0.0,
+                                    down_wire_bits: bits,
+                                },
+                            )?;
+                            self.send_to_device(
+                                d,
+                                &WireMsg::Reject { device: d, code: reject::BAD_UPDATE },
+                            );
+                        }
+                    }
+                    _ => {
+                        // closed round, or a duplicate for a still-open
+                        // one (a redelivery racing its original):
+                        // refuse, keep the connection
+                        self.send_to_device(
+                            d,
+                            &WireMsg::Reject { device: d, code: reject::STALE_ROUND },
+                        );
+                    }
+                }
+            }
+            WireMsg::Dropout { t: ft, device, after_s, down_wire_bits } => {
+                match window.iter_mut().find(|nr| nr.round.t() == ft) {
+                    Some(nr) if nr.round.is_pending(d) => {
+                        self.server.engine_mut().external_msg(
+                            &mut nr.round,
+                            DeviceMsg::Dropout { device, after_s, down_wire_bits },
+                        )?;
+                    }
+                    _ => {
+                        self.send_to_device(
+                            d,
+                            &WireMsg::Reject { device: d, code: reject::STALE_ROUND },
+                        );
+                    }
+                }
+            }
+            // on_frame only forwards the three variants above; stay
+            // total anyway
+            _ => {}
+        }
+        Ok(())
     }
 
     // -----------------------------------------------------------------
@@ -400,10 +648,7 @@ impl<T: Transport> CoordinatorService<T> {
     /// window bounds) and its close (`Server::close_pipelined`), so the
     /// two write byte-identical journals and bit-identical state for the
     /// same seed and arrival outcome. While the oldest open round
-    /// drains, later rounds' kickoffs are already on the wire; a
-    /// resolution frame is routed to whichever open round it is tagged
-    /// with, and only frames matching NO open round are refused as
-    /// [`reject::STALE_ROUND`].
+    /// drains, later rounds' kickoffs are already on the wire.
     fn run_pipelined(
         &mut self,
         mut jw: Option<&mut RunJournal>,
@@ -429,7 +674,8 @@ impl<T: Transport> CoordinatorService<T> {
             }
             let pend = self.drain_front(&mut window)?;
             debug_assert_eq!(pend.t, t);
-            let (outcome, folded) = self.server.close_pipelined(pend, quiesce, jw.as_deref_mut())?;
+            let (outcome, folded) =
+                self.server.close_pipelined(pend, quiesce, jw.as_deref_mut())?;
             let rec = self.server.observe_round(t, &outcome, &mut reached)?;
             if let Some(j) = jw.as_mut() {
                 j.append(&self.server.record_close(t, folded, &rec))?;
@@ -440,17 +686,13 @@ impl<T: Transport> CoordinatorService<T> {
             cb(&rec);
             records.push(rec);
         }
-        for conn in self.conns.values_mut() {
-            let _ = conn.send(&WireMsg::Finish);
-        }
+        self.broadcast_finish();
         Ok(self.server.finish_run(records, reached))
     }
 
     /// Open round `u` behind the still-draining window front: plan +
-    /// journal the RoundOpen + put every kickoff frame on the wire. The
-    /// engine tracks up to `pipeline_depth` concurrently open external
-    /// rounds; devices selected in overlapping rounds see their kickoffs
-    /// in round order on the same connection.
+    /// journal the RoundOpen + put every kickoff frame on the wire
+    /// (routed per device — fleet-multiplexed devices share a socket).
     fn open_networked(&mut self, u: usize, jw: Option<&mut RunJournal>) -> Result<NetRound> {
         let (round, starts) = self.server.begin_networked_round(u)?;
         if let Some(jw) = jw {
@@ -466,161 +708,22 @@ impl<T: Transport> CoordinatorService<T> {
             outbox.insert(d, WireMsg::StartRound(Box::new(s)));
         }
         for (d, msg) in &outbox {
-            match self.conns.get_mut(d) {
-                Some(conn) => {
-                    if conn.send(msg).is_err() {
-                        self.conns.remove(d);
-                    }
-                }
-                None => {} // never connected / currently gone: deadline handles it
-            }
+            // unbound / dead connections: the deadline (or a rejoin
+            // re-kick) handles the device
+            self.send_to_device(*d, msg);
         }
         Ok(NetRound { round, outbox, down_bits })
     }
 
-    /// Poll until the window's oldest round drains, then take it out of
-    /// the engine as a [`coordinator::PendingRound`] for the shared
-    /// close. Frames tagged for younger open rounds are fed to those
-    /// rounds as they arrive (their devices resolve early); the
-    /// wall-clock deadline converts only the FRONT round's stragglers
-    /// into dropouts — younger rounds get a fresh deadline once they
-    /// reach the front.
+    /// Serve until the window's oldest round drains, then take it out
+    /// of the engine as a [`coordinator::PendingRound`] for the shared
+    /// close.
     fn drain_front(&mut self, window: &mut Vec<NetRound>) -> Result<coordinator::PendingRound> {
-        let deadline = Instant::now() + self.round_timeout;
-        while !window[0].round.drained() {
-            // rejoins: a reconnecting device gets the kickoff of every
-            // open round it is still pending in, in round order
-            if let Some(d) = self.accept_and_identify()? {
-                for nr in window.iter_mut() {
-                    if nr.round.pending().contains(&d) {
-                        if let (Some(msg), Some(conn)) = (nr.outbox.get(&d), self.conns.get_mut(&d))
-                        {
-                            let _ = conn.send(msg);
-                        }
-                    }
-                }
-            }
-
-            for d in window[0].round.pending() {
-                let msg = match self.conns.get_mut(&d) {
-                    None => continue,
-                    Some(conn) => match conn.recv_timeout(POLL) {
-                        Ok(None) => continue,
-                        Ok(Some(m)) => m,
-                        Err(_) => {
-                            self.conns.remove(&d);
-                            continue;
-                        }
-                    },
-                };
-                self.route_frame(window, d, msg)?;
-            }
-
-            if !window[0].round.drained() && Instant::now() >= deadline {
-                // front-round stragglers become dropouts so the round
-                // can close; their download traffic is already spent
-                let nr = &mut window[0];
-                for d in nr.round.pending() {
-                    let bits = nr.down_bits.get(&d).copied().unwrap_or(0);
-                    self.server.engine_mut().external_msg(
-                        &mut nr.round,
-                        DeviceMsg::Dropout { device: d, after_s: 0.0, down_wire_bits: bits },
-                    )?;
-                }
-            }
-        }
+        self.drain_front_round(window)?;
         let nr = window.remove(0);
         let t = nr.round.t();
         let (devices, updates, dropped) = self.server.engine_mut().take_external(nr.round)?;
         Ok(coordinator::PendingRound { t, devices, updates, dropped })
-    }
-
-    /// Dispatch one decoded frame from device `d` against the open
-    /// window: resolutions go to the round they are tagged with,
-    /// heartbeats and in-band rejoins to the front, anything matching no
-    /// open round is refused without touching the engine.
-    fn route_frame(&mut self, window: &mut [NetRound], d: usize, msg: WireMsg) -> Result<()> {
-        match msg {
-            WireMsg::Heartbeat { device, sim_t_s } if device == d => {
-                let _ = self
-                    .server
-                    .engine_mut()
-                    .external_msg(&mut window[0].round, DeviceMsg::Heartbeat { device, sim_t_s });
-            }
-            WireMsg::Join { device } if device == d => {
-                // in-band rejoin on a surviving connection: re-kick every
-                // open round the device is still pending in
-                let _ = self
-                    .server
-                    .engine_mut()
-                    .external_msg(&mut window[0].round, DeviceMsg::Join { device });
-                for nr in window.iter_mut() {
-                    if nr.round.pending().contains(&d) {
-                        if let (Some(m), Some(conn)) = (nr.outbox.get(&d), self.conns.get_mut(&d)) {
-                            let _ = conn.send(m);
-                        }
-                    }
-                }
-            }
-            WireMsg::EndRound { t: ft, update } if update.device == d => {
-                match window.iter_mut().find(|nr| nr.round.t() == ft) {
-                    None => {
-                        // a resolution for a round that already closed:
-                        // refuse it, keep the connection
-                        if let Some(conn) = self.conns.get_mut(&d) {
-                            let _ = conn
-                                .send(&WireMsg::Reject { device: d, code: reject::STALE_ROUND });
-                        }
-                    }
-                    Some(nr) => {
-                        if self
-                            .server
-                            .engine_mut()
-                            .external_msg(&mut nr.round, DeviceMsg::EndRound(update))
-                            .is_err()
-                        {
-                            // decoded fine but failed engine validation:
-                            // refuse it and count the device out of that
-                            // round (its download traffic is spent)
-                            if let Some(conn) = self.conns.get_mut(&d) {
-                                let _ = conn
-                                    .send(&WireMsg::Reject { device: d, code: reject::BAD_UPDATE });
-                            }
-                            let bits = nr.down_bits.get(&d).copied().unwrap_or(0);
-                            self.server.engine_mut().external_msg(
-                                &mut nr.round,
-                                DeviceMsg::Dropout { device: d, after_s: 0.0, down_wire_bits: bits },
-                            )?;
-                        }
-                    }
-                }
-            }
-            WireMsg::Dropout { t: ft, device, after_s, down_wire_bits } if device == d => {
-                match window.iter_mut().find(|nr| nr.round.t() == ft) {
-                    None => {
-                        if let Some(conn) = self.conns.get_mut(&d) {
-                            let _ = conn
-                                .send(&WireMsg::Reject { device: d, code: reject::STALE_ROUND });
-                        }
-                    }
-                    Some(nr) => {
-                        self.server.engine_mut().external_msg(
-                            &mut nr.round,
-                            DeviceMsg::Dropout { device, after_s, down_wire_bits },
-                        )?;
-                    }
-                }
-            }
-            _other => {
-                // a frame this side of the protocol never expects:
-                // refuse and cut the connection
-                if let Some(conn) = self.conns.get_mut(&d) {
-                    let _ = conn.send(&WireMsg::Reject { device: d, code: reject::BAD_STATE });
-                }
-                self.conns.remove(&d);
-            }
-        }
-        Ok(())
     }
 }
 
@@ -631,4 +734,133 @@ struct NetRound {
     round: ExternalRound,
     outbox: BTreeMap<usize, WireMsg>,
     down_bits: BTreeMap<usize, usize>,
+}
+
+/// A served connection: direct when the conn integrates with the
+/// reactor, wrapped in the threaded-reader fallback when it does not.
+enum Served<C: Conn> {
+    Direct(C),
+    Pumped(ThreadedReader<C>),
+}
+
+impl<C: Conn> Conn for Served<C> {
+    fn send(&mut self, msg: &WireMsg) -> Result<(), TransportError> {
+        match self {
+            Served::Direct(c) => c.send(msg),
+            Served::Pumped(r) => r.send(msg),
+        }
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<WireMsg>, TransportError> {
+        match self {
+            Served::Direct(c) => c.recv_timeout(timeout),
+            Served::Pumped(r) => r.recv_timeout(timeout),
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<WireMsg>, TransportError> {
+        match self {
+            Served::Direct(c) => c.try_recv(),
+            Served::Pumped(r) => r.try_recv(),
+        }
+    }
+
+    fn source(&self) -> RawSource {
+        match self {
+            Served::Direct(c) => c.source(),
+            Served::Pumped(r) => r.source(),
+        }
+    }
+
+    fn peer(&self) -> String {
+        match self {
+            Served::Direct(c) => c.peer(),
+            Served::Pumped(r) => r.peer(),
+        }
+    }
+}
+
+/// The serving-side connection table: slot-indexed anonymous endpoints
+/// (tokens are slot indices; freed slots are reused). Device routing
+/// lives in the registry, not here — see the module docs.
+struct Slots<C: Conn> {
+    slots: Vec<Option<Slot<C>>>,
+    /// Count of connections still awaiting their first Join; the
+    /// identify-deadline scan runs only while nonzero.
+    unidentified: usize,
+}
+
+struct Slot<C: Conn> {
+    conn: Served<C>,
+    /// Whether any device ever identified on this connection.
+    identified: bool,
+    /// Accept time, for the identify deadline on device-less conns.
+    accepted_at: Instant,
+}
+
+impl<C: Conn> Slots<C> {
+    fn new() -> Slots<C> {
+        Slots { slots: Vec::new(), unidentified: 0 }
+    }
+
+    fn add(&mut self, conn: Served<C>) -> u64 {
+        let slot = Slot { conn, identified: false, accepted_at: Instant::now() };
+        self.unidentified += 1;
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if s.is_none() {
+                *s = Some(slot);
+                return i as u64;
+            }
+        }
+        self.slots.push(Some(slot));
+        (self.slots.len() - 1) as u64
+    }
+
+    fn get(&self, token: u64) -> Option<&Slot<C>> {
+        self.slots.get(token as usize).and_then(|s| s.as_ref())
+    }
+
+    fn get_mut(&mut self, token: u64) -> Option<&mut Slot<C>> {
+        self.slots.get_mut(token as usize).and_then(|s| s.as_mut())
+    }
+
+    fn remove(&mut self, token: u64) -> Option<Slot<C>> {
+        let taken = self.slots.get_mut(token as usize).and_then(|s| s.take());
+        if let Some(slot) = &taken {
+            if !slot.identified {
+                self.unidentified -= 1;
+            }
+        }
+        taken
+    }
+
+    fn mark_identified(&mut self, token: u64) {
+        if let Some(slot) = self.slots.get_mut(token as usize).and_then(|s| s.as_mut()) {
+            if !slot.identified {
+                slot.identified = true;
+                self.unidentified -= 1;
+            }
+        }
+    }
+
+    /// `(token, source)` pairs for the reactor wait-set.
+    fn sources(&self) -> Vec<(u64, RawSource)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|slot| (i as u64, slot.conn.source())))
+            .collect()
+    }
+
+    fn tokens(&self) -> Vec<u64> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|_| i as u64))
+            .collect()
+    }
+
+    fn iter_mut(&mut self) -> impl Iterator<Item = &mut Slot<C>> {
+        self.slots.iter_mut().flatten()
+    }
 }

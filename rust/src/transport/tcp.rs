@@ -1,23 +1,42 @@
 //! Tcp transport: framed `std::net::TcpStream`, std-only.
 //!
-//! The coordinator binds a non-blocking listener and polls it between
-//! protocol work ([`TcpTransport::accept_timeout`]); each device holds
-//! one connection for its whole session (connection-per-device).
-//! Streams run with `TCP_NODELAY` (frames are latency-sensitive and
-//! already batched) and bounded read/write timeouts, and the receive
-//! path keeps an incremental buffer: a frame may arrive split across
-//! arbitrarily many reads, and partial bytes survive timeouts intact —
-//! [`frame::decode_frame`]'s `Truncated` error is the "keep reading"
-//! signal, any other decode error poisons the connection.
+//! The coordinator binds a non-blocking listener and — on unix — waits
+//! for accepts and bytes with `poll(2)` (see [`super::readiness`]):
+//! there is no sleep-poll anywhere in the unix serving path. Each
+//! connection may carry one device session (connection-per-device) or a
+//! whole fleet's worth (frames are device-tagged; the server routes by
+//! id, not socket). Streams run with `TCP_NODELAY` (frames are
+//! latency-sensitive and already batched) and bounded read/write
+//! timeouts, and the receive path keeps an incremental buffer: a frame
+//! may arrive split across arbitrarily many reads, and partial bytes
+//! survive timeouts intact — [`frame::decode_frame`]'s `Truncated`
+//! error is the "keep reading" signal, any other decode error poisons
+//! the connection.
+//!
+//! A conn toggles between blocking mode (client-side `recv_timeout`
+//! slices) and non-blocking mode (server-side reactor `try_recv`); the
+//! mode is cached so the fcntl only runs on transitions. In
+//! non-blocking mode `send` handles partial writes itself, waiting on
+//! *write-readiness* (`poll(2)` `POLLOUT`) within the write deadline —
+//! never a fixed-length nap.
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
 use super::frame::{self, WireMsg};
+use super::readiness::RawSource;
 use super::{Conn, Transport, TransportError};
 
-/// Granularity of the non-blocking accept poll.
+#[cfg(unix)]
+use super::readiness::sys;
+#[cfg(unix)]
+use std::os::unix::io::AsRawFd;
+
+/// Granularity of the non-blocking accept poll — **non-unix fallback
+/// only**; the unix path blocks in `poll(2)` until the listener is
+/// actually readable.
+#[cfg(not(unix))]
 const ACCEPT_POLL: Duration = Duration::from_millis(5);
 /// Cap on a single blocking read's timeout, so `recv_timeout` can honor
 /// deadlines shorter or longer than any one socket wait.
@@ -56,16 +75,32 @@ impl Transport for TcpTransport {
             match self.listener.accept() {
                 Ok((stream, peer)) => return Ok(Some(TcpConn::from_stream(stream, peer)?)),
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                    if Instant::now() >= deadline {
+                    let now = Instant::now();
+                    if now >= deadline {
                         return Ok(None);
                     }
-                    std::thread::sleep(ACCEPT_POLL.min(timeout));
+                    // wait for accept-readiness, not a timer
+                    #[cfg(unix)]
+                    sys::wait_readable(self.listener.as_raw_fd(), deadline - now)?;
+                    #[cfg(not(unix))]
+                    std::thread::sleep(ACCEPT_POLL.min(deadline - now));
                 }
                 // a non-WouldBlock accept failure is the listener itself
                 // breaking (fd exhaustion, interface death) — surface it
                 // typed instead of busy-polling past it like a timeout
                 Err(e) => return Err(TransportError::Accept(e)),
             }
+        }
+    }
+
+    fn listener_source(&self) -> RawSource {
+        #[cfg(unix)]
+        {
+            RawSource::Fd(self.listener.as_raw_fd())
+        }
+        #[cfg(not(unix))]
+        {
+            RawSource::Unready
         }
     }
 
@@ -80,6 +115,9 @@ pub struct TcpConn {
     /// Bytes received but not yet decoded — a frame boundary rarely
     /// coincides with a read boundary.
     rbuf: Vec<u8>,
+    /// Cached O_NONBLOCK state so mode flips cost a syscall only on
+    /// actual transitions (reactor `try_recv` ↔ blocking `recv_timeout`).
+    nonblocking: bool,
     peer: String,
 }
 
@@ -94,28 +132,86 @@ impl TcpConn {
     fn from_stream(stream: TcpStream, peer: SocketAddr) -> Result<TcpConn, TransportError> {
         stream.set_nodelay(true)?;
         stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
-        Ok(TcpConn { stream, rbuf: Vec::new(), peer: peer.to_string() })
+        Ok(TcpConn { stream, rbuf: Vec::new(), nonblocking: false, peer: peer.to_string() })
+    }
+
+    fn set_mode(&mut self, nonblocking: bool) -> Result<(), TransportError> {
+        if self.nonblocking != nonblocking {
+            self.stream.set_nonblocking(nonblocking)?;
+            self.nonblocking = nonblocking;
+        }
+        Ok(())
+    }
+
+    /// Decode one frame out of `rbuf` if a complete one is buffered.
+    fn decode_buffered(&mut self) -> Result<Option<WireMsg>, TransportError> {
+        match frame::decode_frame(&self.rbuf) {
+            Ok((msg, used)) => {
+                self.rbuf.drain(..used);
+                Ok(Some(msg))
+            }
+            Err(e) if e.is_incomplete() => Ok(None),
+            Err(e) => Err(TransportError::Frame(e)),
+        }
+    }
+
+    /// Write the whole buffer within [`WRITE_TIMEOUT`], handling the
+    /// partial writes a non-blocking stream produces by waiting on
+    /// write-readiness (unix) or a bounded growing backoff (elsewhere)
+    /// — never a fixed-length nap.
+    fn write_deadline(&mut self, bytes: &[u8]) -> Result<(), TransportError> {
+        let deadline = Instant::now() + WRITE_TIMEOUT;
+        let mut off = 0;
+        #[cfg(not(unix))]
+        let mut backoff = Duration::from_micros(50);
+        while off < bytes.len() {
+            match self.stream.write(&bytes[off..]) {
+                Ok(0) => {
+                    return Err(TransportError::Io(std::io::Error::new(
+                        ErrorKind::WriteZero,
+                        "socket accepted zero bytes",
+                    )))
+                }
+                Ok(k) => off += k,
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+                {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Err(TransportError::Io(std::io::Error::new(
+                            ErrorKind::TimedOut,
+                            "peer cannot drain a frame within the write timeout",
+                        )));
+                    }
+                    #[cfg(unix)]
+                    sys::wait_writable(self.stream.as_raw_fd(), deadline - now)?;
+                    #[cfg(not(unix))]
+                    {
+                        std::thread::sleep(backoff.min(deadline - now));
+                        backoff = (backoff * 2).min(Duration::from_millis(5));
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(TransportError::Io(e)),
+            }
+        }
+        Ok(())
     }
 }
 
 impl Conn for TcpConn {
     fn send(&mut self, msg: &WireMsg) -> Result<(), TransportError> {
         let bytes = frame::encode_frame(msg);
-        self.stream.write_all(&bytes)?;
-        Ok(())
+        self.write_deadline(&bytes)
     }
 
     fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<WireMsg>, TransportError> {
+        self.set_mode(false)?;
         let deadline = Instant::now() + timeout;
         loop {
             // a complete frame may already be buffered
-            match frame::decode_frame(&self.rbuf) {
-                Ok((msg, used)) => {
-                    self.rbuf.drain(..used);
-                    return Ok(Some(msg));
-                }
-                Err(e) if e.is_incomplete() => {} // need more bytes
-                Err(e) => return Err(TransportError::Frame(e)),
+            if let Some(msg) = self.decode_buffered()? {
+                return Ok(Some(msg));
             }
             let now = Instant::now();
             if now >= deadline {
@@ -133,6 +229,36 @@ impl Conn for TcpConn {
                         || e.kind() == ErrorKind::Interrupted => {}
                 Err(e) => return Err(TransportError::Io(e)),
             }
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<WireMsg>, TransportError> {
+        loop {
+            if let Some(msg) = self.decode_buffered()? {
+                return Ok(Some(msg));
+            }
+            // genuinely non-blocking: pull whatever the kernel has,
+            // return None the moment it has nothing
+            self.set_mode(true)?;
+            let mut tmp = [0u8; 64 * 1024];
+            match self.stream.read(&mut tmp) {
+                Ok(0) => return Err(TransportError::Closed),
+                Ok(k) => self.rbuf.extend_from_slice(&tmp[..k]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(None),
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(TransportError::Io(e)),
+            }
+        }
+    }
+
+    fn source(&self) -> RawSource {
+        #[cfg(unix)]
+        {
+            RawSource::Fd(self.stream.as_raw_fd())
+        }
+        #[cfg(not(unix))]
+        {
+            RawSource::Unready
         }
     }
 
@@ -196,6 +322,44 @@ mod tests {
             Some(WireMsg::Heartbeat { device: 2, sim_t_s }) => assert_eq!(sim_t_s, 4.5),
             other => panic!("{other:?}"),
         }
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn try_recv_pulls_fresh_bytes_and_mode_flips_are_reversible() {
+        let mut lst = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = lst.socket_addr();
+        let handle = std::thread::spawn(move || {
+            let mut c = TcpConn::connect(addr).unwrap();
+            c.send(&WireMsg::Join { device: 3 }).unwrap();
+            std::thread::sleep(Duration::from_millis(30));
+            c.send(&WireMsg::Heartbeat { device: 3, sim_t_s: 1.0 }).unwrap();
+        });
+        let mut sconn = lst.accept_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        // the Join arrives eventually; try_recv must find it without blocking
+        let mut got_join = false;
+        for _ in 0..500 {
+            match sconn.try_recv().unwrap() {
+                Some(WireMsg::Join { device: 3 }) => {
+                    got_join = true;
+                    break;
+                }
+                Some(other) => panic!("{other:?}"),
+                None => std::thread::sleep(Duration::from_millis(1)),
+            }
+        }
+        assert!(got_join);
+        // back to a blocking receive on the same conn for the heartbeat
+        let mut got_hb = false;
+        for _ in 0..100 {
+            if let Some(WireMsg::Heartbeat { device: 3, .. }) =
+                sconn.recv_timeout(Duration::from_millis(50)).unwrap()
+            {
+                got_hb = true;
+                break;
+            }
+        }
+        assert!(got_hb, "mode flip back to blocking must still deliver frames");
         handle.join().unwrap();
     }
 

@@ -13,8 +13,8 @@ use caesar_fl::fleet::FleetKind;
 use caesar_fl::schemes;
 use caesar_fl::transport::frame::reject;
 use caesar_fl::transport::{
-    model_digest, Conn, CoordinatorService, DeviceClient, LoopbackHub, SessionEnd, TcpConn,
-    TcpTransport, TransportError, WireMsg,
+    model_digest, Conn, CoordinatorService, DeviceClient, DeviceFleet, LoopbackHub, SessionEnd,
+    TcpConn, TcpTransport, TransportError, WireMsg,
 };
 
 const N_DEVICES: usize = 6;
@@ -125,6 +125,71 @@ fn run_tcp(cfg: &ExperimentConfig, scheme: &str, arrival: &[usize]) -> (Server, 
         assert_eq!(h.join().unwrap(), SessionEnd::Finished);
     }
     (svc.into_server(), result)
+}
+
+/// Run the service over Tcp with the devices packed into fleets — each
+/// inner slice is one [`DeviceFleet`] multiplexed over ONE connection,
+/// dialed in the scripted (outer) order.
+fn run_tcp_fleet(
+    cfg: &ExperimentConfig,
+    scheme: &str,
+    fleets: &[Vec<usize>],
+) -> (Server, RunResult) {
+    let server = Server::new(cfg.clone(), schemes::by_name(scheme).unwrap()).unwrap();
+    let transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr = transport.socket_addr();
+    let mut svc = CoordinatorService::new(server, transport);
+    let n: usize = fleets.iter().map(Vec::len).sum();
+    let mut handles = Vec::new();
+    for members in fleets {
+        let cfg = cfg.clone();
+        let members = members.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut fleet = DeviceFleet::new(cfg, members).unwrap();
+            let mut conn = TcpConn::connect(addr).unwrap();
+            fleet.run(&mut conn).unwrap()
+        }));
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    svc.wait_for_devices(n, Duration::from_secs(30)).unwrap();
+    let result = svc.run().unwrap();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), SessionEnd::Finished);
+    }
+    (svc.into_server(), result)
+}
+
+#[test]
+fn fleet_multiplexed_tcp_matches_every_other_path_bit_for_bit() {
+    // the multiplexing invariant across the full matrix the service
+    // supports: scheme × pipeline depth × connection packing. How the
+    // six devices pack onto sockets (6×1, 2 fleets of 3, 1 fleet of 6)
+    // must be invisible to models, traffic, clock and records.
+    for scheme in ["caesar", "fedavg"] {
+        for depth in [1usize, 2] {
+            let mut cfg = tiny_cfg(2);
+            if depth == 2 {
+                cfg.engine.pipeline_depth = 2;
+                cfg.engine.staleness_bound = 2;
+            }
+            let what = format!("{scheme}/depth{depth}");
+            let base = baseline(&cfg, scheme);
+            let tcp = run_tcp(&cfg, scheme, &[2, 5, 0, 3, 1, 4]);
+            assert_parity(&format!("{what}: 6-conn tcp"), (&tcp.0, &tcp.1), (&base.0, &base.1));
+            let packed = run_tcp_fleet(&cfg, scheme, &[vec![3, 4, 5], vec![0, 1, 2]]);
+            assert_parity(
+                &format!("{what}: 2 fleets x 3 devices"),
+                (&packed.0, &packed.1),
+                (&base.0, &base.1),
+            );
+            let single = run_tcp_fleet(&cfg, scheme, &[vec![0, 1, 2, 3, 4, 5]]);
+            assert_parity(
+                &format!("{what}: 1 fleet x 6 devices"),
+                (&single.0, &single.1),
+                (&base.0, &base.1),
+            );
+        }
+    }
 }
 
 #[test]
@@ -350,6 +415,132 @@ fn a_device_that_dies_mid_session_rejoins_and_parity_holds() {
     }
     let srv = svc.into_server();
     assert_parity("flaky device", (&srv, &result), (&base.0, &base.1));
+}
+
+/// Mid-round fleet-connection death: one socket carrying THREE device
+/// sessions dies after its Join storm plus one resolution, so the
+/// coordinator severs all three bindings at once
+/// (`Registry::unbind_conn`) while keeping the devices pending. The
+/// fleet redials as a unit, re-Joins every member, and the coordinator
+/// redelivers the pending kickoffs — unresolved rounds are re-served
+/// (bit-identically: the local models never advanced) and anything
+/// already resolved is answered from the redelivery cache, never
+/// retrained. Parity with the in-process run must survive all of it.
+#[test]
+fn a_fleet_connection_that_dies_mid_round_rejoins_and_parity_holds() {
+    let cfg = tiny_cfg(3);
+    let base = baseline(&cfg, "caesar");
+
+    let server = Server::new(cfg.clone(), schemes::by_name("caesar").unwrap()).unwrap();
+    let transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr = transport.socket_addr();
+    let mut svc = CoordinatorService::new(server, transport);
+
+    // devices 0..2 ride one flaky fleet connection; 3..5 ride a healthy
+    // single-device connection each
+    let cfg_fleet = cfg.clone();
+    let flaky = std::thread::spawn(move || {
+        let mut fleet = DeviceFleet::new(cfg_fleet, [0, 1, 2]).unwrap();
+        let mut dials = 0usize;
+        let end = fleet
+            .run_reconnecting(
+                move || {
+                    dials += 1;
+                    Ok(FlakyConn {
+                        inner: TcpConn::connect(addr)?,
+                        // first dial: the 3-frame Join storm plus ONE
+                        // resolution, then the socket dies mid-round;
+                        // later dials get an unlimited budget
+                        sends_left: if dials == 1 { 4 } else { usize::MAX },
+                    })
+                },
+                10,
+            )
+            .unwrap();
+        (end, fleet.stats())
+    });
+    let mut singles = Vec::new();
+    for d in 3..N_DEVICES {
+        let cfg = cfg.clone();
+        singles.push(std::thread::spawn(move || {
+            let mut client = DeviceClient::new(cfg, d).unwrap();
+            let mut conn = TcpConn::connect(addr).unwrap();
+            client.run(&mut conn).unwrap()
+        }));
+    }
+    svc.wait_for_devices(N_DEVICES, Duration::from_secs(30)).unwrap();
+    let result = svc.run().unwrap();
+    let (end, stats) = flaky.join().unwrap();
+    assert_eq!(end, SessionEnd::Finished, "the fleet must finish after its rejoin");
+    assert!(stats.rounds >= 1, "the fleet served rounds across the death");
+    for h in singles {
+        assert_eq!(h.join().unwrap(), SessionEnd::Finished);
+    }
+    let srv = svc.into_server();
+    assert_parity("flaky fleet connection", (&srv, &result), (&base.0, &base.1));
+}
+
+/// A poisoned fleet connection: a peer identifies TWO devices, then
+/// sends framing garbage mid-round. The coordinator must synthesize
+/// Dropouts for BOTH multiplexed devices immediately — one socket is
+/// one failure domain — and close the round well before the wall-clock
+/// deadline (a poisoned peer is cut, not waited out).
+#[test]
+fn a_poisoned_fleet_connection_drops_all_its_devices_immediately() {
+    use std::io::Write;
+
+    let mut cfg = tiny_cfg(1);
+    cfg.alpha = 1.0; // all six devices participate in the round
+    let server = Server::new(cfg.clone(), schemes::by_name("caesar").unwrap()).unwrap();
+    let transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr = transport.socket_addr();
+    let mut svc = CoordinatorService::new(server, transport);
+    svc.round_timeout = Duration::from_secs(60);
+
+    // the hostile fleet: Join frames for devices 4 and 5 over one raw
+    // socket, then garbage bytes once the round is underway
+    let hostile = std::thread::spawn(move || {
+        let mut sock = std::net::TcpStream::connect(addr).unwrap();
+        sock.write_all(&caesar_fl::transport::encode_frame(&WireMsg::Join { device: 4 }))
+            .unwrap();
+        sock.write_all(&caesar_fl::transport::encode_frame(&WireMsg::Join { device: 5 }))
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        // not a frame: wrong magic, decodes to FrameError on arrival
+        let _ = sock.write_all(b"\xDE\xAD\xBE\xEF this is not a caesar frame");
+        let _ = sock.flush();
+        sock // keep the socket alive until the round has closed
+    });
+    let mut honest = Vec::new();
+    for d in 0..4 {
+        let cfg = cfg.clone();
+        honest.push(std::thread::spawn(move || {
+            let mut client = DeviceClient::new(cfg, d).unwrap();
+            let mut conn = TcpConn::connect(addr).unwrap();
+            client.run(&mut conn).unwrap()
+        }));
+    }
+    svc.wait_for_devices(N_DEVICES, Duration::from_secs(30)).unwrap();
+    let started = Instant::now();
+    let result = svc.run().unwrap();
+    assert!(
+        started.elapsed() < Duration::from_secs(20),
+        "poison must cut the round short, not wait out the {}s deadline",
+        svc.round_timeout.as_secs()
+    );
+    assert_eq!(result.records.len(), 1);
+    for h in honest {
+        assert_eq!(h.join().unwrap(), SessionEnd::Finished);
+    }
+    drop(hostile.join().unwrap());
+    let srv = svc.into_server();
+    // BOTH devices on the poisoned socket converted, nobody else
+    assert_eq!(srv.engine().stats().dropouts, 2);
+    assert_eq!(srv.engine().registry().dropouts(4), 1);
+    assert_eq!(srv.engine().registry().dropouts(5), 1);
+    for d in 0..4 {
+        assert_eq!(srv.engine().registry().completions(d), 1, "device {d}");
+    }
 }
 
 #[test]
